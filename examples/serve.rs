@@ -1,0 +1,102 @@
+//! Serving demo: the dynamic-batching LM inference server (vllm-router
+//! style, scaled to this testbed). Spawns client threads that submit
+//! next-token requests at random intervals; the server groups them
+//! into padded batches over the compiled .fwd_b{1,2,4,8} executables.
+//!
+//!   cargo run --release --example serve -- [requests] [clients]
+//!
+//! Reports throughput, latency percentiles, the batch-size histogram
+//! and padding waste — the L3 serving metrics for EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kafft::coordinator::server::{LmServer, ServerConfig};
+use kafft::rng::Rng;
+use kafft::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_req: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
+    let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let rt = Arc::new(Runtime::new(kafft::artifacts_dir())?);
+    let model = "lm_nprf_rpe_fft";
+    let meta = rt
+        .manifest
+        .artifact(&format!("{model}.fwd_b1"))?
+        .model
+        .clone()
+        .unwrap();
+    println!(
+        "serving {model} (vocab={} seq_len={}) with {clients} clients, \
+         {n_req} requests",
+        meta.vocab, meta.seq_len
+    );
+    let server = Arc::new(LmServer::start(
+        rt.clone(),
+        ServerConfig {
+            model: model.to_string(),
+            max_wait: Duration::from_millis(10),
+            max_batch: 8,
+        },
+    )?);
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = server.clone();
+        let vocab = meta.vocab;
+        let seq_len = meta.seq_len;
+        let per = n_req / clients + (c < n_req % clients) as usize;
+        handles.push(std::thread::spawn(move || -> Vec<(f64, usize)> {
+            let mut rng = Rng::new(100 + c as u64);
+            let mut out = Vec::new();
+            for _ in 0..per {
+                let len = 4 + rng.below_usize(seq_len - 4);
+                let toks: Vec<i32> =
+                    (0..len).map(|_| rng.below_usize(vocab) as i32).collect();
+                let rx = server.submit(toks).expect("submit");
+                let resp = rx.recv().expect("recv");
+                out.push((resp.latency.as_secs_f64(), resp.served_batch));
+                // jittered think time: bursts let the batcher do its job
+                std::thread::sleep(Duration::from_millis(rng.below(15) as u64));
+            }
+            out
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    let mut batch_sum = 0usize;
+    for h in handles {
+        for (l, b) in h.join().unwrap() {
+            lat.push(l);
+            batch_sum += b;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let stats = server.shutdown();
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
+    println!("\nthroughput: {:.1} req/s ({n_req} in {wall:.2}s)", n_req as f64 / wall);
+    println!(
+        "latency: p50={:.0}ms p90={:.0}ms p99={:.0}ms",
+        pct(0.5) * 1e3,
+        pct(0.9) * 1e3,
+        pct(0.99) * 1e3
+    );
+    println!(
+        "batching: {} batches, mean served batch {:.2}, padded slots {} \
+         ({:.0}% waste), batch histogram {:?}",
+        stats.batches,
+        batch_sum as f64 / lat.len() as f64,
+        stats.padded_slots,
+        100.0 * stats.padded_slots as f64
+            / (stats.padded_slots + stats.requests).max(1) as f64,
+        stats.batch_hist
+    );
+    println!("PJRT exec total: {:.2}s ({:.0}% of wall)", stats.exec_secs,
+             100.0 * stats.exec_secs / wall);
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! End-to-end training driver (the DESIGN.md §validation run):
+//! train the NPRF-Transformer-with-RPE language model for a few
+//! hundred steps on the synthetic corpus, logging the loss curve,
+//! evaluating perplexity against the softmax baseline, and writing a
+//! checkpoint — all through the AOT/PJRT path with zero Python.
+//!
+//!   cargo run --release --example train_lm -- [steps] [variant]
+//!
+//! Recorded in EXPERIMENTS.md §End-to-end.
+
+use kafft::config::{LrSchedule, TrainConfig};
+use kafft::coordinator::{make_source, Trainer};
+use kafft::metrics::perplexity;
+use kafft::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let variant = args.get(1).cloned().unwrap_or_else(|| "lm_nprf_rpe_fft".into());
+
+    let rt = Runtime::new(kafft::artifacts_dir())?;
+    let train_name = format!("{variant}.train");
+    let entry = rt.manifest.artifact(&train_name)?.clone();
+    let model = entry.model.as_ref().unwrap();
+    println!(
+        "training {variant}: {} params, {} layers, d={}, n={}, attention={}",
+        entry.param_count, model.layers, model.d_model, model.seq_len,
+        model.attention
+    );
+
+    let cfg = TrainConfig {
+        artifact: train_name,
+        steps,
+        seed: 0,
+        schedule: LrSchedule::InverseSqrt { peak: 2e-3, warmup: steps / 10 + 1 },
+        eval_every: (steps / 4).max(1),
+        eval_batches: 4,
+        checkpoint: Some(format!("/tmp/kafft_{variant}.ckpt")),
+        log_every: 10,
+        ..TrainConfig::default()
+    };
+    let mut source = make_source(&entry, 7)?;
+    let report = Trainer::new(&rt, cfg).run(source.as_mut(), None)?;
+
+    println!("\nloss curve (step, train loss):");
+    let stride = (report.loss_curve.len() / 25).max(1);
+    for (s, l) in report.loss_curve.iter().step_by(stride) {
+        let bar = "#".repeat(((l / report.loss_curve[0].1) * 40.0) as usize);
+        println!("  {s:>5}  {l:7.4}  {bar}");
+    }
+    println!("\neval curve (step, eval loss):");
+    for (s, l) in &report.eval_curve {
+        println!("  {s:>5}  {l:7.4}");
+    }
+    if let Some(el) = report.final_eval_loss {
+        println!(
+            "\nfinal: train_loss={:.4} eval_loss={el:.4} ppl={:.2} \
+             ({:.1}s wall, {:.2} steps/s, diverged={})",
+            report.final_train_loss,
+            perplexity(el),
+            report.wall_secs,
+            report.steps_done as f64 / report.wall_secs,
+            report.diverged,
+        );
+    }
+    let stats = rt.stats();
+    println!(
+        "runtime: {} executions, {:.1}s in PJRT ({:.0}% of wall), \
+         {:.3}s h2d + {:.3}s d2h",
+        stats.execute_calls,
+        stats.execute_secs,
+        100.0 * stats.execute_secs / report.wall_secs,
+        stats.h2d_secs,
+        stats.d2h_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,365 @@
+"""AOT lowering: JAX (L2, calling Pallas L1) -> HLO text + manifest.json.
+
+This is the ONLY entry point that runs Python; everything it emits is
+loaded by the Rust runtime via PJRT. Interchange format is HLO *text*
+(not serialized HloModuleProto): jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--groups lm,mt,...]
+
+Artifact groups (DESIGN.md §5 maps each to paper tables/figures):
+    lm        — Table 2 (+ Table 1 stability study): decoder LMs
+    mt        — Table 3, Fig. 2, Fig. 3: seq2seq translation models
+    pretrain  — Table 1: encoder MLM pretrain + classifier fine-tune
+    vit       — Table 4: patch classifiers with 2-D RPE
+    imggen    — Table 6: autoregressive image generation
+    fwd_speed — Fig. 1a: attention-only forward executables
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train as train_mod
+from .model import ModelConfig, param_count, param_layout
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    print_large_constants=True is ESSENTIAL: the default printer elides
+    big dense constants as `{...}`, which xla_extension 0.5.1's text
+    parser silently reads back as all-zeros — e.g. the trainable-mask
+    constant becomes zero and every gradient is wiped out.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    role: str                  # train_step | eval_loss | forward | attn_fwd
+    fn: object                 # callable to lower
+    in_specs: list             # list of (name, ShapeDtypeStruct)
+    out_names: list
+    cfg: ModelConfig | None = None
+    task: str = ""
+    batch: int = 0
+    extra: dict | None = None
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def layout_id(cfg: ModelConfig) -> str:
+    blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+# ---------------------------------------------------------------------------
+# Model artifact builders
+# ---------------------------------------------------------------------------
+
+BATCH_SPECS = {
+    # task -> (train-batch builder, names)
+    "decoder_lm": lambda cfg, B: (
+        [("tokens", spec((B, cfg.seq_len), I32)),
+         ("targets", spec((B, cfg.seq_len), I32)),
+         ("weights", spec((B, cfg.seq_len)))]),
+    "encoder_mlm": lambda cfg, B: (
+        [("tokens", spec((B, cfg.seq_len), I32)),
+         ("targets", spec((B, cfg.seq_len), I32)),
+         ("weights", spec((B, cfg.seq_len)))]),
+    "encoder_cls": lambda cfg, B: (
+        [("tokens", spec((B, cfg.seq_len), I32)),
+         ("labels", spec((B,), I32))]),
+    "seq2seq": lambda cfg, B: (
+        [("src", spec((B, cfg.n_src), I32)),
+         ("tgt_in", spec((B, cfg.seq_len), I32)),
+         ("tgt_out", spec((B, cfg.seq_len), I32)),
+         ("weights", spec((B, cfg.seq_len)))]),
+    "vit": lambda cfg, B: (
+        [("patches", spec((B, cfg.grid * cfg.grid, cfg.patch_dim))),
+         ("labels", spec((B,), I32))]),
+}
+
+FWD_BATCH_SPECS = {
+    "decoder_lm": lambda cfg, B: [("tokens", spec((B, cfg.seq_len), I32))],
+    "encoder_mlm": lambda cfg, B: [("tokens", spec((B, cfg.seq_len), I32))],
+    "encoder_cls": lambda cfg, B: [("tokens", spec((B, cfg.seq_len), I32))],
+    "seq2seq": lambda cfg, B: [("src", spec((B, cfg.n_src), I32)),
+                               ("tgt_in", spec((B, cfg.seq_len), I32))],
+    "vit": lambda cfg, B: [
+        ("patches", spec((B, cfg.grid * cfg.grid, cfg.patch_dim)))],
+}
+
+
+def model_artifacts(name: str, cfg: ModelConfig, task: str, batch: int,
+                    roles=("train_step", "eval_loss", "forward"),
+                    fwd_batches=(0,)) -> list[Artifact]:
+    """Standard trio of executables for one model variant."""
+    p = param_count(cfg)
+    arts = []
+    state = [("flat", spec((p,))), ("adam_m", spec((p,))),
+             ("adam_v", spec((p,))), ("t", spec(())), ("lr", spec(()))]
+    batch_specs = BATCH_SPECS[task](cfg, batch)
+    if "train_step" in roles:
+        arts.append(Artifact(
+            name=f"{name}.train", role="train_step",
+            fn=train_mod.make_train_step(cfg, task),
+            in_specs=state + batch_specs,
+            out_names=["flat", "adam_m", "adam_v", "loss"],
+            cfg=cfg, task=task, batch=batch))
+    if "eval_loss" in roles:
+        arts.append(Artifact(
+            name=f"{name}.eval", role="eval_loss",
+            fn=train_mod.make_eval_loss(cfg, task),
+            in_specs=[("flat", spec((p,)))] + batch_specs,
+            out_names=["loss"], cfg=cfg, task=task, batch=batch))
+    if "forward" in roles:
+        for fb in fwd_batches:
+            fb = fb or batch
+            suffix = f".fwd_b{fb}" if len(fwd_batches) > 1 else ".fwd"
+            arts.append(Artifact(
+                name=f"{name}{suffix}", role="forward",
+                fn=train_mod.make_forward(cfg, task),
+                in_specs=[("flat", spec((p,)))]
+                + FWD_BATCH_SPECS[task](cfg, fb),
+                out_names=["logits"], cfg=cfg, task=task, batch=fb))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Groups
+# ---------------------------------------------------------------------------
+
+def group_lm(quick=False) -> list[Artifact]:
+    """Table 2: WikiText-style causal LM across attention variants."""
+    kinds = (["nprf_rpe_fft", "softmax"] if quick else
+             ["softmax", "elu1", "trf", "prf", "nprf", "nprf_rpe_fft",
+              "nprf_rpe_direct"])
+    arts = []
+    for kind in kinds:
+        cfg = ModelConfig(kind="decoder_lm", attention=kind, vocab=64,
+                          seq_len=64, layers=2, d_model=64, heads=4,
+                          ffn=128, feature_dim=32, block=32)
+        fwd_batches = (1, 2, 4, 8) if kind == "nprf_rpe_fft" else (1,)
+        arts += model_artifacts(f"lm_{kind}", cfg, "decoder_lm", batch=8,
+                                fwd_batches=fwd_batches)
+    return arts
+
+
+def group_mt(quick=False) -> list[Artifact]:
+    """Table 3 grid + Fig. 2 conversion + Fig. 3 ablations."""
+    base = dict(kind="seq2seq", vocab=32, seq_len=32, src_len=32, layers=2,
+                d_model=64, heads=4, ffn=128, feature_dim=16,
+                dec_feature_dim=24, block=32)
+    arts = []
+    # Table 3 rows: enc/dec attention grid.
+    rows = [("softmax", ""), ("softmax", "prf"), ("prf", ""),
+            ("nprf_rpe_fft", "")]
+    if quick:
+        rows = [("nprf_rpe_fft", "")]
+    for enc, dec in rows:
+        tag = f"mt_{enc}" + (f"__{dec}" if dec else "")
+        cfg = ModelConfig(attention=enc, dec_attention=dec, **base)
+        arts += model_artifacts(tag, cfg, "seq2seq", batch=8)
+    if quick:
+        return arts
+    # Fig. 2: training variants (softmax family) + conversion targets
+    # (kernelized family, eval-only — Rust remaps trained params by name).
+    for kind in ("softmax_rpe", "softmax_norm", "softmax_norm_rpe"):
+        cfg = ModelConfig(attention=kind, **base)
+        arts += model_artifacts(f"mt_{kind}", cfg, "seq2seq", batch=8)
+    for kind in ("prf_rpe_fft", "nprf", "nprf_rpe_fft"):
+        # eval-only conversions; `prf` conversion reuses the Table-3 model.
+        cfg = ModelConfig(attention=kind, **base)
+        arts += model_artifacts(f"mtconv_{kind}", cfg, "seq2seq", batch=8,
+                                roles=("eval_loss", "forward"))
+    # Fig. 3a: feature-dim sweep (both enc and dec use m).
+    for m in (8, 16, 32):
+        cfg = ModelConfig(attention="nprf_rpe_fft", **{
+            **base, "feature_dim": m, "dec_feature_dim": m})
+        arts += model_artifacts(f"mtm{m}_nprf_rpe_fft", cfg, "seq2seq",
+                                batch=8, roles=("train_step", "eval_loss"))
+    # Fig. 3b: feature-map ablation.
+    for fm in ("trf", "sphere_prf", "orf"):
+        cfg = ModelConfig(attention="nprf_rpe_fft", feature_map=fm, **base)
+        arts += model_artifacts(f"mtfm_{fm}_nprf_rpe_fft", cfg, "seq2seq",
+                                batch=8, roles=("train_step", "eval_loss"))
+    return arts
+
+
+def group_pretrain(quick=False) -> list[Artifact]:
+    """Table 1: MLM pretraining + classification fine-tune (one layout)."""
+    kinds = ["nprf_rpe_fft"] if quick else \
+        ["softmax", "prf", "nprf", "nprf_rpe_fft"]
+    arts = []
+    for kind in kinds:
+        cfg = ModelConfig(kind="encoder_cls", attention=kind, vocab=64,
+                          seq_len=64, layers=2, d_model=64, heads=4,
+                          ffn=128, feature_dim=32, num_classes=4, block=32)
+        arts += model_artifacts(f"pre_{kind}", cfg, "encoder_mlm", batch=8,
+                                roles=("train_step", "eval_loss"))
+        arts += model_artifacts(f"cls_{kind}", cfg, "encoder_cls", batch=8)
+    return arts
+
+
+def group_vit(quick=False) -> list[Artifact]:
+    """Table 4: patch classifier, 2-D RPE via 2-D FFT."""
+    kinds = ["nprf_rpe_fft"] if quick else \
+        ["softmax", "prf", "nprf", "nprf_rpe_fft"]
+    arts = []
+    for kind in kinds:
+        cfg = ModelConfig(kind="vit", attention=kind, layers=2, d_model=64,
+                          heads=4, ffn=128, feature_dim=16, grid=8,
+                          patch_dim=12, num_classes=10, block=32)
+        arts += model_artifacts(f"vit_{kind}", cfg, "vit", batch=8)
+    return arts
+
+
+def group_imggen(quick=False) -> list[Artifact]:
+    """Table 6: autoregressive image generation, bits/dim."""
+    kinds = ["nprf_rpe_fft"] if quick else ["softmax", "prf", "nprf_rpe_fft"]
+    arts = []
+    for kind in kinds:
+        cfg = ModelConfig(kind="decoder_lm", attention=kind, vocab=257,
+                          seq_len=192, layers=2, d_model=64, heads=4,
+                          ffn=128, feature_dim=32, block=64,
+                          tie_embeddings=True)
+        arts += model_artifacts(f"img_{kind}", cfg, "decoder_lm", batch=4,
+                                roles=("train_step", "eval_loss"))
+    return arts
+
+
+def group_fwd_speed(quick=False) -> list[Artifact]:
+    """Fig. 1a: single-head attention-only executables over n sweep."""
+    from . import attention as attn_mod
+
+    d = 64
+    ns = [128, 512] if quick else [128, 256, 512, 1024, 2048, 4096]
+    variants = [("softmax", 0), ("nprf_rpe_direct", 64)]
+    for m in ([64] if quick else [32, 64, 128]):
+        variants.append(("nprf_rpe_fft", m))
+    arts = []
+    for n in ns:
+        for kind, m in variants:
+            name = f"speed_{kind}_n{n}" + (f"_m{m}" if m else "")
+            in_specs = [("q", spec((n, d))), ("k", spec((n, d))),
+                        ("v", spec((n, d)))]
+            if m:
+                in_specs += [("w", spec((m, d))), ("b", spec((2 * n - 1,)))]
+
+                def fn(q, k, v, w, b, kind=kind):
+                    return attn_mod.attend(kind, q, k, v, w=w, b=b,
+                                            use_pallas=True, block=128)
+            else:
+                def fn(q, k, v, kind=kind):
+                    return attn_mod.attend(kind, q, k, v, use_pallas=True,
+                                           block=128)
+            arts.append(Artifact(
+                name=name, role="attn_fwd", fn=fn, in_specs=in_specs,
+                out_names=["z"], extra={"n": n, "m": m, "d": d,
+                                        "kind": kind}))
+    return arts
+
+
+GROUPS = {
+    "lm": group_lm,
+    "mt": group_mt,
+    "pretrain": group_pretrain,
+    "vit": group_vit,
+    "imggen": group_imggen,
+    "fwd_speed": group_fwd_speed,
+}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def lower_artifact(art: Artifact, out_dir: str) -> dict:
+    t0 = time.time()
+    specs = [s for _, s in art.in_specs]
+    lowered = jax.jit(art.fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "hlo": f"{art.name}.hlo.txt",
+        "role": art.role,
+        "inputs": [{"name": nm, "dtype": _dtype_name(s.dtype),
+                    "shape": list(s.shape)} for nm, s in art.in_specs],
+        "outputs": art.out_names,
+    }
+    if art.cfg is not None:
+        entry["task"] = art.task
+        entry["batch"] = art.batch
+        entry["layout"] = layout_id(art.cfg)
+        entry["model"] = dataclasses.asdict(art.cfg)
+        entry["param_count"] = param_count(art.cfg)
+    if art.extra:
+        entry["extra"] = art.extra
+    print(f"  {art.name}: {len(text)//1024}KiB in {time.time()-t0:.1f}s",
+          flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--groups", default=",".join(GROUPS))
+    ap.add_argument("--quick", action="store_true",
+                    help="small subset for CI/tests")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"artifacts": {}, "layouts": {}, "version": 1}
+    for gname in args.groups.split(","):
+        gname = gname.strip()
+        if not gname:
+            continue
+        print(f"[group {gname}]", flush=True)
+        for art in GROUPS[gname](quick=args.quick):
+            manifest["artifacts"][art.name] = lower_artifact(
+                art, args.out_dir)
+            if art.cfg is not None:
+                lid = layout_id(art.cfg)
+                if lid not in manifest["layouts"]:
+                    manifest["layouts"][lid] = [
+                        {"name": s.name, "shape": list(s.shape),
+                         "init": s.init, "trainable": s.trainable}
+                        for s in param_layout(art.cfg)]
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts "
+          f"+ manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+"""L2 attention variants — the paper's Algorithm 1 plus every baseline.
+
+Each variant exists in two numerically identical implementations:
+
+  * a **Pallas path** (forward): composed from the L1 kernels in
+    `kernels/` (feature maps, kv_aggregate, Toeplitz product, readout);
+  * a **jnp path**: the transparent reference from `kernels/ref.py`.
+
+Reverse-mode autodiff cannot flow through `pallas_call`, so the public
+entry points wrap the Pallas forward in `jax.custom_vjp` whose backward
+rematerializes through the jnp path — i.e. training artifacts still
+execute the Pallas kernels on the forward pass and pay one extra
+(fused, XLA-optimized) recompute on the backward pass. pytest asserts
+the two paths agree to fp32 tolerance for every variant.
+
+Single-head signature everywhere: q, k, v: (n, d). Multi-head models
+`vmap` these over the head axis (see model.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    attn_readout,
+    causal_linear_attention,
+    elu1_features,
+    kv_aggregate,
+    prf_features,
+    ref,
+    softmax_attention as pallas_softmax_attention,
+    toeplitz_mul_direct,
+    trf_features,
+)
+
+EPS = 1e-6
+
+# Attention kind grammar: "<family>[_norm][_rpe][_fft|_direct]"
+#   softmax            — vanilla Transformer baseline (1/sqrt(d) scaling)
+#   softmax_norm       — softmax over l2-normalized q/k (Fig. 2 variant)
+#   softmax_rpe        — softmax + T5-style scalar RPE bias (Eq. 6)
+#   prf / trf / elu1   — kernelized, unnormalized q/k (Performer / RFA /
+#                        Linear Transformer); prf & trf pre-scale q,k by
+#                        d^{-1/4} so they estimate the softmax kernel
+#   nprf               — normalized q/k, kernelized, no RPE
+#   nprf_rpe_fft       — THE PAPER: Algorithm 1, Toeplitz x FFT
+#   nprf_rpe_direct    — same math, O(n^2) Toeplitz product (ablation)
+#   prf_rpe_fft        — unnormalized + RPE (Fig. 2 conversion target)
+ATTENTION_KINDS = (
+    "softmax", "softmax_rpe", "softmax_norm", "softmax_norm_rpe",
+    "prf", "nprf", "elu1", "trf",
+    "prf_rpe_fft", "prf_rpe_direct",
+    "nprf_rpe_fft", "nprf_rpe_direct",
+)
+
+FEATURE_MAP_KINDS = ("prf", "trf", "sphere_prf", "orf", "elu1")
+
+
+def parse_kind(kind: str):
+    """kind -> (family, normalize, rpe, impl). family in {softmax, kernel}."""
+    if kind not in ATTENTION_KINDS:
+        raise ValueError(f"unknown attention kind {kind!r}")
+    if kind.startswith("softmax"):
+        return ("softmax", "_norm" in kind, kind.endswith("_rpe"), None)
+    rpe = "_rpe_" in kind
+    impl = kind.rsplit("_", 1)[1] if rpe else None
+    normalize = kind.startswith("n")
+    return ("kernel", normalize, rpe, impl)
+
+
+# ---------------------------------------------------------------------------
+# Random feature projections (Fig. 3b ablation: PRF / TRF / Sphere-PRF / ORF)
+# ---------------------------------------------------------------------------
+
+def draw_feature_weights(key: jax.Array, m: int, d: int,
+                         kind: str = "prf") -> jnp.ndarray:
+    """Sample the (m, d) random projection rows for a feature map.
+
+    prf / trf      — i.i.d. N(0, I_d)
+    sphere_prf     — Unif(sqrt(d) * S^{d-1})
+    orf            — orthogonal rows, rescaled to chi(d)-distributed norms
+    elu1           — no projection needed (returns zeros placeholder)
+    """
+    if kind in ("prf", "trf"):
+        return jax.random.normal(key, (m, d))
+    if kind == "sphere_prf":
+        g = jax.random.normal(key, (m, d))
+        return jnp.sqrt(d) * g / (jnp.linalg.norm(g, axis=-1, keepdims=True) + EPS)
+    if kind == "orf":
+        # Blocks of orthogonal rows (Gram-Schmidt via QR), norms ~ chi(d).
+        blocks = []
+        rows = 0
+        i = 0
+        while rows < m:
+            sub = jax.random.normal(jax.random.fold_in(key, i), (d, d))
+            qmat, _ = jnp.linalg.qr(sub)
+            blocks.append(qmat.T)
+            rows += d
+            i += 1
+        w = jnp.concatenate(blocks, axis=0)[:m]
+        norms = jnp.linalg.norm(
+            jax.random.normal(jax.random.fold_in(key, 997), (m, d)),
+            axis=-1, keepdims=True)
+        return w * norms
+    if kind == "elu1":
+        return jnp.zeros((m, d))
+    raise ValueError(f"unknown feature map kind {kind!r}")
+
+
+def _phi_pallas(kind: str) -> Callable:
+    if kind in ("prf", "sphere_prf", "orf"):
+        return prf_features
+    if kind == "trf":
+        return trf_features
+    if kind == "elu1":
+        return lambda x, w, normalize=False, block=128: elu1_features(
+            x, normalize=normalize, block=block)
+    raise ValueError(f"unknown feature map kind {kind!r}")
+
+
+def _phi_ref(kind: str) -> Callable:
+    if kind in ("prf", "sphere_prf", "orf"):
+        return ref.phi_prf
+    return ref.FEATURE_MAPS[kind]
+
+
+# ---------------------------------------------------------------------------
+# Pallas forward passes
+# ---------------------------------------------------------------------------
+
+def _prescale(q, k, normalize: bool, feature_map: str):
+    """Pre-processing of q/k before the feature map.
+
+    Normalized variants project onto the unit sphere (the paper's fix);
+    unnormalized PRF/TRF pre-scale by d^{-1/4} so that
+    phi(q')phi(k')^T estimates exp(q k^T / sqrt(d)) — the standard
+    softmax kernel (Performer's convention). elu1 takes q/k as-is.
+    """
+    if normalize:
+        return None  # handled by the fused normalize inside the kernels
+    if feature_map in ("prf", "trf", "sphere_prf", "orf"):
+        s = q.shape[-1] ** -0.25
+        return s
+    return 1.0
+
+
+def _kernel_rpe_pallas(q, k, v, w, b, *, causal: bool, normalize: bool,
+                       feature_map: str, impl: str, block: int):
+    """Algorithm 1 forward (impl='fft') or its O(n^2) ablation ('direct'):
+    Pallas feature maps + kv outer products + Toeplitz product + readout."""
+    s = _prescale(q, k, normalize, feature_map)
+    if s is not None:
+        q, k = q * s, k * s
+    phi = _phi_pallas(feature_map)
+    phi_q = phi(q, w, normalize=normalize, block=block)
+    phi_k = phi(k, w, normalize=normalize, block=block)
+    n, d = v.shape
+    c = jnp.exp(b - jnp.max(b))
+    if causal:
+        t = jnp.arange(-(n - 1), n)
+        c = jnp.where(t > 0, 0.0, c)
+    p = kv_aggregate(phi_k, v, block=block)
+    if impl == "fft":
+        dmat = ref.toeplitz_mul_fft(c, p)            # XLA FFT op (L2)
+    else:
+        dmat = toeplitz_mul_direct(c, p, block=block)
+    return attn_readout(phi_q, dmat, d, block=block)
+
+
+def _kernelized_pallas(q, k, v, w, *, causal: bool, normalize: bool,
+                       feature_map: str, block: int) -> jnp.ndarray:
+    """Kernelized attention without RPE (Eq. 3): PRF/NPRF/elu1/TRF paths."""
+    s = _prescale(q, k, normalize, feature_map)
+    if s is not None:
+        q, k = q * s, k * s
+    phi = _phi_pallas(feature_map)
+    phi_q = phi(q, w, normalize=normalize, block=block)
+    phi_k = phi(k, w, normalize=normalize, block=block)
+    if causal:
+        return causal_linear_attention(phi_q, phi_k, v, block=block)
+    d = v.shape[1]
+    p = kv_aggregate(phi_k, v, block=block)
+    s_row = jnp.sum(p, axis=0, keepdims=True)        # global sum, no Toeplitz
+    dmat = jnp.broadcast_to(s_row, (phi_q.shape[0], p.shape[1]))
+    return attn_readout(phi_q, dmat, d, block=block)
+
+
+# ---------------------------------------------------------------------------
+# jnp reference forward passes (used for the custom_vjp backward + tests)
+# ---------------------------------------------------------------------------
+
+def _ref_feature_map_name(feature_map: str) -> str:
+    return "prf" if feature_map in ("sphere_prf", "orf") else feature_map
+
+
+def _kernel_rpe_ref(q, k, v, w, b, *, causal, normalize, feature_map):
+    s = _prescale(q, k, normalize, feature_map)
+    if s is not None:
+        q, k = q * s, k * s
+    return ref.nprf_rpe_attention_fft(
+        q, k, v, w, b, causal=causal, normalize_qk=normalize,
+        feature_map=_ref_feature_map_name(feature_map))
+
+
+def _kernelized_ref(q, k, v, w, *, causal, normalize, feature_map):
+    s = _prescale(q, k, normalize, feature_map)
+    if s is not None:
+        q, k = q * s, k * s
+    phi = _phi_ref(_ref_feature_map_name(feature_map))
+    if normalize:
+        q, k = ref.l2_normalize(q), ref.l2_normalize(k)
+    return ref.kernelized_attention(phi(q, w), phi(k, w), v, causal=causal)
+
+
+def _softmax_ref(q, k, v, b, *, causal, use_bias, normalize):
+    n = q.shape[0]
+    bias = ref.rpe_bias_matrix(b, n, n) if use_bias else None
+    if normalize:
+        q, k = ref.l2_normalize(q), ref.l2_normalize(k)
+        return ref.softmax_attention(q, k, v, bias=bias, causal=causal,
+                                     scale=1.0)
+    return ref.softmax_attention(q, k, v, bias=bias, causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing: Pallas forward, jnp-remat backward.
+# ---------------------------------------------------------------------------
+
+def _make_custom_vjp(pallas_fn, ref_fn, n_args):
+    """Wrap (pallas forward, jnp reference) into a differentiable fn."""
+
+    @jax.custom_vjp
+    def fn(*args):
+        return pallas_fn(*args)
+
+    def fwd(*args):
+        return pallas_fn(*args), args
+
+    def bwd(residuals, g):
+        _, vjp = jax.vjp(ref_fn, *residuals)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+def attend(kind: str, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           w: jnp.ndarray | None = None, b: jnp.ndarray | None = None,
+           causal: bool = False, feature_map: str = "prf",
+           use_pallas: bool = True, block: int = 128) -> jnp.ndarray:
+    """Single-head attention dispatch over ATTENTION_KINDS.
+
+    w — (m, d) random feature rows (kernelized kinds only)
+    b — (2n-1,) RPE coefficients (RPE kinds only)
+    use_pallas — False lowers the pure-jnp path (used by ablations and
+    by tests that cross-check the two implementations).
+    """
+    family, normalize, rpe, impl = parse_kind(kind)
+
+    if family == "softmax":
+        if b is None:
+            b = jnp.zeros((q.shape[0] + k.shape[0] - 1,), q.dtype)
+        if not use_pallas:
+            return _softmax_ref(q, k, v, b, causal=causal, use_bias=rpe,
+                                normalize=normalize)
+
+        def pallas_fn(q, k, v, b):
+            if normalize:
+                qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + EPS)
+                kn = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + EPS)
+                return pallas_softmax_attention(
+                    qn, kn, v, b, causal=causal, block=block, use_bias=rpe,
+                    scale=1.0)
+            return pallas_softmax_attention(
+                q, k, v, b, causal=causal, block=block, use_bias=rpe)
+
+        ref_fn = functools.partial(_softmax_ref, causal=causal, use_bias=rpe,
+                                   normalize=normalize)
+        return _make_custom_vjp(pallas_fn, ref_fn, 4)(q, k, v, b)
+
+    # Kernelized family. elu1/trf base kinds force their own feature map.
+    fmap = {"elu1": "elu1", "trf": "trf"}.get(kind.split("_")[0], feature_map)
+    if w is None:
+        raise ValueError(f"{kind} attention needs feature weights w")
+
+    if not rpe:
+        if not use_pallas:
+            return _kernelized_ref(q, k, v, w, causal=causal,
+                                   normalize=normalize, feature_map=fmap)
+        pallas_fn = functools.partial(
+            _kernelized_pallas, causal=causal, normalize=normalize,
+            feature_map=fmap, block=block)
+        ref_fn = functools.partial(
+            _kernelized_ref, causal=causal, normalize=normalize,
+            feature_map=fmap)
+        return _make_custom_vjp(pallas_fn, ref_fn, 4)(q, k, v, w)
+
+    # (n)prf_rpe_{fft,direct} — the paper's model + its ablations.
+    if b is None:
+        raise ValueError(f"{kind} attention needs RPE coefficients b")
+    if not use_pallas:
+        return _kernel_rpe_ref(q, k, v, w, b, causal=causal,
+                               normalize=normalize, feature_map=fmap)
+    pallas_fn = functools.partial(
+        _kernel_rpe_pallas, causal=causal, normalize=normalize,
+        feature_map=fmap, impl=impl, block=block)
+    ref_fn = functools.partial(_kernel_rpe_ref, causal=causal,
+                               normalize=normalize, feature_map=fmap)
+    return _make_custom_vjp(pallas_fn, ref_fn, 5)(q, k, v, w, b)
+
+
+def needs_feature_weights(kind: str) -> bool:
+    return parse_kind(kind)[0] == "kernel"
+
+
+def needs_rpe(kind: str) -> bool:
+    return parse_kind(kind)[2]
+
+
+# ---------------------------------------------------------------------------
+# 2-D RPE variant for vision models (Table 4): block-Toeplitz + 2-D FFT.
+# ---------------------------------------------------------------------------
+
+def attend_2d_rpe(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  w: jnp.ndarray, b2: jnp.ndarray, grid: int,
+                  feature_map: str = "prf", use_pallas: bool = True,
+                  block: int = 128) -> jnp.ndarray:
+    """NPRF attention with 2-D relative positional encoding.
+
+    Sequence is a row-major (grid x grid) patch lattice; b2 has shape
+    (2*grid-1, 2*grid-1). The position-correlation matrix is
+    block-Toeplitz-with-Toeplitz-blocks, multiplied via 2-D FFT.
+    """
+    n, d = v.shape
+    assert n == grid * grid, (n, grid)
+
+    def fwd_ref(q, k, v, w, b2):
+        phi = _phi_ref(feature_map)
+        qn, kn = ref.l2_normalize(q), ref.l2_normalize(k)
+        phi_q, phi_k = phi(qn, w), phi(kn, w)
+        c2 = jnp.exp(b2 - jnp.max(b2))
+        u = jnp.concatenate([v, jnp.ones((n, 1), v.dtype)], axis=-1)
+        mm = phi_k.shape[-1]
+        p = (phi_k[:, :, None] * u[:, None, :]).reshape(n, mm * (d + 1))
+        dm = ref.toeplitz2d_mul_fft(c2, p, grid).reshape(n, mm, d + 1)
+        num = jnp.einsum("nm,nmd->nd", phi_q, dm[:, :, :d])
+        den = jnp.einsum("nm,nm->n", phi_q, dm[:, :, d])[:, None]
+        return num / (den + EPS)
+
+    def fwd_pallas(q, k, v, w, b2):
+        phi = _phi_pallas(feature_map)
+        phi_q = phi(q, w, normalize=True, block=block)
+        phi_k = phi(k, w, normalize=True, block=block)
+        c2 = jnp.exp(b2 - jnp.max(b2))
+        p = kv_aggregate(phi_k, v, block=block)
+        dm = ref.toeplitz2d_mul_fft(c2, p, grid)
+        return attn_readout(phi_q, dm, d, block=block)
+
+    if not use_pallas:
+        return fwd_ref(q, k, v, w, b2)
+    return _make_custom_vjp(fwd_pallas, fwd_ref, 5)(q, k, v, w, b2)

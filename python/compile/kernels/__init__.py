@@ -1,0 +1,13 @@
+"""Pallas kernels (L1) + pure-jnp oracles for kernelized attention w/ RPE."""
+
+from . import ref  # noqa: F401
+from .attn_readout import attn_readout  # noqa: F401
+from .causal_scan import causal_linear_attention  # noqa: F401
+from .feature_maps import (  # noqa: F401
+    elu1_features,
+    prf_features,
+    trf_features,
+)
+from .kv_aggregate import kv_aggregate  # noqa: F401
+from .softmax_attn import softmax_attention  # noqa: F401
+from .toeplitz_direct import toeplitz_mul_direct  # noqa: F401

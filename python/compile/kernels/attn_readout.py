@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: the final readout of kernelized attention with RPE.
+
+Given the query features phi_q (n, m) and the Toeplitz-multiplied
+aggregate D (n, m*(d+1)) (numerator columns 0..d-1, denominator column d,
+see Eq. 10-13), produces
+
+    z_i = (phi_q_i . D_i[:, :d]) / (phi_q_i . D_i[:, d] + eps)
+
+TPU mapping: a (bs, m) block of phi_q and the matching (bs, m*(d+1))
+block of D are streamed into VMEM; the contraction over m per row is a
+batched vec-mat that the MXU executes as a (bs x m) x (m x (d+1))-shaped
+einsum with a diagonal-batch structure — expressed here with a broadcast
+multiply + reduction over the m axis, which Mosaic maps to VPU lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_maps import _block, DEFAULT_BLOCK
+
+EPS = 1e-6
+
+
+def _readout_kernel(phi_q_ref, d_ref, o_ref, *, d: int):
+    phi_q = phi_q_ref[...]                           # (bs, m)
+    bs, m = phi_q.shape
+    dmat = d_ref[...].reshape(bs, m, d + 1)          # (bs, m, d+1)
+    acc = jnp.sum(phi_q[:, :, None] * dmat, axis=1)  # (bs, d+1)
+    o_ref[...] = acc[:, :d] / (acc[:, d:] + EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block"))
+def attn_readout(phi_q: jnp.ndarray, dmat: jnp.ndarray, d: int,
+                 block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """phi_q: (n, m), dmat: (n, m*(d+1)) -> z: (n, d)."""
+    n, m = phi_q.shape
+    bs = _block(n, block)
+    return pl.pallas_call(
+        functools.partial(_readout_kernel, d=d),
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, m), lambda i: (i, 0)),
+            pl.BlockSpec((bs, m * (d + 1)), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), phi_q.dtype),
+        interpret=True,
+    )(phi_q, dmat)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernels: chunked causal linear attention (no RPE).
+
+Causal kernelized attention needs prefix sums
+    S_i = sum_{j <= i} phi(k_j)^T [v_j | 1].
+We use the classic chunk decomposition (the TPU-friendly version of the
+linear-attention recurrence):
+
+  1. `block_sums` (Pallas): per-chunk totals  B_c = sum_{j in chunk c} P_j.
+  2. exclusive cumulative sum over the (few) chunks — done at L2 in jnp,
+     it is O(n/bs) work and XLA fuses it.
+  3. `causal_readout` (Pallas): within each chunk, combine the carry
+     (prefix of earlier chunks) with an in-chunk causal triangular
+     contraction to produce z_i.
+
+The in-chunk triangular part is an O(bs^2) dense contraction per chunk —
+exactly the shape the MXU wants — so total work is O(n * bs) with VMEM
+footprint O(bs * m * (d+1)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_maps import _block, DEFAULT_BLOCK
+
+EPS = 1e-6
+
+
+def _block_sums_kernel(p_ref, o_ref):
+    # Sum the chunk's per-position aggregates into a single row.
+    o_ref[...] = jnp.sum(p_ref[...], axis=0, keepdims=True)
+
+
+def _causal_readout_kernel(phi_q_ref, phi_k_ref, v_ref, carry_ref, o_ref,
+                           *, d: int):
+    phi_q = phi_q_ref[...]                            # (bs, m)
+    phi_k = phi_k_ref[...]                            # (bs, m)
+    v = v_ref[...]                                    # (bs, d)
+    bs, m = phi_q.shape
+    carry = carry_ref[...].reshape(m, d + 1)          # prefix of past chunks
+    u = jnp.concatenate([v, jnp.ones((bs, 1), v.dtype)], axis=-1)
+    # Cross-chunk term: phi_q_i . carry  -> (bs, d+1)
+    cross = jnp.dot(phi_q, carry)
+    # In-chunk causal term: scores_il = phi_q_i . phi_k_l for l <= i.
+    scores = jnp.dot(phi_q, phi_k.T)                  # (bs, bs)
+    tri = jnp.tril(scores)
+    inchunk = jnp.dot(tri, u)                         # (bs, d+1)
+    acc = cross + inchunk
+    o_ref[...] = acc[:, :d] / (acc[:, d:] + EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def causal_linear_attention(phi_q: jnp.ndarray, phi_k: jnp.ndarray,
+                            v: jnp.ndarray,
+                            block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Causal Eq. 3: z_i = phi_q_i S_i[:, :d] / phi_q_i S_i[:, d].
+
+    phi_q, phi_k: (n, m); v: (n, d) -> (n, d).
+    """
+    n, m = phi_q.shape
+    d = v.shape[1]
+    bs = _block(n, block)
+    n_chunks = n // bs
+    f = m * (d + 1)
+
+    # Step 1: per-chunk totals of P_j = vec(phi_k_j^T u_j).
+    u = jnp.concatenate([v, jnp.ones((n, 1), v.dtype)], axis=-1)
+    p = (phi_k[:, :, None] * u[:, None, :]).reshape(n, f)
+    sums = pl.pallas_call(
+        _block_sums_kernel,
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((bs, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, f), v.dtype),
+        interpret=True,
+    )(p)
+
+    # Step 2: exclusive prefix over chunks (tiny, stays at L2).
+    carry = jnp.cumsum(sums, axis=0) - sums           # (n_chunks, f)
+
+    # Step 3: per-chunk readout with carry + in-chunk triangle.
+    return pl.pallas_call(
+        functools.partial(_causal_readout_kernel, d=d),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((bs, m), lambda i: (i, 0)),
+            pl.BlockSpec((bs, m), lambda i: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), v.dtype),
+        interpret=True,
+    )(phi_q, phi_k, v, carry)

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels for the feature maps phi(.) of kernelized attention.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+  * the sequence dimension is tiled with BlockSpec (HBM -> VMEM streaming,
+    the TPU analogue of the paper's GPU threadblock scheme);
+  * the (block, d) x (d, m) projection inside each block is an
+    MXU-systolic-friendly matmul;
+  * the row-norm reductions stay in VMEM registers.
+
+All kernels are lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the same tiling
+structure to plain HLO, which is what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+DEFAULT_BLOCK = 128
+
+
+def _block(n: int, requested: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of n that is <= requested (sequence tiling size)."""
+    bs = min(n, requested)
+    while n % bs != 0:
+        bs -= 1
+    return bs
+
+
+def _prf_kernel(x_ref, w_ref, o_ref, *, normalize: bool):
+    """One sequence block of phi_PRF (Eq. 5), optionally on l2-normalized x."""
+    x = x_ref[...]                                   # (bs, d) in VMEM
+    if normalize:
+        norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True)) + EPS
+        x = x / norm
+    m = w_ref.shape[0]
+    proj = jnp.dot(x, w_ref[...].T)                  # (bs, m) — MXU matmul
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    o_ref[...] = jnp.exp(proj - sq) / jnp.sqrt(m).astype(x.dtype)
+
+
+def _trf_kernel(x_ref, w_ref, o_ref, *, normalize: bool):
+    """One sequence block of phi_TRF (Eq. 4): [sin(wx), cos(wx)] * e^{|x|^2/2}."""
+    x = x_ref[...]
+    if normalize:
+        norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True)) + EPS
+        x = x / norm
+    m = w_ref.shape[0]
+    proj = jnp.dot(x, w_ref[...].T)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    scale = jnp.exp(sq) / jnp.sqrt(m).astype(x.dtype)
+    o_ref[...] = jnp.concatenate([jnp.sin(proj), jnp.cos(proj)], axis=-1) * scale
+
+
+def _elu1_kernel(x_ref, o_ref, *, normalize: bool):
+    """One sequence block of elu(x) + 1 (Linear Transformer feature map)."""
+    x = x_ref[...]
+    if normalize:
+        norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True)) + EPS
+        x = x / norm
+    o_ref[...] = jnp.where(x > 0, x + 1.0, jnp.exp(x))
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "block"))
+def prf_features(x: jnp.ndarray, w: jnp.ndarray, normalize: bool = False,
+                 block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """phi_PRF(x) over the whole sequence; x: (n, d), w: (m, d) -> (n, m)."""
+    n, d = x.shape
+    m = w.shape[0]
+    bs = _block(n, block)
+    return pl.pallas_call(
+        functools.partial(_prf_kernel, normalize=normalize),
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),   # weights stay resident
+        ],
+        out_specs=pl.BlockSpec((bs, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "block"))
+def trf_features(x: jnp.ndarray, w: jnp.ndarray, normalize: bool = False,
+                 block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """phi_TRF(x); x: (n, d), w: (m, d) -> (n, 2m)."""
+    n, d = x.shape
+    m = w.shape[0]
+    bs = _block(n, block)
+    return pl.pallas_call(
+        functools.partial(_trf_kernel, normalize=normalize),
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, 2 * m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2 * m), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "block"))
+def elu1_features(x: jnp.ndarray, normalize: bool = False,
+                  block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """elu(x)+1; x: (n, d) -> (n, d)."""
+    n, d = x.shape
+    bs = _block(n, block)
+    return pl.pallas_call(
+        functools.partial(_elu1_kernel, normalize=normalize),
+        grid=(n // bs,),
+        in_specs=[pl.BlockSpec((bs, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: per-position key-feature x value outer products.
+
+Computes P with P[j] = vec(phi(k_j)^T [v_j | 1]) of shape (n, m*(d+1)) —
+the right operand of the Toeplitz product in Eq. 12/13. The trailing
+"| 1" column carries the denominator features (D_2 in the paper) through
+the same Toeplitz multiply, so numerator and denominator share one FFT.
+
+TPU mapping: each grid step loads a (bs, m) block of phi_k and a (bs, d)
+block of v into VMEM and materializes the (bs, m, d+1) outer-product tile
+directly in VMEM — the elementwise broadcast form keeps the VPU busy and
+avoids the (m x bs)x(bs x d) matmul, which would compute the *sum* over
+the block rather than per-position products.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_maps import _block, DEFAULT_BLOCK
+
+
+def _kv_outer_kernel(phi_k_ref, v_ref, o_ref):
+    phi_k = phi_k_ref[...]                           # (bs, m)
+    v = v_ref[...]                                   # (bs, d)
+    bs, m = phi_k.shape
+    d = v.shape[1]
+    u = jnp.concatenate([v, jnp.ones((bs, 1), v.dtype)], axis=-1)  # (bs, d+1)
+    outer = phi_k[:, :, None] * u[:, None, :]        # (bs, m, d+1)
+    o_ref[...] = outer.reshape(bs, m * (d + 1))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def kv_aggregate(phi_k: jnp.ndarray, v: jnp.ndarray,
+                 block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """phi_k: (n, m), v: (n, d) -> P: (n, m*(d+1))."""
+    n, m = phi_k.shape
+    d = v.shape[1]
+    bs = _block(n, block)
+    return pl.pallas_call(
+        _kv_outer_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, m), lambda i: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, m * (d + 1)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m * (d + 1)), phi_k.dtype),
+        interpret=True,
+    )(phi_k, v)

@@ -1,0 +1,290 @@
+"""Pure-jnp correctness oracles for every kernel in this package.
+
+Everything here is deliberately written in the most transparent way
+possible (quadratic attention, naive Toeplitz products, direct feature
+maps) so that the Pallas kernels and the FFT fast paths can be checked
+against it bit-for-bit (up to fp32 tolerances) in pytest.
+
+Shapes follow the paper's notation:
+  n  — sequence length
+  d  — per-head hidden dimension
+  m  — feature-map dimension
+  q, k : (n, d); v : (n, d); w : (m, d) random projection rows
+  b : (2n-1,) relative-position biases, b[t + n - 1] == b_{t}, t = j - i
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Feature maps (Eq. 4, Eq. 5 and friends)
+# ---------------------------------------------------------------------------
+
+def phi_prf(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Positive Random Features (Performer, Eq. 5).
+
+    phi(x) = exp(-|x|^2/2)/sqrt(m) * [exp(w_1 x), ..., exp(w_m x)]
+    """
+    m = w.shape[0]
+    proj = x @ w.T                                   # (n, m)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    # exp(proj - sq) computed jointly for numerical stability.
+    return jnp.exp(proj - sq) / jnp.sqrt(m)
+
+
+def phi_trf(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Trigonometric Random Features (RFA, Eq. 4).
+
+    phi(x) = exp(|x|^2/2)/sqrt(m) * [sin(w x), cos(w x)]  -> (n, 2m)
+    """
+    m = w.shape[0]
+    proj = x @ w.T
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    scale = jnp.exp(sq) / jnp.sqrt(m)
+    return jnp.concatenate([jnp.sin(proj), jnp.cos(proj)], axis=-1) * scale
+
+
+def phi_elu1(x: jnp.ndarray, w: jnp.ndarray | None = None) -> jnp.ndarray:
+    """elu(x)+1 feature map (Linear Transformer, Katharopoulos et al.)."""
+    del w
+    return jax.nn.elu(x) + 1.0
+
+
+def l2_normalize(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise l2 normalization used by the N(ormalized)PRF attention."""
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + EPS)
+
+
+FEATURE_MAPS = {
+    "prf": phi_prf,
+    "trf": phi_trf,
+    "elu1": phi_elu1,
+}
+
+
+# ---------------------------------------------------------------------------
+# Softmax attention (the exact baselines)
+# ---------------------------------------------------------------------------
+
+def softmax_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    causal: bool = False,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Vanilla softmax attention, optionally with an additive RPE bias.
+
+    bias, if given, is the full (n_q, n_k) matrix of b_{j-i} terms
+    (see `rpe_bias_matrix`).
+    """
+    n_q, d = q.shape
+    n_k = k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d)
+    logits = (q @ k.T) * scale                      # (n_q, n_k)
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        mask = jnp.tril(jnp.ones((n_q, n_k), dtype=bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs @ v
+
+
+def rpe_bias_matrix(b: jnp.ndarray, n_q: int, n_k: int) -> jnp.ndarray:
+    """Expand the (n_q + n_k - 1,) vector of b_t into the full bias matrix.
+
+    b[t + n_q - 1] holds b_{t} for the relative offset t = j - i with
+    i in [0, n_q), j in [0, n_k). Entry (i, j) of the result is b_{j-i}.
+    """
+    i = jnp.arange(n_q)[:, None]
+    j = jnp.arange(n_k)[None, :]
+    return b[(j - i) + n_q - 1]
+
+
+# ---------------------------------------------------------------------------
+# Kernelized attention (Eq. 3) and its RPE extension (Eq. 10) — quadratic.
+# ---------------------------------------------------------------------------
+
+def kernelized_attention(
+    phi_q: jnp.ndarray,
+    phi_k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Eq. 3 computed the quadratic way (attention-matrix form)."""
+    scores = phi_q @ phi_k.T                        # (n, n), all >= 0 for PRF
+    if causal:
+        scores = jnp.tril(scores)
+    denom = jnp.sum(scores, axis=-1, keepdims=True) + EPS
+    return (scores / denom) @ v
+
+
+def kernelized_attention_rpe(
+    phi_q: jnp.ndarray,
+    phi_k: jnp.ndarray,
+    v: jnp.ndarray,
+    b: jnp.ndarray,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Eq. 10 computed the quadratic way: scores scaled by exp(b_{j-i}).
+
+    A shared shift of b cancels between numerator and denominator, so we
+    subtract max(b) before exponentiating for numerical stability.
+    """
+    n_q = phi_q.shape[0]
+    n_k = phi_k.shape[0]
+    bmat = rpe_bias_matrix(b - jnp.max(b), n_q, n_k)
+    scores = (phi_q @ phi_k.T) * jnp.exp(bmat)
+    if causal:
+        scores = jnp.tril(scores)
+    denom = jnp.sum(scores, axis=-1, keepdims=True) + EPS
+    return (scores / denom) @ v
+
+
+# ---------------------------------------------------------------------------
+# Toeplitz products — naive quadratic reference and the FFT fast path.
+# ---------------------------------------------------------------------------
+
+def toeplitz_matrix(c: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Full (n, n) Toeplitz matrix T[i, j] = c_{j-i}; c has length 2n-1
+    with c[t + n - 1] = c_t."""
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return c[(j - i) + n - 1]
+
+
+def toeplitz_mul_naive(c: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y_i = sum_j c_{j-i} x_j via the explicit matrix. x: (n, f)."""
+    n = x.shape[0]
+    return toeplitz_matrix(c, n) @ x
+
+
+def toeplitz_mul_fft(c: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Same product in O(f * n log n) by circulant embedding + real FFT.
+
+    We need y_i = sum_j c_{j-i} x_j = (g circconv x)_i with
+    g[(i - j) mod L] = c_{j-i}, i.e. g[t] = c_{-t mod L}:
+      g[0] = c_0, g[1] = c_{-1}, ..., g[n-1] = c_{-(n-1)},
+      g[L-1] = c_1, ..., g[L-(n-1)] = c_{n-1}.
+    """
+    n, f = x.shape
+    L = 1
+    while L < 2 * n:
+        L <<= 1
+    g = jnp.zeros((L,), dtype=x.dtype)
+    # c[t + n - 1] = c_t. Negative offsets at the head of g:
+    #   g[t] = c_{-t} = c[n - 1 - t] for t = 0..n-1
+    g = g.at[0:n].set(c[n - 1::-1])
+    #   g[L - p] = c_p = c[p + n - 1] for p = 1..n-1
+    g = g.at[L - n + 1:].set(c[2 * n - 2:n - 1:-1])
+    gf = jnp.fft.rfft(g)                            # (L/2+1,)
+    xf = jnp.fft.rfft(x, n=L, axis=0)               # (L/2+1, f)
+    y = jnp.fft.irfft(xf * gf[:, None], n=L, axis=0)
+    return y[:n]
+
+
+def toeplitz2d_matrix(c2: jnp.ndarray, g: int) -> jnp.ndarray:
+    """(g^2, g^2) block-Toeplitz matrix from a 2-D bias table.
+
+    c2 has shape (2g-1, 2g-1) with c2[dr + g - 1, dc + g - 1] = c_{dr,dc}.
+    Sequence index p = r * g + c (row-major patches).
+    """
+    r = jnp.arange(g)
+    dr = (r[None, :] - r[:, None]) + g - 1          # (g, g) of row deltas
+    # T[(r1,c1),(r2,c2)] = c2[r2-r1, c2-c1]
+    t = c2[dr[:, :, None, None], dr[None, None, :, :]]  # [r1, r2, c1, c2]
+    t = jnp.transpose(t, (0, 2, 1, 3))              # [r1, c1, r2, c2]
+    return t.reshape(g * g, g * g)
+
+
+def toeplitz2d_mul_naive(c2: jnp.ndarray, x: jnp.ndarray, g: int) -> jnp.ndarray:
+    return toeplitz2d_matrix(c2, g) @ x
+
+
+def toeplitz2d_mul_fft(c2: jnp.ndarray, x: jnp.ndarray, g: int) -> jnp.ndarray:
+    """2-D circulant embedding: y[(r1,c1)] = sum c_{r2-r1, c2-c1} x[(r2,c2)].
+
+    Equivalent to a 2-D circular convolution with kernel
+    h[a, b] = c2[-a mod L, -b mod L].
+    """
+    f = x.shape[-1]
+    L = 1
+    while L < 2 * g:
+        L <<= 1
+    h = jnp.zeros((L, L), dtype=x.dtype)
+    # h[a, b] = c_{-a, -b}; fill the four quadrants.
+    idx_neg = jnp.arange(g - 1, -1, -1)             # a in 0..g-1 -> c_{-a}
+    idx_pos = jnp.arange(2 * g - 2, g - 1, -1)      # L-p -> c_p, p = 1..g-1
+    h = h.at[0:g, 0:g].set(c2[idx_neg][:, idx_neg])
+    h = h.at[0:g, L - g + 1:].set(c2[idx_neg][:, idx_pos])
+    h = h.at[L - g + 1:, 0:g].set(c2[idx_pos][:, idx_neg])
+    h = h.at[L - g + 1:, L - g + 1:].set(c2[idx_pos][:, idx_pos])
+    hf = jnp.fft.rfft2(h)                           # (L, L/2+1)
+    xg = x.reshape(g, g, f)
+    xf = jnp.fft.rfft2(xg, s=(L, L), axes=(0, 1))   # (L, L/2+1, f)
+    y = jnp.fft.irfft2(xf * hf[:, :, None], s=(L, L), axes=(0, 1))
+    return y[:g, :g].reshape(g * g, f)
+
+
+# ---------------------------------------------------------------------------
+# The paper's Algorithm 1 as a transparent reference (FFT fast path).
+# ---------------------------------------------------------------------------
+
+def nprf_rpe_attention_fft(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    causal: bool = False,
+    normalize_qk: bool = True,
+    feature_map: str = "prf",
+) -> jnp.ndarray:
+    """Normalized kernelized attention with RPE, computed in O(n log n).
+
+    This is the reference implementation of Algorithm 1: the Pallas
+    kernels + the L2 graph must match it.
+    """
+    phi = FEATURE_MAPS[feature_map]
+    if normalize_qk:
+        q, k = l2_normalize(q), l2_normalize(k)
+    phi_q = phi(q, w)                               # (n, m')
+    phi_k = phi(k, w)
+    n, d = v.shape
+    mm = phi_q.shape[-1]
+    c = jnp.exp(b - jnp.max(b))                     # shift cancels in the ratio
+    if causal:
+        # c_t = 0 for t = j - i > 0 (no peeking at the future).
+        t = jnp.arange(-(n - 1), n)
+        c = jnp.where(t > 0, 0.0, c)
+    u = jnp.concatenate([v, jnp.ones((n, 1), v.dtype)], axis=-1)  # (n, d+1)
+    p = (phi_k[:, :, None] * u[:, None, :]).reshape(n, mm * (d + 1))
+    dmat = toeplitz_mul_fft(c, p).reshape(n, mm, d + 1)
+    num = jnp.einsum("nm,nmd->nd", phi_q, dmat[:, :, :d])
+    den = jnp.einsum("nm,nm->n", phi_q, dmat[:, :, d])[:, None]
+    return num / (den + EPS)
+
+
+def nprf_rpe_attention_quadratic(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    causal: bool = False,
+    normalize_qk: bool = True,
+    feature_map: str = "prf",
+) -> jnp.ndarray:
+    """Same math via the explicit attention matrix (the O(n^2) oracle)."""
+    phi = FEATURE_MAPS[feature_map]
+    if normalize_qk:
+        q, k = l2_normalize(q), l2_normalize(k)
+    return kernelized_attention_rpe(phi(q, w), phi(k, w), v, b, causal=causal)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: direct (quadratic) Toeplitz-by-matrix product.
+
+The O(n^2) comparator for the FFT fast path: y_i = sum_j c_{j-i} x_j
+computed by materializing (bs x bs) tiles of the Toeplitz matrix on the
+fly from the (2n-1,) coefficient vector via iota-gather, then running a
+dense tile matmul. Used by the Fig. 1a crossover study and as an
+independent oracle for `toeplitz_mul_fft`.
+
+TPU mapping: each (qi, kj) tile gathers its diagonal-constant block into
+VMEM once and feeds the MXU a (bs x bs) x (bs x f) matmul; arithmetic
+intensity matches a plain tiled GEMM, so this path wins only for small n
+where the FFT constant dominates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .feature_maps import _block, DEFAULT_BLOCK
+
+
+def _toeplitz_direct_kernel(c_ref, x_ref, o_ref, *, n: int, bs: int):
+    qi = pl.program_id(0)
+    f = x_ref.shape[1]
+    n_blocks = n // bs
+
+    def body(kj, acc):
+        x = pl.load(x_ref, (pl.ds(kj * bs, bs), slice(None)))   # (bs, f)
+        i_idx = qi * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+        j_idx = kj * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+        tile = c_ref[...][(j_idx - i_idx) + (n - 1)]             # (bs, bs)
+        return acc + jnp.dot(tile, x)
+
+    acc = jax.lax.fori_loop(0, n_blocks, body,
+                            jnp.zeros((bs, f), x_ref.dtype))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def toeplitz_mul_direct(c: jnp.ndarray, x: jnp.ndarray,
+                        block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """c: (2n-1,), x: (n, f) -> y: (n, f) with y_i = sum_j c_{j-i} x_j."""
+    n, f = x.shape
+    bs = _block(n, block)
+    kern = functools.partial(_toeplitz_direct_kernel, n=n, bs=bs)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((2 * n - 1,), lambda i: (0,)),
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), x.dtype),
+        interpret=True,
+    )(c, x)

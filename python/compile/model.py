@@ -1,0 +1,486 @@
+"""L2 model zoo: the Transformer family used by every experiment.
+
+Four architectures, all built on `attention.attend` so any attention
+kind (softmax / PRF / NPRF±RPE / …) slots into any of them:
+
+  decoder_lm   — causal LM (Table 2 WikiText-style, Table 6 image gen)
+  encoder_cls  — bidirectional encoder + MLM head + classifier head
+                 (Table 1 pretrain/finetune)
+  seq2seq      — encoder-decoder for translation (Table 3, Figs. 2-3)
+  vit          — patch-sequence classifier with 2-D RPE (Table 4)
+
+Parameters live in a flat dict {name: array}; `param_layout` fixes a
+deterministic order + init spec so the Rust coordinator can (re)create
+the flat f32 vector without running Python. Inside the jitted functions
+the flat vector is unflattened with static slices, which XLA folds away.
+
+Design notes mirrored from the paper:
+  * RPE coefficients b are per-head and shared across layers (§2.2);
+  * models with RPE carry no absolute positional embedding; all others
+    get a learned absolute PE (the vanilla/Performer convention);
+  * feature-map projections w are non-trainable buffers (drawn once,
+    redrawable by the coordinator for conversion studies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .attention import attend, attend_2d_rpe, needs_feature_weights, needs_rpe
+
+EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    kind: str                     # decoder_lm | encoder_cls | seq2seq | vit
+    attention: str = "nprf_rpe_fft"
+    feature_map: str = "prf"
+    vocab: int = 64
+    seq_len: int = 128
+    layers: int = 2
+    d_model: int = 128
+    heads: int = 4
+    ffn: int = 256
+    feature_dim: int = 32         # m
+    num_classes: int = 4          # encoder_cls / vit
+    src_len: int = 0              # seq2seq (defaults to seq_len)
+    grid: int = 8                 # vit: grid x grid patches
+    patch_dim: int = 12           # vit: flattened patch size
+    dropout: float = 0.0          # inference/AOT path is deterministic
+    use_pallas: bool = True
+    block: int = 128
+    tie_embeddings: bool = True
+    dec_attention: str = ""       # seq2seq: decoder attention ("" = same)
+    dec_feature_dim: int = 0      # seq2seq: decoder m ("0" = same)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+    @property
+    def n_src(self) -> int:
+        return self.src_len or self.seq_len
+
+    @property
+    def enc_kind(self) -> str:
+        return self.attention
+
+    @property
+    def dec_kind(self) -> str:
+        return self.dec_attention or self.attention
+
+    @property
+    def dec_m(self) -> int:
+        return self.dec_feature_dim or self.feature_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str          # "normal:<std>" | "zeros" | "ones" | "feature:<kind>"
+    trainable: bool = True
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def _cross_kind(kind: str) -> str:
+    """Cross-attention uses the kernelized-no-RPE form of a RPE kind."""
+    if needs_rpe(kind):
+        if kind.startswith("softmax"):
+            return "softmax_norm" if "_norm" in kind else "softmax"
+        return "nprf" if kind.startswith("n") else "prf"
+    return kind
+
+
+def _attn_param_specs(cfg: ModelConfig, prefix: str, kind: str,
+                      m: int) -> list[ParamSpec]:
+    d = cfg.d_model
+    std = 0.02
+    specs = [
+        ParamSpec(f"{prefix}.wq", (d, d), f"normal:{std}"),
+        ParamSpec(f"{prefix}.wk", (d, d), f"normal:{std}"),
+        ParamSpec(f"{prefix}.wv", (d, d), f"normal:{std}"),
+        ParamSpec(f"{prefix}.wo", (d, d), f"normal:{std}"),
+    ]
+    if needs_feature_weights(kind):
+        fm = _feature_map_of(cfg, kind)
+        specs.append(ParamSpec(
+            f"{prefix}.w_feat", (cfg.heads, m, cfg.d_head),
+            f"feature:{fm}", trainable=False))
+    return specs
+
+
+def _feature_map_of(cfg: ModelConfig, kind: str | None = None) -> str:
+    base = (kind or cfg.attention).split("_")[0]
+    if base in ("elu1", "trf"):
+        return base
+    return cfg.feature_map
+
+
+def _layer_param_specs(cfg: ModelConfig, prefix: str, n_ctx: int,
+                       with_cross: bool = False,
+                       kind: str | None = None,
+                       m: int | None = None) -> list[ParamSpec]:
+    d, f = cfg.d_model, cfg.ffn
+    std = 0.02
+    kind = kind or cfg.attention
+    m = m or cfg.feature_dim
+    specs = [
+        ParamSpec(f"{prefix}.ln1.g", (d,), "ones"),
+        ParamSpec(f"{prefix}.ln1.b", (d,), "zeros"),
+        *_attn_param_specs(cfg, f"{prefix}.attn", kind, m),
+    ]
+    if with_cross:
+        specs += [
+            ParamSpec(f"{prefix}.lnx.g", (d,), "ones"),
+            ParamSpec(f"{prefix}.lnx.b", (d,), "zeros"),
+            *_attn_param_specs(cfg, f"{prefix}.xattn", _cross_kind(kind), m),
+        ]
+    specs += [
+        ParamSpec(f"{prefix}.ln2.g", (d,), "ones"),
+        ParamSpec(f"{prefix}.ln2.b", (d,), "zeros"),
+        ParamSpec(f"{prefix}.ffn.w1", (d, f), f"normal:{std}"),
+        ParamSpec(f"{prefix}.ffn.b1", (f,), "zeros"),
+        ParamSpec(f"{prefix}.ffn.w2", (f, d), f"normal:{std}"),
+        ParamSpec(f"{prefix}.ffn.b2", (d,), "zeros"),
+    ]
+    return specs
+
+
+def param_layout(cfg: ModelConfig) -> list[ParamSpec]:
+    """The deterministic flat-vector layout for a model config."""
+    d = cfg.d_model
+    std = 0.02
+    specs: list[ParamSpec] = []
+    rpe = needs_rpe(cfg.attention)
+
+    if cfg.kind == "vit":
+        specs.append(ParamSpec("patch_proj.w", (cfg.patch_dim, d),
+                               f"normal:{std}"))
+        specs.append(ParamSpec("patch_proj.b", (d,), "zeros"))
+        if rpe:
+            g = cfg.grid
+            specs.append(ParamSpec("rpe2d", (cfg.heads, 2 * g - 1, 2 * g - 1),
+                                   "zeros"))
+        else:
+            specs.append(ParamSpec("abs_pe", (cfg.grid * cfg.grid, d),
+                                   f"normal:{std}"))
+        for i in range(cfg.layers):
+            specs += _layer_param_specs(cfg, f"enc.{i}", cfg.grid * cfg.grid)
+        specs += [
+            ParamSpec("ln_f.g", (d,), "ones"),
+            ParamSpec("ln_f.b", (d,), "zeros"),
+            ParamSpec("head.w", (d, cfg.num_classes), f"normal:{std}"),
+            ParamSpec("head.b", (cfg.num_classes,), "zeros"),
+        ]
+        return specs
+
+    specs.append(ParamSpec("embed", (cfg.vocab, d), f"normal:{std}"))
+
+    if cfg.kind == "decoder_lm":
+        if rpe:
+            specs.append(ParamSpec("rpe", (cfg.heads, 2 * cfg.seq_len - 1),
+                                   "zeros"))
+        else:
+            specs.append(ParamSpec("abs_pe", (cfg.seq_len, d),
+                                   f"normal:{std}"))
+        for i in range(cfg.layers):
+            specs += _layer_param_specs(cfg, f"dec.{i}", cfg.seq_len)
+        specs += [ParamSpec("ln_f.g", (d,), "ones"),
+                  ParamSpec("ln_f.b", (d,), "zeros")]
+        if not cfg.tie_embeddings:
+            specs.append(ParamSpec("lm_head", (d, cfg.vocab), f"normal:{std}"))
+        return specs
+
+    if cfg.kind == "encoder_cls":
+        if rpe:
+            specs.append(ParamSpec("rpe", (cfg.heads, 2 * cfg.seq_len - 1),
+                                   "zeros"))
+        else:
+            specs.append(ParamSpec("abs_pe", (cfg.seq_len, d),
+                                   f"normal:{std}"))
+        for i in range(cfg.layers):
+            specs += _layer_param_specs(cfg, f"enc.{i}", cfg.seq_len)
+        specs += [
+            ParamSpec("ln_f.g", (d,), "ones"),
+            ParamSpec("ln_f.b", (d,), "zeros"),
+            ParamSpec("cls.w", (d, cfg.num_classes), f"normal:{std}"),
+            ParamSpec("cls.b", (cfg.num_classes,), "zeros"),
+        ]
+        return specs
+
+    if cfg.kind == "seq2seq":
+        if needs_rpe(cfg.enc_kind):
+            specs.append(ParamSpec("rpe_enc", (cfg.heads, 2 * cfg.n_src - 1),
+                                   "zeros"))
+        else:
+            specs.append(ParamSpec("abs_pe_enc", (cfg.n_src, d),
+                                   f"normal:{std}"))
+        if needs_rpe(cfg.dec_kind):
+            specs.append(ParamSpec("rpe_dec", (cfg.heads, 2 * cfg.seq_len - 1),
+                                   "zeros"))
+        else:
+            specs.append(ParamSpec("abs_pe_dec", (cfg.seq_len, d),
+                                   f"normal:{std}"))
+        for i in range(cfg.layers):
+            specs += _layer_param_specs(cfg, f"enc.{i}", cfg.n_src,
+                                        kind=cfg.enc_kind)
+        for i in range(cfg.layers):
+            specs += _layer_param_specs(cfg, f"dec.{i}", cfg.seq_len,
+                                        with_cross=True, kind=cfg.dec_kind,
+                                        m=cfg.dec_m)
+        specs += [ParamSpec("ln_f.g", (d,), "ones"),
+                  ParamSpec("ln_f.b", (d,), "zeros")]
+        return specs
+
+    raise ValueError(f"unknown model kind {cfg.kind!r}")
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(s.size for s in param_layout(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> jnp.ndarray:
+    """Flat f32 init vector following the layout's init specs."""
+    chunks = []
+    for i, spec in enumerate(param_layout(cfg)):
+        sub = jax.random.fold_in(key, i)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape)
+        elif spec.init.startswith("normal:"):
+            std = float(spec.init.split(":")[1])
+            arr = std * jax.random.normal(sub, spec.shape)
+        elif spec.init.startswith("feature:"):
+            fm = spec.init.split(":")[1]
+            h, m, dh = spec.shape
+            arr = jnp.stack([
+                attn_mod.draw_feature_weights(jax.random.fold_in(sub, hh),
+                                              m, dh, fm)
+                for hh in range(h)])
+        else:
+            raise ValueError(spec.init)
+        chunks.append(arr.reshape(-1).astype(jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def trainable_mask(cfg: ModelConfig) -> jnp.ndarray:
+    parts = [jnp.full((s.size,), 1.0 if s.trainable else 0.0)
+             for s in param_layout(cfg)]
+    return jnp.concatenate(parts)
+
+
+def decay_mask(cfg: ModelConfig) -> jnp.ndarray:
+    """Weight decay applies to matrices only (not biases/LN/RPE)."""
+    parts = []
+    for s in param_layout(cfg):
+        decay = (s.trainable and len(s.shape) >= 2
+                 and not s.name.startswith(("rpe", "abs_pe")))
+        parts.append(jnp.full((s.size,), 1.0 if decay else 0.0))
+    return jnp.concatenate(parts)
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> dict:
+    params = {}
+    off = 0
+    for spec in param_layout(cfg):
+        params[spec.name] = jax.lax.dynamic_slice_in_dim(
+            flat, off, spec.size).reshape(spec.shape)
+        off += spec.size
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _split_heads(x, heads):
+    n, d = x.shape
+    return x.reshape(n, heads, d // heads).transpose(1, 0, 2)  # (h, n, dh)
+
+
+def _merge_heads(x):
+    h, n, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * dh)
+
+
+def _mha(cfg: ModelConfig, p: dict, prefix: str, x_q, x_kv,
+         rpe: jnp.ndarray | None, causal: bool,
+         kind: str | None = None, rpe2d: jnp.ndarray | None = None):
+    """Multi-head attention over single-example activations (n, d)."""
+    kind = kind or cfg.attention
+    q = _split_heads(x_q @ p[f"{prefix}.wq"], cfg.heads)
+    k = _split_heads(x_kv @ p[f"{prefix}.wk"], cfg.heads)
+    v = _split_heads(x_kv @ p[f"{prefix}.wv"], cfg.heads)
+    w_feat = p.get(f"{prefix}.w_feat")
+    fm = _feature_map_of(cfg)
+
+    if rpe2d is not None:
+        def head(qh, kh, vh, wh, bh):
+            return attend_2d_rpe(qh, kh, vh, wh, bh, cfg.grid,
+                                 feature_map=fm, use_pallas=cfg.use_pallas,
+                                 block=cfg.block)
+        z = jax.vmap(head)(q, k, v, w_feat, rpe2d)
+    else:
+        need_w = needs_feature_weights(kind)
+        need_b = needs_rpe(kind)
+        if need_w and need_b:
+            z = jax.vmap(lambda qh, kh, vh, wh, bh: attend(
+                kind, qh, kh, vh, w=wh, b=bh, causal=causal, feature_map=fm,
+                use_pallas=cfg.use_pallas, block=cfg.block))(
+                    q, k, v, w_feat, rpe)
+        elif need_w:
+            z = jax.vmap(lambda qh, kh, vh, wh: attend(
+                kind, qh, kh, vh, w=wh, causal=causal, feature_map=fm,
+                use_pallas=cfg.use_pallas, block=cfg.block))(q, k, v, w_feat)
+        elif need_b:
+            z = jax.vmap(lambda qh, kh, vh, bh: attend(
+                kind, qh, kh, vh, b=bh, causal=causal, feature_map=fm,
+                use_pallas=cfg.use_pallas, block=cfg.block))(q, k, v, rpe)
+        else:
+            z = jax.vmap(lambda qh, kh, vh: attend(
+                kind, qh, kh, vh, causal=causal, feature_map=fm,
+                use_pallas=cfg.use_pallas, block=cfg.block))(q, k, v)
+    return _merge_heads(z) @ p[f"{prefix}.wo"]
+
+
+def _ffn(p, prefix, x):
+    h = jax.nn.gelu(x @ p[f"{prefix}.w1"] + p[f"{prefix}.b1"])
+    return h @ p[f"{prefix}.w2"] + p[f"{prefix}.b2"]
+
+
+def _block_fwd(cfg, p, prefix, x, rpe, causal, rpe2d=None, kind=None):
+    h = _layer_norm(x, p[f"{prefix}.ln1.g"], p[f"{prefix}.ln1.b"])
+    x = x + _mha(cfg, p, f"{prefix}.attn", h, h, rpe, causal, kind=kind,
+                 rpe2d=rpe2d)
+    h = _layer_norm(x, p[f"{prefix}.ln2.g"], p[f"{prefix}.ln2.b"])
+    return x + _ffn(p, f"{prefix}.ffn", h)
+
+
+def _xblock_fwd(cfg, p, prefix, x, enc_out, rpe, causal, kind):
+    """Decoder block: causal self-attn + cross-attn + FFN.
+
+    Cross-attention uses the kernelized-no-RPE variant when the decoder's
+    attention has RPE (relative offsets across different sequences are
+    not meaningful — see DESIGN.md), softmax when it is softmax.
+    """
+    h = _layer_norm(x, p[f"{prefix}.ln1.g"], p[f"{prefix}.ln1.b"])
+    x = x + _mha(cfg, p, f"{prefix}.attn", h, h, rpe, causal, kind=kind)
+    h = _layer_norm(x, p[f"{prefix}.lnx.g"], p[f"{prefix}.lnx.b"])
+    x = x + _mha(cfg, p, f"{prefix}.xattn", h, enc_out, None, False,
+                 kind=_cross_kind(kind))
+    h = _layer_norm(x, p[f"{prefix}.ln2.g"], p[f"{prefix}.ln2.b"])
+    return x + _ffn(p, f"{prefix}.ffn", h)
+
+
+def _embed(cfg, p, tokens, pe_name):
+    x = p["embed"][tokens] * math.sqrt(cfg.d_model)
+    if pe_name in p:
+        x = x + p[pe_name][: tokens.shape[0]]
+    return x
+
+
+def decoder_lm_logits(cfg: ModelConfig, flat: jnp.ndarray,
+                      tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (n,) int32 -> logits: (n, vocab)."""
+    p = unflatten(cfg, flat)
+    rpe = p.get("rpe")
+    x = _embed(cfg, p, tokens, "abs_pe")
+    for i in range(cfg.layers):
+        x = _block_fwd(cfg, p, f"dec.{i}", x, rpe, causal=True)
+    x = _layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return x @ head
+
+
+def encoder_hidden(cfg: ModelConfig, flat: jnp.ndarray,
+                   tokens: jnp.ndarray) -> jnp.ndarray:
+    p = unflatten(cfg, flat)
+    rpe = p.get("rpe")
+    x = _embed(cfg, p, tokens, "abs_pe")
+    for i in range(cfg.layers):
+        x = _block_fwd(cfg, p, f"enc.{i}", x, rpe, causal=False)
+    return _layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+
+
+def encoder_mlm_logits(cfg: ModelConfig, flat: jnp.ndarray,
+                       tokens: jnp.ndarray) -> jnp.ndarray:
+    x = encoder_hidden(cfg, flat, tokens)
+    p = unflatten(cfg, flat)
+    return x @ p["embed"].T
+
+
+def encoder_cls_logits(cfg: ModelConfig, flat: jnp.ndarray,
+                       tokens: jnp.ndarray) -> jnp.ndarray:
+    x = encoder_hidden(cfg, flat, tokens)
+    p = unflatten(cfg, flat)
+    pooled = jnp.mean(x, axis=0)
+    return pooled @ p["cls.w"] + p["cls.b"]
+
+
+def seq2seq_logits(cfg: ModelConfig, flat: jnp.ndarray,
+                   src: jnp.ndarray, tgt_in: jnp.ndarray) -> jnp.ndarray:
+    """src: (n_src,), tgt_in: (n_tgt,) -> logits (n_tgt, vocab)."""
+    p = unflatten(cfg, flat)
+    enc_rpe, dec_rpe = p.get("rpe_enc"), p.get("rpe_dec")
+    x = _embed(cfg, p, src, "abs_pe_enc")
+    for i in range(cfg.layers):
+        x = _block_fwd(cfg, p, f"enc.{i}", x, enc_rpe, causal=False,
+                       kind=cfg.enc_kind)
+    enc_out = x
+    y = _embed(cfg, p, tgt_in, "abs_pe_dec")
+    for i in range(cfg.layers):
+        y = _xblock_fwd(cfg, p, f"dec.{i}", y, enc_out, dec_rpe, causal=True,
+                        kind=cfg.dec_kind)
+    y = _layer_norm(y, p["ln_f.g"], p["ln_f.b"])
+    return y @ p["embed"].T
+
+
+def vit_logits(cfg: ModelConfig, flat: jnp.ndarray,
+               patches: jnp.ndarray) -> jnp.ndarray:
+    """patches: (grid*grid, patch_dim) f32 -> logits (num_classes,)."""
+    p = unflatten(cfg, flat)
+    x = patches @ p["patch_proj.w"] + p["patch_proj.b"]
+    if "abs_pe" in p:
+        x = x + p["abs_pe"]
+    rpe2d = p.get("rpe2d")
+    for i in range(cfg.layers):
+        x = _block_fwd(cfg, p, f"enc.{i}", x, None, causal=False,
+                       rpe2d=rpe2d)
+    x = _layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    pooled = jnp.mean(x, axis=0)
+    return pooled @ p["head.w"] + p["head.b"]
+
+
+FORWARD_FNS: dict[str, Callable] = {
+    "decoder_lm": decoder_lm_logits,
+    "encoder_cls": encoder_cls_logits,
+    "encoder_mlm": encoder_mlm_logits,
+    "seq2seq": seq2seq_logits,
+    "vit": vit_logits,
+}

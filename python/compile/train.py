@@ -1,0 +1,155 @@
+"""L2 training step: losses + Adam over the flat parameter vector.
+
+The whole optimizer update is one pure jitted function so Rust can drive
+training as `step(flat, m, v, t, lr, batch...) -> (flat', m', v', loss)`
+with zero Python on the hot path. The learning-rate *schedule* lives in
+Rust (lr arrives as a scalar input each step); Adam state and gradient
+clipping live here.
+
+Batching: per-example forward passes from model.py are vmapped over the
+leading batch axis; losses are token-weighted means so padding can be
+masked out by the coordinator via the weights tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+from .model import ModelConfig
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.98
+ADAM_EPS = 1e-6
+CLIP_NORM = 1.0
+WEIGHT_DECAY = 0.01
+LABEL_SMOOTH = 0.1
+
+
+def _smoothed_xent(logits: jnp.ndarray, targets: jnp.ndarray,
+                   weights: jnp.ndarray, smooth: float) -> jnp.ndarray:
+    """Label-smoothed cross entropy, mean over weighted positions.
+
+    logits: (..., V); targets: (...) int32; weights: (...) f32.
+    """
+    v = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if smooth > 0.0:
+        uniform = -jnp.mean(logp, axis=-1)
+        nll = (1.0 - smooth) * nll + smooth * uniform
+    total_w = jnp.sum(weights) + 1e-8
+    return jnp.sum(nll * weights) / total_w
+
+
+# ---------------------------------------------------------------------------
+# Per-task loss functions.  Each takes (cfg, flat, *batch) -> scalar loss.
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, flat, tokens, targets, weights,
+            smooth: float = 0.0):
+    """Causal LM. tokens/targets/weights: (B, n)."""
+    logits = jax.vmap(lambda t: model_mod.decoder_lm_logits(cfg, flat, t))(
+        tokens)
+    return _smoothed_xent(logits, targets, weights, smooth)
+
+
+def mlm_loss(cfg: ModelConfig, flat, tokens, targets, weights,
+             smooth: float = 0.0):
+    """Masked LM: weights select the masked positions."""
+    logits = jax.vmap(lambda t: model_mod.encoder_mlm_logits(cfg, flat, t))(
+        tokens)
+    return _smoothed_xent(logits, targets, weights, smooth)
+
+
+def cls_loss(cfg: ModelConfig, flat, tokens, labels, smooth: float = 0.0):
+    """Sequence classification. tokens: (B, n); labels: (B,)."""
+    logits = jax.vmap(lambda t: model_mod.encoder_cls_logits(cfg, flat, t))(
+        tokens)
+    w = jnp.ones(labels.shape, jnp.float32)
+    return _smoothed_xent(logits, labels, w, smooth)
+
+
+def seq2seq_loss(cfg: ModelConfig, flat, src, tgt_in, tgt_out, weights,
+                 smooth: float = LABEL_SMOOTH):
+    logits = jax.vmap(
+        lambda s, t: model_mod.seq2seq_logits(cfg, flat, s, t))(src, tgt_in)
+    return _smoothed_xent(logits, tgt_out, weights, smooth)
+
+
+def vit_loss(cfg: ModelConfig, flat, patches, labels,
+             smooth: float = LABEL_SMOOTH):
+    logits = jax.vmap(lambda x: model_mod.vit_logits(cfg, flat, x))(patches)
+    w = jnp.ones(labels.shape, jnp.float32)
+    return _smoothed_xent(logits, labels, w, smooth)
+
+
+LOSS_FNS: dict[str, Callable] = {
+    "decoder_lm": lm_loss,
+    "encoder_mlm": mlm_loss,
+    "encoder_cls": cls_loss,
+    "seq2seq": seq2seq_loss,
+    "vit": vit_loss,
+}
+
+
+def task_of(cfg: ModelConfig, task: str | None = None) -> str:
+    if task is not None:
+        return task
+    return cfg.kind
+
+
+# ---------------------------------------------------------------------------
+# Adam step over the flat vector.
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, task: str,
+                    smooth: float | None = None) -> Callable:
+    """Build step(flat, m, v, t, lr, *batch) -> (flat', m', v', loss)."""
+    loss_fn = LOSS_FNS[task]
+    tmask = model_mod.trainable_mask(cfg)
+    dmask = model_mod.decay_mask(cfg)
+    default_smooth = LABEL_SMOOTH if task in ("seq2seq", "vit") else 0.0
+    sm = default_smooth if smooth is None else smooth
+
+    def step(flat, m, v, t, lr, *batch):
+        loss, grads = jax.value_and_grad(
+            lambda f: loss_fn(cfg, f, *batch, smooth=sm))(flat)
+        grads = grads * tmask
+        gnorm = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+        grads = grads * jnp.minimum(1.0, CLIP_NORM / gnorm)
+        m_new = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+        v_new = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+        t_new = t + 1.0
+        mhat = m_new / (1.0 - ADAM_B1 ** t_new)
+        vhat = v_new / (1.0 - ADAM_B2 ** t_new)
+        update = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        update = update + WEIGHT_DECAY * flat * dmask
+        flat_new = flat - lr * update * tmask
+        return flat_new, m_new, v_new, loss
+
+    return step
+
+
+def make_eval_loss(cfg: ModelConfig, task: str,
+                   smooth: float = 0.0) -> Callable:
+    loss_fn = LOSS_FNS[task]
+
+    def eval_loss(flat, *batch):
+        return loss_fn(cfg, flat, *batch, smooth=smooth)
+
+    return eval_loss
+
+
+def make_forward(cfg: ModelConfig, task: str) -> Callable:
+    """Batched logits function for eval / serving / generation."""
+    fwd = model_mod.FORWARD_FNS[task]
+
+    def forward(flat, *batch):
+        return jax.vmap(lambda *ex: fwd(cfg, flat, *ex))(*batch)
+
+    return forward

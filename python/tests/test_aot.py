@@ -1,0 +1,96 @@
+"""AOT lowering regression tests — the bridge contract with Rust."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig, param_count, param_layout
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_text_has_no_elided_constants():
+    """REGRESSION: the default HLO printer elides large constants as
+    `{...}`, which xla_extension 0.5.1 parses back as all-zeros — this
+    silently killed every gradient (the trainable-mask constant became
+    zero). to_hlo_text must print large constants in full."""
+    mask = jnp.concatenate([jnp.full((700,), 1.0), jnp.full((300,), 0.0)])
+
+    def f(x):
+        return (x * mask,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((1000,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text
+    assert "f32[1000]" in text
+
+
+def test_hlo_text_is_parseable_header():
+    def f(x, y):
+        return (x @ y + 2.0,)
+
+    s = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(f).lower(s, s))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_layout_id_is_stable_and_distinct():
+    cfg1 = ModelConfig(kind="decoder_lm", attention="nprf_rpe_fft")
+    cfg2 = ModelConfig(kind="decoder_lm", attention="softmax")
+    assert aot.layout_id(cfg1) == aot.layout_id(cfg1)
+    assert aot.layout_id(cfg1) != aot.layout_id(cfg2)
+
+
+def test_groups_cover_all_paper_experiments():
+    assert set(aot.GROUPS) == {
+        "lm", "mt", "pretrain", "vit", "imggen", "fwd_speed",
+    }
+
+
+@pytest.mark.parametrize("group", ["lm", "mt", "vit", "imggen", "fwd_speed",
+                                   "pretrain"])
+def test_quick_groups_construct(group):
+    arts = aot.GROUPS[group](quick=True)
+    assert arts, group
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for a in arts:
+        assert a.role in ("train_step", "eval_loss", "forward", "attn_fwd")
+        assert a.in_specs
+        if a.cfg is not None:
+            # first input of model artifacts is the flat param vector
+            nm, spec = a.in_specs[0]
+            assert nm == "flat"
+            assert spec.shape == (param_count(a.cfg),)
+
+
+def test_train_artifact_input_order_contract():
+    """Rust's Trainer hard-codes (flat, m, v, t, lr, *batch)."""
+    arts = aot.group_lm(quick=True)
+    train = next(a for a in arts if a.role == "train_step")
+    names = [nm for nm, _ in train.in_specs]
+    assert names[:5] == ["flat", "adam_m", "adam_v", "t", "lr"]
+    assert train.out_names == ["flat", "adam_m", "adam_v", "loss"]
+
+
+def test_manifest_layout_matches_python(tmp_path):
+    """Entries written to the manifest reproduce param_layout exactly."""
+    cfg = ModelConfig(kind="decoder_lm", attention="nprf_rpe_fft", vocab=16,
+                      seq_len=8, layers=1, d_model=8, heads=2, ffn=16,
+                      feature_dim=4)
+    layout = param_layout(cfg)
+    entry = [{"name": s.name, "shape": list(s.shape), "init": s.init,
+              "trainable": s.trainable} for s in layout]
+    # round-trip through json (what aot.py writes, Rust reads)
+    back = json.loads(json.dumps(entry))
+    assert back == entry
+    offsets = []
+    off = 0
+    for s in layout:
+        offsets.append(off)
+        off += s.size
+    assert off == param_count(cfg)

@@ -1,0 +1,158 @@
+"""L2 attention dispatch: every kind x {pallas, jnp} x {causal, not}
+agree; gradients flow; conversion-relevant invariants hold."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import attention as A
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, D, M = 48, 16, 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(3)
+    ks = [jax.random.fold_in(key, i) for i in range(5)]
+    q, k, v = (jax.random.normal(ks[i], (N, D)) for i in range(3))
+    w = A.draw_feature_weights(ks[3], M, D, "prf")
+    b = 0.3 * jax.random.normal(ks[4], (2 * N - 1,))
+    return q, k, v, w, b
+
+
+@pytest.mark.parametrize("kind", A.ATTENTION_KINDS)
+@pytest.mark.parametrize("causal", [False, True])
+def test_pallas_matches_jnp(data, kind, causal):
+    q, k, v, w, b = data
+    kw = dict(w=w if A.needs_feature_weights(kind) else None,
+              b=b if A.needs_rpe(kind) else None)
+    zp = A.attend(kind, q, k, v, causal=causal, use_pallas=True, block=16, **kw)
+    zr = A.attend(kind, q, k, v, causal=causal, use_pallas=False, **kw)
+    tol = 2e-2 if kind == "trf" else 1e-4  # TRF denominators can be tiny
+    assert np.max(np.abs(np.asarray(zp) - np.asarray(zr))) < tol
+
+
+@pytest.mark.parametrize("kind", A.ATTENTION_KINDS)
+def test_gradients_finite(data, kind):
+    q, k, v, w, b = data
+    kw = dict(w=w if A.needs_feature_weights(kind) else None,
+              b=b if A.needs_rpe(kind) else None)
+    g = jax.grad(lambda q: A.attend(kind, q, k, v, use_pallas=True,
+                                    block=16, **kw).sum())(q)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_parse_kind_grammar():
+    assert A.parse_kind("softmax") == ("softmax", False, False, None)
+    assert A.parse_kind("softmax_norm_rpe") == ("softmax", True, True, None)
+    assert A.parse_kind("nprf_rpe_fft") == ("kernel", True, True, "fft")
+    assert A.parse_kind("prf_rpe_direct") == ("kernel", False, True, "direct")
+    assert A.parse_kind("elu1") == ("kernel", False, False, None)
+    with pytest.raises(ValueError):
+        A.parse_kind("nope")
+
+
+def test_fft_equals_direct_impl(data):
+    q, k, v, w, b = data
+    z1 = A.attend("nprf_rpe_fft", q, k, v, w=w, b=b, use_pallas=True, block=16)
+    z2 = A.attend("nprf_rpe_direct", q, k, v, w=w, b=b, use_pallas=True, block=16)
+    np.testing.assert_allclose(z1, z2, rtol=1e-3, atol=1e-4)
+
+
+def test_prf_approximates_softmax_with_many_features(data):
+    """kernel target check: PRF with the d^{-1/4} prescale estimates
+    standard softmax attention (exp(qk/sqrt(d)))."""
+    q, k, v, _, _ = data
+    key = jax.random.PRNGKey(9)
+    w_big = A.draw_feature_weights(key, 8192, D, "prf")
+    z_prf = A.attend("prf", q * 0.5, k * 0.5, v, w=w_big, use_pallas=False)
+    z_sm = A.attend("softmax", q * 0.5, k * 0.5, v, use_pallas=False)
+    err = np.max(np.abs(np.asarray(z_prf) - np.asarray(z_sm)))
+    assert err < 0.15, err
+
+
+def test_normalized_variance_smaller_than_unnormalized(data):
+    """Lemma 2 consequence: across feature redraws, NPRF attention
+    varies less than PRF attention once q/k norms are moderately large
+    (and NPRF's variance is norm-INDEPENDENT)."""
+    q, k, v, _, _ = data
+    q4, k4 = q * 4.0, k * 4.0
+    outs_prf, outs_nprf, outs_nprf_raw = [], [], []
+    for s in range(8):
+        w = A.draw_feature_weights(jax.random.PRNGKey(100 + s), M, D, "prf")
+        outs_prf.append(np.asarray(
+            A.attend("prf", q4, k4, v, w=w, use_pallas=False)))
+        outs_nprf.append(np.asarray(
+            A.attend("nprf", q4, k4, v, w=w, use_pallas=False)))
+        outs_nprf_raw.append(np.asarray(
+            A.attend("nprf", q, k, v, w=w, use_pallas=False)))
+    var_prf = np.var(np.stack(outs_prf), axis=0).mean()
+    var_nprf = np.var(np.stack(outs_nprf), axis=0).mean()
+    assert var_nprf < var_prf / 2.0, (var_prf, var_nprf)
+    # normalization makes the estimator scale-invariant
+    np.testing.assert_allclose(
+        np.stack(outs_nprf), np.stack(outs_nprf_raw), rtol=1e-3, atol=1e-4)
+
+
+def test_prf_collapses_at_extreme_norms(data):
+    """At |q|,|k| >> 1 the PRF features underflow (exp(-|x|^2/2)) and
+    the attention output degenerates toward zero — the failure mode the
+    paper's normalization fix removes."""
+    q, k, v, w, _ = data
+    z_prf = np.asarray(
+        A.attend("prf", q * 16.0, k * 16.0, v, w=w, use_pallas=False))
+    z_nprf = np.asarray(
+        A.attend("nprf", q * 16.0, k * 16.0, v, w=w, use_pallas=False))
+    # PRF output magnitude collapses far below the value scale; NPRF
+    # (scale-invariant) stays within a small factor of its R=1 output.
+    assert np.abs(z_prf).mean() < 0.05 * np.abs(np.asarray(v)).mean()
+    z_ref = np.asarray(A.attend("nprf", q, k, v, w=w, use_pallas=False))
+    assert np.abs(z_nprf).mean() > 0.5 * np.abs(z_ref).mean()
+
+
+def test_2d_rpe_matches_quadratic():
+    key = jax.random.PRNGKey(7)
+    ks = [jax.random.fold_in(key, i) for i in range(5)]
+    g = 6
+    n = g * g
+    q, k, v = (jax.random.normal(ks[i], (n, D)) for i in range(3))
+    w = A.draw_feature_weights(ks[3], M, D, "prf")
+    b2 = 0.3 * jax.random.normal(ks[4], (2 * g - 1, 2 * g - 1))
+    z = A.attend_2d_rpe(q, k, v, w, b2, g, use_pallas=True, block=12)
+    # quadratic oracle: explicit block-Toeplitz matrix
+    qn, kn = ref.l2_normalize(q), ref.l2_normalize(k)
+    phi_q, phi_k = ref.phi_prf(qn, w), ref.phi_prf(kn, w)
+    c2 = jnp.exp(b2 - jnp.max(b2))
+    cmat = ref.toeplitz2d_matrix(c2, g)
+    scores = (phi_q @ phi_k.T) * cmat
+    denom = jnp.sum(scores, -1, keepdims=True) + 1e-6
+    want = (scores / denom) @ v
+    np.testing.assert_allclose(z, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("fm", ["prf", "trf", "sphere_prf", "orf"])
+def test_feature_map_families_run(data, fm):
+    q, k, v, _, b = data
+    key = jax.random.PRNGKey(11)
+    w = A.draw_feature_weights(key, M, D, fm)
+    z = A.attend("nprf_rpe_fft", q, k, v, w=w, b=b, feature_map=fm,
+                 use_pallas=True, block=16)
+    assert np.all(np.isfinite(np.asarray(z)))
+
+
+def test_orf_weights_are_orthogonal():
+    w = A.draw_feature_weights(jax.random.PRNGKey(5), 8, 16, "orf")
+    gram = np.asarray(w @ w.T)
+    off = gram - np.diag(np.diag(gram))
+    assert np.max(np.abs(off)) < 1e-3
+
+
+def test_sphere_prf_weights_on_sphere():
+    d = 16
+    w = A.draw_feature_weights(jax.random.PRNGKey(6), 8, d, "sphere_prf")
+    norms = np.linalg.norm(np.asarray(w), axis=-1)
+    np.testing.assert_allclose(norms, np.sqrt(d), rtol=1e-5)

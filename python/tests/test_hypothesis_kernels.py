@@ -1,0 +1,140 @@
+"""Hypothesis sweeps over kernel shapes/dtypes — the property-based
+layer of the L1 test pyramid. Strategies draw (n, d, m, block) within
+the envelope the artifacts use and assert the Pallas kernels match the
+jnp oracles for every draw."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def arrays(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([8, 16, 24, 32, 48, 64]),   # n
+    st.sampled_from([4, 8, 16]),                # d
+    st.sampled_from([2, 4, 8, 16]),             # m
+    st.sampled_from([4, 8, 16]),                # block
+    st.integers(0, 2 ** 16),                    # seed
+)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_prf_features_any_shape(params):
+    n, d, m, block, seed = params
+    x = arrays(seed, n, d)
+    w = arrays(seed + 1, m, d)
+    got = K.prf_features(x, w, block=block)
+    np.testing.assert_allclose(got, ref.phi_prf(x, w), rtol=1e-4, atol=1e-5)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_kv_aggregate_any_shape(params):
+    n, d, m, block, seed = params
+    phi_k = jnp.abs(arrays(seed, n, m))
+    v = arrays(seed + 1, n, d)
+    got = K.kv_aggregate(phi_k, v, block=block)
+    u = jnp.concatenate([v, jnp.ones((n, 1))], -1)
+    want = (phi_k[:, :, None] * u[:, None, :]).reshape(n, m * (d + 1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(shape_strategy, st.booleans())
+@settings(**SETTINGS)
+def test_softmax_attention_any_shape(params, causal):
+    n, d, _, block, seed = params
+    q = arrays(seed, n, d)
+    k = arrays(seed + 1, n, d)
+    v = arrays(seed + 2, n, d)
+    got = K.softmax_attention(q, k, v, causal=causal, block=block)
+    want = ref.softmax_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+
+
+@given(shape_strategy, st.booleans())
+@settings(**SETTINGS)
+def test_nprf_rpe_fft_vs_quadratic_any_shape(params, causal):
+    n, d, m, _, seed = params
+    q = arrays(seed, n, d)
+    k = arrays(seed + 1, n, d)
+    v = arrays(seed + 2, n, d)
+    w = arrays(seed + 3, m, d)
+    b = 0.3 * arrays(seed + 4, 2 * n - 1)
+    fast = ref.nprf_rpe_attention_fft(q, k, v, w, b, causal=causal)
+    slow = ref.nprf_rpe_attention_quadratic(q, k, v, w, b, causal=causal)
+    np.testing.assert_allclose(fast, slow, rtol=1e-3, atol=1e-3)
+
+
+@given(shape_strategy)
+@settings(**SETTINGS)
+def test_toeplitz_fft_any_shape(params):
+    n, f, _, _, seed = params
+    c = jnp.exp(0.3 * arrays(seed, 2 * n - 1))
+    x = arrays(seed + 1, n, f)
+    np.testing.assert_allclose(
+        ref.toeplitz_mul_fft(c, x), ref.toeplitz_mul_naive(c, x),
+        rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([1.0, 10.0, 100.0]))
+@settings(**SETTINGS)
+def test_normalized_attention_bounded_any_scale(seed, scale):
+    """The paper's stability claim as a property: NPRF+RPE output stays
+    within the convex hull of V rows for ANY input norm."""
+    n, d, m = 24, 8, 8
+    q = arrays(seed, n, d, scale=scale)
+    k = arrays(seed + 1, n, d, scale=scale)
+    v = arrays(seed + 2, n, d)
+    w = arrays(seed + 3, m, d)
+    b = arrays(seed + 4, 2 * n - 1)
+    z = np.asarray(ref.nprf_rpe_attention_fft(q, k, v, w, b))
+    assert np.all(np.isfinite(z))
+    vmin, vmax = float(jnp.min(v)), float(jnp.max(v))
+    assert z.min() >= vmin - 1e-3 and z.max() <= vmax + 1e-3
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_rpe_shift_invariance(seed):
+    """Adding a constant to all b_t must not change the attention
+    output (it cancels in the softmax-style ratio)."""
+    n, d, m = 16, 8, 4
+    q = arrays(seed, n, d)
+    k = arrays(seed + 1, n, d)
+    v = arrays(seed + 2, n, d)
+    w = arrays(seed + 3, m, d)
+    b = 0.5 * arrays(seed + 4, 2 * n - 1)
+    z1 = ref.nprf_rpe_attention_fft(q, k, v, w, b)
+    z2 = ref.nprf_rpe_attention_fft(q, k, v, w, b + 3.7)
+    np.testing.assert_allclose(z1, z2, rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_causal_is_prefix_consistent(seed):
+    """Causal attention at position i must not change when the future
+    tokens change (teacher-forcing correctness)."""
+    n, d, m = 16, 8, 4
+    q = arrays(seed, n, d)
+    k = arrays(seed + 1, n, d)
+    v = arrays(seed + 2, n, d)
+    w = arrays(seed + 3, m, d)
+    b = 0.3 * arrays(seed + 4, 2 * n - 1)
+    z1 = ref.nprf_rpe_attention_fft(q, k, v, w, b, causal=True)
+    # Perturb the last 4 positions of k/v.
+    k2 = k.at[-4:].set(arrays(seed + 9, 4, d))
+    v2 = v.at[-4:].set(arrays(seed + 10, 4, d))
+    z2 = ref.nprf_rpe_attention_fft(q, k2, v2, w, b, causal=True)
+    np.testing.assert_allclose(z1[: n - 4], z2[: n - 4], rtol=1e-3, atol=1e-4)

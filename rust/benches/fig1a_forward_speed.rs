@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig1a_forward_speed` — regenerates the paper's fig1a
+//! (see DESIGN.md §5 and rust/src/coordinator/experiments/fig1a.rs).
+//! Knobs via env: KAFFT_STEPS, KAFFT_SEEDS, KAFFT_FULL=1.
+
+use kafft::coordinator::experiments::{self as exp, ExpOpts};
+use kafft::runtime::Runtime;
+
+fn opts() -> ExpOpts {
+    let mut o = ExpOpts::default();
+    if let Ok(s) = std::env::var("KAFFT_STEPS") {
+        o.steps = s.parse().unwrap_or(o.steps);
+    }
+    if let Ok(s) = std::env::var("KAFFT_SEEDS") {
+        o.seeds = s.parse().unwrap_or(o.seeds);
+    }
+    o.full = std::env::var("KAFFT_FULL").is_ok();
+    o
+}
+
+fn main() {
+    let rt = Runtime::new(kafft::artifacts_dir()).expect("artifacts (run make artifacts)");
+    exp::fig1a::run(&rt, &opts()).expect("fig1a");
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig1b_approx_error` — regenerates Fig. 1b
+//! (PRF approximation error vs query/key norm R and feature dim m).
+//! Pure-Rust Monte-Carlo; no artifacts needed.
+
+use kafft::coordinator::experiments::{fig1b, ExpOpts};
+
+fn main() {
+    let mut o = ExpOpts::default();
+    o.full = std::env::var("KAFFT_FULL").is_ok();
+    fig1b::run(&o).expect("fig1b");
+}

@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig2_conversion` — regenerates the paper's fig2
+//! (see DESIGN.md §5 and rust/src/coordinator/experiments/fig2.rs).
+//! Knobs via env: KAFFT_STEPS, KAFFT_SEEDS, KAFFT_FULL=1.
+
+use kafft::coordinator::experiments::{self as exp, ExpOpts};
+use kafft::runtime::Runtime;
+
+fn opts() -> ExpOpts {
+    let mut o = ExpOpts::default();
+    // budget default for this bench (single-core testbed)
+    o.steps = 200;
+    o.seeds = 2;
+    if let Ok(s) = std::env::var("KAFFT_STEPS") {
+        o.steps = s.parse().unwrap_or(o.steps);
+    }
+    if let Ok(s) = std::env::var("KAFFT_SEEDS") {
+        o.seeds = s.parse().unwrap_or(o.seeds);
+    }
+    o.full = std::env::var("KAFFT_FULL").is_ok();
+    o
+}
+
+fn main() {
+    let rt = Runtime::new(kafft::artifacts_dir()).expect("artifacts (run make artifacts)");
+    exp::fig2::run(&rt, &opts()).expect("fig2");
+}

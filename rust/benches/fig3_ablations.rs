@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig3_ablations` — regenerates Fig. 3a (feature
+//! dim sweep) and Fig. 3b (feature-map family ablation).
+
+use kafft::coordinator::experiments::{fig3, ExpOpts};
+use kafft::runtime::Runtime;
+
+fn main() {
+    let mut o = ExpOpts::default();
+    // budget default for this bench (single-core testbed)
+    o.steps = 200;
+    if let Ok(s) = std::env::var("KAFFT_STEPS") {
+        o.steps = s.parse().unwrap_or(o.steps);
+    }
+    o.full = std::env::var("KAFFT_FULL").is_ok();
+    let rt = Runtime::new(kafft::artifacts_dir()).expect("artifacts");
+    fig3::run_a(&rt, &o).expect("fig3a");
+    fig3::run_b(&rt, &o).expect("fig3b");
+}

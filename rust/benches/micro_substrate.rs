@@ -1,0 +1,83 @@
+//! `cargo bench --bench micro_substrate` — microbenchmarks of the Rust
+//! substrates on the hot path: FFT plans, Toeplitz products (fft vs
+//! naive crossover), PRF feature maps, CPU attention paths, and the
+//! JSON parser. These are the L3-side perf counters for EXPERIMENTS.md
+//! §Perf.
+
+use kafft::attention::{self, draw_gaussian_features, phi_prf};
+use kafft::fft::{fft, Complex, FftPlan};
+use kafft::rng::Rng;
+use kafft::tensor::Mat;
+use kafft::toeplitz::{toeplitz_mul_naive, ToeplitzPlan};
+use kafft::util::bench::{bench_for, print_result};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    println!("-- FFT --");
+    for n in [256usize, 1024, 4096] {
+        let x: Vec<Complex> = (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect();
+        let plan = FftPlan::new(n);
+        let r = bench_for(&format!("fft plan n={n}"), 3, 0.3, 20, || {
+            let mut buf = x.clone();
+            plan.forward(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        print_result(&r);
+        let r = bench_for(&format!("fft oneshot n={n}"), 3, 0.3, 20, || {
+            std::hint::black_box(fft(&x));
+        });
+        print_result(&r);
+    }
+
+    println!("-- Toeplitz fft vs naive (f=64) --");
+    for n in [64usize, 256, 1024] {
+        let c: Vec<f64> = (0..2 * n - 1).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..n * 64).map(|_| rng.normal()).collect();
+        let plan = ToeplitzPlan::new(&c, n);
+        let r = bench_for(&format!("toeplitz fft n={n}"), 2, 0.3, 10, || {
+            std::hint::black_box(plan.apply(&x, 64));
+        });
+        print_result(&r);
+        if n <= 256 {
+            let r = bench_for(&format!("toeplitz naive n={n}"), 2, 0.3, 5, || {
+                std::hint::black_box(toeplitz_mul_naive(&c, &x, n, 64));
+            });
+            print_result(&r);
+        }
+    }
+
+    println!("-- CPU attention paths (n=256, d=64, m=64) --");
+    let (n, d, m) = (256usize, 64usize, 64usize);
+    let q = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0)).l2_normalize_rows();
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0)).l2_normalize_rows();
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32() * 0.1).collect();
+    let c: Vec<f32> = b.iter().map(|x| x.exp()).collect();
+    let phi_q = phi_prf(&q, &w);
+    let phi_k = phi_prf(&k, &w);
+    let r = bench_for("softmax attention", 1, 0.5, 5, || {
+        std::hint::black_box(attention::softmax_attention(&q, &k, &v, &b, false, None));
+    });
+    print_result(&r);
+    let r = bench_for("nprf_rpe fft path", 1, 0.5, 5, || {
+        std::hint::black_box(attention::nprf_rpe_fft_path(&phi_q, &phi_k, &v, &c, false));
+    });
+    print_result(&r);
+    let r = bench_for("nprf_rpe direct path", 1, 0.5, 5, || {
+        std::hint::black_box(attention::nprf_rpe_direct_path(&phi_q, &phi_k, &v, &c, false));
+    });
+    print_result(&r);
+
+    println!("-- JSON --");
+    let manifest = kafft::artifacts_dir().join("manifest.json");
+    if let Ok(text) = std::fs::read_to_string(&manifest) {
+        let r = bench_for("parse manifest.json", 1, 0.3, 5, || {
+            std::hint::black_box(kafft::util::json::Json::parse(&text).unwrap());
+        });
+        print_result(&r);
+    }
+}

@@ -1,0 +1,25 @@
+//! `cargo bench --bench table3_mt` — regenerates the paper's table3
+//! (see DESIGN.md §5 and rust/src/coordinator/experiments/table3.rs).
+//! Knobs via env: KAFFT_STEPS, KAFFT_SEEDS, KAFFT_FULL=1.
+
+use kafft::coordinator::experiments::{self as exp, ExpOpts};
+use kafft::runtime::Runtime;
+
+fn opts() -> ExpOpts {
+    let mut o = ExpOpts::default();
+    // budget default for this bench (single-core testbed)
+    o.steps = 200;
+    if let Ok(s) = std::env::var("KAFFT_STEPS") {
+        o.steps = s.parse().unwrap_or(o.steps);
+    }
+    if let Ok(s) = std::env::var("KAFFT_SEEDS") {
+        o.seeds = s.parse().unwrap_or(o.seeds);
+    }
+    o.full = std::env::var("KAFFT_FULL").is_ok();
+    o
+}
+
+fn main() {
+    let rt = Runtime::new(kafft::artifacts_dir()).expect("artifacts (run make artifacts)");
+    exp::table3::run(&rt, &opts()).expect("table3");
+}

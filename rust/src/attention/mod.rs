@@ -1,0 +1,429 @@
+//! CPU reference implementations of every attention variant.
+//!
+//! These mirror `python/compile/kernels/ref.py` exactly and serve three
+//! jobs: (1) the Fig. 1b / Lemma 2 / Thm. 3 Monte-Carlo simulations,
+//! which need millions of tiny attention evaluations that would be
+//! wasteful through PJRT; (2) cross-validation of the PJRT artifacts
+//! (same inputs → same outputs, tested in rust/tests/); (3) the
+//! Prop. 1 expressiveness check.
+
+pub mod simulation;
+
+use crate::rng::Rng;
+use crate::tensor::Mat;
+use crate::toeplitz::{causal_coeffs, toeplitz_mul_fft, toeplitz_mul_naive};
+
+pub const EPS: f32 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// Feature maps (Eq. 4 / Eq. 5)
+// ---------------------------------------------------------------------------
+
+/// phi_PRF(x) = exp(-|x|^2/2)/sqrt(m) * exp(x W^T); x: (n, d), w: (m, d).
+pub fn phi_prf(x: &Mat, w: &Mat) -> Mat {
+    let m = w.rows;
+    let proj = x.matmul_t(w); // (n, m)
+    let mut out = Mat::zeros(x.rows, m);
+    let scale = 1.0 / (m as f32).sqrt();
+    for i in 0..x.rows {
+        let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
+        for j in 0..m {
+            *out.at_mut(i, j) = (proj.at(i, j) - sq).exp() * scale;
+        }
+    }
+    out
+}
+
+/// phi_TRF(x) = exp(|x|^2/2)/sqrt(m) * [sin(xW^T), cos(xW^T)]; -> (n, 2m).
+pub fn phi_trf(x: &Mat, w: &Mat) -> Mat {
+    let m = w.rows;
+    let proj = x.matmul_t(w);
+    let mut out = Mat::zeros(x.rows, 2 * m);
+    let scale = 1.0 / (m as f32).sqrt();
+    for i in 0..x.rows {
+        let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
+        let s = sq.exp() * scale;
+        for j in 0..m {
+            *out.at_mut(i, j) = proj.at(i, j).sin() * s;
+            *out.at_mut(i, j + m) = proj.at(i, j).cos() * s;
+        }
+    }
+    out
+}
+
+/// elu(x)+1 applied elementwise.
+pub fn phi_elu1(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        *v = if *v > 0.0 { *v + 1.0 } else { v.exp() };
+    }
+    out
+}
+
+/// Draw (m, d) Gaussian feature rows (PRF/TRF).
+pub fn draw_gaussian_features(m: usize, d: usize, rng: &mut Rng) -> Mat {
+    Mat::from_vec(m, d, rng.normal_vec(m * d, 1.0))
+}
+
+// ---------------------------------------------------------------------------
+// Exact softmax attention (with optional RPE bias)
+// ---------------------------------------------------------------------------
+
+/// Softmax attention scores only: A[i, j] over keys. `b` is the
+/// (2n-1,) RPE vector or empty. scale defaults to 1/sqrt(d).
+pub fn softmax_scores(q: &Mat, k: &Mat, b: &[f32], causal: bool,
+                      scale: Option<f32>) -> Mat {
+    let n_q = q.rows;
+    let n_k = k.rows;
+    let s = scale.unwrap_or(1.0 / (q.cols as f32).sqrt());
+    let mut logits = q.matmul_t(k).scale(s);
+    if !b.is_empty() {
+        assert_eq!(b.len(), n_q + n_k - 1);
+        for i in 0..n_q {
+            for j in 0..n_k {
+                *logits.at_mut(i, j) += b[j + n_q - 1 - i];
+            }
+        }
+    }
+    if causal {
+        for i in 0..n_q {
+            for j in (i + 1)..n_k {
+                *logits.at_mut(i, j) = f32::NEG_INFINITY;
+            }
+        }
+    }
+    logits.softmax_rows();
+    logits
+}
+
+pub fn softmax_attention(q: &Mat, k: &Mat, v: &Mat, b: &[f32], causal: bool,
+                         scale: Option<f32>) -> Mat {
+    softmax_scores(q, k, b, causal, scale).matmul(v)
+}
+
+// ---------------------------------------------------------------------------
+// Kernelized attention (Eq. 3 / Eq. 10)
+// ---------------------------------------------------------------------------
+
+/// Kernelized attention scores from explicit feature matrices, with
+/// optional RPE coefficients c (length 2n-1, already exponentiated).
+pub fn kernel_scores(phi_q: &Mat, phi_k: &Mat, c: Option<&[f32]>,
+                     causal: bool) -> Mat {
+    let n_q = phi_q.rows;
+    let n_k = phi_k.rows;
+    let mut scores = phi_q.matmul_t(phi_k);
+    if let Some(c) = c {
+        assert_eq!(c.len(), n_q + n_k - 1);
+        for i in 0..n_q {
+            for j in 0..n_k {
+                *scores.at_mut(i, j) *= c[j + n_q - 1 - i];
+            }
+        }
+    }
+    if causal {
+        for i in 0..n_q {
+            for j in (i + 1)..n_k {
+                *scores.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    for i in 0..n_q {
+        let row = scores.row_mut(i);
+        let sum: f32 = row.iter().sum::<f32>() + EPS;
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    scores
+}
+
+pub fn kernel_attention(phi_q: &Mat, phi_k: &Mat, v: &Mat,
+                        c: Option<&[f32]>, causal: bool) -> Mat {
+    kernel_scores(phi_q, phi_k, c, causal).matmul(v)
+}
+
+/// Attention kind selector mirroring python attention.ATTENTION_KINDS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Softmax { norm: bool, rpe: bool },
+    Kernel { norm: bool, rpe: bool, fft: bool },
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s {
+            "softmax" => Kind::Softmax { norm: false, rpe: false },
+            "softmax_rpe" => Kind::Softmax { norm: false, rpe: true },
+            "softmax_norm" => Kind::Softmax { norm: true, rpe: false },
+            "softmax_norm_rpe" => Kind::Softmax { norm: true, rpe: true },
+            "prf" => Kind::Kernel { norm: false, rpe: false, fft: false },
+            "nprf" => Kind::Kernel { norm: true, rpe: false, fft: false },
+            "prf_rpe_fft" => Kind::Kernel { norm: false, rpe: true, fft: true },
+            "prf_rpe_direct" => {
+                Kind::Kernel { norm: false, rpe: true, fft: false }
+            }
+            "nprf_rpe_fft" => Kind::Kernel { norm: true, rpe: true, fft: true },
+            "nprf_rpe_direct" => {
+                Kind::Kernel { norm: true, rpe: true, fft: false }
+            }
+            _ => return None,
+        })
+    }
+}
+
+/// Full single-head attention dispatch (PRF feature map for kernel
+/// kinds; unnormalized kinds pre-scale q/k by d^{-1/4} like the L2).
+pub fn attend(kind: Kind, q: &Mat, k: &Mat, v: &Mat, w: Option<&Mat>,
+              b: Option<&[f32]>, causal: bool) -> Mat {
+    match kind {
+        Kind::Softmax { norm, rpe } => {
+            let bias: Vec<f32> = if rpe {
+                b.expect("softmax_rpe needs b").to_vec()
+            } else {
+                Vec::new()
+            };
+            if norm {
+                let qn = q.l2_normalize_rows();
+                let kn = k.l2_normalize_rows();
+                softmax_attention(&qn, &kn, v, &bias, causal, Some(1.0))
+            } else {
+                softmax_attention(q, k, v, &bias, causal, None)
+            }
+        }
+        Kind::Kernel { norm, rpe, fft } => {
+            let w = w.expect("kernel kinds need feature weights");
+            let (qq, kk) = if norm {
+                (q.l2_normalize_rows(), k.l2_normalize_rows())
+            } else {
+                let s = (q.cols as f32).powf(-0.25);
+                (q.scale(s), k.scale(s))
+            };
+            let phi_q = phi_prf(&qq, w);
+            let phi_k = phi_prf(&kk, w);
+            if !rpe {
+                return kernel_attention(&phi_q, &phi_k, v, None, causal);
+            }
+            let b = b.expect("rpe kinds need b");
+            let bmax = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let c: Vec<f32> = b.iter().map(|&x| (x - bmax).exp()).collect();
+            if fft {
+                nprf_rpe_fft_path(&phi_q, &phi_k, v, &c, causal)
+            } else {
+                kernel_attention(&phi_q, &phi_k, v, Some(&c), causal)
+            }
+        }
+    }
+}
+
+/// Per-position aggregates P[j] = vec(phi_k_j^T [v_j | 1]) as f64.
+fn kv_aggregate_f64(phi_k: &Mat, v: &Mat) -> Vec<f64> {
+    let n = phi_k.rows;
+    let m = phi_k.cols;
+    let d = v.cols;
+    let f = m * (d + 1);
+    let mut p = vec![0.0f64; n * f];
+    for j in 0..n {
+        let pk = phi_k.row(j);
+        let vr = v.row(j);
+        for (mi, &pkm) in pk.iter().enumerate() {
+            let base = j * f + mi * (d + 1);
+            for (di, &vd) in vr.iter().enumerate() {
+                p[base + di] = (pkm * vd) as f64;
+            }
+            p[base + d] = pkm as f64;
+        }
+    }
+    p
+}
+
+/// The O(n log n) path: kv aggregation + Toeplitz-FFT + readout —
+/// the Rust mirror of Algorithm 1.
+pub fn nprf_rpe_fft_path(phi_q: &Mat, phi_k: &Mat, v: &Mat, c: &[f32],
+                         causal: bool) -> Mat {
+    let n = phi_k.rows;
+    let d = v.cols;
+    let f = phi_k.cols * (d + 1);
+    let p = kv_aggregate_f64(phi_k, v);
+    let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+    let c64 = if causal { causal_coeffs(&c64, n) } else { c64 };
+    let dmat = toeplitz_mul_fft(&c64, &p, n, f);
+    readout(phi_q, &dmat, d)
+}
+
+/// Quadratic-Toeplitz variant (ablation / oracle).
+pub fn nprf_rpe_direct_path(phi_q: &Mat, phi_k: &Mat, v: &Mat, c: &[f32],
+                            causal: bool) -> Mat {
+    let n = phi_k.rows;
+    let d = v.cols;
+    let f = phi_k.cols * (d + 1);
+    let p = kv_aggregate_f64(phi_k, v);
+    let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+    let c64 = if causal { causal_coeffs(&c64, n) } else { c64 };
+    let dmat = toeplitz_mul_naive(&c64, &p, n, f);
+    readout(phi_q, &dmat, d)
+}
+
+fn readout(phi_q: &Mat, dmat: &[f64], d: usize) -> Mat {
+    let n = phi_q.rows;
+    let m = phi_q.cols;
+    let mut z = Mat::zeros(n, d);
+    for i in 0..n {
+        let pq = phi_q.row(i);
+        let mut num = vec![0.0f64; d];
+        let mut den = 0.0f64;
+        for (mi, &pqm) in pq.iter().enumerate() {
+            let base = i * (m * (d + 1)) + mi * (d + 1);
+            for (di, nn) in num.iter_mut().enumerate() {
+                *nn += pqm as f64 * dmat[base + di];
+            }
+            den += pqm as f64 * dmat[base + d];
+        }
+        let inv = 1.0 / (den + EPS as f64);
+        for (di, &nn) in num.iter().enumerate() {
+            *z.at_mut(i, di) = (nn * inv) as f32;
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(r, c, rng.normal_vec(r * c, 1.0))
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let (q, k) = (rand_mat(6, 8, 1), rand_mat(6, 8, 2));
+        let s = softmax_scores(&q, &k, &[], false, None);
+        for i in 0..6 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causal_softmax_upper_triangle_zero() {
+        let (q, k) = (rand_mat(5, 4, 3), rand_mat(5, 4, 4));
+        let s = softmax_scores(&q, &k, &[], true, None);
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                assert_eq!(s.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fft_path_matches_direct_path() {
+        let n = 24;
+        let d = 8;
+        let m = 6;
+        let mut rng = Rng::new(7);
+        let q = rand_mat(n, d, 10).l2_normalize_rows();
+        let k = rand_mat(n, d, 11).l2_normalize_rows();
+        let v = rand_mat(n, d, 12);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let phi_q = phi_prf(&q, &w);
+        let phi_k = phi_prf(&k, &w);
+        let b: Vec<f32> = (0..2 * n - 1).map(|i| ((i % 5) as f32) * 0.2).collect();
+        let c: Vec<f32> = b.iter().map(|&x| x.exp()).collect();
+        for causal in [false, true] {
+            let a = nprf_rpe_fft_path(&phi_q, &phi_k, &v, &c, causal);
+            let bb = nprf_rpe_direct_path(&phi_q, &phi_k, &v, &c, causal);
+            assert!(a.max_abs_diff(&bb) < 1e-4, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn direct_path_matches_score_form() {
+        // Toeplitz-aggregation path == explicit score-matrix path (Eq. 10).
+        let n = 16;
+        let d = 4;
+        let m = 5;
+        let mut rng = Rng::new(9);
+        let q = rand_mat(n, d, 20).l2_normalize_rows();
+        let k = rand_mat(n, d, 21).l2_normalize_rows();
+        let v = rand_mat(n, d, 22);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let phi_q = phi_prf(&q, &w);
+        let phi_k = phi_prf(&k, &w);
+        let c: Vec<f32> = (0..2 * n - 1).map(|i| (0.1 * i as f32).exp()).collect();
+        let a = nprf_rpe_direct_path(&phi_q, &phi_k, &v, &c, false);
+        let b = kernel_attention(&phi_q, &phi_k, &v, Some(&c), false);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn prf_estimates_softmax_kernel() {
+        // E[phi(q) phi(k)^T] = exp(q k^T): check Monte-Carlo convergence.
+        let d = 8;
+        let mut rng = Rng::new(42);
+        let q = Mat::from_vec(1, d, rng.sphere(d, 1.0));
+        let k = Mat::from_vec(1, d, rng.sphere(d, 1.0));
+        let exact = (q
+            .row(0)
+            .iter()
+            .zip(k.row(0))
+            .map(|(a, b)| a * b)
+            .sum::<f32>())
+        .exp();
+        let m = 8192;
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let pq = phi_prf(&q, &w);
+        let pk = phi_prf(&k, &w);
+        let est: f32 = pq.row(0).iter().zip(pk.row(0)).map(|(a, b)| a * b).sum();
+        assert!(
+            (est - exact).abs() / exact < 0.1,
+            "est={est} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn rpe_bias_shifts_attention() {
+        // Strongly positive bias at offset +1 should push mass to j=i+1.
+        let n = 8;
+        let d = 4;
+        let q = rand_mat(n, d, 30);
+        let k = rand_mat(n, d, 31);
+        let mut b = vec![0.0f32; 2 * n - 1];
+        b[n] = 8.0; // offset t = +1
+        let s = softmax_scores(&q, &k, &b, false, None);
+        for i in 0..n - 1 {
+            assert!(s.at(i, i + 1) > 0.9, "i={i} got {}", s.at(i, i + 1));
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for s in [
+            "softmax", "softmax_rpe", "softmax_norm", "softmax_norm_rpe",
+            "prf", "nprf", "prf_rpe_fft", "prf_rpe_direct", "nprf_rpe_fft",
+            "nprf_rpe_direct",
+        ] {
+            assert!(Kind::parse(s).is_some(), "{s}");
+        }
+        assert!(Kind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn attend_normalized_bounded_variance() {
+        // NPRF output should stay finite/bounded even with huge raw q/k.
+        let n = 12;
+        let d = 8;
+        let mut rng = Rng::new(50);
+        let q = rand_mat(n, d, 51).scale(100.0);
+        let k = rand_mat(n, d, 52).scale(100.0);
+        let v = rand_mat(n, d, 53);
+        let w = draw_gaussian_features(16, d, &mut rng);
+        let b = vec![0.0f32; 2 * n - 1];
+        let z = attend(
+            Kind::Kernel { norm: true, rpe: true, fft: true },
+            &q, &k, &v, Some(&w), Some(&b), false,
+        );
+        assert!(z.data.iter().all(|x| x.is_finite()));
+        assert!(z.data.iter().all(|x| x.abs() < 10.0));
+    }
+}

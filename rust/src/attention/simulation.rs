@@ -1,0 +1,163 @@
+//! Monte-Carlo simulations behind Fig. 1b, Lemma 2 and Theorem 3.
+//!
+//! Fig. 1b: approximation error ||A - Â||₁ of PRF attention vs the
+//! exact softmax attention, as a function of the query/key norm R and
+//! the feature dimension m.
+//!
+//! Lemma 2: empirical variance of the estimator phi(q)phi(k)^T vs the
+//! closed form (exp(|q+k|²) - 1) exp(q k^T)² / m.
+//!
+//! Thm. 3: error decays ~ 1/sqrt(m) at fixed R, blows up ~ exp(R²)-ish
+//! in R at fixed m.
+
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+use super::{draw_gaussian_features, kernel_scores, phi_prf, softmax_scores};
+
+/// One Fig. 1b cell: mean L1 distance between the softmax attention row
+/// and its PRF estimate, for `trials` redraws of the feature matrix.
+pub struct ApproxErrorResult {
+    pub r: f64,
+    pub m: usize,
+    pub mean_l1: f64,
+    pub std_l1: f64,
+}
+
+/// Sample a query + `n_keys` keys uniformly on the unit sphere, scale
+/// by R, and measure ||A - Â||_1 averaged over feature redraws.
+pub fn prf_approx_error(d: usize, n_keys: usize, r: f64, m: usize,
+                        trials: usize, seed: u64) -> ApproxErrorResult {
+    let mut rng = Rng::new(seed);
+    // Fixed geometry across trials (paper: one draw of q/keys, vary phi).
+    let q = Mat::from_vec(1, d, rng.sphere(d, r));
+    let mut kdata = Vec::with_capacity(n_keys * d);
+    for _ in 0..n_keys {
+        kdata.extend(rng.sphere(d, r));
+    }
+    let k = Mat::from_vec(n_keys, d, kdata);
+    // Exact softmax attention over raw dot products (scale=1: the
+    // kernel exp(qk^T) is what PRF estimates).
+    let a_exact = softmax_scores(&q, &k, &[], false, Some(1.0));
+
+    let mut l1s = Vec::with_capacity(trials);
+    for t in 0..trials {
+        let mut frng = rng.fold_in(t as u64 + 1);
+        let w = draw_gaussian_features(m, d, &mut frng);
+        let pq = phi_prf(&q, &w);
+        let pk = phi_prf(&k, &w);
+        let a_hat = kernel_scores(&pq, &pk, None, false);
+        let l1: f64 = (0..n_keys)
+            .map(|j| (a_exact.at(0, j) as f64 - a_hat.at(0, j) as f64).abs())
+            .sum();
+        l1s.push(l1);
+    }
+    let mean = l1s.iter().sum::<f64>() / trials as f64;
+    let var = l1s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / trials as f64;
+    ApproxErrorResult { r, m, mean_l1: mean, std_l1: var.sqrt() }
+}
+
+/// Lemma 2: empirical vs analytic variance of phi(q)phi(k)^T.
+pub struct VarianceResult {
+    pub empirical: f64,
+    pub analytic: f64,
+}
+
+pub fn prf_estimator_variance(q: &[f32], k: &[f32], m: usize, trials: usize,
+                              seed: u64) -> VarianceResult {
+    let d = q.len();
+    let qm = Mat::from_vec(1, d, q.to_vec());
+    let km = Mat::from_vec(1, d, k.to_vec());
+    let mut rng = Rng::new(seed);
+    let mut samples = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let pq = phi_prf(&qm, &w);
+        let pk = phi_prf(&km, &w);
+        let est: f64 = pq
+            .row(0)
+            .iter()
+            .zip(pk.row(0))
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        samples.push(est);
+    }
+    let mean = samples.iter().sum::<f64>() / trials as f64;
+    let empirical = samples
+        .iter()
+        .map(|x| (x - mean) * (x - mean))
+        .sum::<f64>()
+        / trials as f64;
+
+    let qk: f64 = q.iter().zip(k).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    let sum_sq: f64 = q
+        .iter()
+        .zip(k)
+        .map(|(a, b)| {
+            let s = *a as f64 + *b as f64;
+            s * s
+        })
+        .sum();
+    // Lemma 2: Var = (exp(|q+k|^2) - 1) * exp(q k^T)^2 / m
+    let analytic = (sum_sq.exp() - 1.0) * (qk.exp()).powi(2) / m as f64;
+    VarianceResult { empirical, analytic }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_grows_with_r() {
+        let small = prf_approx_error(16, 64, 1.0, 64, 8, 1);
+        let large = prf_approx_error(16, 64, 4.0, 64, 8, 1);
+        assert!(
+            large.mean_l1 > 2.0 * small.mean_l1,
+            "R=1: {} vs R=4: {}",
+            small.mean_l1,
+            large.mean_l1
+        );
+    }
+
+    #[test]
+    fn error_shrinks_with_m_at_small_r() {
+        let m_small = prf_approx_error(16, 64, 1.0, 8, 16, 2);
+        let m_large = prf_approx_error(16, 64, 1.0, 512, 16, 2);
+        assert!(
+            m_large.mean_l1 < m_small.mean_l1 * 0.5,
+            "m=8: {} vs m=512: {}",
+            m_small.mean_l1,
+            m_large.mean_l1
+        );
+    }
+
+    #[test]
+    fn lemma2_variance_matches_analytic() {
+        let mut rng = Rng::new(3);
+        let q: Vec<f32> = rng.sphere(8, 0.8);
+        let k: Vec<f32> = rng.sphere(8, 0.8);
+        let r = prf_estimator_variance(&q, &k, 32, 4000, 4);
+        // Monte-Carlo: expect agreement within ~25% for 4000 trials.
+        let ratio = r.empirical / r.analytic;
+        assert!(
+            (0.6..1.6).contains(&ratio),
+            "empirical={} analytic={} ratio={ratio}",
+            r.empirical,
+            r.analytic
+        );
+    }
+
+    #[test]
+    fn variance_explodes_with_norm() {
+        let mut rng = Rng::new(5);
+        let q1: Vec<f32> = rng.sphere(8, 1.0);
+        let k1: Vec<f32> = rng.sphere(8, 1.0);
+        let q2: Vec<f32> = q1.iter().map(|x| x * 3.0).collect();
+        let k2: Vec<f32> = k1.iter().map(|x| x * 3.0).collect();
+        let v1 = prf_estimator_variance(&q1, &k1, 32, 500, 6);
+        let v2 = prf_estimator_variance(&q2, &k2, 32, 500, 6);
+        assert!(v2.analytic > 100.0 * v1.analytic);
+        assert!(v2.empirical > 10.0 * v1.empirical);
+    }
+}

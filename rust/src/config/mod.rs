@@ -1,0 +1,258 @@
+//! Typed run configuration + a TOML-subset parser (offline: no toml
+//! crate). Supports the pieces config files actually use: `[section]`
+//! headers, `key = value` with strings / numbers / bools, `#` comments.
+//!
+//! Precedence: defaults < config file < CLI overrides.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::args::Args;
+
+/// Flat `section.key -> raw string` view of a TOML-subset document.
+#[derive(Debug, Default, Clone)]
+pub struct RawConfig {
+    pub values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RawConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        RawConfig::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Learning-rate schedules (the schedule lives in Rust: the train-step
+/// artifact takes lr as an input each step).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// warmup then inverse-sqrt decay (the paper's LM/MT schedule)
+    InverseSqrt { peak: f64, warmup: usize },
+    /// warmup then linear decay to zero at total_steps
+    Linear { peak: f64, warmup: usize, total: usize },
+    /// warmup then cosine decay (the paper's ViT schedule)
+    Cosine { peak: f64, warmup: usize, total: usize },
+    Constant { lr: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        let s = step as f64 + 1.0;
+        match *self {
+            LrSchedule::InverseSqrt { peak, warmup } => {
+                let w = warmup.max(1) as f64;
+                if s < w {
+                    peak * s / w
+                } else {
+                    peak * (w / s).sqrt()
+                }
+            }
+            LrSchedule::Linear { peak, warmup, total } => {
+                let w = warmup.max(1) as f64;
+                if s < w {
+                    peak * s / w
+                } else {
+                    let frac = ((total as f64 - s) / (total as f64 - w)).max(0.0);
+                    peak * frac
+                }
+            }
+            LrSchedule::Cosine { peak, warmup, total } => {
+                let w = warmup.max(1) as f64;
+                if s < w {
+                    peak * s / w
+                } else {
+                    let frac = ((s - w) / (total as f64 - w)).clamp(0.0, 1.0);
+                    peak * 0.5 * (1.0 + (std::f64::consts::PI * frac).cos())
+                }
+            }
+            LrSchedule::Constant { lr } => lr,
+        }
+    }
+}
+
+/// A full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifact: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub schedule: LrSchedule,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub checkpoint: Option<String>,
+    pub log_every: usize,
+    /// Abort if loss is NaN/Inf or exceeds this multiple of the initial
+    /// loss (divergence detection for the stability experiments).
+    pub divergence_factor: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            artifact: String::new(),
+            steps: 200,
+            seed: 0,
+            schedule: LrSchedule::InverseSqrt { peak: 1e-3, warmup: 40 },
+            eval_every: 0,
+            eval_batches: 4,
+            checkpoint: None,
+            log_every: 20,
+            divergence_factor: 20.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// defaults <- [train] section of config file <- CLI options.
+    pub fn from_sources(file: Option<&RawConfig>, args: &Args) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let get = |key: &str| -> Option<String> {
+            args.get(key)
+                .map(str::to_string)
+                .or_else(|| file.and_then(|f| f.get(&format!("train.{key}")).map(str::to_string)))
+        };
+        if let Some(v) = get("artifact") {
+            c.artifact = v;
+        }
+        if let Some(v) = get("steps") {
+            c.steps = v.parse().context("steps")?;
+        }
+        if let Some(v) = get("seed") {
+            c.seed = v.parse().context("seed")?;
+        }
+        if let Some(v) = get("eval-every") {
+            c.eval_every = v.parse().context("eval-every")?;
+        }
+        if let Some(v) = get("eval-batches") {
+            c.eval_batches = v.parse().context("eval-batches")?;
+        }
+        if let Some(v) = get("checkpoint") {
+            c.checkpoint = Some(v);
+        }
+        if let Some(v) = get("log-every") {
+            c.log_every = v.parse().context("log-every")?;
+        }
+        let peak: f64 = get("lr").map(|v| v.parse()).transpose()?.unwrap_or(1e-3);
+        let warmup: usize =
+            get("warmup").map(|v| v.parse()).transpose()?.unwrap_or(40);
+        let sched = get("schedule").unwrap_or_else(|| "inverse_sqrt".into());
+        c.schedule = match sched.as_str() {
+            "inverse_sqrt" => LrSchedule::InverseSqrt { peak, warmup },
+            "linear" => LrSchedule::Linear { peak, warmup, total: c.steps },
+            "cosine" => LrSchedule::Cosine { peak, warmup, total: c.steps },
+            "constant" => LrSchedule::Constant { lr: peak },
+            other => bail!("unknown schedule {other:?}"),
+        };
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_toml_subset() {
+        let text = r#"
+# top comment
+name = "kafft"
+[train]
+steps = 100    # inline comment
+lr = 0.002
+verbose = true
+"#;
+        let c = RawConfig::parse(text).unwrap();
+        assert_eq!(c.get("name"), Some("kafft"));
+        assert_eq!(c.get("train.steps"), Some("100"));
+        assert_eq!(c.get("train.lr"), Some("0.002"));
+        assert_eq!(c.get("train.verbose"), Some("true"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(RawConfig::parse("[broken").is_err());
+        assert!(RawConfig::parse("no_equals_here").is_err());
+    }
+
+    #[test]
+    fn inverse_sqrt_schedule_shape() {
+        let s = LrSchedule::InverseSqrt { peak: 1e-3, warmup: 10 };
+        assert!(s.at(0) < s.at(8));
+        let peak_region = s.at(9);
+        assert!((peak_region - 1e-3).abs() < 2e-4);
+        assert!(s.at(100) < s.at(20));
+        // inverse-sqrt: lr(4w) = peak/2
+        let w = 10.0f64;
+        let at4w = s.at(4 * 10 - 1);
+        assert!((at4w - 1e-3 * (w / (4.0 * w)).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosine_schedule_decays_to_zero() {
+        let s = LrSchedule::Cosine { peak: 1.0, warmup: 5, total: 100 };
+        assert!(s.at(99) < 0.01);
+        assert!(s.at(5) > 0.95);
+    }
+
+    #[test]
+    fn linear_schedule_endpoints() {
+        let s = LrSchedule::Linear { peak: 1.0, warmup: 10, total: 110 };
+        assert!(s.at(109) < 0.02);
+        assert!((s.at(9) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn train_config_precedence() {
+        let file = RawConfig::parse("[train]\nsteps = 50\nlr = 0.01\n").unwrap();
+        let argv: Vec<String> =
+            ["--steps", "99"].iter().map(|s| s.to_string()).collect();
+        let args = Args::parse(&argv);
+        let c = TrainConfig::from_sources(Some(&file), &args).unwrap();
+        assert_eq!(c.steps, 99); // CLI wins
+        match c.schedule {
+            LrSchedule::InverseSqrt { peak, .. } => {
+                assert!((peak - 0.01).abs() < 1e-12) // file value
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Decoding helpers: greedy seq2seq decode for BLEU (Tables 3, Figs.
+//! 2-3) and top-k accuracy from classifier forwards.
+//!
+//! Note the paper's own limitation (§3.2 footnote): the FFT fast path
+//! does not accelerate token-by-token generation, so decode re-runs
+//! the full forward per emitted token — exactly what the paper does.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::mt::{strip_special, BOS};
+use crate::data::MtBatch;
+use crate::metrics;
+use crate::runtime::{HostTensor, Runtime};
+
+/// Greedy decode a batch of sources with a seq2seq `.fwd` artifact.
+/// Returns per-example hypothesis token vectors (specials stripped).
+pub fn greedy_decode_mt(rt: &Runtime, fwd_artifact: &str, flat: &[f32],
+                        batch: &MtBatch) -> Result<Vec<Vec<i32>>> {
+    let entry = rt.manifest.artifact(fwd_artifact)?;
+    let model = entry
+        .model
+        .as_ref()
+        .ok_or_else(|| anyhow!("fwd artifact missing model meta"))?;
+    let vocab = model.vocab;
+    let nt = batch.tgt_len;
+    let b = batch.batch;
+    if entry.batch != b {
+        anyhow::bail!(
+            "{fwd_artifact} is compiled for batch {}, got {b}",
+            entry.batch
+        );
+    }
+    let mut tgt_in = vec![0i32; b * nt];
+    for bi in 0..b {
+        tgt_in[bi * nt] = BOS;
+    }
+    let src_t = HostTensor::i32(batch.src.clone(), &[b, batch.src_len]);
+    let flat_t = HostTensor::f32(flat.to_vec(), &[flat.len()]);
+    for pos in 0..nt - 1 {
+        let inputs = vec![
+            flat_t.clone(),
+            src_t.clone(),
+            HostTensor::i32(tgt_in.clone(), &[b, nt]),
+        ];
+        let out = rt.execute(fwd_artifact, &inputs)?;
+        let logits = out[0].as_f32()?;
+        for bi in 0..b {
+            let base = (bi * nt + pos) * vocab;
+            let row = &logits[base..base + vocab];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            tgt_in[bi * nt + pos + 1] = next;
+        }
+    }
+    Ok((0..b)
+        .map(|bi| strip_special(&tgt_in[bi * nt + 1..(bi + 1) * nt]))
+        .collect())
+}
+
+/// Corpus BLEU of a trained seq2seq model over a deterministic eval set.
+pub fn bleu_of(rt: &Runtime, fwd_artifact: &str, flat: &[f32],
+               eval: &[MtBatch]) -> Result<f64> {
+    let mut refs = Vec::new();
+    let mut hyps = Vec::new();
+    for batch in eval {
+        let dec = greedy_decode_mt(rt, fwd_artifact, flat, batch)?;
+        for (bi, hyp) in dec.into_iter().enumerate() {
+            let r = strip_special(
+                &batch.tgt_out[bi * batch.tgt_len..(bi + 1) * batch.tgt_len],
+            );
+            refs.push(r);
+            hyps.push(hyp);
+        }
+    }
+    Ok(metrics::bleu(&refs, &hyps))
+}
+
+/// Classification accuracy over an eval set using a `.fwd` artifact
+/// whose logits are (B, classes).
+pub fn accuracy_of(rt: &Runtime, fwd_artifact: &str, flat: &[f32],
+                   eval: &[Vec<HostTensor>], classes: usize,
+                   k: usize) -> Result<f64> {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for batch in eval {
+        // batch = [inputs..., labels]; labels last by convention.
+        let labels = batch
+            .last()
+            .ok_or_else(|| anyhow!("empty batch"))?
+            .as_i32()?
+            .to_vec();
+        let mut inputs = vec![HostTensor::f32(flat.to_vec(), &[flat.len()])];
+        inputs.extend(batch[..batch.len() - 1].iter().cloned());
+        let out = rt.execute(fwd_artifact, &inputs)?;
+        let logits = out[0].as_f32()?;
+        total += metrics::topk_accuracy(logits, classes, &labels, k)
+            * labels.len() as f64;
+        count += labels.len();
+    }
+    Ok(total / count.max(1) as f64)
+}

@@ -1,0 +1,103 @@
+//! Fig. 1a: forward wall-clock vs sequence length — vanilla softmax
+//! attention (O(n^2)) against the FFT kernelized path (O(n log n)) at
+//! several feature dims, plus the direct-Toeplitz ablation.
+//!
+//! The paper ran a V100 over n = 1k..40k; this testbed sweeps the
+//! AOT-compiled attention-only artifacts over n = 128..4096 on the CPU
+//! PJRT backend. The claim under test is the *shape*: softmax should
+//! scale ~n^2, the FFT path ~n log n, with a crossover.
+
+use anyhow::Result;
+
+use crate::rng::Rng;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::bench::bench_for;
+
+use super::{print_rows, save_rows, ExpOpts, Row};
+
+pub fn run(rt: &Runtime, opts: &ExpOpts) -> Result<Vec<Row>> {
+    let speed = rt.manifest.with_prefix("speed_");
+    // group by (kind, m) across n
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    let mut ns: Vec<usize> = Vec::new();
+    for a in &speed {
+        let kind = a
+            .extra
+            .get("kind")
+            .and_then(|j| j.as_str())
+            .unwrap_or("")
+            .to_string();
+        let m = a.extra.get("m").and_then(|j| j.as_usize()).unwrap_or(0);
+        let n = a.extra.get("n").and_then(|j| j.as_usize()).unwrap_or(0);
+        if !variants.contains(&(kind.clone(), m)) {
+            variants.push((kind, m));
+        }
+        if !ns.contains(&n) {
+            ns.push(n);
+        }
+    }
+    ns.sort();
+    variants.sort();
+    if !opts.full {
+        // trim the most expensive direct-O(n^2) points in quick mode
+        ns.retain(|&n| n <= 2048);
+    }
+
+    let mut rng = Rng::new(opts.seed);
+    let mut rows = Vec::new();
+    for (kind, m) in &variants {
+        let mut row = Row::new(&if *m > 0 {
+            format!("{kind} (m={m})")
+        } else {
+            kind.clone()
+        });
+        for &n in &ns {
+            let name = if *m > 0 {
+                format!("speed_{kind}_n{n}_m{m}")
+            } else {
+                format!("speed_{kind}_n{n}")
+            };
+            if rt.manifest.artifact(&name).is_err() {
+                continue;
+            }
+            let d = 64usize;
+            let q = HostTensor::f32(rng.normal_vec(n * d, 1.0), &[n, d]);
+            let k = HostTensor::f32(rng.normal_vec(n * d, 1.0), &[n, d]);
+            let v = HostTensor::f32(rng.normal_vec(n * d, 1.0), &[n, d]);
+            let mut inputs = vec![q, k, v];
+            if *m > 0 {
+                inputs.push(HostTensor::f32(rng.normal_vec(m * d, 1.0), &[*m, d]));
+                inputs.push(HostTensor::f32(
+                    rng.normal_vec(2 * n - 1, 0.1),
+                    &[2 * n - 1],
+                ));
+            }
+            rt.load(&name)?; // compile outside the timing loop
+            let res = bench_for(&name, 1, 0.5, 3, || {
+                rt.execute(&name, &inputs).expect("exec");
+            });
+            row.push(&format!("n={n} (ms)"), res.p50_secs * 1e3);
+        }
+        rows.push(row);
+    }
+    print_rows("Fig. 1a — forward time vs sequence length", &rows);
+    // Complexity-shape summary: growth factor per n doubling.
+    let mut shape_rows = Vec::new();
+    for r in &rows {
+        let mut sr = Row::new(&r.label);
+        let vals: Vec<(usize, f64)> = ns
+            .iter()
+            .filter_map(|&n| r.get(&format!("n={n} (ms)")).map(|v| (n, v)))
+            .collect();
+        for w in vals.windows(2) {
+            sr.push(
+                &format!("x{}->{}", w[0].0, w[1].0),
+                w[1].1 / w[0].1.max(1e-9),
+            );
+        }
+        shape_rows.push(sr);
+    }
+    print_rows("Fig. 1a — growth factor per doubling (2.0=linear, 4.0=quadratic)", &shape_rows);
+    save_rows("fig1a", &rows);
+    Ok(rows)
+}

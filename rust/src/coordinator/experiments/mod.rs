@@ -1,0 +1,129 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver is callable both from the CLI (`kafft exp <id>`) and
+//! from the bench harnesses in rust/benches/, prints the same rows the
+//! paper reports, and returns structured results so EXPERIMENTS.md can
+//! be regenerated.
+//!
+//! Budget knobs: every driver takes an `ExpOpts` whose defaults are
+//! sized for a single-CPU testbed; `--steps/--seeds/--full` scale up.
+
+pub mod fig1a;
+pub mod fig1b;
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table6;
+
+use crate::util::args::Args;
+
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub steps: usize,
+    pub seeds: usize,
+    pub eval_batches: usize,
+    pub full: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> ExpOpts {
+        ExpOpts { steps: 150, seeds: 3, eval_batches: 4, full: false, seed: 0 }
+    }
+}
+
+impl ExpOpts {
+    pub fn from_args(args: &Args) -> ExpOpts {
+        let mut o = ExpOpts::default();
+        o.steps = args.get_usize("steps", o.steps);
+        o.seeds = args.get_usize("seeds", o.seeds);
+        o.eval_batches = args.get_usize("eval-batches", o.eval_batches);
+        o.full = args.has_flag("full");
+        o.seed = args.get_u64("seed", 0);
+        if o.full {
+            o.steps = o.steps.max(400);
+            o.seeds = o.seeds.max(5);
+        }
+        o
+    }
+}
+
+/// A generic result row: experiment id, label, metric name -> value.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub values: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: &str) -> Row {
+        Row { label: label.to_string(), values: Vec::new() }
+    }
+
+    pub fn push(&mut self, key: &str, value: f64) -> &mut Row {
+        self.values.push((key.to_string(), value));
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.values
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// Render rows as the shared experiments table format.
+pub fn print_rows(title: &str, rows: &[Row]) {
+    println!("\n== {title} ==");
+    if rows.is_empty() {
+        println!("(no rows)");
+        return;
+    }
+    let keys: Vec<String> =
+        rows[0].values.iter().map(|(k, _)| k.clone()).collect();
+    let mut headers = vec!["variant".to_string()];
+    headers.extend(keys.iter().cloned());
+    let mut t = crate::util::bench::Table::new(
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for r in rows {
+        let mut cells = vec![r.label.clone()];
+        for k in &keys {
+            cells.push(
+                r.get(k)
+                    .map(|v| format!("{v:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&cells);
+    }
+    t.print();
+}
+
+/// Append rows as JSON to artifacts/results/<id>.json for EXPERIMENTS.md.
+pub fn save_rows(id: &str, rows: &[Row]) {
+    use crate::util::json::Json;
+    let dir = crate::artifacts_dir().join("results");
+    let _ = std::fs::create_dir_all(&dir);
+    let arr = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut obj = vec![("label", Json::Str(r.label.clone()))];
+                for (k, v) in &r.values {
+                    obj.push((k.as_str(), Json::Num(*v)));
+                }
+                Json::obj(obj)
+            })
+            .collect(),
+    );
+    let path = dir.join(format!("{id}.json"));
+    if let Err(e) = std::fs::write(&path, arr.to_string_pretty()) {
+        crate::warn!("could not save {path:?}: {e}");
+    } else {
+        crate::info!("results -> {path:?}");
+    }
+}

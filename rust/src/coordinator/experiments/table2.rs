@@ -1,0 +1,72 @@
+//! Table 2: language-model perplexity across attention variants
+//! (WikiText-103 in the paper; the Markov corpus here — DESIGN.md §4).
+//!
+//! Paper ordering to reproduce: NPRF+RPE (30.6) < vanilla (33.0) <
+//! TRF (33.6) < Linear/elu1 (38.4); PRF unstable at scale.
+
+use anyhow::Result;
+
+use crate::config::{LrSchedule, TrainConfig};
+use crate::coordinator::sources::make_source;
+use crate::coordinator::train::Trainer;
+use crate::metrics::perplexity;
+use crate::runtime::Runtime;
+
+use super::{print_rows, save_rows, ExpOpts, Row};
+
+pub const VARIANTS: &[(&str, &str)] = &[
+    ("lm_softmax", "Vanilla Transformer"),
+    ("lm_elu1", "Linear Transformer (elu+1)"),
+    ("lm_trf", "TRF-Transformer (RFA)"),
+    ("lm_prf", "PRF-Transformer (Performer)"),
+    ("lm_nprf", "NPRF w/o RPE"),
+    ("lm_nprf_rpe_fft", "NPRF-Transformer w/ RPE (ours)"),
+    ("lm_nprf_rpe_direct", "ours, direct O(n^2) Toeplitz (ablation)"),
+];
+
+pub fn run(rt: &Runtime, opts: &ExpOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (base, label) in VARIANTS {
+        let train_name = format!("{base}.train");
+        if rt.manifest.artifact(&train_name).is_err() {
+            continue;
+        }
+        let cfg = TrainConfig {
+            artifact: train_name.clone(),
+            steps: opts.steps,
+            seed: opts.seed,
+            schedule: LrSchedule::InverseSqrt {
+                peak: 2e-3,
+                warmup: opts.steps / 10 + 1,
+            },
+            eval_batches: opts.eval_batches,
+            ..TrainConfig::default()
+        };
+        let entry = rt.manifest.artifact(&train_name)?.clone();
+        let mut source = make_source(&entry, opts.seed + 11)?;
+        let trainer = Trainer::new(rt, cfg);
+        let report = trainer.run(source.as_mut(), None)?;
+        let mut row = Row::new(label);
+        let ppl = report
+            .final_eval_loss
+            .map(perplexity)
+            .unwrap_or(f64::INFINITY);
+        row.push("ppl", ppl)
+            .push("final_train_loss", report.final_train_loss)
+            .push("diverged", report.diverged as usize as f64)
+            .push("steps", report.steps_done as f64)
+            .push("wall_s", report.wall_secs);
+        crate::info!(
+            "{label}: ppl={ppl:.2} diverged={} ({} steps, {:.0}s)",
+            report.diverged, report.steps_done, report.wall_secs
+        );
+        rows.push(row);
+    }
+    print_rows(
+        "Table 2 — LM perplexity (paper: ours 30.6* < vanilla 33.0 < TRF \
+         33.6 < linear 38.4)",
+        &rows,
+    );
+    save_rows("table2", &rows);
+    Ok(rows)
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: training loop, batched inference server, decoding,
+//! data-source adapters, and the per-table/figure experiment drivers.
+
+pub mod decode;
+pub mod experiments;
+pub mod server;
+pub mod sources;
+pub mod train;
+
+pub use sources::{make_source, BatchSource};
+pub use train::{TrainReport, Trainer};

@@ -1,0 +1,214 @@
+//! Batched inference server: request router + dynamic batcher over the
+//! `.fwd_b{1,2,4,8}` forward artifacts (vllm-router-style, scaled to
+//! this testbed).
+//!
+//! Requests (token sequences) arrive on a channel; a worker thread
+//! drains the queue, groups up to `max_batch` requests within
+//! `max_wait`, picks the smallest compiled batch size that fits, pads
+//! with the first request repeated, executes one PJRT call, and
+//! returns per-request next-token distributions. Padding waste and
+//! batch-size histograms are tracked for the perf study.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct LmRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LmResponse {
+    pub id: u64,
+    /// logits over the vocabulary at the last position
+    pub next_logits: Vec<f32>,
+    /// wall time from enqueue to response
+    pub latency: Duration,
+    /// batch size the request was served in
+    pub served_batch: usize,
+}
+
+struct Pending {
+    req: LmRequest,
+    enqueued: Instant,
+    reply: Sender<LmResponse>,
+}
+
+/// Server statistics for the perf study.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    pub exec_secs: f64,
+    pub batch_hist: Vec<(usize, usize)>, // (batch size, count)
+}
+
+pub struct ServerConfig {
+    /// base artifact name, e.g. "lm_nprf_rpe_fft" (expects .fwd_b{B}).
+    pub model: String,
+    pub max_wait: Duration,
+    pub max_batch: usize,
+}
+
+pub struct LmServer {
+    tx: Sender<Pending>,
+    handle: Option<std::thread::JoinHandle<ServerStats>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl LmServer {
+    /// Spawn the worker. Available batch sizes are discovered from the
+    /// manifest (`<model>.fwd_b{B}` artifacts).
+    pub fn start(rt: Arc<Runtime>, cfg: ServerConfig) -> Result<LmServer> {
+        let mut sizes: Vec<(usize, String)> = rt
+            .manifest
+            .with_prefix(&format!("{}.fwd_b", cfg.model))
+            .iter()
+            .filter_map(|a| {
+                a.name
+                    .rsplit("_b")
+                    .next()
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .map(|b| (b, a.name.clone()))
+            })
+            .collect();
+        sizes.sort();
+        if sizes.is_empty() {
+            bail!("no {}.fwd_b* artifacts in manifest", cfg.model);
+        }
+        let entry = rt.manifest.artifact(&sizes[0].1)?;
+        let model = entry
+            .model
+            .clone()
+            .ok_or_else(|| anyhow!("fwd artifact missing model meta"))?;
+        let seq_len = model.seq_len;
+        let vocab = model.vocab;
+        let layout = rt.manifest.layout_of(&sizes[0].1)?;
+        let flat = crate::runtime::params::init_params(layout, 0)?;
+
+        // Warm the compile cache before serving.
+        for (_, name) in &sizes {
+            rt.load(name)?;
+        }
+
+        let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
+        let max_wait = cfg.max_wait;
+        let max_batch = cfg.max_batch.min(sizes.last().unwrap().0);
+        let handle = std::thread::spawn(move || {
+            worker(rt, rx, sizes, flat, seq_len, vocab, max_wait, max_batch)
+        });
+        Ok(LmServer {
+            tx,
+            handle: Some(handle),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<LmResponse>> {
+        let (reply_tx, reply_rx) = channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Pending {
+                req: LmRequest { id, tokens },
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        Ok(reply_rx)
+    }
+
+    /// Drop the sender side and join the worker, returning its stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        drop(self.tx);
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
+          sizes: Vec<(usize, String)>, flat: Vec<f32>, seq_len: usize,
+          vocab: usize, max_wait: Duration, max_batch: usize) -> ServerStats {
+    let mut stats = ServerStats::default();
+    let mut hist = std::collections::BTreeMap::<usize, usize>::new();
+    'outer: loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => break 'outer,
+        };
+        let mut group = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while group.len() < max_batch {
+            match rx.try_recv() {
+                Ok(p) => group.push(p),
+                Err(TryRecvError::Empty) => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        // Smallest compiled batch size that fits the group.
+        let (bsz, name) = sizes
+            .iter()
+            .find(|(b, _)| *b >= group.len())
+            .unwrap_or_else(|| sizes.last().unwrap())
+            .clone();
+        let mut tokens = Vec::with_capacity(bsz * seq_len);
+        for p in &group {
+            let mut t = p.req.tokens.clone();
+            t.resize(seq_len, 0);
+            tokens.extend(t);
+        }
+        // Pad with copies of the first request.
+        for _ in group.len()..bsz {
+            tokens.extend(&tokens[..seq_len].to_vec());
+        }
+        stats.padded_slots += bsz - group.len();
+        let inputs = vec![
+            HostTensor::f32(flat.clone(), &[flat.len()]),
+            HostTensor::i32(tokens, &[bsz, seq_len]),
+        ];
+        let t0 = Instant::now();
+        let out = match rt.execute(&name, &inputs) {
+            Ok(o) => o,
+            Err(e) => {
+                crate::error!("server exec failed: {e}");
+                continue;
+            }
+        };
+        stats.exec_secs += t0.elapsed().as_secs_f64();
+        stats.batches += 1;
+        *hist.entry(bsz).or_default() += 1;
+        let logits = out[0].as_f32().unwrap();
+        for (i, p) in group.iter().enumerate() {
+            let pos = p.req.tokens.len().clamp(1, seq_len) - 1;
+            let base = (i * seq_len + pos) * vocab;
+            let next = logits[base..base + vocab].to_vec();
+            stats.requests += 1;
+            let _ = p.reply.send(LmResponse {
+                id: p.req.id,
+                next_logits: next,
+                latency: p.enqueued.elapsed(),
+                served_batch: bsz,
+            });
+        }
+    }
+    stats.batch_hist = hist.into_iter().collect();
+    stats
+}

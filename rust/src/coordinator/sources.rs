@@ -1,0 +1,254 @@
+//! Batch sources: adapt the synthetic data generators to the tensor
+//! layout each artifact expects. The manifest's task + model metadata
+//! picks the generator, so every experiment driver can say
+//! `make_source(entry, seed)` and get the right workload.
+
+use anyhow::{bail, Result};
+
+use crate::data::images::ImageGen;
+use crate::data::mt::{MtGen, MtTask};
+use crate::data::probe::{ProbeGen, ProbeTask};
+use crate::data::text::{ImageSeqStream, LmStream};
+use crate::runtime::{ArtifactEntry, HostTensor};
+
+/// Produces train batches / a fixed eval set as tensors in the
+/// artifact's batch-input order.
+pub trait BatchSource: Send {
+    fn next_train(&mut self) -> Vec<HostTensor>;
+    fn eval_set(&self, batches: usize, seed: u64) -> Vec<Vec<HostTensor>>;
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct LmSource {
+    stream: LmStream,
+    mlm: bool,
+}
+
+impl LmSource {
+    pub fn new(vocab: usize, batch: usize, seq_len: usize, seed: u64,
+               mlm: bool) -> LmSource {
+        LmSource { stream: LmStream::new(vocab, batch, seq_len, seed), mlm }
+    }
+}
+
+fn lm_tensors(b: crate::data::LmBatch) -> Vec<HostTensor> {
+    let shape = [b.batch, b.seq_len];
+    vec![
+        HostTensor::i32(b.tokens, &shape),
+        HostTensor::i32(b.targets, &shape),
+        HostTensor::f32(b.weights, &shape),
+    ]
+}
+
+impl BatchSource for LmSource {
+    fn next_train(&mut self) -> Vec<HostTensor> {
+        let b = if self.mlm {
+            self.stream.next_mlm_batch()
+        } else {
+            self.stream.next_batch()
+        };
+        lm_tensors(b)
+    }
+
+    fn eval_set(&self, batches: usize, seed: u64) -> Vec<Vec<HostTensor>> {
+        if self.mlm {
+            // Deterministic MLM eval: fresh stream with fixed seed.
+            let mut s = LmStream::new(self.stream.corpus_vocab(),
+                                      self.stream.batch,
+                                      self.stream.seq_len, seed);
+            (0..batches).map(|_| lm_tensors(s.next_mlm_batch())).collect()
+        } else {
+            self.stream
+                .eval_batches(batches, seed)
+                .into_iter()
+                .map(lm_tensors)
+                .collect()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct ImgSeqSource {
+    stream: ImageSeqStream,
+}
+
+impl ImgSeqSource {
+    pub fn new(batch: usize, seq_len: usize, seed: u64) -> ImgSeqSource {
+        ImgSeqSource { stream: ImageSeqStream::new(batch, seq_len, seed) }
+    }
+}
+
+impl BatchSource for ImgSeqSource {
+    fn next_train(&mut self) -> Vec<HostTensor> {
+        lm_tensors(self.stream.next_batch())
+    }
+
+    fn eval_set(&self, batches: usize, seed: u64) -> Vec<Vec<HostTensor>> {
+        let mut s = ImageSeqStream::new(self.stream.batch,
+                                        self.stream.seq_len, seed);
+        (0..batches).map(|_| lm_tensors(s.next_batch())).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct MtSource {
+    pub gen: MtGen,
+    batch: usize,
+}
+
+impl MtSource {
+    pub fn new(task: MtTask, vocab: usize, src_len: usize, tgt_len: usize,
+               batch: usize, seed: u64) -> MtSource {
+        MtSource { gen: MtGen::new(task, vocab, src_len, tgt_len, seed), batch }
+    }
+
+    pub fn batch_to_tensors(b: &crate::data::MtBatch) -> Vec<HostTensor> {
+        vec![
+            HostTensor::i32(b.src.clone(), &[b.batch, b.src_len]),
+            HostTensor::i32(b.tgt_in.clone(), &[b.batch, b.tgt_len]),
+            HostTensor::i32(b.tgt_out.clone(), &[b.batch, b.tgt_len]),
+            HostTensor::f32(b.weights.clone(), &[b.batch, b.tgt_len]),
+        ]
+    }
+
+    /// Raw eval batches (the BLEU path needs token access, not tensors).
+    pub fn eval_raw(&self, batches: usize, seed: u64) -> Vec<crate::data::MtBatch> {
+        self.gen.eval_batches(batches, self.batch, seed)
+    }
+}
+
+impl BatchSource for MtSource {
+    fn next_train(&mut self) -> Vec<HostTensor> {
+        let b = self.gen.next_batch(self.batch);
+        Self::batch_to_tensors(&b)
+    }
+
+    fn eval_set(&self, batches: usize, seed: u64) -> Vec<Vec<HostTensor>> {
+        self.eval_raw(batches, seed)
+            .iter()
+            .map(Self::batch_to_tensors)
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct ProbeSource {
+    gen: ProbeGen,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl ProbeSource {
+    pub fn new(task: ProbeTask, vocab: usize, seq_len: usize, batch: usize,
+               corpus_seed: u64, seed: u64) -> ProbeSource {
+        ProbeSource {
+            gen: ProbeGen::new(task, vocab, seq_len, corpus_seed, seed),
+            batch,
+            seq_len,
+        }
+    }
+
+    fn to_tensors(&self, b: crate::data::ClsBatch) -> Vec<HostTensor> {
+        vec![
+            HostTensor::i32(b.tokens, &[b.batch, self.seq_len]),
+            HostTensor::i32(b.labels, &[b.batch]),
+        ]
+    }
+}
+
+impl BatchSource for ProbeSource {
+    fn next_train(&mut self) -> Vec<HostTensor> {
+        let b = self.gen.next_batch(self.batch);
+        self.to_tensors(b)
+    }
+
+    fn eval_set(&self, batches: usize, seed: u64) -> Vec<Vec<HostTensor>> {
+        self.gen
+            .eval_batches(batches, self.batch, seed)
+            .into_iter()
+            .map(|b| self.to_tensors(b))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct VitSource {
+    gen: ImageGen,
+    batch: usize,
+    n_patches: usize,
+    patch_dim: usize,
+}
+
+impl VitSource {
+    pub fn new(batch: usize, n_patches: usize, patch_dim: usize,
+               seed: u64) -> VitSource {
+        VitSource { gen: ImageGen::new(seed), batch, n_patches, patch_dim }
+    }
+
+    fn to_tensors(&self, b: crate::data::ClsBatch) -> Vec<HostTensor> {
+        vec![
+            HostTensor::f32(b.patches, &[b.batch, self.n_patches, self.patch_dim]),
+            HostTensor::i32(b.labels, &[b.batch]),
+        ]
+    }
+}
+
+impl BatchSource for VitSource {
+    fn next_train(&mut self) -> Vec<HostTensor> {
+        let b = self.gen.next_batch(self.batch);
+        self.to_tensors(b)
+    }
+
+    fn eval_set(&self, batches: usize, seed: u64) -> Vec<Vec<HostTensor>> {
+        self.gen
+            .eval_batches(batches, self.batch, seed)
+            .into_iter()
+            .map(|b| self.to_tensors(b))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Default data seed for the shared corpora (keeps train/eval text
+/// consistent across model variants so comparisons are paired).
+pub const CORPUS_SEED: u64 = 20260710;
+
+/// Pick the right source for an artifact from its manifest metadata.
+pub fn make_source(entry: &ArtifactEntry, seed: u64) -> Result<Box<dyn BatchSource>> {
+    let model = entry
+        .model
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{} has no model metadata", entry.name))?;
+    let b = entry.batch;
+    Ok(match entry.task.as_str() {
+        "decoder_lm" => {
+            if model.vocab == 257 {
+                Box::new(ImgSeqSource::new(b, model.seq_len, seed))
+            } else {
+                Box::new(LmSource::new(model.vocab, b, model.seq_len, seed, false))
+            }
+        }
+        "encoder_mlm" => {
+            Box::new(LmSource::new(model.vocab, b, model.seq_len, seed, true))
+        }
+        "encoder_cls" => Box::new(ProbeSource::new(
+            ProbeTask::Majority, model.vocab, model.seq_len, b, CORPUS_SEED, seed,
+        )),
+        "seq2seq" => {
+            let src_len = if model.src_len > 0 { model.src_len } else { model.seq_len };
+            Box::new(MtSource::new(
+                MtTask::Copy, model.vocab, src_len, model.seq_len, b, seed,
+            ))
+        }
+        "vit" => Box::new(VitSource::new(
+            b, model.grid * model.grid, model.patch_dim, seed,
+        )),
+        other => bail!("unknown task {other:?}"),
+    })
+}

@@ -1,0 +1,176 @@
+//! The training loop: drives a `.train` artifact step by step with
+//! Rust-owned data, LR schedule, divergence detection, checkpointing
+//! and periodic eval. Python never runs here — the whole update is one
+//! PJRT execution per step.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::metrics::Running;
+use crate::runtime::{params, HostTensor, Runtime};
+use crate::util::logging::Progress;
+use crate::{debug, info, warn};
+
+use super::sources::BatchSource;
+
+/// Everything a finished (or aborted) run reports.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub artifact: String,
+    pub steps_done: usize,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub eval_curve: Vec<(usize, f64)>,
+    pub final_train_loss: f64,
+    pub final_eval_loss: Option<f64>,
+    pub diverged: bool,
+    pub wall_secs: f64,
+    pub params: Vec<f32>,
+}
+
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: TrainConfig,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, cfg: TrainConfig) -> Trainer<'a> {
+        Trainer { rt, cfg }
+    }
+
+    /// Mean eval loss of `flat` over a fixed eval set using the paired
+    /// `.eval` artifact.
+    pub fn eval_loss(&self, eval_artifact: &str, flat: &[f32],
+                     eval_set: &[Vec<HostTensor>]) -> Result<f64> {
+        let mut run = Running::new();
+        for batch in eval_set {
+            let mut inputs =
+                vec![HostTensor::f32(flat.to_vec(), &[flat.len()])];
+            inputs.extend(batch.iter().cloned());
+            let out = self.rt.execute(eval_artifact, &inputs)?;
+            run.push(out[0].scalar_f32()? as f64);
+        }
+        Ok(run.mean())
+    }
+
+    /// Run the configured number of steps. `init` overrides the fresh
+    /// layout initialization (fine-tuning / resuming).
+    pub fn run(&self, source: &mut dyn BatchSource,
+               init: Option<Vec<f32>>) -> Result<TrainReport> {
+        let name = &self.cfg.artifact;
+        let entry = self.rt.manifest.artifact(name)?.clone();
+        if entry.role != "train_step" {
+            bail!("{} is not a train_step artifact", name);
+        }
+        let layout = self.rt.manifest.layout_of(name)?;
+        let mut flat = match init {
+            Some(p) => {
+                if p.len() != layout.total {
+                    bail!("init params len {} != layout {}", p.len(), layout.total);
+                }
+                p
+            }
+            None => params::init_params(layout, self.cfg.seed)?,
+        };
+        let p = flat.len();
+        let mut adam_m = vec![0.0f32; p];
+        let mut adam_v = vec![0.0f32; p];
+        let mut t = 0.0f32;
+
+        let eval_name = name.replace(".train", ".eval");
+        let has_eval = self.cfg.eval_every > 0
+            && self.rt.manifest.artifact(&eval_name).is_ok();
+        let eval_set = if has_eval || self.cfg.eval_batches > 0 {
+            source.eval_set(self.cfg.eval_batches.max(1), self.cfg.seed ^ 0xEEE)
+        } else {
+            Vec::new()
+        };
+
+        let mut report = TrainReport {
+            artifact: name.clone(),
+            steps_done: 0,
+            loss_curve: Vec::new(),
+            eval_curve: Vec::new(),
+            final_train_loss: f64::NAN,
+            final_eval_loss: None,
+            diverged: false,
+            wall_secs: 0.0,
+            params: Vec::new(),
+        };
+        let mut first_loss: Option<f64> = None;
+        let mut progress = Progress::new(name, self.cfg.steps);
+        let t0 = Instant::now();
+
+        for step in 0..self.cfg.steps {
+            let lr = self.cfg.schedule.at(step) as f32;
+            let batch = source.next_train();
+            let mut inputs = Vec::with_capacity(5 + batch.len());
+            inputs.push(HostTensor::f32(flat, &[p]));
+            inputs.push(HostTensor::f32(adam_m, &[p]));
+            inputs.push(HostTensor::f32(adam_v, &[p]));
+            inputs.push(HostTensor::scalar(t));
+            inputs.push(HostTensor::scalar(lr));
+            inputs.extend(batch);
+            let mut out = self.rt.execute(name, &inputs)?;
+            let loss = out[3].scalar_f32()? as f64;
+            // out order: flat, m, v, loss
+            adam_v = std::mem::take(&mut out[2]).into_f32()?;
+            adam_m = std::mem::take(&mut out[1]).into_f32()?;
+            flat = std::mem::take(&mut out[0]).into_f32()?;
+            t += 1.0;
+            report.steps_done = step + 1;
+            report.final_train_loss = loss;
+            if step % 2 == 0 || step + 1 == self.cfg.steps {
+                report.loss_curve.push((step, loss));
+            }
+            if first_loss.is_none() {
+                first_loss = Some(loss);
+            }
+
+            // Divergence detection — the Table 1 stability story.
+            let blown = !loss.is_finite()
+                || loss > first_loss.unwrap() * self.cfg.divergence_factor;
+            if blown {
+                warn!("{name}: DIVERGED at step {step} (loss={loss:.4})");
+                report.diverged = true;
+                break;
+            }
+
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                debug!("{name} step {step}: loss={loss:.4} lr={lr:.2e}");
+            }
+            progress.tick(step + 1, &format!("loss={loss:.4}"));
+
+            if has_eval
+                && self.cfg.eval_every > 0
+                && (step + 1) % self.cfg.eval_every == 0
+            {
+                let el = self.eval_loss(&eval_name, &flat, &eval_set)?;
+                report.eval_curve.push((step + 1, el));
+                info!("{name} step {}: eval_loss={el:.4}", step + 1);
+            }
+        }
+
+        if !eval_set.is_empty() && self.rt.manifest.artifact(&eval_name).is_ok()
+            && !report.diverged
+        {
+            report.final_eval_loss =
+                Some(self.eval_loss(&eval_name, &flat, &eval_set)?);
+        }
+        if let Some(path) = &self.cfg.checkpoint {
+            params::save_checkpoint(path, &flat)?;
+            info!("{name}: checkpoint -> {path}");
+        }
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        report.params = flat;
+        Ok(report)
+    }
+}
+
+/// std::mem::take needs a Default; provide one for HostTensor.
+impl Default for HostTensor {
+    fn default() -> HostTensor {
+        HostTensor::F32(Vec::new(), vec![0])
+    }
+}

@@ -1,0 +1,210 @@
+//! Procedural image classification data — the ImageNet/DeiT stand-in
+//! (Table 4). 16x16x3 images from 10 parametric classes (stripes at
+//! varying orientation, checkerboards, blobs, gradients, rings), with
+//! per-image jitter/noise so the task needs real feature learning.
+//! Images are emitted pre-patchified: (grid*grid, patch_dim) rows, the
+//! format the ViT artifacts consume.
+
+use crate::rng::Rng;
+
+use super::ClsBatch;
+
+pub const SIDE: usize = 16;
+pub const CHANNELS: usize = 3;
+pub const PATCH: usize = 2;
+pub const GRID: usize = SIDE / PATCH; // 8
+pub const PATCH_DIM: usize = PATCH * PATCH * CHANNELS; // 12
+pub const NUM_CLASSES: usize = 10;
+
+pub struct ImageGen {
+    rng: Rng,
+}
+
+impl ImageGen {
+    pub fn new(seed: u64) -> ImageGen {
+        ImageGen { rng: Rng::new(seed) }
+    }
+
+    /// One image of the given class, as SIDE x SIDE x CHANNELS floats
+    /// in [0, 1].
+    pub fn image(&mut self, class: usize) -> Vec<f32> {
+        let rng = &mut self.rng;
+        let mut px = vec![0.0f32; SIDE * SIDE * CHANNELS];
+        let phase = rng.uniform() * std::f64::consts::TAU;
+        let jitter = rng.uniform_range(0.8, 1.2);
+        let base_col: [f64; 3] =
+            [rng.uniform(), rng.uniform(), rng.uniform()];
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let xf = x as f64 / SIDE as f64;
+                let yf = y as f64 / SIDE as f64;
+                let v: f64 = match class {
+                    // 0-3: stripes at 0/45/90/135 degrees
+                    0 => ((xf * 6.0 * jitter + phase).sin() + 1.0) / 2.0,
+                    1 => (((xf + yf) * 6.0 * jitter + phase).sin() + 1.0) / 2.0,
+                    2 => ((yf * 6.0 * jitter + phase).sin() + 1.0) / 2.0,
+                    3 => (((xf - yf) * 6.0 * jitter + phase).sin() + 1.0) / 2.0,
+                    // 4: checkerboard
+                    4 => {
+                        let c = ((x / 2) + (y / 2)) % 2;
+                        c as f64 * jitter.min(1.0)
+                    }
+                    // 5: centered blob
+                    5 => {
+                        let dx = xf - 0.5;
+                        let dy = yf - 0.5;
+                        (-(dx * dx + dy * dy) * 12.0 * jitter).exp()
+                    }
+                    // 6: ring
+                    6 => {
+                        let dx = xf - 0.5;
+                        let dy = yf - 0.5;
+                        let r = (dx * dx + dy * dy).sqrt();
+                        (-(r - 0.3).powi(2) * 120.0 * jitter).exp()
+                    }
+                    // 7: horizontal gradient
+                    7 => xf * jitter.min(1.0),
+                    // 8: vertical gradient
+                    8 => yf * jitter.min(1.0),
+                    // 9: corner quadrants
+                    _ => {
+                        let q = (x >= SIDE / 2) as usize + 2 * ((y >= SIDE / 2) as usize);
+                        [0.1, 0.4, 0.7, 1.0][q]
+                    }
+                };
+                for ch in 0..CHANNELS {
+                    let noise = rng.uniform_range(-0.05, 0.05);
+                    let col = 0.4 + 0.6 * base_col[ch];
+                    px[(y * SIDE + x) * CHANNELS + ch] =
+                        ((v * col) + noise).clamp(0.0, 1.0) as f32;
+                }
+            }
+        }
+        px
+    }
+
+    /// Patchify: row-major PATCH x PATCH blocks -> (GRID*GRID, PATCH_DIM).
+    pub fn patchify(img: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(GRID * GRID * PATCH_DIM);
+        for gy in 0..GRID {
+            for gx in 0..GRID {
+                for py in 0..PATCH {
+                    for px_ in 0..PATCH {
+                        let y = gy * PATCH + py;
+                        let x = gx * PATCH + px_;
+                        for ch in 0..CHANNELS {
+                            out.push(img[(y * SIDE + x) * CHANNELS + ch]);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn next_batch(&mut self, batch: usize) -> ClsBatch {
+        let mut patches = Vec::with_capacity(batch * GRID * GRID * PATCH_DIM);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let class = self.rng.below_usize(NUM_CLASSES);
+            let img = self.image(class);
+            patches.extend(Self::patchify(&img));
+            labels.push(class as i32);
+        }
+        ClsBatch { tokens: Vec::new(), patches, labels, batch }
+    }
+
+    pub fn eval_batches(&self, count: usize, batch: usize, seed: u64) -> Vec<ClsBatch> {
+        let mut gen = ImageGen::new(seed);
+        (0..count).map(|_| gen.next_batch(batch)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_values_in_unit_range() {
+        let mut g = ImageGen::new(1);
+        for class in 0..NUM_CLASSES {
+            let img = g.image(class);
+            assert_eq!(img.len(), SIDE * SIDE * CHANNELS);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn patchify_preserves_pixels() {
+        let mut g = ImageGen::new(2);
+        let img = g.image(5);
+        let p = ImageGen::patchify(&img);
+        assert_eq!(p.len(), GRID * GRID * PATCH_DIM);
+        // Patch (0,0), pixel (0,0), channel 0 == image pixel (0,0,0).
+        assert_eq!(p[0], img[0]);
+        // Patch (0,1) starts at image x=PATCH.
+        assert_eq!(p[PATCH_DIM], img[PATCH * CHANNELS]);
+        // Second row of patch (0,0) is image pixel (1, 0).
+        assert_eq!(p[PATCH * CHANNELS], img[SIDE * CHANNELS]);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut g = ImageGen::new(3);
+        let b = g.next_batch(4);
+        assert_eq!(b.patches.len(), 4 * GRID * GRID * PATCH_DIM);
+        assert_eq!(b.labels.len(), 4);
+        assert!(b.labels.iter().all(|&l| (0..NUM_CLASSES as i32).contains(&l)));
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Nearest-centroid in pixel space should beat chance easily,
+        // proving the classes carry signal.
+        let mut g = ImageGen::new(4);
+        let per = 20;
+        let mut centroids = vec![vec![0.0f64; SIDE * SIDE * CHANNELS]; NUM_CLASSES];
+        for (c, cent) in centroids.iter_mut().enumerate() {
+            for _ in 0..per {
+                let img = g.image(c);
+                for (a, &b) in cent.iter_mut().zip(&img) {
+                    *a += b as f64 / per as f64;
+                }
+            }
+        }
+        let mut correct = 0;
+        let trials = 100;
+        for t in 0..trials {
+            let c = t % NUM_CLASSES;
+            let img = g.image(c);
+            let best = (0..NUM_CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f64 = centroids[a]
+                        .iter()
+                        .zip(&img)
+                        .map(|(x, &y)| (x - y as f64).powi(2))
+                        .sum();
+                    let db: f64 = centroids[b]
+                        .iter()
+                        .zip(&img)
+                        .map(|(x, &y)| (x - y as f64).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == c {
+                correct += 1;
+            }
+        }
+        assert!(correct > 40, "nearest-centroid acc {correct}/{trials}");
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let g = ImageGen::new(5);
+        let a = g.eval_batches(2, 4, 11);
+        let b = g.eval_batches(2, 4, 11);
+        assert_eq!(a[0].labels, b[0].labels);
+        assert_eq!(a[1].patches, b[1].patches);
+    }
+}

@@ -1,0 +1,44 @@
+//! Workload generation: synthetic corpora standing in for the paper's
+//! datasets (DESIGN.md §4 documents each substitution).
+//!
+//!   text   — Zipf/Markov language corpus (WikiText-103 stand-in)
+//!   mt     — synthetic translation pairs (IWSLT14 stand-in)
+//!   images — procedural images (ImageNet / ImageNet32 stand-ins)
+//!   probe  — sequence-classification probes (GLUE stand-in)
+
+pub mod images;
+pub mod tokenizer;
+pub mod mt;
+pub mod probe;
+pub mod text;
+
+/// A training batch for the LM/MLM tasks.
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// A training batch for seq2seq tasks.
+#[derive(Debug, Clone)]
+pub struct MtBatch {
+    pub src: Vec<i32>,
+    pub tgt_in: Vec<i32>,
+    pub tgt_out: Vec<i32>,
+    pub weights: Vec<f32>,
+    pub batch: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+}
+
+/// A classification batch (token sequences or patch grids).
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,
+    pub patches: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+}

@@ -1,0 +1,299 @@
+//! Synthetic translation tasks — the IWSLT14 stand-in (Table 3,
+//! Figs. 2-3). Four "language pairs" of graded difficulty, each a
+//! deterministic transformation of a structured source sequence so
+//! BLEU is meaningful and noise-free:
+//!
+//!   copy     — identity (de-en stand-in; tests pure transduction)
+//!   reverse  — mirror the source (long-range dependencies)
+//!   vocabmap — token-wise substitution cipher (lexical translation)
+//!   rotshift — rotate vocab by position-dependent amount (needs both
+//!              content and position: the RPE-friendly pair)
+//!
+//! Sources are drawn from a first-order Markov chain so sequences have
+//! learnable structure; lengths vary and are padded with PAD=0
+//! (weights mask the padding in the loss).
+
+use crate::rng::Rng;
+
+use super::MtBatch;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const FIRST_WORD: i32 = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtTask {
+    Copy,
+    Reverse,
+    VocabMap,
+    RotShift,
+}
+
+impl MtTask {
+    pub fn parse(s: &str) -> Option<MtTask> {
+        Some(match s {
+            "copy" => MtTask::Copy,
+            "reverse" => MtTask::Reverse,
+            "vocabmap" => MtTask::VocabMap,
+            "rotshift" => MtTask::RotShift,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [MtTask; 4] {
+        [MtTask::Copy, MtTask::Reverse, MtTask::VocabMap, MtTask::RotShift]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MtTask::Copy => "copy",
+            MtTask::Reverse => "reverse",
+            MtTask::VocabMap => "vocabmap",
+            MtTask::RotShift => "rotshift",
+        }
+    }
+}
+
+pub struct MtGen {
+    pub task: MtTask,
+    pub vocab: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+    rng: Rng,
+    /// substitution table for VocabMap
+    subst: Vec<i32>,
+    /// Markov successor preferences
+    next: Vec<Vec<(i32, f64)>>,
+}
+
+impl MtGen {
+    pub fn new(task: MtTask, vocab: usize, src_len: usize, tgt_len: usize,
+               seed: u64) -> MtGen {
+        let words = vocab - FIRST_WORD as usize;
+        let mut rng = Rng::new(seed);
+        // random permutation of word ids for the cipher
+        let mut subst: Vec<i32> =
+            (0..words).map(|i| FIRST_WORD + i as i32).collect();
+        rng.shuffle(&mut subst);
+        let next = (0..words)
+            .map(|_| {
+                let k = 2 + rng.below_usize(3);
+                (0..k)
+                    .map(|r| {
+                        (
+                            FIRST_WORD + rng.below_usize(words) as i32,
+                            1.0 / (r as f64 + 1.0),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        MtGen { task, vocab, src_len, tgt_len, rng, subst, next }
+    }
+
+    fn sample_source(&mut self, len: usize) -> Vec<i32> {
+        let words = self.vocab - FIRST_WORD as usize;
+        let mut out = Vec::with_capacity(len);
+        let mut prev = FIRST_WORD + self.rng.below_usize(words) as i32;
+        out.push(prev);
+        while out.len() < len {
+            let succ = &self.next[(prev - FIRST_WORD) as usize];
+            let tok = if self.rng.uniform() < 0.15 {
+                FIRST_WORD + self.rng.below_usize(words) as i32
+            } else {
+                let w: Vec<f64> = succ.iter().map(|(_, p)| *p).collect();
+                succ[self.rng.categorical(&w)].0
+            };
+            out.push(tok);
+            prev = tok;
+        }
+        out
+    }
+
+    /// Apply the task transformation.
+    pub fn translate(&self, src: &[i32]) -> Vec<i32> {
+        let words = (self.vocab - FIRST_WORD as usize) as i32;
+        match self.task {
+            MtTask::Copy => src.to_vec(),
+            MtTask::Reverse => src.iter().rev().cloned().collect(),
+            MtTask::VocabMap => src
+                .iter()
+                .map(|&t| self.subst[(t - FIRST_WORD) as usize])
+                .collect(),
+            MtTask::RotShift => src
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| {
+                    FIRST_WORD + ((t - FIRST_WORD) + i as i32) % words
+                })
+                .collect(),
+        }
+    }
+
+    /// One (src, tgt) pair with random content length in
+    /// [src_len/2, src_len - 2] (leaving room for EOS).
+    pub fn sample_pair(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let lo = (self.src_len / 2).max(2);
+        let hi = self.src_len - 1;
+        let len = lo + self.rng.below_usize(hi - lo);
+        let src = self.sample_source(len);
+        let tgt = self.translate(&src);
+        (src, tgt)
+    }
+
+    /// Batch with BOS/EOS framing and PAD masking:
+    ///   src      = tokens + EOS + PAD...
+    ///   tgt_in   = BOS + tokens + PAD...
+    ///   tgt_out  = tokens + EOS + PAD...   (weights 0 on PAD)
+    pub fn next_batch(&mut self, batch: usize) -> MtBatch {
+        let (ns, nt) = (self.src_len, self.tgt_len);
+        let mut src = vec![PAD; batch * ns];
+        let mut tgt_in = vec![PAD; batch * nt];
+        let mut tgt_out = vec![PAD; batch * nt];
+        let mut weights = vec![0.0f32; batch * nt];
+        for b in 0..batch {
+            let (s, t) = self.sample_pair();
+            for (i, &tok) in s.iter().enumerate() {
+                src[b * ns + i] = tok;
+            }
+            src[b * ns + s.len()] = EOS;
+            tgt_in[b * nt] = BOS;
+            for (i, &tok) in t.iter().enumerate() {
+                tgt_in[b * nt + i + 1] = tok;
+                tgt_out[b * nt + i] = tok;
+                weights[b * nt + i] = 1.0;
+            }
+            tgt_out[b * nt + t.len()] = EOS;
+            weights[b * nt + t.len()] = 1.0;
+        }
+        MtBatch {
+            src,
+            tgt_in,
+            tgt_out,
+            weights,
+            batch,
+            src_len: ns,
+            tgt_len: nt,
+        }
+    }
+
+    /// Deterministic eval set.
+    pub fn eval_batches(&self, count: usize, batch: usize, seed: u64) -> Vec<MtBatch> {
+        let mut clone = MtGen::new(self.task, self.vocab, self.src_len,
+                                   self.tgt_len, seed);
+        // Keep the same subst/next tables as self so train/eval match.
+        clone.subst = self.subst.clone();
+        clone.next = self.next.clone();
+        (0..count).map(|_| clone.next_batch(batch)).collect()
+    }
+}
+
+/// Strip framing for BLEU: tokens until EOS/PAD.
+pub fn strip_special(seq: &[i32]) -> Vec<i32> {
+    seq.iter()
+        .take_while(|&&t| t != EOS && t != PAD)
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_are_invertible_structures() {
+        let mut g = MtGen::new(MtTask::Reverse, 32, 16, 16, 1);
+        let (s, t) = g.sample_pair();
+        let back: Vec<i32> = t.iter().rev().cloned().collect();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn vocabmap_is_bijection() {
+        let g = MtGen::new(MtTask::VocabMap, 32, 16, 16, 2);
+        let mut seen = std::collections::HashSet::new();
+        for &v in &g.subst {
+            assert!(v >= FIRST_WORD && v < 32);
+            assert!(seen.insert(v));
+        }
+        assert_eq!(seen.len(), 32 - FIRST_WORD as usize);
+    }
+
+    #[test]
+    fn rotshift_depends_on_position() {
+        let g = MtGen::new(MtTask::RotShift, 32, 16, 16, 3);
+        let src = vec![FIRST_WORD + 5, FIRST_WORD + 5, FIRST_WORD + 5];
+        let t = g.translate(&src);
+        assert_ne!(t[0], t[1]);
+        assert_ne!(t[1], t[2]);
+    }
+
+    #[test]
+    fn batch_framing_invariants() {
+        let mut g = MtGen::new(MtTask::Copy, 32, 16, 16, 4);
+        let b = g.next_batch(4);
+        for bi in 0..4 {
+            let tgt_in = &b.tgt_in[bi * 16..(bi + 1) * 16];
+            let tgt_out = &b.tgt_out[bi * 16..(bi + 1) * 16];
+            let w = &b.weights[bi * 16..(bi + 1) * 16];
+            assert_eq!(tgt_in[0], BOS);
+            // teacher forcing alignment: tgt_in shifted == tgt_out
+            for i in 0..15 {
+                if w[i + 1] > 0.0 {
+                    assert_eq!(tgt_in[i + 1], tgt_out[i]);
+                }
+            }
+            // exactly one EOS in the weighted region
+            let eos_count = tgt_out
+                .iter()
+                .zip(w)
+                .filter(|(&t, &ww)| ww > 0.0 && t == EOS)
+                .count();
+            assert_eq!(eos_count, 1);
+            // weights are a prefix (no holes)
+            let first_zero = w.iter().position(|&x| x == 0.0).unwrap_or(16);
+            assert!(w[..first_zero].iter().all(|&x| x == 1.0));
+            assert!(w[first_zero..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let g = MtGen::new(MtTask::Copy, 32, 16, 16, 5);
+        let a = g.eval_batches(2, 4, 77);
+        let b = g.eval_batches(2, 4, 77);
+        assert_eq!(a[0].src, b[0].src);
+        assert_eq!(a[1].tgt_out, b[1].tgt_out);
+    }
+
+    #[test]
+    fn strip_special_stops_at_eos() {
+        let seq = vec![5, 6, 7, EOS, PAD, PAD];
+        assert_eq!(strip_special(&seq), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn sources_have_markov_structure() {
+        let mut g = MtGen::new(MtTask::Copy, 32, 16, 16, 6);
+        // bigram repetition rate should exceed uniform chance
+        let mut repeats = 0;
+        let mut total = 0;
+        let mut bigrams = std::collections::HashMap::new();
+        for _ in 0..200 {
+            let (s, _) = g.sample_pair();
+            for w in s.windows(2) {
+                *bigrams.entry((w[0], w[1])).or_insert(0usize) += 1;
+                total += 1;
+            }
+        }
+        let max_count = bigrams.values().max().cloned().unwrap_or(0);
+        repeats += max_count;
+        let words = (32 - FIRST_WORD) as f64;
+        let uniform_expect = total as f64 / (words * words);
+        assert!(
+            repeats as f64 > 4.0 * uniform_expect,
+            "max bigram {repeats} vs uniform {uniform_expect:.1}"
+        );
+    }
+}

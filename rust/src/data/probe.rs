@@ -1,0 +1,205 @@
+//! GLUE stand-in: four synthetic sequence-classification probes over
+//! the same Markov corpus used for MLM pretraining (Table 1). Each
+//! probes a different linguistic-ish capability, so transfer from the
+//! pretrained encoder (vs. random init) is measurable:
+//!
+//!   parity    — does token class A appear an even number of times?
+//!               (CoLA-ish: a global wellformedness bit)
+//!   majority  — which of two token classes dominates? (SST-ish
+//!               sentiment from token identity)
+//!   matched   — do the first and second half share >50% vocabulary?
+//!               (MRPC/QQP-ish: paraphrase detection)
+//!   ordered   — does marker X precede marker Y? (RTE-ish: relational)
+
+use crate::rng::Rng;
+
+use super::text::{MarkovCorpus, FIRST_WORD};
+use super::ClsBatch;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeTask {
+    Parity,
+    Majority,
+    Matched,
+    Ordered,
+}
+
+impl ProbeTask {
+    pub fn all() -> [ProbeTask; 4] {
+        [ProbeTask::Parity, ProbeTask::Majority, ProbeTask::Matched,
+         ProbeTask::Ordered]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeTask::Parity => "parity",
+            ProbeTask::Majority => "majority",
+            ProbeTask::Matched => "matched",
+            ProbeTask::Ordered => "ordered",
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        2
+    }
+}
+
+pub struct ProbeGen {
+    pub task: ProbeTask,
+    pub vocab: usize,
+    pub seq_len: usize,
+    corpus: MarkovCorpus,
+    rng: Rng,
+}
+
+impl ProbeGen {
+    /// `corpus_seed` must match the pretraining corpus so the token
+    /// distribution transfers.
+    pub fn new(task: ProbeTask, vocab: usize, seq_len: usize,
+               corpus_seed: u64, seed: u64) -> ProbeGen {
+        ProbeGen {
+            task,
+            vocab,
+            seq_len,
+            corpus: MarkovCorpus::new(vocab, corpus_seed),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Token class A: even word ids; class B: odd. (Interleaved so the
+    /// Zipf-skewed unigram doesn't make one class always dominate.)
+    fn is_class_a(&self, t: i32) -> bool {
+        (t - FIRST_WORD) % 2 == 0
+    }
+
+    fn sample(&mut self) -> (Vec<i32>, i32) {
+        let n = self.seq_len;
+        let mut seq = self.corpus.generate(n, &mut self.rng);
+        let words = self.vocab - FIRST_WORD as usize;
+        match self.task {
+            ProbeTask::Parity => {
+                let count = seq.iter().filter(|&&t| self.is_class_a(t)).count();
+                ((seq), (count % 2 == 0) as i32)
+            }
+            ProbeTask::Majority => {
+                let a = seq.iter().filter(|&&t| self.is_class_a(t)).count();
+                (seq, (2 * a > n) as i32)
+            }
+            ProbeTask::Matched => {
+                // Half the time, copy 60% of first-half positions into
+                // the matching second-half positions; label = whether
+                // the halves match position-wise (> n/8 aligned tokens).
+                let force = self.rng.uniform() < 0.5;
+                if force {
+                    for i in 0..n / 2 {
+                        if self.rng.uniform() < 0.6 {
+                            seq[n / 2 + i] = seq[i];
+                        }
+                    }
+                }
+                let aligned = (0..n / 2)
+                    .filter(|&i| seq[i] == seq[n / 2 + i])
+                    .count();
+                (seq, (aligned > n / 8) as i32)
+            }
+            ProbeTask::Ordered => {
+                // Plant markers X (=FIRST_WORD) and Y (=FIRST_WORD+1) at
+                // random positions; label = X before Y.
+                let x_pos = self.rng.below_usize(n);
+                let mut y_pos = self.rng.below_usize(n);
+                while y_pos == x_pos {
+                    y_pos = self.rng.below_usize(n);
+                }
+                // Scrub natural occurrences of the markers first.
+                for t in seq.iter_mut() {
+                    if *t <= FIRST_WORD + 1 {
+                        *t = FIRST_WORD + 2 + (self.rng.below_usize(words - 2)) as i32;
+                    }
+                }
+                seq[x_pos] = FIRST_WORD;
+                seq[y_pos] = FIRST_WORD + 1;
+                (seq, (x_pos < y_pos) as i32)
+            }
+        }
+    }
+
+    pub fn next_batch(&mut self, batch: usize) -> ClsBatch {
+        let mut tokens = Vec::with_capacity(batch * self.seq_len);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (seq, label) = self.sample();
+            tokens.extend(seq);
+            labels.push(label);
+        }
+        ClsBatch { tokens, patches: Vec::new(), labels, batch }
+    }
+
+    pub fn eval_batches(&self, count: usize, batch: usize, seed: u64) -> Vec<ClsBatch> {
+        let mut gen = ProbeGen::new(self.task, self.vocab, self.seq_len, 0, seed);
+        // Share the corpus so eval text looks like train text.
+        gen.corpus = MarkovCorpus::new(self.vocab, 0);
+        let mut g2 = ProbeGen {
+            task: self.task,
+            vocab: self.vocab,
+            seq_len: self.seq_len,
+            corpus: MarkovCorpus::new(self.vocab, seed ^ 0xC0DE),
+            rng: Rng::new(seed),
+        };
+        (0..count).map(|_| g2.next_batch(batch)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_binary_and_balancedish() {
+        for task in ProbeTask::all() {
+            let mut g = ProbeGen::new(task, 64, 64, 1, 2);
+            let b = g.next_batch(200);
+            let ones = b.labels.iter().filter(|&&l| l == 1).count();
+            assert!(b.labels.iter().all(|&l| l == 0 || l == 1));
+            assert!(
+                (30..170).contains(&ones),
+                "{}: {ones}/200 positive",
+                task.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ordered_labels_verifiable() {
+        let mut g = ProbeGen::new(ProbeTask::Ordered, 64, 32, 1, 3);
+        let b = g.next_batch(50);
+        for bi in 0..50 {
+            let seq = &b.tokens[bi * 32..(bi + 1) * 32];
+            let x = seq.iter().position(|&t| t == FIRST_WORD).unwrap();
+            let y = seq.iter().position(|&t| t == FIRST_WORD + 1).unwrap();
+            assert_eq!(b.labels[bi], (x < y) as i32);
+        }
+    }
+
+    #[test]
+    fn parity_labels_verifiable() {
+        let mut g = ProbeGen::new(ProbeTask::Parity, 64, 32, 1, 4);
+        let b = g.next_batch(50);
+        for bi in 0..50 {
+            let seq = &b.tokens[bi * 32..(bi + 1) * 32];
+            let count = seq
+                .iter()
+                .filter(|&&t| (t - FIRST_WORD) % 2 == 0)
+                .count();
+            assert_eq!(b.labels[bi], (count % 2 == 0) as i32);
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for task in ProbeTask::all() {
+            let mut g = ProbeGen::new(task, 64, 32, 1, 5);
+            let b = g.next_batch(20);
+            assert!(b.tokens.iter().all(|&t| t >= FIRST_WORD && t < 64));
+        }
+    }
+}

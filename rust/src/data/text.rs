@@ -1,0 +1,359 @@
+//! Synthetic language corpus: a second-order Markov chain over a
+//! Zipf-distributed token alphabet, with sentence structure (openers,
+//! closers, function tokens). Stands in for WikiText-103 (Table 2) and
+//! the BERT pretraining corpus (Table 1): it has enough local and
+//! mid-range structure that perplexity meaningfully separates model
+//! classes, while remaining fully reproducible from a seed.
+
+use crate::rng::Rng;
+
+use super::LmBatch;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const MASK: i32 = 3;
+pub const FIRST_WORD: i32 = 4;
+
+/// Markov-chain corpus generator over vocab [FIRST_WORD, vocab).
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    /// transition logits t[(a * vocab + b) * vocab + c]: unnormalized
+    /// weight of c following (a, b) — stored sparsely as top-k lists.
+    next: Vec<Vec<(i32, f64)>>,
+    unigram: Vec<f64>,
+}
+
+impl MarkovCorpus {
+    /// Build a random but fixed chain: each bigram context prefers a
+    /// handful of successors (sparse, Zipf-weighted) — this creates the
+    /// sharp "attend to recent context" structure RPE models exploit.
+    pub fn new(vocab: usize, seed: u64) -> MarkovCorpus {
+        assert!(vocab > FIRST_WORD as usize + 4);
+        let mut rng = Rng::new(seed);
+        let words = vocab - FIRST_WORD as usize;
+        // Zipf unigram over words.
+        let unigram: Vec<f64> =
+            (0..words).map(|i| 1.0 / (i as f64 + 2.0)).collect();
+        let contexts = words * words;
+        let mut next = Vec::with_capacity(contexts);
+        for _ in 0..contexts {
+            let k = 3 + rng.below_usize(4); // 3..6 successors
+            let succ: Vec<(i32, f64)> = (0..k)
+                .map(|rank| {
+                    let w = FIRST_WORD + rng.categorical(&unigram) as i32;
+                    (w, 1.0 / (rank as f64 + 1.0))
+                })
+                .collect();
+            next.push(succ);
+        }
+        MarkovCorpus { vocab, next, unigram }
+    }
+
+    fn sample_word(&self, rng: &mut Rng) -> i32 {
+        FIRST_WORD + rng.categorical(&self.unigram) as i32
+    }
+
+    fn sample_next(&self, a: i32, b: i32, rng: &mut Rng) -> i32 {
+        let words = self.vocab - FIRST_WORD as usize;
+        let ia = (a - FIRST_WORD) as usize;
+        let ib = (b - FIRST_WORD) as usize;
+        let succ = &self.next[ia * words + ib];
+        // 10% smoothing to the unigram so the chain is ergodic.
+        let mut rng2 = rng.fold_in(0);
+        if rng.uniform() < 0.1 {
+            return self.sample_word(&mut rng2);
+        }
+        let weights: Vec<f64> = succ.iter().map(|(_, w)| *w).collect();
+        succ[rng.categorical(&weights)].0
+    }
+
+    /// Generate a stream of `len` tokens (no specials).
+    pub fn generate(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut a = self.sample_word(rng);
+        let mut b = self.sample_word(rng);
+        out.push(a);
+        if len > 1 {
+            out.push(b);
+        }
+        while out.len() < len {
+            let c = self.sample_next(a, b, rng);
+            out.push(c);
+            a = b;
+            b = c;
+        }
+        out
+    }
+}
+
+/// Streaming LM batches: contiguous windows of a corpus stream with
+/// next-token targets (teacher forcing).
+pub struct LmStream {
+    corpus: MarkovCorpus,
+    rng: Rng,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl LmStream {
+    pub fn new(vocab: usize, batch: usize, seq_len: usize, seed: u64) -> LmStream {
+        LmStream {
+            corpus: MarkovCorpus::new(vocab, seed),
+            rng: Rng::new(seed ^ 0x5eed),
+            batch,
+            seq_len,
+        }
+    }
+
+    pub fn corpus_vocab(&self) -> usize {
+        self.corpus.vocab
+    }
+
+    pub fn next_batch(&mut self) -> LmBatch {
+        let (b, n) = (self.batch, self.seq_len);
+        let mut tokens = Vec::with_capacity(b * n);
+        let mut targets = Vec::with_capacity(b * n);
+        for _ in 0..b {
+            let stream = self.corpus.generate(n + 1, &mut self.rng);
+            tokens.extend(&stream[..n]);
+            targets.extend(&stream[1..]);
+        }
+        LmBatch {
+            tokens,
+            targets,
+            weights: vec![1.0; b * n],
+            batch: b,
+            seq_len: n,
+        }
+    }
+
+    /// A fixed evaluation set (deterministic across calls).
+    pub fn eval_batches(&self, count: usize, seed: u64) -> Vec<LmBatch> {
+        let mut rng = Rng::new(seed);
+        let (b, n) = (self.batch, self.seq_len);
+        (0..count)
+            .map(|_| {
+                let mut tokens = Vec::with_capacity(b * n);
+                let mut targets = Vec::with_capacity(b * n);
+                for _ in 0..b {
+                    let stream = self.corpus.generate(n + 1, &mut rng);
+                    tokens.extend(&stream[..n]);
+                    targets.extend(&stream[1..]);
+                }
+                LmBatch {
+                    tokens,
+                    targets,
+                    weights: vec![1.0; b * n],
+                    batch: b,
+                    seq_len: n,
+                }
+            })
+            .collect()
+    }
+
+    /// Masked-LM batches: 15% of positions masked (80/10/10 BERT recipe),
+    /// loss weights select the masked positions only.
+    pub fn next_mlm_batch(&mut self) -> LmBatch {
+        let (b, n) = (self.batch, self.seq_len);
+        let mut tokens = Vec::with_capacity(b * n);
+        let mut targets = Vec::with_capacity(b * n);
+        let mut weights = vec![0.0f32; b * n];
+        for bi in 0..b {
+            let stream = self.corpus.generate(n, &mut self.rng);
+            for (i, &tok) in stream.iter().enumerate() {
+                let idx = bi * n + i;
+                targets.push(tok);
+                if self.rng.uniform() < 0.15 {
+                    weights[idx] = 1.0;
+                    let u = self.rng.uniform();
+                    let masked = if u < 0.8 {
+                        MASK
+                    } else if u < 0.9 {
+                        FIRST_WORD
+                            + self.rng.below_usize(self.corpus.vocab - FIRST_WORD as usize)
+                                as i32
+                    } else {
+                        tok
+                    };
+                    tokens.push(masked);
+                } else {
+                    tokens.push(tok);
+                }
+            }
+        }
+        LmBatch { tokens, targets, weights, batch: b, seq_len: n }
+    }
+}
+
+/// Image-as-sequence corpus for the Table 6 generation task: 8x8x3
+/// procedural images flattened to 192 tokens over a 256-level alphabet
+/// (+1 for BOS shifted input).
+pub struct ImageSeqStream {
+    rng: Rng,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl ImageSeqStream {
+    pub fn new(batch: usize, seq_len: usize, seed: u64) -> ImageSeqStream {
+        ImageSeqStream { rng: Rng::new(seed), batch, seq_len }
+    }
+
+    /// Smooth procedural "image": mixture of 2-D Gaussian blobs per
+    /// channel, quantized to [0, 255]. Values are shifted by +1 so
+    /// token 0 can act as BOS in the input stream.
+    fn generate_image(&mut self, side: usize, channels: usize) -> Vec<i32> {
+        let mut px = vec![0.0f64; side * side * channels];
+        for ch in 0..channels {
+            let blobs = 1 + self.rng.below_usize(3);
+            for _ in 0..blobs {
+                let cx = self.rng.uniform() * side as f64;
+                let cy = self.rng.uniform() * side as f64;
+                let amp = self.rng.uniform_range(0.3, 1.0);
+                let sig = self.rng.uniform_range(1.0, 3.0);
+                for y in 0..side {
+                    for x in 0..side {
+                        let dx = x as f64 - cx;
+                        let dy = y as f64 - cy;
+                        px[(y * side + x) * channels + ch] +=
+                            amp * (-(dx * dx + dy * dy) / (2.0 * sig * sig)).exp();
+                    }
+                }
+            }
+        }
+        px.iter()
+            .map(|&v| ((v.min(1.0) * 255.0) as i32 + 1).min(256))
+            .collect()
+    }
+
+    pub fn next_batch(&mut self) -> LmBatch {
+        let (b, n) = (self.batch, self.seq_len);
+        let side = 8;
+        let channels = n / (side * side);
+        assert_eq!(n, side * side * channels);
+        let mut tokens = Vec::with_capacity(b * n);
+        let mut targets = Vec::with_capacity(b * n);
+        for _ in 0..b {
+            let img = self.generate_image(side, channels);
+            tokens.push(0); // BOS
+            tokens.extend(&img[..n - 1]);
+            targets.extend(&img[..n]);
+        }
+        LmBatch {
+            tokens,
+            targets,
+            weights: vec![1.0; b * n],
+            batch: b,
+            seq_len: n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tokens_in_range() {
+        let c = MarkovCorpus::new(64, 1);
+        let mut rng = Rng::new(2);
+        let s = c.generate(500, &mut rng);
+        assert_eq!(s.len(), 500);
+        assert!(s.iter().all(|&t| t >= FIRST_WORD && t < 64));
+    }
+
+    #[test]
+    fn corpus_deterministic_given_seeds() {
+        let c1 = MarkovCorpus::new(64, 1);
+        let c2 = MarkovCorpus::new(64, 1);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(c1.generate(100, &mut r1), c2.generate(100, &mut r2));
+    }
+
+    #[test]
+    fn markov_is_predictable() {
+        // The chain must be much lower-entropy than uniform: empirical
+        // bigram-conditional entropy should be well under log2(words).
+        let c = MarkovCorpus::new(64, 3);
+        let mut rng = Rng::new(4);
+        let s = c.generate(20_000, &mut rng);
+        let words = 60usize;
+        let mut counts =
+            std::collections::HashMap::<(i32, i32), std::collections::HashMap<i32, usize>>::new();
+        for w in s.windows(3) {
+            *counts
+                .entry((w[0], w[1]))
+                .or_default()
+                .entry(w[2])
+                .or_default() += 1;
+        }
+        let mut h = 0.0f64;
+        let mut total = 0usize;
+        for (_, m) in counts.iter() {
+            let ctx_total: usize = m.values().sum();
+            for &c in m.values() {
+                let p = c as f64 / ctx_total as f64;
+                h -= (c as f64) * p.log2();
+            }
+            total += ctx_total;
+        }
+        let h_per_tok = h / total as f64;
+        assert!(
+            h_per_tok < 0.8 * (words as f64).log2(),
+            "entropy {h_per_tok:.2} vs uniform {:.2}",
+            (words as f64).log2()
+        );
+    }
+
+    #[test]
+    fn lm_batches_shift_by_one() {
+        let mut s = LmStream::new(64, 2, 16, 5);
+        let b = s.next_batch();
+        assert_eq!(b.tokens.len(), 32);
+        // target[i] should continue the stream: tokens[i+1] == targets[i]
+        for bi in 0..2 {
+            for i in 0..15 {
+                assert_eq!(b.tokens[bi * 16 + i + 1], b.targets[bi * 16 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn mlm_masks_about_15_percent() {
+        let mut s = LmStream::new(64, 4, 64, 6);
+        let b = s.next_mlm_batch();
+        let masked: f32 = b.weights.iter().sum();
+        let frac = masked / (4.0 * 64.0);
+        assert!((0.05..0.30).contains(&frac), "frac={frac}");
+        // Masked positions mostly carry the MASK token.
+        let mask_toks = b
+            .weights
+            .iter()
+            .zip(&b.tokens)
+            .filter(|(&w, &t)| w > 0.0 && t == MASK)
+            .count();
+        assert!(mask_toks as f32 >= masked * 0.5);
+    }
+
+    #[test]
+    fn eval_batches_are_stable() {
+        let s = LmStream::new(64, 2, 16, 7);
+        let a = s.eval_batches(3, 99);
+        let b = s.eval_batches(3, 99);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(a[2].targets, b[2].targets);
+    }
+
+    #[test]
+    fn image_seq_tokens_in_range() {
+        let mut s = ImageSeqStream::new(2, 192, 8);
+        let b = s.next_batch();
+        assert_eq!(b.tokens.len(), 2 * 192);
+        assert!(b.targets.iter().all(|&t| (1..=256).contains(&t)));
+        assert_eq!(b.tokens[0], 0); // BOS
+        // input is the target shifted right by one
+        assert_eq!(b.tokens[1], b.targets[0]);
+    }
+}

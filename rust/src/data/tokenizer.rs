@@ -1,0 +1,275 @@
+//! Byte-pair-encoding tokenizer (the paper's IWSLT pipeline uses a
+//! joint-BPE vocabulary; this is the from-scratch substrate for it).
+//!
+//! Classic Sennrich-style BPE over byte sequences: learn `merges` by
+//! repeatedly joining the most frequent adjacent pair, encode greedily
+//! by applying merges in learned order, decode losslessly. Token ids:
+//! 0..4 reserved (PAD/BOS/EOS/UNK), 4..260 raw bytes, 260+ merges.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+const BYTE_BASE: i32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merge list in priority order: (left id, right id) -> new id
+    merges: Vec<(i32, i32)>,
+    /// lookup for encode
+    merge_rank: HashMap<(i32, i32), usize>,
+    /// id -> byte expansion (for decode)
+    expansions: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Learn `n_merges` merges from a text corpus.
+    pub fn train(corpus: &str, n_merges: usize) -> Bpe {
+        let mut seqs: Vec<Vec<i32>> = corpus
+            .split_whitespace()
+            .map(|w| w.bytes().map(|b| BYTE_BASE + b as i32).collect())
+            .collect();
+        let mut merges = Vec::with_capacity(n_merges);
+        let mut expansions: Vec<Vec<u8>> = (0..256u16)
+            .map(|b| vec![b as u8])
+            .collect();
+        for _ in 0..n_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for s in &seqs {
+                for w in s.windows(2) {
+                    *counts.entry((w[0], w[1])).or_default() += 1;
+                }
+            }
+            // deterministic argmax: highest count, then smallest pair
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = BYTE_BASE + 256 + merges.len() as i32;
+            merges.push(pair);
+            let mut exp = Self::expand_id(pair.0, &expansions);
+            exp.extend(Self::expand_id(pair.1, &expansions));
+            expansions.push(exp);
+            // apply the merge everywhere
+            for s in seqs.iter_mut() {
+                *s = Self::apply_merge(s, pair, new_id);
+            }
+        }
+        let merge_rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i))
+            .collect();
+        Bpe { merges, merge_rank, expansions }
+    }
+
+    fn expand_id(id: i32, expansions: &[Vec<u8>]) -> Vec<u8> {
+        expansions[(id - BYTE_BASE) as usize].clone()
+    }
+
+    fn apply_merge(s: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+        let mut out = Vec::with_capacity(s.len());
+        let mut i = 0;
+        while i < s.len() {
+            if i + 1 < s.len() && (s[i], s[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(s[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        BYTE_BASE as usize + 256 + self.merges.len()
+    }
+
+    /// Encode one whitespace-separated text into token ids (no BOS/EOS).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for word in text.split_whitespace() {
+            let mut seq: Vec<i32> =
+                word.bytes().map(|b| BYTE_BASE + b as i32).collect();
+            // apply merges in rank order until none applies
+            loop {
+                let mut best: Option<(usize, usize)> = None; // (rank, pos)
+                for (pos, w) in seq.windows(2).enumerate() {
+                    if let Some(&rank) = self.merge_rank.get(&(w[0], w[1])) {
+                        if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                            best = Some((rank, pos));
+                        }
+                    }
+                }
+                match best {
+                    Some((rank, pos)) => {
+                        let new_id = BYTE_BASE + 256 + rank as i32;
+                        let pair = self.merges[rank];
+                        debug_assert_eq!(
+                            (seq[pos], seq[pos + 1]),
+                            pair
+                        );
+                        seq = Self::apply_merge(&seq, pair, new_id);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(seq);
+        }
+        out
+    }
+
+    /// Decode ids back to text (words joined by single spaces —
+    /// whitespace is not byte-encoded, matching `encode`).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id < BYTE_BASE {
+                continue; // specials
+            }
+            bytes.extend(Self::expand_id(id, &self.expansions));
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Encode with framing + padding to a fixed length.
+    pub fn encode_framed(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let mut ids = vec![BOS];
+        ids.extend(self.encode(text));
+        ids.truncate(max_len - 1);
+        ids.push(EOS);
+        ids.resize(max_len, PAD);
+        ids
+    }
+}
+
+/// Simple char-level vocabulary for corpora that don't need BPE.
+#[derive(Debug, Clone)]
+pub struct CharVocab {
+    chars: Vec<char>,
+    index: HashMap<char, i32>,
+}
+
+impl CharVocab {
+    pub fn from_corpus(corpus: &str) -> CharVocab {
+        let mut chars: Vec<char> = corpus
+            .chars()
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        chars.sort_unstable();
+        let index = chars
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, i as i32 + BYTE_BASE))
+            .collect();
+        CharVocab { chars, index }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        BYTE_BASE as usize + self.chars.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| self.index.get(&c).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&id| {
+                if id >= BYTE_BASE {
+                    self.chars.get((id - BYTE_BASE) as usize).copied()
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the quick brown fox jumps over the lazy dog \
+                          the quick brown fox the quick the the";
+
+    #[test]
+    fn bpe_roundtrip_on_training_words() {
+        let bpe = Bpe::train(CORPUS, 30);
+        for word in ["the", "quick", "fox", "lazy"] {
+            let ids = bpe.encode(word);
+            assert_eq!(bpe.decode(&ids), word);
+        }
+    }
+
+    #[test]
+    fn bpe_roundtrip_on_unseen_text() {
+        let bpe = Bpe::train(CORPUS, 30);
+        let text = "unseen words here";
+        assert_eq!(bpe.decode(&bpe.encode(text)), "unseenwordshere");
+        // (whitespace is a separator, not a token — documented behaviour)
+    }
+
+    #[test]
+    fn frequent_words_compress() {
+        let bpe = Bpe::train(CORPUS, 50);
+        // "the" appears 6x — must have merged below 3 byte-tokens.
+        assert!(bpe.encode("the").len() < 3);
+        // rare strings stay near byte length
+        assert!(bpe.encode("zzqx").len() >= 3);
+    }
+
+    #[test]
+    fn merge_determinism() {
+        let a = Bpe::train(CORPUS, 20);
+        let b = Bpe::train(CORPUS, 20);
+        assert_eq!(a.merges, b.merges);
+        assert_eq!(a.encode("the quick fox"), b.encode("the quick fox"));
+    }
+
+    #[test]
+    fn framed_encoding_invariants() {
+        let bpe = Bpe::train(CORPUS, 20);
+        let ids = bpe.encode_framed("the quick brown fox", 12);
+        assert_eq!(ids.len(), 12);
+        assert_eq!(ids[0], BOS);
+        assert!(ids.contains(&EOS));
+        let eos_pos = ids.iter().position(|&t| t == EOS).unwrap();
+        assert!(ids[eos_pos + 1..].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn vocab_size_grows_with_merges() {
+        let small = Bpe::train(CORPUS, 5);
+        let large = Bpe::train(CORPUS, 30);
+        assert!(large.vocab_size() > small.vocab_size());
+        assert_eq!(small.vocab_size(), 4 + 256 + small.merges.len());
+    }
+
+    #[test]
+    fn char_vocab_roundtrip() {
+        let v = CharVocab::from_corpus("hello world");
+        let ids = v.encode("hello");
+        assert_eq!(v.decode(&ids), "hello");
+        assert_eq!(v.encode("z")[0], UNK); // z not in corpus
+    }
+
+    #[test]
+    fn char_vocab_is_sorted_and_stable() {
+        let a = CharVocab::from_corpus("bca");
+        let b = CharVocab::from_corpus("abc");
+        assert_eq!(a.encode("abc"), b.encode("abc"));
+    }
+}

@@ -1,0 +1,345 @@
+//! FFT substrate: iterative radix-2 Cooley-Tukey + Bluestein for
+//! arbitrary sizes, f64 complex.
+//!
+//! Used by `toeplitz` for the O(n log n) position-correlation product
+//! (the Rust-side mirror of the paper's Eq. 12/13 fast path) and by the
+//! Fig. 1b simulation. Precision is f64 throughout so the CPU oracle is
+//! strictly tighter than the f32 artifacts it cross-checks.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Complex {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    #[inline]
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline]
+    pub fn conj(self) -> Complex {
+        Complex::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+pub fn next_pow2(n: usize) -> usize {
+    let mut p = 1;
+    while p < n {
+        p <<= 1;
+    }
+    p
+}
+
+/// Precomputed twiddle tables for a fixed power-of-two size.
+/// Reusing a plan across calls is the main CPU-side optimization lever.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    pub n: usize,
+    /// twiddles[s] holds the stage-s roots of unity.
+    twiddles: Vec<Vec<Complex>>,
+    bitrev: Vec<usize>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n.is_power_of_two(), "FftPlan requires power-of-two n");
+        let stages = n.trailing_zeros() as usize;
+        let mut twiddles = Vec::with_capacity(stages);
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let mut tw = Vec::with_capacity(half);
+            for k in 0..half {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                tw.push(Complex::new(ang.cos(), ang.sin()));
+            }
+            twiddles.push(tw);
+            len <<= 1;
+        }
+        let mut bitrev = vec![0usize; n];
+        let bits = stages;
+        if bits > 0 {
+            for (i, item) in bitrev.iter_mut().enumerate() {
+                *item = i.reverse_bits() >> (usize::BITS as usize - bits);
+            }
+        }
+        FftPlan { n, twiddles, bitrev }
+    }
+
+    /// In-place forward FFT.
+    pub fn forward(&self, x: &mut [Complex]) {
+        assert_eq!(x.len(), self.n);
+        // bit-reversal permutation
+        for i in 0..self.n {
+            let j = self.bitrev[i];
+            if i < j {
+                x.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        let mut stage = 0;
+        while len <= self.n {
+            let half = len / 2;
+            let tw = &self.twiddles[stage];
+            let mut base = 0;
+            while base < self.n {
+                for k in 0..half {
+                    let u = x[base + k];
+                    let v = x[base + k + half].mul(tw[k]);
+                    x[base + k] = u.add(v);
+                    x[base + k + half] = u.sub(v);
+                }
+                base += len;
+            }
+            len <<= 1;
+            stage += 1;
+        }
+    }
+
+    /// In-place inverse FFT (normalized by 1/n).
+    pub fn inverse(&self, x: &mut [Complex]) {
+        for c in x.iter_mut() {
+            *c = c.conj();
+        }
+        self.forward(x);
+        let inv = 1.0 / self.n as f64;
+        for c in x.iter_mut() {
+            *c = c.conj().scale(inv);
+        }
+    }
+}
+
+/// Forward FFT of arbitrary size (radix-2 fast path, Bluestein otherwise).
+pub fn fft(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut buf = x.to_vec();
+        FftPlan::new(n).forward(&mut buf);
+        buf
+    } else {
+        bluestein(x, false)
+    }
+}
+
+/// Inverse FFT of arbitrary size.
+pub fn ifft(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut buf = x.to_vec();
+        FftPlan::new(n).inverse(&mut buf);
+        buf
+    } else {
+        bluestein(x, true)
+    }
+}
+
+/// Bluestein's chirp-z algorithm: arbitrary-size DFT via one
+/// power-of-two circular convolution.
+fn bluestein(x: &[Complex], inverse: bool) -> Vec<Complex> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // chirp[k] = exp(sign * i*pi*k^2/n)
+    let chirp: Vec<Complex> = (0..n)
+        .map(|k| {
+            let kk = (k as u128 * k as u128 % (2 * n as u128)) as f64;
+            let ang = sign * std::f64::consts::PI * kk / n as f64;
+            Complex::new(ang.cos(), ang.sin())
+        })
+        .collect();
+    let m = next_pow2(2 * n - 1);
+    let plan = FftPlan::new(m);
+    let mut a = vec![Complex::ZERO; m];
+    for k in 0..n {
+        a[k] = x[k].mul(chirp[k]);
+    }
+    let mut b = vec![Complex::ZERO; m];
+    for k in 0..n {
+        let c = chirp[k].conj();
+        b[k] = c;
+        if k > 0 {
+            b[m - k] = c;
+        }
+    }
+    plan.forward(&mut a);
+    plan.forward(&mut b);
+    for k in 0..m {
+        a[k] = a[k].mul(b[k]);
+    }
+    plan.inverse(&mut a);
+    let mut out: Vec<Complex> = (0..n).map(|k| a[k].mul(chirp[k])).collect();
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for c in out.iter_mut() {
+            *c = c.scale(inv);
+        }
+    }
+    out
+}
+
+/// Naive O(n^2) DFT — the correctness oracle for the fast paths.
+pub fn dft_naive(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Complex::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * j % n) as f64 / n as f64;
+                acc = acc.add(v.mul(Complex::new(ang.cos(), ang.sin())));
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Circular convolution via FFT: len(a) == len(b) == result length.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    let fa = fft(&a.iter().map(|&x| Complex::new(x, 0.0)).collect::<Vec<_>>());
+    let fb = fft(&b.iter().map(|&x| Complex::new(x, 0.0)).collect::<Vec<_>>());
+    let prod: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    ifft(&prod).iter().map(|c| c.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect()
+    }
+
+    fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| x.sub(*y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn fft_matches_naive_pow2() {
+        for n in [1, 2, 4, 8, 64, 256] {
+            let x = rand_signal(n, n as u64);
+            assert!(max_err(&fft(&x), &dft_naive(&x)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_arbitrary() {
+        for n in [3, 5, 6, 7, 12, 33, 100] {
+            let x = rand_signal(n, n as u64);
+            assert!(max_err(&fft(&x), &dft_naive(&x)) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for n in [4, 13, 128, 37] {
+            let x = rand_signal(n, 1000 + n as u64);
+            let back = ifft(&fft(&x));
+            assert!(max_err(&back, &x) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 64;
+        let x = rand_signal(n, 5);
+        let fx = fft(&x);
+        let e_time: f64 = x.iter().map(|c| c.abs() * c.abs()).sum();
+        let e_freq: f64 =
+            fx.iter().map(|c| c.abs() * c.abs()).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-8 * e_time.max(1.0));
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 32;
+        let x = rand_signal(n, 6);
+        let y = rand_signal(n, 7);
+        let sum: Vec<Complex> = x.iter().zip(&y).map(|(a, b)| a.add(*b)).collect();
+        let lhs = fft(&sum);
+        let fx = fft(&x);
+        let fy = fft(&y);
+        let rhs: Vec<Complex> = fx.iter().zip(&fy).map(|(a, b)| a.add(*b)).collect();
+        assert!(max_err(&lhs, &rhs) < 1e-9);
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![Complex::ZERO; 16];
+        x[0] = Complex::new(1.0, 0.0);
+        let fx = fft(&x);
+        for c in fx {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn circular_convolution_matches_naive() {
+        let mut rng = Rng::new(9);
+        for n in [8usize, 15, 32] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let fast = circular_convolve(&a, &b);
+            for i in 0..n {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += a[j] * b[(i + n - j) % n];
+                }
+                assert!((fast[i] - acc).abs() < 1e-9, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuse_matches_oneshot() {
+        let n = 128;
+        let x = rand_signal(n, 11);
+        let plan = FftPlan::new(n);
+        let mut a = x.clone();
+        plan.forward(&mut a);
+        assert!(max_err(&a, &fft(&x)) < 1e-12);
+    }
+}

@@ -1,0 +1,43 @@
+//! `kafft` — Kernelized Attention with RPE via FFT (NeurIPS 2021
+//! reproduction): Rust coordinator over AOT-compiled JAX/Pallas
+//! computations executed through PJRT.
+//!
+//! Layer map (DESIGN.md):
+//!   * L1 Pallas kernels + L2 JAX models live in `python/compile/` and
+//!     are lowered once to `artifacts/*.hlo.txt`;
+//!   * this crate is L3: it loads those artifacts (`runtime`), owns the
+//!     training/serving loops (`coordinator`), generates workloads
+//!     (`data`), scores them (`metrics`), and re-implements the paper's
+//!     numerics on the CPU (`attention`, `fft`, `toeplitz`, `tensor`)
+//!     for simulation studies and cross-validation of the artifacts.
+
+pub mod attention;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fft;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod toeplitz;
+pub mod util;
+
+/// Default artifacts directory (overridable via --artifacts or env).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("KAFFT_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from cwd until a directory containing artifacts/ is found;
+    // fall back to ./artifacts.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

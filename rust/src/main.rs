@@ -1,0 +1,247 @@
+//! `kafft` CLI — the L3 launcher.
+//!
+//!   kafft smoke                       round-trip sanity check
+//!   kafft list [--role R]             artifacts in the manifest
+//!   kafft train --artifact NAME ...   run one training job
+//!   kafft exp <id> [--steps N] ...    regenerate a paper table/figure
+//!   kafft exp all                     everything (long)
+//!   kafft serve [--requests N]        demo the batched LM server
+//!
+//! Global flags: --artifacts DIR, --verbose / --quiet.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use kafft::config::{RawConfig, TrainConfig};
+use kafft::coordinator::experiments::{self as exp, ExpOpts};
+use kafft::coordinator::server::{LmServer, ServerConfig};
+use kafft::coordinator::{make_source, Trainer};
+use kafft::runtime::{HostTensor, Runtime};
+use kafft::util::args::Args;
+use kafft::util::logging::{set_level, Level};
+use kafft::{info, rng::Rng};
+
+fn main() {
+    let args = Args::from_env();
+    if args.has_flag("verbose") {
+        set_level(Level::Debug);
+    } else if args.has_flag("quiet") {
+        set_level(Level::Warn);
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn runtime(args: &Args) -> Result<Runtime> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(kafft::artifacts_dir);
+    Runtime::new(dir)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("smoke") => smoke(args),
+        Some("list") => list(args),
+        Some("train") => train(args),
+        Some("exp") => experiment(args),
+        Some("serve") => serve(args),
+        _ => {
+            eprintln!(
+                "kafft — Kernelized Attention with RPE via FFT (NeurIPS'21 repro)\n\
+                 \n\
+                 usage: kafft <command> [options]\n\
+                 \n\
+                 commands:\n\
+                 \u{20}  smoke                      load + execute one artifact end-to-end\n\
+                 \u{20}  list [--role R]            list manifest artifacts\n\
+                 \u{20}  train --artifact NAME      run a training job (--steps --lr --seed\n\
+                 \u{20}                             --schedule --eval-every --checkpoint --config)\n\
+                 \u{20}  exp <id>                   fig1a fig1b fig2 fig3a fig3b table1 table2\n\
+                 \u{20}                             table3 table4 table6 | all  (--steps --seeds --full)\n\
+                 \u{20}  serve [--requests N]       batched-inference server demo\n\
+                 \n\
+                 global: --artifacts DIR --verbose --quiet"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    println!("platform: {}", rt.platform());
+    let name = args.get_or("artifact", "lm_nprf_rpe_fft.train");
+    let entry = rt.manifest.artifact(&name)?.clone();
+    let layout = rt.manifest.layout_of(&name)?;
+    let flat = kafft::runtime::params::init_params(layout, 0)?;
+    let p = flat.len();
+    let mut inputs = vec![
+        HostTensor::f32(flat, &[p]),
+        HostTensor::f32(vec![0.0; p], &[p]),
+        HostTensor::f32(vec![0.0; p], &[p]),
+        HostTensor::scalar(0.0),
+        HostTensor::scalar(1e-3),
+    ];
+    let mut source = make_source(&entry, 1)?;
+    inputs.extend(source.next_train());
+    let t0 = std::time::Instant::now();
+    let out = rt.execute(&name, &inputs)?;
+    println!(
+        "{name}: loss={:.4} in {:?} (params={p})",
+        out[3].scalar_f32()?,
+        t0.elapsed()
+    );
+    println!("stats: {:?}", rt.stats());
+    Ok(())
+}
+
+fn list(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let role = args.get("role");
+    let mut t = kafft::util::bench::Table::new(&[
+        "artifact", "role", "task", "batch", "params",
+    ]);
+    for a in rt.manifest.artifacts.values() {
+        if role.map(|r| a.role != r).unwrap_or(false) {
+            continue;
+        }
+        t.row(&[
+            a.name.clone(),
+            a.role.clone(),
+            a.task.clone(),
+            a.batch.to_string(),
+            a.param_count.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let file = args
+        .get("config")
+        .map(RawConfig::load)
+        .transpose()?;
+    let cfg = TrainConfig::from_sources(file.as_ref(), args)?;
+    if cfg.artifact.is_empty() {
+        bail!("--artifact is required (see `kafft list --role train_step`)");
+    }
+    let entry = rt.manifest.artifact(&cfg.artifact)?.clone();
+    let mut source = make_source(&entry, cfg.seed + 1)?;
+    let report = Trainer::new(&rt, cfg).run(source.as_mut(), None)?;
+    println!(
+        "done: {} steps, final train loss {:.4}, eval loss {:?}, {:.1}s, \
+         diverged={}",
+        report.steps_done,
+        report.final_train_loss,
+        report.final_eval_loss,
+        report.wall_secs,
+        report.diverged
+    );
+    println!("loss curve (step, loss):");
+    for (s, l) in report
+        .loss_curve
+        .iter()
+        .step_by((report.loss_curve.len() / 20).max(1))
+    {
+        println!("  {s:>6} {l:.4}");
+    }
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = ExpOpts::from_args(args);
+    let needs_rt = id != "fig1b";
+    let rt = if needs_rt { Some(runtime(args)?) } else { None };
+    let rt_ref = rt.as_ref();
+    let run_one = |id: &str| -> Result<()> {
+        info!("--- experiment {id} (steps={}, seeds={}) ---", opts.steps, opts.seeds);
+        match id {
+            "fig1a" => exp::fig1a::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            "fig1b" => exp::fig1b::run(&opts).map(|_| ()),
+            "fig2" => exp::fig2::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            "fig3a" => exp::fig3::run_a(rt_ref.unwrap(), &opts).map(|_| ()),
+            "fig3b" => exp::fig3::run_b(rt_ref.unwrap(), &opts).map(|_| ()),
+            "table1" => exp::table1::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            "table2" => exp::table2::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            "table3" => exp::table3::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            "table4" => exp::table4::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            "table6" => exp::table6::run(rt_ref.unwrap(), &opts).map(|_| ()),
+            other => bail!("unknown experiment {other:?}"),
+        }
+    };
+    if id == "all" {
+        for id in [
+            "fig1b", "fig1a", "table2", "table3", "fig2", "fig3a", "fig3b",
+            "table1", "table4", "table6",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(id)
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let rt = Arc::new(runtime(args)?);
+    let model = args.get_or("model", "lm_nprf_rpe_fft");
+    let n_req = args.get_usize("requests", 32);
+    let max_wait_ms = args.get_u64("max-wait-ms", 5);
+    let entry = rt.manifest.artifact(&format!("{model}.fwd_b1"))?.clone();
+    let meta = entry.model.clone().unwrap();
+    let server = LmServer::start(
+        rt.clone(),
+        ServerConfig {
+            model: model.clone(),
+            max_wait: Duration::from_millis(max_wait_ms),
+            max_batch: 8,
+        },
+    )?;
+    info!("server up ({} seq_len={} vocab={})", model, meta.seq_len, meta.vocab);
+    let mut rng = Rng::new(7);
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_req {
+        let len = 4 + rng.below_usize(meta.seq_len - 4);
+        let toks: Vec<i32> = (0..len)
+            .map(|_| rng.below_usize(meta.vocab) as i32)
+            .collect();
+        rxs.push(server.submit(toks)?);
+    }
+    let mut latencies = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv()?;
+        latencies.push(resp.latency.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "served {n_req} requests in {wall:.2}s ({:.1} req/s)",
+        n_req as f64 / wall
+    );
+    println!(
+        "latency p50={:.1}ms p95={:.1}ms max={:.1}ms",
+        latencies[n_req / 2] * 1e3,
+        latencies[(n_req as f64 * 0.95) as usize] * 1e3,
+        latencies[n_req - 1] * 1e3
+    );
+    println!(
+        "batches={} padded_slots={} batch_hist={:?} exec={:.2}s",
+        stats.batches, stats.padded_slots, stats.batch_hist, stats.exec_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Loss-curve analysis: smoothing, divergence detection, trend fit —
+//! the quantitative backbone of the stability experiments (Table 1)
+//! and the §Perf iteration logs.
+
+/// Exponential moving average of a curve (alpha = smoothing weight of
+/// the newest point).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    assert!((0.0..=1.0).contains(&alpha));
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let next = match acc {
+            None => x,
+            Some(a) => alpha * x + (1.0 - alpha) * a,
+        };
+        out.push(next);
+        acc = Some(next);
+    }
+    out
+}
+
+/// Least-squares slope of y over integer x = 0..n (per-step trend).
+pub fn slope(ys: &[f64]) -> f64 {
+    let n = ys.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mean_x = (nf - 1.0) / 2.0;
+    let mean_y = ys.iter().sum::<f64>() / nf;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        let dx = i as f64 - mean_x;
+        num += dx * (y - mean_y);
+        den += dx * dx;
+    }
+    num / den
+}
+
+/// Verdict on a training curve (used by the stability study).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CurveVerdict {
+    /// finite, trending down
+    Improving { slope: f64 },
+    /// finite but flat/up
+    Stalled { slope: f64 },
+    /// NaN/Inf or exceeded `factor` x the initial smoothed loss
+    Diverged { at_step: usize },
+}
+
+pub fn classify_curve(losses: &[f64], factor: f64) -> CurveVerdict {
+    if losses.is_empty() {
+        return CurveVerdict::Stalled { slope: 0.0 };
+    }
+    let sm = ema(losses, 0.2);
+    let baseline = sm[0.min(sm.len() - 1)];
+    for (i, &x) in losses.iter().enumerate() {
+        if !x.is_finite() || x > baseline * factor {
+            return CurveVerdict::Diverged { at_step: i };
+        }
+    }
+    let s = slope(&sm);
+    // "improving" = losing at least 0.01% of the baseline per step
+    if s < -1e-4 * baseline.abs().max(1e-9) {
+        CurveVerdict::Improving { slope: s }
+    } else {
+        CurveVerdict::Stalled { slope: s }
+    }
+}
+
+/// Area under the (smoothed) loss curve — lower is better; a scalar
+/// summary for comparing optimization speed across variants.
+pub fn curve_auc(losses: &[f64]) -> f64 {
+    let sm = ema(losses, 0.2);
+    sm.iter().sum::<f64>() / sm.len().max(1) as f64
+}
+
+/// First step at which the smoothed curve goes below `threshold`
+/// (time-to-loss metric).
+pub fn steps_to_reach(losses: &[f64], threshold: f64) -> Option<usize> {
+    ema(losses, 0.2).iter().position(|&x| x <= threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let xs = vec![5.0; 50];
+        let sm = ema(&xs, 0.3);
+        assert!((sm[49] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_lags_behind_step_change() {
+        let mut xs = vec![1.0; 10];
+        xs.extend(vec![0.0; 2]);
+        let sm = ema(&xs, 0.5);
+        assert!(sm[11] > 0.0 && sm[11] < 1.0);
+    }
+
+    #[test]
+    fn slope_signs() {
+        let down: Vec<f64> = (0..20).map(|i| 10.0 - 0.1 * i as f64).collect();
+        let up: Vec<f64> = (0..20).map(|i| 1.0 + 0.05 * i as f64).collect();
+        assert!((slope(&down) + 0.1).abs() < 1e-9);
+        assert!((slope(&up) - 0.05).abs() < 1e-9);
+        assert_eq!(slope(&[3.0]), 0.0);
+    }
+
+    #[test]
+    fn classify_improving_and_stalled() {
+        let down: Vec<f64> = (0..50).map(|i| 4.0 - 0.02 * i as f64).collect();
+        assert!(matches!(
+            classify_curve(&down, 10.0),
+            CurveVerdict::Improving { .. }
+        ));
+        let flat = vec![4.0; 50];
+        assert!(matches!(
+            classify_curve(&flat, 10.0),
+            CurveVerdict::Stalled { .. }
+        ));
+    }
+
+    #[test]
+    fn classify_divergence_on_nan_and_blowup() {
+        let mut nan = vec![4.0; 5];
+        nan.push(f64::NAN);
+        assert_eq!(
+            classify_curve(&nan, 10.0),
+            CurveVerdict::Diverged { at_step: 5 }
+        );
+        let mut blow = vec![1.0; 5];
+        blow.push(50.0);
+        assert_eq!(
+            classify_curve(&blow, 10.0),
+            CurveVerdict::Diverged { at_step: 5 }
+        );
+    }
+
+    #[test]
+    fn auc_orders_fast_vs_slow_learners() {
+        let fast: Vec<f64> = (0..50).map(|i| 4.0 * (0.9f64).powi(i)).collect();
+        let slow: Vec<f64> = (0..50).map(|i| 4.0 * (0.99f64).powi(i)).collect();
+        assert!(curve_auc(&fast) < curve_auc(&slow));
+    }
+
+    #[test]
+    fn steps_to_reach_finds_crossing() {
+        let xs: Vec<f64> = (0..100).map(|i| 10.0 - 0.1 * i as f64).collect();
+        let s = steps_to_reach(&xs, 5.0).unwrap();
+        assert!((45..=60).contains(&s), "s={s}");
+        assert!(steps_to_reach(&xs, -100.0).is_none());
+    }
+}

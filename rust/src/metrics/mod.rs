@@ -1,0 +1,279 @@
+//! Evaluation metrics: BLEU (Papineni et al., the Table 3 measure),
+//! perplexity (Table 2), bits/dim (Table 6), top-k accuracy (Table 4),
+//! Matthews correlation (Table 1 CoLA-style), and bootstrap confidence
+//! intervals (Fig. 2 error bars).
+
+pub mod curves;
+
+use std::collections::HashMap;
+
+use crate::rng::Rng;
+
+/// Corpus-level BLEU-4 with brevity penalty (uniform 4-gram weights,
+/// standard smoothing: precision floored at 1/(2*len) for empty counts).
+pub fn bleu(references: &[Vec<i32>], hypotheses: &[Vec<i32>]) -> f64 {
+    assert_eq!(references.len(), hypotheses.len());
+    let max_n = 4;
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut ref_len = 0usize;
+    let mut hyp_len = 0usize;
+    for (r, h) in references.iter().zip(hypotheses) {
+        ref_len += r.len();
+        hyp_len += h.len();
+        for n in 1..=max_n {
+            if h.len() < n {
+                continue;
+            }
+            let mut ref_counts: HashMap<&[i32], usize> = HashMap::new();
+            if r.len() >= n {
+                for g in r.windows(n) {
+                    *ref_counts.entry(g).or_default() += 1;
+                }
+            }
+            for g in h.windows(n) {
+                total_n[n - 1] += 1;
+                if let Some(c) = ref_counts.get_mut(g) {
+                    if *c > 0 {
+                        *c -= 1;
+                        match_n[n - 1] += 1;
+                    }
+                }
+            }
+        }
+    }
+    if hyp_len == 0 {
+        return 0.0;
+    }
+    let mut log_precision = 0.0;
+    for n in 0..max_n {
+        let p = if total_n[n] == 0 {
+            continue; // sentence too short for this order everywhere
+        } else if match_n[n] == 0 {
+            1.0 / (2.0 * total_n[n] as f64)
+        } else {
+            match_n[n] as f64 / total_n[n] as f64
+        };
+        log_precision += p.ln() / max_n as f64;
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * log_precision.exp()
+}
+
+/// Perplexity from mean token cross-entropy (nats).
+pub fn perplexity(mean_nll_nats: f64) -> f64 {
+    mean_nll_nats.exp()
+}
+
+/// Bits per dimension from mean token cross-entropy (nats).
+pub fn bits_per_dim(mean_nll_nats: f64) -> f64 {
+    mean_nll_nats / std::f64::consts::LN_2
+}
+
+/// Top-k accuracy from logits (row-major (n, classes)) and labels.
+pub fn topk_accuracy(logits: &[f32], classes: usize, labels: &[i32], k: usize) -> f64 {
+    assert_eq!(logits.len(), classes * labels.len());
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let target = row[label as usize];
+        let better = row.iter().filter(|&&x| x > target).count();
+        if better < k {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Greedy argmax predictions from logits.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<i32> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32
+        })
+        .collect()
+}
+
+/// Matthews correlation coefficient for binary labels.
+pub fn matthews_corr(preds: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => panic!("binary labels expected"),
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fne) / denom
+    }
+}
+
+/// Mean + bootstrap 95% confidence interval over per-seed scores.
+#[derive(Debug, Clone)]
+pub struct MeanCi {
+    pub mean: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+pub fn bootstrap_ci(scores: &[f64], resamples: usize, seed: u64) -> MeanCi {
+    let n = scores.len();
+    assert!(n > 0);
+    let mean = scores.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return MeanCi { mean, lo: mean, hi: mean };
+    }
+    let mut rng = Rng::new(seed);
+    let mut means: Vec<f64> = (0..resamples)
+        .map(|_| {
+            (0..n).map(|_| scores[rng.below_usize(n)]).sum::<f64>() / n as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = means[(resamples as f64 * 0.025) as usize];
+    let hi = means[((resamples as f64 * 0.975) as usize).min(resamples - 1)];
+    MeanCi { mean, lo, hi }
+}
+
+/// Online mean/min/max accumulator for loss curves.
+#[derive(Debug, Default, Clone)]
+pub struct Running {
+    pub count: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Running {
+        Running { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bleu_perfect_match_is_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6]];
+        let hyps = refs.clone();
+        assert!((bleu(&refs, &hyps) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_disjoint_is_near_zero() {
+        // Longer sequences so the smoothing floor 1/(2*len) is small.
+        let refs = vec![vec![1; 0], (1..=24).collect::<Vec<i32>>()];
+        let hyps = vec![vec![], (25..=48).collect::<Vec<i32>>()];
+        assert!(bleu(&refs, &hyps) < 5.0, "bleu={}", bleu(&refs, &hyps));
+    }
+
+    #[test]
+    fn bleu_partial_in_between() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let hyps = vec![vec![1, 2, 3, 4, 9, 10, 11, 12]];
+        let b = bleu(&refs, &hyps);
+        assert!(b > 5.0 && b < 80.0, "bleu={b}");
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_applies() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let full = bleu(&refs, &refs.clone());
+        let short = bleu(&refs, &[vec![1, 2, 3, 4]]);
+        assert!(short < full * 0.8, "short={short} full={full}");
+    }
+
+    #[test]
+    fn bleu_clips_repeated_ngrams() {
+        // hypothesis repeating one reference word shouldn't score high
+        let refs = vec![vec![1, 2, 3, 4, 5, 6]];
+        let hyps = vec![vec![2, 2, 2, 2, 2, 2]];
+        assert!(bleu(&refs, &hyps) < 15.0);
+    }
+
+    #[test]
+    fn perplexity_and_bpd() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!((perplexity((33.0f64).ln()) - 33.0).abs() < 1e-9);
+        assert!((bits_per_dim(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_accuracy_basics() {
+        // 3 classes; logits rows favour class 1, 0, 2
+        let logits = vec![
+            0.1, 0.9, 0.0, //
+            0.8, 0.1, 0.1, //
+            0.2, 0.3, 0.5,
+        ];
+        let labels = vec![1, 0, 0];
+        assert!((topk_accuracy(&logits, 3, &labels, 1) - 2.0 / 3.0).abs() < 1e-9);
+        // row 3 has label 0 with the two other logits larger: still
+        // outside top-2, inside top-3.
+        assert!((topk_accuracy(&logits, 3, &labels, 2) - 2.0 / 3.0).abs() < 1e-9);
+        assert!((topk_accuracy(&logits, 3, &labels, 3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_bounds() {
+        let l = vec![1, 1, 0, 0, 1, 0];
+        assert!((matthews_corr(&l, &l) - 1.0).abs() < 1e-12);
+        let inv: Vec<i32> = l.iter().map(|x| 1 - x).collect();
+        assert!((matthews_corr(&inv, &l) + 1.0).abs() < 1e-12);
+        let half = vec![1, 1, 1, 0, 0, 0];
+        let m = matthews_corr(&half, &l);
+        assert!(m.abs() < 1.0);
+    }
+
+    #[test]
+    fn bootstrap_ci_contains_mean() {
+        let scores = vec![30.0, 31.0, 29.5, 30.5, 30.2];
+        let ci = bootstrap_ci(&scores, 2000, 7);
+        assert!(ci.lo <= ci.mean && ci.mean <= ci.hi);
+        assert!(ci.hi - ci.lo < 2.0);
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 3.0);
+    }
+}

@@ -1,0 +1,265 @@
+//! PJRT execution: load HLO text artifacts, compile once, run many.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compiled executables are cached by artifact name; all graphs were
+//! lowered with return_tuple=True so outputs are decomposed here.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactEntry, DType, Manifest};
+
+/// Host-side tensor passed into / returned from executables.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar(x: f32) -> HostTensor {
+        HostTensor::F32(vec![x], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&x| x as i64).collect();
+        let lit = match self {
+            HostTensor::F32(d, _) => xla::Literal::vec1(d.as_slice()),
+            HostTensor::I32(d, _) => xla::Literal::vec1(d.as_slice()),
+        };
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&x| x as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims))
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims))
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Cumulative execution statistics (perf pass bookkeeping).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compile_calls: usize,
+    pub compile_secs: f64,
+    pub execute_calls: usize,
+    pub execute_secs: f64,
+    pub h2d_secs: f64,
+    pub d2h_secs: f64,
+}
+
+/// The runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<ExecStats>,
+    /// Serializes all calls into the xla crate. The underlying PJRT C
+    /// API is thread-safe, but the Rust binding stores clients and
+    /// executables behind non-atomic `Rc`s, so cross-thread use is only
+    /// sound if every xla call (which may clone those Rcs) happens under
+    /// one lock. This is that lock — see the `unsafe impl` below.
+    xla_lock: Mutex<()>,
+}
+
+// SAFETY: `Runtime` is shared across threads only through `&self`
+// methods, and every entry into the xla crate (compile, execute,
+// literal transfer — the operations that touch the binding's internal
+// `Rc`s and raw pointers) is serialized by `xla_lock`. The PJRT CPU
+// plugin itself is thread-safe per the PJRT API contract.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(ExecStats::default()),
+            xla_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Compile (or fetch cached) executable for a named artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.artifact(name)?;
+        let t0 = Instant::now();
+        let _guard = self.xla_lock.lock().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.hlo_path.to_str().unwrap(),
+        )
+        .map_err(|e| anyhow!("parsing {:?}: {e}", entry.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?,
+        );
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compile_calls += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest spec (shape + dtype).
+    fn check_inputs(entry: &ArtifactEntry, inputs: &[HostTensor]) -> Result<()> {
+        if entry.inputs.len() != inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, t) in entry.inputs.iter().zip(inputs) {
+            if spec.dtype != t.dtype() {
+                bail!(
+                    "{}: input {:?} dtype mismatch (want {:?}, got {:?})",
+                    entry.name, spec.name, spec.dtype, t.dtype()
+                );
+            }
+            if spec.shape != t.shape() {
+                bail!(
+                    "{}: input {:?} shape mismatch (want {:?}, got {:?})",
+                    entry.name, spec.name, spec.shape, t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a named artifact with host tensors; returns the
+    /// decomposed output tuple as host tensors.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.artifact(name)?;
+        Self::check_inputs(entry, inputs)?;
+        let exe = self.load(name)?;
+
+        let _guard = self.xla_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let h2d = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let exec = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} output: {e}"))?;
+        let outs = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let d2h = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().unwrap();
+        st.execute_calls += 1;
+        st.execute_secs += exec;
+        st.h2d_secs += h2d;
+        st.d2h_secs += d2h;
+        Ok(outs)
+    }
+}

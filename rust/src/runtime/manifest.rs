@@ -1,0 +1,280 @@
+//! Typed view of `artifacts/manifest.json` emitted by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub trainable: bool,
+    pub offset: usize,
+}
+
+impl LayoutEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The flat-parameter layout of one model config.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub id: String,
+    pub entries: Vec<LayoutEntry>,
+    pub total: usize,
+}
+
+impl Layout {
+    pub fn find(&self, name: &str) -> Option<&LayoutEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// Selected model hyperparameters surfaced to the coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMeta {
+    pub kind: String,
+    pub attention: String,
+    pub dec_attention: String,
+    pub feature_map: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub src_len: usize,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub feature_dim: usize,
+    pub num_classes: usize,
+    pub grid: usize,
+    pub patch_dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub role: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    pub task: String,
+    pub batch: usize,
+    pub layout_id: String,
+    pub param_count: usize,
+    pub model: Option<ModelMeta>,
+    /// Free-form extras (fwd_speed artifacts carry n/m/d/kind here).
+    pub extra: BTreeMap<String, Json>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub layouts: BTreeMap<String, Layout>,
+}
+
+fn parse_model(j: &Json) -> ModelMeta {
+    let gs = |k: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
+    let gu = |k: &str| j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+    ModelMeta {
+        kind: gs("kind"),
+        attention: gs("attention"),
+        dec_attention: gs("dec_attention"),
+        feature_map: gs("feature_map"),
+        vocab: gu("vocab"),
+        seq_len: gu("seq_len"),
+        src_len: gu("src_len"),
+        layers: gu("layers"),
+        d_model: gu("d_model"),
+        heads: gu("heads"),
+        feature_dim: gu("feature_dim"),
+        num_classes: gu("num_classes"),
+        grid: gu("grid"),
+        patch_dim: gu("patch_dim"),
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut layouts = BTreeMap::new();
+        if let Some(lmap) = root.get("layouts").and_then(|l| l.as_obj()) {
+            for (id, entries) in lmap {
+                let arr = entries
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("layout {id} is not an array"))?;
+                let mut out = Vec::with_capacity(arr.len());
+                let mut offset = 0usize;
+                for e in arr {
+                    let shape: Vec<usize> = e
+                        .req("shape")
+                        .map_err(|m| anyhow!(m))?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("shape not an array"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect();
+                    let entry = LayoutEntry {
+                        name: e.req_str("name").map_err(|m| anyhow!(m))?.to_string(),
+                        shape,
+                        init: e.req_str("init").map_err(|m| anyhow!(m))?.to_string(),
+                        trainable: e
+                            .get("trainable")
+                            .and_then(|b| b.as_bool())
+                            .unwrap_or(true),
+                        offset,
+                    };
+                    offset += entry.size();
+                    out.push(entry);
+                }
+                layouts.insert(
+                    id.clone(),
+                    Layout { id: id.clone(), entries: out, total: offset },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let amap = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, a) in amap {
+            let inputs = a
+                .req("inputs")
+                .map_err(|m| anyhow!(m))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not an array"))?
+                .iter()
+                .map(|i| -> Result<TensorSpec> {
+                    Ok(TensorSpec {
+                        name: i.req_str("name").map_err(|m| anyhow!(m))?.to_string(),
+                        dtype: DType::parse(
+                            i.req_str("dtype").map_err(|m| anyhow!(m))?,
+                        )?,
+                        shape: i
+                            .req("shape")
+                            .map_err(|m| anyhow!(m))?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("shape not an array"))?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let extra = a
+                .get("extra")
+                .and_then(|e| e.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    hlo_path: dir.join(a.req_str("hlo").map_err(|m| anyhow!(m))?),
+                    role: a
+                        .get("role")
+                        .and_then(|r| r.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs,
+                    outputs,
+                    task: a
+                        .get("task")
+                        .and_then(|t| t.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    batch: a.get("batch").and_then(|b| b.as_usize()).unwrap_or(0),
+                    layout_id: a
+                        .get("layout")
+                        .and_then(|l| l.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    param_count: a
+                        .get("param_count")
+                        .and_then(|p| p.as_usize())
+                        .unwrap_or(0),
+                    model: a.get("model").map(parse_model),
+                    extra,
+                },
+            );
+        }
+
+        Ok(Manifest { dir, artifacts, layouts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn layout(&self, id: &str) -> Result<&Layout> {
+        self.layouts
+            .get(id)
+            .ok_or_else(|| anyhow!("layout {id:?} not in manifest"))
+    }
+
+    pub fn layout_of(&self, artifact: &str) -> Result<&Layout> {
+        let a = self.artifact(artifact)?;
+        self.layout(&a.layout_id)
+    }
+
+    /// All artifact names with the given prefix (sorted).
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .values()
+            .filter(|a| a.name.starts_with(prefix))
+            .collect()
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, parameters.
+//!
+//! This is the bridge between the AOT python compile path and the Rust
+//! coordinator: `Manifest` describes what python lowered, `Runtime`
+//! compiles + executes it, `params` owns the flat parameter vector.
+
+pub mod executor;
+pub mod manifest;
+pub mod params;
+
+pub use executor::{ExecStats, HostTensor, Runtime};
+pub use manifest::{ArtifactEntry, DType, Layout, LayoutEntry, Manifest, ModelMeta, TensorSpec};

@@ -1,0 +1,294 @@
+//! Flat parameter vector utilities: initialization from layout init
+//! specs, name-based remapping between layouts (model conversion,
+//! pretrain -> finetune), and checkpoint (de)serialization.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Layout;
+use crate::rng::Rng;
+
+/// Initialize one layout entry in-place according to its init spec.
+fn init_entry(out: &mut [f32], init: &str, shape: &[usize], rng: &mut Rng) -> Result<()> {
+    if init == "zeros" {
+        out.fill(0.0);
+    } else if init == "ones" {
+        out.fill(1.0);
+    } else if let Some(stds) = init.strip_prefix("normal:") {
+        let std: f32 = stds.parse().context("bad normal std")?;
+        rng.fill_normal(out, std);
+    } else if let Some(kind) = init.strip_prefix("feature:") {
+        // (heads, m, d) random-feature projections; per-head streams.
+        if shape.len() != 3 {
+            bail!("feature init expects rank-3 shape, got {shape:?}");
+        }
+        let (h, m, d) = (shape[0], shape[1], shape[2]);
+        for hh in 0..h {
+            let mut hrng = rng.fold_in(hh as u64);
+            let block = &mut out[hh * m * d..(hh + 1) * m * d];
+            fill_feature_weights(block, m, d, kind, &mut hrng)?;
+        }
+    } else {
+        bail!("unknown init spec {init:?}");
+    }
+    Ok(())
+}
+
+/// Draw (m, d) random-feature rows — mirrors
+/// python/compile/attention.draw_feature_weights.
+pub fn fill_feature_weights(out: &mut [f32], m: usize, d: usize, kind: &str,
+                            rng: &mut Rng) -> Result<()> {
+    assert_eq!(out.len(), m * d);
+    match kind {
+        "prf" | "trf" => rng.fill_normal(out, 1.0),
+        "sphere_prf" => {
+            for i in 0..m {
+                let row = rng.sphere(d, (d as f64).sqrt());
+                out[i * d..(i + 1) * d].copy_from_slice(&row);
+            }
+        }
+        "orf" => {
+            // Orthogonal blocks via Gram-Schmidt, chi(d) row norms.
+            let mut rows_done = 0;
+            while rows_done < m {
+                let take = (m - rows_done).min(d);
+                let basis = gram_schmidt_block(d, rng);
+                for i in 0..take {
+                    // chi(d)-distributed norm: |N(0, I_d)| sample.
+                    let g: f64 = (0..d).map(|_| {
+                        let x = rng.normal();
+                        x * x
+                    }).sum::<f64>().sqrt();
+                    let dst = &mut out[(rows_done + i) * d..(rows_done + i + 1) * d];
+                    for (j, v) in basis[i].iter().enumerate() {
+                        dst[j] = (*v * g) as f32;
+                    }
+                }
+                rows_done += take;
+            }
+        }
+        "elu1" => out.fill(0.0),
+        other => bail!("unknown feature map {other:?}"),
+    }
+    Ok(())
+}
+
+/// d orthonormal vectors in R^d via Gram-Schmidt on Gaussian draws.
+fn gram_schmidt_block(d: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(d);
+    while basis.len() < d {
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        for u in &basis {
+            let dot: f64 = v.iter().zip(u).map(|(a, b)| a * b).sum();
+            for (x, y) in v.iter_mut().zip(u) {
+                *x -= dot * y;
+            }
+        }
+        let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-8 {
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+            basis.push(v);
+        }
+    }
+    basis
+}
+
+/// Initialize a fresh flat parameter vector for a layout.
+pub fn init_params(layout: &Layout, seed: u64) -> Result<Vec<f32>> {
+    let mut flat = vec![0.0f32; layout.total];
+    let base = Rng::new(seed);
+    for (i, e) in layout.entries.iter().enumerate() {
+        let mut rng = base.fold_in(i as u64);
+        init_entry(
+            &mut flat[e.offset..e.offset + e.size()],
+            &e.init,
+            &e.shape,
+            &mut rng,
+        )?;
+    }
+    Ok(flat)
+}
+
+/// Copy parameters between layouts by tensor name.
+///
+/// Used for (a) Fig. 2 model conversion — trained softmax params
+/// evaluated under a kernelized layout whose extra tensors (w_feat)
+/// are freshly initialized — and (b) pretrain -> finetune transfer.
+/// Returns the list of target entries that had no source counterpart.
+pub fn remap_params(
+    src_layout: &Layout,
+    src: &[f32],
+    dst_layout: &Layout,
+    seed: u64,
+) -> Result<(Vec<f32>, Vec<String>)> {
+    if src.len() != src_layout.total {
+        bail!("src vector length {} != layout total {}", src.len(), src_layout.total);
+    }
+    let mut dst = init_params(dst_layout, seed)?;
+    let mut missing = Vec::new();
+    for e in &dst_layout.entries {
+        match src_layout.find(&e.name) {
+            Some(s) if s.shape == e.shape => {
+                dst[e.offset..e.offset + e.size()]
+                    .copy_from_slice(&src[s.offset..s.offset + s.size()]);
+            }
+            Some(s) => bail!(
+                "shape mismatch for {:?}: src {:?} vs dst {:?}",
+                e.name, s.shape, e.shape
+            ),
+            None => missing.push(e.name.clone()),
+        }
+    }
+    Ok((dst, missing))
+}
+
+/// Redraw the non-trainable feature projections in-place (Performer's
+/// feature redrawing; also used per-seed in the conversion study).
+pub fn redraw_features(layout: &Layout, flat: &mut [f32], seed: u64) -> Result<()> {
+    let base = Rng::new(seed);
+    for (i, e) in layout.entries.iter().enumerate() {
+        if let Some(kind) = e.init.strip_prefix("feature:") {
+            let (h, m, d) = (e.shape[0], e.shape[1], e.shape[2]);
+            let mut rng = base.fold_in(i as u64);
+            for hh in 0..h {
+                let mut hrng = rng.fold_in(hh as u64);
+                let off = e.offset + hh * m * d;
+                fill_feature_weights(&mut flat[off..off + m * d], m, d, kind, &mut hrng)?;
+            }
+            let _ = &mut rng;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoints: magic + param count + raw LE f32s.
+// ---------------------------------------------------------------------------
+
+const CKPT_MAGIC: &[u8; 8] = b"KAFFTCK1";
+
+pub fn save_checkpoint(path: impl AsRef<Path>, flat: &[f32]) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(CKPT_MAGIC)?;
+    f.write_all(&(flat.len() as u64).to_le_bytes())?;
+    let bytes: Vec<u8> = flat.iter().flat_map(|x| x.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != CKPT_MAGIC {
+        bail!("{:?}: not a kafft checkpoint", path.as_ref());
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let n = u64::from_le_bytes(lenb) as usize;
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayoutEntry;
+
+    fn toy_layout() -> Layout {
+        let entries = vec![
+            LayoutEntry {
+                name: "a".into(),
+                shape: vec![4],
+                init: "normal:0.5".into(),
+                trainable: true,
+                offset: 0,
+            },
+            LayoutEntry {
+                name: "b".into(),
+                shape: vec![2, 3],
+                init: "ones".into(),
+                trainable: true,
+                offset: 4,
+            },
+            LayoutEntry {
+                name: "w".into(),
+                shape: vec![2, 4, 8],
+                init: "feature:prf".into(),
+                trainable: false,
+                offset: 10,
+            },
+        ];
+        Layout { id: "toy".into(), entries, total: 10 + 64 }
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let l = toy_layout();
+        let a = init_params(&l, 7).unwrap();
+        let b = init_params(&l, 7).unwrap();
+        assert_eq!(a, b);
+        let c = init_params(&l, 8).unwrap();
+        assert_ne!(a, c);
+        assert!(a[4..10].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn remap_copies_matching_names() {
+        let l = toy_layout();
+        let src = init_params(&l, 1).unwrap();
+        let (dst, missing) = remap_params(&l, &src, &l, 99).unwrap();
+        assert!(missing.is_empty());
+        assert_eq!(src[..10], dst[..10]);
+    }
+
+    #[test]
+    fn redraw_changes_only_features() {
+        let l = toy_layout();
+        let mut flat = init_params(&l, 1).unwrap();
+        let before = flat.clone();
+        redraw_features(&l, &mut flat, 123).unwrap();
+        assert_eq!(flat[..10], before[..10]);
+        assert_ne!(flat[10..], before[10..]);
+    }
+
+    #[test]
+    fn orf_rows_orthogonal() {
+        let (m, d) = (4, 16);
+        let mut out = vec![0.0f32; m * d];
+        let mut rng = Rng::new(5);
+        fill_feature_weights(&mut out, m, d, "orf", &mut rng).unwrap();
+        for i in 0..m {
+            for j in 0..i {
+                let dot: f32 = (0..d)
+                    .map(|t| out[i * d + t] * out[j * d + t])
+                    .sum();
+                assert!(dot.abs() < 1e-3, "rows {i},{j} dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("kafft_test_ckpt.bin");
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.25).collect();
+        save_checkpoint(&dir, &data).unwrap();
+        let back = load_checkpoint(&dir).unwrap();
+        assert_eq!(data, back);
+        std::fs::remove_file(dir).ok();
+    }
+}

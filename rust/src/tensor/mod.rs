@@ -1,0 +1,276 @@
+//! Minimal row-major f32 matrix type + the handful of dense ops the
+//! CPU-side attention oracle and simulations need. Deliberately small:
+//! the heavy lifting happens inside the PJRT executables; this exists
+//! for cross-validation, simulation studies, and workload generation.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// C = A @ B, blocked over k for cache friendliness.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                let brow = other.row(j);
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += arow[t] * brow[t];
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// Row-wise softmax in place.
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Row-wise l2 normalization (the paper's q/k normalization).
+    pub fn l2_normalize_rows(&self) -> Mat {
+        let mut out = self.clone();
+        for i in 0..out.rows {
+            let row = out.row_mut(i);
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+            for x in row.iter_mut() {
+                *x /= norm;
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Numerical matrix rank via Gaussian elimination with partial
+/// pivoting (f64) — used by the Prop. 1 expressiveness check.
+pub fn matrix_rank(m: &Mat, tol: f64) -> usize {
+    let rows = m.rows;
+    let cols = m.cols;
+    let mut a: Vec<f64> = m.data.iter().map(|&x| x as f64).collect();
+    let mut rank = 0;
+    let mut rpos = 0;
+    for c in 0..cols {
+        if rpos >= rows {
+            break;
+        }
+        // find pivot
+        let (mut piv, mut pval) = (rpos, a[rpos * cols + c].abs());
+        for r in rpos + 1..rows {
+            let v = a[r * cols + c].abs();
+            if v > pval {
+                piv = r;
+                pval = v;
+            }
+        }
+        if pval < tol {
+            continue;
+        }
+        if piv != rpos {
+            for cc in 0..cols {
+                a.swap(rpos * cols + cc, piv * cols + cc);
+            }
+        }
+        let pivot = a[rpos * cols + c];
+        for r in rpos + 1..rows {
+            let factor = a[r * cols + c] / pivot;
+            if factor == 0.0 {
+                continue;
+            }
+            for cc in c..cols {
+                a[r * cols + cc] -= factor * a[rpos * cols + cc];
+            }
+        }
+        rank += 1;
+        rpos += 1;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul_transpose() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let b = Mat::from_fn(5, 4, |i, j| (i + j) as f32 * 0.5);
+        let c1 = a.matmul_t(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-6);
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 7 + j * 3) as f32);
+        assert!(a.matmul(&Mat::eye(4)).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut a = Mat::from_fn(3, 5, |i, j| (i as f32 - j as f32) * 0.7);
+        a.softmax_rows();
+        for i in 0..3 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(a.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn l2_normalize_unit_rows() {
+        let a = Mat::from_fn(4, 8, |i, j| (i + j) as f32 + 1.0);
+        let n = a.l2_normalize_rows();
+        for i in 0..4 {
+            let norm: f32 = n.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rank_of_outer_product_is_one() {
+        let u = Mat::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let v = Mat::from_vec(1, 4, vec![2.0, -1.0, 0.5, 3.0]);
+        let m = u.matmul(&v);
+        assert_eq!(matrix_rank(&m, 1e-9), 1);
+    }
+
+    #[test]
+    fn rank_full_and_deficient() {
+        assert_eq!(matrix_rank(&Mat::eye(6), 1e-9), 6);
+        let mut m = Mat::eye(6);
+        // duplicate a row -> rank 5
+        let r0: Vec<f32> = m.row(0).to_vec();
+        m.row_mut(5).copy_from_slice(&r0);
+        // row5 == row0 and row5's own pivot lost
+        assert_eq!(matrix_rank(&m, 1e-9), 5);
+    }
+}

@@ -1,0 +1,234 @@
+//! Toeplitz-matrix products — the numerical heart of the paper.
+//!
+//! The RPE position-correlation matrix C = {c_{j-i}} (Eq. 12/13) is
+//! Toeplitz; multiplying it against the per-position aggregates is done
+//! in O(f n log n) by circulant embedding + FFT. This module is the
+//! Rust mirror of `python/compile/kernels/ref.py::toeplitz_mul_*`,
+//! used by the CPU attention oracle, the Fig. 1a/1b simulations, and
+//! property tests.
+//!
+//! Convention: `c` has length 2n-1 with `c[t + n - 1] = c_t` for the
+//! relative offset t = j - i; y_i = sum_j c_{j-i} x_j.
+
+use crate::fft::{next_pow2, Complex, FftPlan};
+
+/// Naive O(n^2 f) reference.
+pub fn toeplitz_mul_naive(c: &[f64], x: &[f64], n: usize, f: usize) -> Vec<f64> {
+    assert_eq!(c.len(), 2 * n - 1);
+    assert_eq!(x.len(), n * f);
+    let mut y = vec![0.0; n * f];
+    for i in 0..n {
+        for j in 0..n {
+            let cij = c[j + n - 1 - i];
+            if cij == 0.0 {
+                continue;
+            }
+            let xr = &x[j * f..(j + 1) * f];
+            let yr = &mut y[i * f..(i + 1) * f];
+            for (yy, xx) in yr.iter_mut().zip(xr) {
+                *yy += cij * xx;
+            }
+        }
+    }
+    y
+}
+
+/// Reusable FFT plan + kernel spectrum for a fixed coefficient vector.
+pub struct ToeplitzPlan {
+    n: usize,
+    len: usize,
+    plan: FftPlan,
+    /// FFT of the circulant-embedded kernel g (g[t] = c_{-t mod L}).
+    kernel_hat: Vec<Complex>,
+}
+
+impl ToeplitzPlan {
+    pub fn new(c: &[f64], n: usize) -> ToeplitzPlan {
+        assert_eq!(c.len(), 2 * n - 1);
+        let len = next_pow2(2 * n);
+        let plan = FftPlan::new(len);
+        let mut g = vec![Complex::ZERO; len];
+        // g[t] = c_{-t} for t = 0..n-1; g[L-p] = c_p for p = 1..n-1.
+        for t in 0..n {
+            g[t] = Complex::new(c[n - 1 - t], 0.0);
+        }
+        for p in 1..n {
+            g[len - p] = Complex::new(c[p + n - 1], 0.0);
+        }
+        let mut kernel_hat = g;
+        plan.forward(&mut kernel_hat);
+        ToeplitzPlan { n, len, plan, kernel_hat }
+    }
+
+    /// y = T x for one column vector (length n).
+    pub fn apply_col(&self, col: &[f64]) -> Vec<f64> {
+        assert_eq!(col.len(), self.n);
+        let mut buf = vec![Complex::ZERO; self.len];
+        for (i, &v) in col.iter().enumerate() {
+            buf[i] = Complex::new(v, 0.0);
+        }
+        self.plan.forward(&mut buf);
+        for (b, k) in buf.iter_mut().zip(&self.kernel_hat) {
+            *b = b.mul(*k);
+        }
+        self.plan.inverse(&mut buf);
+        buf[..self.n].iter().map(|cx| cx.re).collect()
+    }
+
+    /// y = T X for row-major X of shape (n, f). Columns are packed two
+    /// per complex FFT (re/im trick), halving the number of transforms.
+    pub fn apply(&self, x: &[f64], f: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.n * f);
+        let n = self.n;
+        let mut y = vec![0.0; n * f];
+        let mut col = 0;
+        while col < f {
+            let pair = col + 1 < f;
+            let mut buf = vec![Complex::ZERO; self.len];
+            for i in 0..n {
+                let re = x[i * f + col];
+                let im = if pair { x[i * f + col + 1] } else { 0.0 };
+                buf[i] = Complex::new(re, im);
+            }
+            self.plan.forward(&mut buf);
+            for (b, k) in buf.iter_mut().zip(&self.kernel_hat) {
+                *b = b.mul(*k);
+            }
+            self.plan.inverse(&mut buf);
+            for i in 0..n {
+                y[i * f + col] = buf[i].re;
+                if pair {
+                    y[i * f + col + 1] = buf[i].im;
+                }
+            }
+            col += 2;
+        }
+        y
+    }
+}
+
+/// One-shot convenience wrapper.
+pub fn toeplitz_mul_fft(c: &[f64], x: &[f64], n: usize, f: usize) -> Vec<f64> {
+    ToeplitzPlan::new(c, n).apply(x, f)
+}
+
+/// Causal masking of the coefficient vector: c_t = 0 for t = j - i > 0.
+pub fn causal_coeffs(c: &[f64], n: usize) -> Vec<f64> {
+    let mut out = c.to_vec();
+    for t in 1..n {
+        out[t + n - 1] = 0.0;
+    }
+    out
+}
+
+/// Build exp(b - max b) coefficients from raw RPE biases.
+pub fn rpe_coeffs(b: &[f32]) -> Vec<f64> {
+    let mx = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    b.iter().map(|&x| ((x as f64) - mx).exp()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn fft_matches_naive() {
+        for (n, f) in [(1, 1), (2, 3), (7, 2), (16, 5), (33, 4), (128, 3)] {
+            let c = rand_vec(2 * n - 1, n as u64);
+            let x = rand_vec(n * f, 100 + n as u64);
+            let a = toeplitz_mul_naive(&c, &x, n, f);
+            let b = toeplitz_mul_fft(&c, &x, n, f);
+            let err = a
+                .iter()
+                .zip(&b)
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-9, "n={n} f={f} err={err}");
+        }
+    }
+
+    #[test]
+    fn identity_coefficients() {
+        // c_0 = 1, everything else 0 => T = I.
+        let n = 9;
+        let mut c = vec![0.0; 2 * n - 1];
+        c[n - 1] = 1.0;
+        let x = rand_vec(n * 4, 3);
+        let y = toeplitz_mul_fft(&c, &x, n, 4);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn shift_matrix() {
+        // c_1 = 1 (t = j - i = 1) => y_i = x_{i+1}.
+        let n = 8;
+        let mut c = vec![0.0; 2 * n - 1];
+        c[n] = 1.0;
+        let x = rand_vec(n, 4);
+        let y = toeplitz_mul_fft(&c, &x, n, 1);
+        for i in 0..n - 1 {
+            assert!((y[i] - x[i + 1]).abs() < 1e-10);
+        }
+        assert!(y[n - 1].abs() < 1e-10);
+    }
+
+    #[test]
+    fn causal_lower_triangular() {
+        let n = 12;
+        let c = rand_vec(2 * n - 1, 8).iter().map(|x| x.exp()).collect::<Vec<_>>();
+        let cc = causal_coeffs(&c, n);
+        let x = rand_vec(n * 2, 9);
+        let y = toeplitz_mul_fft(&cc, &x, n, 2);
+        let ynaive = toeplitz_mul_naive(&cc, &x, n, 2);
+        for (a, b) in y.iter().zip(&ynaive) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // Row 0 only sees j <= 0, i.e. j = 0.
+        assert!((y[0] - cc[n - 1] * x[0]).abs() < 1e-9);
+        assert!((y[1] - cc[n - 1] * x[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_reuse_consistent() {
+        let n = 64;
+        let c = rand_vec(2 * n - 1, 10);
+        let plan = ToeplitzPlan::new(&c, n);
+        let x1 = rand_vec(n * 3, 11);
+        let x2 = rand_vec(n * 3, 12);
+        assert_eq!(plan.apply(&x1, 3), toeplitz_mul_fft(&c, &x1, n, 3));
+        assert_eq!(plan.apply(&x2, 3), toeplitz_mul_fft(&c, &x2, n, 3));
+    }
+
+    #[test]
+    fn apply_col_matches_apply() {
+        let n = 40;
+        let c = rand_vec(2 * n - 1, 13);
+        let plan = ToeplitzPlan::new(&c, n);
+        let x = rand_vec(n, 14);
+        let via_col = plan.apply_col(&x);
+        let via_mat = plan.apply(&x, 1);
+        for (a, b) in via_col.iter().zip(&via_mat) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rpe_coeffs_shift_invariant_ratio() {
+        // exp(b - max) preserves ratios => attention output unchanged.
+        let b1 = [0.5f32, -1.0, 2.0];
+        let b2 = [10.5f32, 9.0, 12.0];
+        let c1 = rpe_coeffs(&b1);
+        let c2 = rpe_coeffs(&b2);
+        for i in 1..3 {
+            assert!((c1[i] / c1[0] - c2[i] / c2[0]).abs() < 1e-12);
+        }
+    }
+}

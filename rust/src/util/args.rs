@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--flag] [--key value]`.
+//! `--key=value` is also accepted. Unknown flags are collected so the
+//! caller can reject them with a helpful message.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the program name).
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// First positional (usually the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NOTE the documented ambiguity: `--flag value` is read as an
+        // option, so boolean flags go last or before another --option.
+        let a = Args::parse(&sv(&[
+            "train", "extra", "--steps", "100", "--lr=0.001", "--verbose",
+        ]));
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.001);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, sv(&["train", "extra"]));
+    }
+
+    #[test]
+    fn flag_before_option_is_flag() {
+        let a = Args::parse(&sv(&["--dry-run", "--steps", "3"]));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_usize("steps", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["x", "--dry-run"]));
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!(a.subcommand().is_none());
+    }
+}

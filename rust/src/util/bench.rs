@@ -1,0 +1,160 @@
+//! Bench harness (no criterion offline): warmup + timed iterations with
+//! mean / stddev / min / p50 reporting, and a tabular printer for the
+//! paper-table regeneration benches.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+    pub p50_secs: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_secs * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+/// Adaptive: run until `budget_secs` elapsed (at least `min_iters`).
+pub fn bench_for<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    budget_secs: f64,
+    min_iters: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < budget_secs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[f64]) -> BenchResult {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: mean,
+        std_secs: var.sqrt(),
+        min_secs: sorted.first().copied().unwrap_or(0.0),
+        p50_secs: sorted.get(sorted.len() / 2).copied().unwrap_or(0.0),
+    }
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.3} ms  ±{:>8.3}  min {:>9.3}  p50 {:>9.3}  (n={})",
+        r.name,
+        r.mean_secs * 1e3,
+        r.std_secs * 1e3,
+        r.min_secs * 1e3,
+        r.p50_secs * 1e3,
+        r.iters
+    );
+}
+
+/// Simple fixed-width table printer for paper-table reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.min_secs <= r.mean_secs + 1e-9);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["model", "ppl"]);
+        t.row(&["vanilla".into(), "33.0".into()]);
+        t.print();
+    }
+}

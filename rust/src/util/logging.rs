@@ -1,0 +1,112 @@
+//! Leveled stderr logger + training progress meter.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+pub fn log(lvl: Level, msg: std::fmt::Arguments) {
+    if lvl >= level() {
+        let tag = match lvl {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Debug, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Info, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Warn, format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Error, format_args!($($t)*)) };
+}
+
+/// Periodic progress reporter for long loops (steps/sec + ETA).
+pub struct Progress {
+    label: String,
+    total: usize,
+    start: Instant,
+    last_print: Instant,
+    every_secs: f64,
+}
+
+impl Progress {
+    pub fn new(label: &str, total: usize) -> Progress {
+        let now = Instant::now();
+        Progress {
+            label: label.to_string(),
+            total,
+            start: now,
+            last_print: now,
+            every_secs: 5.0,
+        }
+    }
+
+    pub fn tick(&mut self, done: usize, extra: &str) {
+        if self.last_print.elapsed().as_secs_f64() < self.every_secs
+            && done != self.total
+        {
+            return;
+        }
+        self.last_print = Instant::now();
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let rate = done as f64 / elapsed.max(1e-9);
+        let eta = if rate > 0.0 {
+            (self.total.saturating_sub(done)) as f64 / rate
+        } else {
+            f64::INFINITY
+        };
+        log(
+            Level::Info,
+            format_args!(
+                "{}: {}/{} ({:.1}/s, eta {:.0}s) {}",
+                self.label, done, self.total, rate, eta, extra
+            ),
+        );
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}

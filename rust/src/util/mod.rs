@@ -1,0 +1,8 @@
+//! Shared substrates: JSON, logging, CLI args, bench harness, property
+//! testing — all in-repo (the offline crate cache has only xla+anyhow).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;

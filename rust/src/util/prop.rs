@@ -1,0 +1,205 @@
+//! Mini property-testing harness (no proptest offline).
+//!
+//! `forall(cases, gen, check)` runs `check` on `cases` generated
+//! inputs; on failure it attempts greedy shrinking via the generator's
+//! `shrink` hook and reports the minimal failing case with its seed so
+//! the run is reproducible.
+
+use crate::rng::Rng;
+
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of a failing value (greedy shrink).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run the property; panics with a reproducible report on failure.
+pub fn forall<G: Gen>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    gen: &G,
+    check: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = base.fold_in(case as u64);
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = check(&v) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut cur = v.clone();
+            let mut cur_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = check(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}):\n  \
+                 input: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi] with shrinking toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below_usize(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 vector of the given length, entries in [-scale, scale];
+/// shrinks by zeroing entries and halving.
+pub struct VecF32 {
+    pub len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..self.len)
+            .map(|_| rng.uniform_range(-self.scale as f64, self.scale as f64) as f32)
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|&x| x / 2.0).collect());
+            let mut zeroed = v.clone();
+            for x in zeroed.iter_mut() {
+                if x.abs() < self.scale / 4.0 {
+                    *x = 0.0;
+                }
+            }
+            if &zeroed != v {
+                out.push(zeroed);
+            }
+        }
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// token sequence in [0, vocab)
+pub struct Tokens {
+    pub len: usize,
+    pub vocab: usize,
+}
+
+impl Gen for Tokens {
+    type Value = Vec<i32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<i32> {
+        (0..self.len)
+            .map(|_| rng.below_usize(self.vocab) as i32)
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<i32>) -> Vec<Vec<i32>> {
+        if v.iter().all(|&t| t == 0) {
+            return Vec::new();
+        }
+        vec![vec![0; v.len()]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", 50, 1, &VecF32 { len: 8, scale: 2.0 }, |v| {
+            let a: f32 = v.iter().sum();
+            let b: f32 = v.iter().rev().sum();
+            // fp addition is not associative, but the reversal of a short
+            // vector stays within tight tolerance
+            if (a - b).abs() < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_shrunk_input() {
+        forall("always-lt-5", 50, 2, &UsizeRange(0, 100), |&v| {
+            if v < 5 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 5"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        let result = std::panic::catch_unwind(|| {
+            forall("gt-10-fails", 30, 3, &UsizeRange(0, 1000), |&v| {
+                if v <= 10 {
+                    Ok(())
+                } else {
+                    Err("big".into())
+                }
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        // greedy shrink should land at 11 (smallest failing value)
+        assert!(msg.contains("input: 11"), "got: {msg}");
+    }
+}

@@ -1,0 +1,331 @@
+//! Integration tests over the PJRT runtime + artifacts. These need
+//! `make artifacts` to have run; each test skips (with a notice) if
+//! the manifest is missing so `cargo test` stays green pre-build.
+//!
+//! The heavyweight check is `pjrt_attention_matches_rust_oracle`: the
+//! same (q, k, v, w, b) through the AOT-compiled Pallas/JAX executable
+//! and through the pure-Rust CPU implementation must agree — tying all
+//! three layers together numerically.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kafft::attention::{self, Kind};
+use kafft::config::{LrSchedule, TrainConfig};
+use kafft::coordinator::server::{LmServer, ServerConfig};
+use kafft::coordinator::{make_source, Trainer};
+use kafft::rng::Rng;
+use kafft::runtime::{params, HostTensor, Runtime};
+use kafft::tensor::Mat;
+
+fn runtime() -> Option<Runtime> {
+    let dir = kafft::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn manifest_is_consistent() {
+    let Some(rt) = runtime() else { return };
+    assert!(!rt.manifest.artifacts.is_empty());
+    for a in rt.manifest.artifacts.values() {
+        assert!(a.hlo_path.exists(), "{:?} missing", a.hlo_path);
+        assert!(!a.inputs.is_empty(), "{} has no inputs", a.name);
+        if !a.layout_id.is_empty() {
+            let layout = rt.manifest.layout(&a.layout_id).expect("layout");
+            assert_eq!(
+                layout.total, a.param_count,
+                "{}: layout total != param_count", a.name
+            );
+            // train/eval/forward first input is the flat param vector
+            assert_eq!(a.inputs[0].shape, vec![a.param_count], "{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_attention_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let name = "speed_nprf_rpe_fft_n128_m64";
+    if rt.manifest.artifact(name).is_err() {
+        eprintln!("SKIP: {name} not built");
+        return;
+    }
+    let (n, d, m) = (128usize, 64usize, 64usize);
+    let mut rng = Rng::new(77);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let w = rng.normal_vec(m * d, 1.0);
+    let b = rng.normal_vec(2 * n - 1, 0.3);
+    let out = rt
+        .execute(
+            name,
+            &[
+                HostTensor::f32(q.clone(), &[n, d]),
+                HostTensor::f32(k.clone(), &[n, d]),
+                HostTensor::f32(v.clone(), &[n, d]),
+                HostTensor::f32(w.clone(), &[m, d]),
+                HostTensor::f32(b.clone(), &[2 * n - 1]),
+            ],
+        )
+        .expect("execute");
+    let z_pjrt = out[0].as_f32().expect("f32");
+
+    let z_rust = attention::attend(
+        Kind::Kernel { norm: true, rpe: true, fft: true },
+        &Mat::from_vec(n, d, q),
+        &Mat::from_vec(n, d, k),
+        &Mat::from_vec(n, d, v),
+        Some(&Mat::from_vec(m, d, w)),
+        Some(&b),
+        false,
+    );
+    let max_err = z_pjrt
+        .iter()
+        .zip(&z_rust.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 5e-3, "PJRT vs Rust oracle max err {max_err}");
+}
+
+#[test]
+fn pjrt_softmax_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let name = "speed_softmax_n128";
+    if rt.manifest.artifact(name).is_err() {
+        return;
+    }
+    let (n, d) = (128usize, 64usize);
+    let mut rng = Rng::new(78);
+    let q = rng.normal_vec(n * d, 1.0);
+    let k = rng.normal_vec(n * d, 1.0);
+    let v = rng.normal_vec(n * d, 1.0);
+    let out = rt
+        .execute(
+            name,
+            &[
+                HostTensor::f32(q.clone(), &[n, d]),
+                HostTensor::f32(k.clone(), &[n, d]),
+                HostTensor::f32(v.clone(), &[n, d]),
+            ],
+        )
+        .expect("execute");
+    let z_rust = attention::softmax_attention(
+        &Mat::from_vec(n, d, q),
+        &Mat::from_vec(n, d, k),
+        &Mat::from_vec(n, d, v),
+        &[],
+        false,
+        None,
+    );
+    let max_err = out[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(&z_rust.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 2e-3, "softmax PJRT vs Rust max err {max_err}");
+}
+
+#[test]
+fn train_step_decreases_loss_and_respects_masks() {
+    let Some(rt) = runtime() else { return };
+    let name = "lm_nprf_rpe_fft.train";
+    if rt.manifest.artifact(name).is_err() {
+        return;
+    }
+    let entry = rt.manifest.artifact(name).unwrap().clone();
+    let mut source = make_source(&entry, 5).unwrap();
+    let cfg = TrainConfig {
+        artifact: name.to_string(),
+        steps: 12,
+        seed: 5,
+        schedule: LrSchedule::Constant { lr: 2e-3 },
+        eval_batches: 1,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    let layout = rt.manifest.layout_of(name).unwrap();
+    let init = params::init_params(layout, 5).unwrap();
+    let report = Trainer::new(&rt, cfg).run(source.as_mut(), Some(init.clone())).unwrap();
+    assert!(!report.diverged);
+    assert!(
+        report.final_train_loss < report.loss_curve[0].1,
+        "loss did not decrease: {:?}",
+        report.loss_curve
+    );
+    // non-trainable feature weights unchanged by 12 PJRT steps
+    for e in &layout.entries {
+        if !e.trainable {
+            let a = &init[e.offset..e.offset + e.size()];
+            let b = &report.params[e.offset..e.offset + e.size()];
+            assert_eq!(a, b, "{} changed during training", e.name);
+        }
+    }
+}
+
+#[test]
+fn eval_loss_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let name = "lm_nprf_rpe_fft.eval";
+    if rt.manifest.artifact(name).is_err() {
+        return;
+    }
+    let entry = rt.manifest.artifact(name).unwrap().clone();
+    let layout = rt.manifest.layout_of(name).unwrap();
+    let flat = params::init_params(layout, 9).unwrap();
+    let mut source = make_source(&entry, 9).unwrap();
+    let batch = source.next_train();
+    let mut inputs = vec![HostTensor::f32(flat.clone(), &[flat.len()])];
+    inputs.extend(batch);
+    let l1 = rt.execute(name, &inputs).unwrap()[0].scalar_f32().unwrap();
+    let l2 = rt.execute(name, &inputs).unwrap()[0].scalar_f32().unwrap();
+    assert_eq!(l1, l2);
+    assert!(l1.is_finite() && l1 > 0.0);
+}
+
+#[test]
+fn remap_between_softmax_and_kernel_layouts() {
+    let Some(rt) = runtime() else { return };
+    let (src_name, dst_name) = ("mt_softmax_norm_rpe.train", "mtconv_nprf_rpe_fft.fwd");
+    if rt.manifest.artifact(src_name).is_err()
+        || rt.manifest.artifact(dst_name).is_err()
+    {
+        return;
+    }
+    let src_layout = rt.manifest.layout_of(src_name).unwrap();
+    let dst_layout = rt.manifest.layout_of(dst_name).unwrap();
+    let src = params::init_params(src_layout, 3).unwrap();
+    let (dst, missing) =
+        params::remap_params(src_layout, &src, dst_layout, 4).unwrap();
+    assert_eq!(dst.len(), dst_layout.total);
+    // Only feature-weight tensors should be missing from the source.
+    assert!(!missing.is_empty());
+    assert!(missing.iter().all(|m| m.contains("w_feat")), "{missing:?}");
+    // Every shared tensor copied verbatim.
+    for e in &dst_layout.entries {
+        if let Some(s) = src_layout.find(&e.name) {
+            assert_eq!(
+                &src[s.offset..s.offset + s.size()],
+                &dst[e.offset..e.offset + e.size()],
+                "{} not copied",
+                e.name
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_batch_variants_agree() {
+    // The same example through .fwd_b1 and .fwd_b4 (padded) must give
+    // the same logits — the dynamic batcher depends on this.
+    let Some(rt) = runtime() else { return };
+    let (n1, n4) = ("lm_nprf_rpe_fft.fwd_b1", "lm_nprf_rpe_fft.fwd_b4");
+    if rt.manifest.artifact(n1).is_err() || rt.manifest.artifact(n4).is_err() {
+        return;
+    }
+    let entry = rt.manifest.artifact(n1).unwrap().clone();
+    let meta = entry.model.as_ref().unwrap();
+    let layout = rt.manifest.layout_of(n1).unwrap();
+    let flat = params::init_params(layout, 13).unwrap();
+    let mut rng = Rng::new(13);
+    let toks: Vec<i32> = (0..meta.seq_len)
+        .map(|_| rng.below(meta.vocab as u32) as i32)
+        .collect();
+    let out1 = rt
+        .execute(
+            n1,
+            &[
+                HostTensor::f32(flat.clone(), &[flat.len()]),
+                HostTensor::i32(toks.clone(), &[1, meta.seq_len]),
+            ],
+        )
+        .unwrap();
+    let mut toks4 = Vec::new();
+    for _ in 0..4 {
+        toks4.extend(&toks);
+    }
+    let out4 = rt
+        .execute(
+            n4,
+            &[
+                HostTensor::f32(flat.clone(), &[flat.len()]),
+                HostTensor::i32(toks4, &[4, meta.seq_len]),
+            ],
+        )
+        .unwrap();
+    let l1 = out1[0].as_f32().unwrap();
+    let l4 = out4[0].as_f32().unwrap();
+    let per = meta.seq_len * meta.vocab;
+    let max_err = l1
+        .iter()
+        .zip(&l4[..per])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "b1 vs b4 logits differ by {max_err}");
+}
+
+#[test]
+fn server_round_trip_with_dynamic_batching() {
+    let Some(rt) = runtime() else { return };
+    if rt.manifest.artifact("lm_nprf_rpe_fft.fwd_b1").is_err() {
+        return;
+    }
+    let rt = Arc::new(rt);
+    let server = LmServer::start(
+        rt.clone(),
+        ServerConfig {
+            model: "lm_nprf_rpe_fft".into(),
+            max_wait: Duration::from_millis(20),
+            max_batch: 4,
+        },
+    )
+    .unwrap();
+    let meta = rt
+        .manifest
+        .artifact("lm_nprf_rpe_fft.fwd_b1")
+        .unwrap()
+        .model
+        .clone()
+        .unwrap();
+    let mut rng = Rng::new(21);
+    // Burst of 6 requests: expect them served in >= 1 batch, all answered.
+    let rxs: Vec<_> = (0..6)
+        .map(|_| {
+            let len = 4 + rng.below_usize(meta.seq_len - 4);
+            let toks: Vec<i32> = (0..len)
+                .map(|_| rng.below(meta.vocab as u32) as i32)
+                .collect();
+            server.submit(toks).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.next_logits.len(), meta.vocab);
+        assert!(resp.next_logits.iter().all(|x| x.is_finite()));
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 6);
+    assert!(stats.batches >= 1 && stats.batches <= 6);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_fs() {
+    let Some(rt) = runtime() else { return };
+    let name = "lm_nprf_rpe_fft.train";
+    if rt.manifest.artifact(name).is_err() {
+        return;
+    }
+    let layout = rt.manifest.layout_of(name).unwrap();
+    let flat = params::init_params(layout, 31).unwrap();
+    let path = std::env::temp_dir().join("kafft_int_ckpt.bin");
+    params::save_checkpoint(&path, &flat).unwrap();
+    let back = params::load_checkpoint(&path).unwrap();
+    assert_eq!(flat, back);
+    std::fs::remove_file(path).ok();
+}

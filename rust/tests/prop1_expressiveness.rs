@@ -1,0 +1,75 @@
+//! Proposition 1 (numerical check): softmax attention with RPE cannot
+//! be represented by any dot-then-exponentiate (vanilla) attention when
+//! n > d + 1.
+//!
+//! The proof's mechanism: matching the two attentions forces
+//! B = X M X^T + beta 1^T with rank(X M X^T) <= d and rank(beta 1^T)
+//! <= 1, so rank(B) <= d + 1 — but a generic RPE Toeplitz matrix B is
+//! full-rank. We verify both halves numerically.
+
+use kafft::rng::Rng;
+use kafft::tensor::{matrix_rank, Mat};
+
+/// Build the (n, n) bias matrix B[i][j] = b_{j-i} from b of len 2n-1.
+fn rpe_matrix(b: &[f32], n: usize) -> Mat {
+    Mat::from_fn(n, n, |i, j| b[j + n - 1 - i])
+}
+
+#[test]
+fn generic_rpe_toeplitz_matrix_is_full_rank() {
+    let mut rng = Rng::new(1);
+    for n in [6usize, 10, 16] {
+        let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32()).collect();
+        let rank = matrix_rank(&rpe_matrix(&b, n), 1e-6);
+        assert_eq!(rank, n, "n={n}");
+    }
+}
+
+#[test]
+fn dot_then_exponentiate_residual_is_rank_d_plus_1() {
+    // Any candidate representation leaves residual X M X^T + beta 1^T,
+    // whose rank is at most d + 1 < n.
+    let (n, d) = (12usize, 4usize);
+    let mut rng = Rng::new(2);
+    let x = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let m = Mat::from_vec(d, d, rng.normal_vec(d * d, 1.0));
+    let beta = Mat::from_vec(n, 1, rng.normal_vec(n, 1.0));
+    let ones = Mat::from_vec(1, n, vec![1.0; n]);
+    let residual = x.matmul(&m).matmul(&x.transpose()).add(&beta.matmul(&ones));
+    // scale-aware tolerance: elimination residue from fp32 inputs
+    let tol = 1e-4 * residual.frobenius() / (n as f64);
+    let rank = matrix_rank(&residual, tol);
+    assert!(rank <= d + 1, "rank={rank}");
+}
+
+#[test]
+fn rpe_attention_differs_from_best_rank_limited_fit() {
+    // Constructive check on actual attention outputs: softmax+RPE with
+    // a full-rank B cannot be matched by vanilla softmax attention on
+    // the same inputs, for any scaling of the logits we try.
+    let (n, d) = (10usize, 3usize);
+    let mut rng = Rng::new(3);
+    let q = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let b: Vec<f32> = (0..2 * n - 1).map(|_| 2.0 * rng.normal_f32()).collect();
+    let with_rpe = kafft::attention::softmax_scores(&q, &k, &b, false, None);
+    // try a grid of vanilla variants (different temperature rescalings)
+    let mut best = f32::INFINITY;
+    for scale in [0.25f32, 0.5, 1.0, 2.0, 4.0] {
+        let vanilla =
+            kafft::attention::softmax_scores(&q, &k, &[], false, Some(scale));
+        best = best.min(with_rpe.max_abs_diff(&vanilla));
+    }
+    assert!(best > 0.05, "vanilla matched RPE attention too well: {best}");
+}
+
+#[test]
+fn rank_bound_is_tight_when_n_le_d_plus_1() {
+    // Complement: when n <= d + 1 the rank obstruction vanishes — a
+    // rank-(d+1) matrix CAN equal any n x n matrix.
+    let (n, d) = (5usize, 4usize); // n == d + 1
+    let mut rng = Rng::new(4);
+    let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32()).collect();
+    let bm = rpe_matrix(&b, n);
+    assert!(matrix_rank(&bm, 1e-6) <= d + 1);
+}

@@ -1,0 +1,246 @@
+//! Property-based tests (own mini-harness, rust/src/util/prop.rs) over
+//! the coordinator-side invariants: Toeplitz algebra, attention
+//! distributions, batching/data framing, metrics, serialization.
+
+use kafft::attention::{self, draw_gaussian_features, phi_prf};
+use kafft::data::mt::{MtGen, MtTask, EOS, PAD};
+use kafft::metrics::bleu;
+use kafft::rng::Rng;
+use kafft::tensor::Mat;
+use kafft::toeplitz::{toeplitz_mul_fft, toeplitz_mul_naive, ToeplitzPlan};
+use kafft::util::json::Json;
+use kafft::util::prop::{forall, Gen, Pair, Tokens, UsizeRange, VecF32};
+
+struct ToeplitzCase;
+
+impl Gen for ToeplitzCase {
+    type Value = (usize, usize, u64);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (2 + rng.below_usize(60), 1 + rng.below_usize(8), rng.next_u64())
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 2 {
+            out.push((2, v.1, v.2));
+            out.push((v.0 / 2, v.1, v.2));
+        }
+        if v.1 > 1 {
+            out.push((v.0, 1, v.2));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_toeplitz_fft_equals_naive() {
+    forall("toeplitz-fft==naive", 40, 1, &ToeplitzCase, |&(n, f, seed)| {
+        let mut rng = Rng::new(seed);
+        let c: Vec<f64> = (0..2 * n - 1).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..n * f).map(|_| rng.normal()).collect();
+        let a = toeplitz_mul_fft(&c, &x, n, f);
+        let b = toeplitz_mul_naive(&c, &x, n, f);
+        let err = a
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        if err < 1e-8 {
+            Ok(())
+        } else {
+            Err(format!("err={err}"))
+        }
+    });
+}
+
+#[test]
+fn prop_toeplitz_linearity() {
+    forall("toeplitz-linear", 30, 2, &ToeplitzCase, |&(n, f, seed)| {
+        let mut rng = Rng::new(seed);
+        let c: Vec<f64> = (0..2 * n - 1).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..n * f).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n * f).map(|_| rng.normal()).collect();
+        let plan = ToeplitzPlan::new(&c, n);
+        let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let lhs = plan.apply(&sum, f);
+        let rx = plan.apply(&x, f);
+        let ry = plan.apply(&y, f);
+        let err = lhs
+            .iter()
+            .zip(rx.iter().zip(&ry))
+            .map(|(l, (a, b))| (l - (a + b)).abs())
+            .fold(0.0, f64::max);
+        if err < 1e-8 {
+            Ok(())
+        } else {
+            Err(format!("err={err}"))
+        }
+    });
+}
+
+#[test]
+fn prop_attention_rows_are_distributions() {
+    // For every kind, with all-ones values the output must be ones
+    // (attention weights sum to 1 and are non-negative).
+    let kinds = [
+        attention::Kind::Softmax { norm: false, rpe: true },
+        attention::Kind::Softmax { norm: true, rpe: false },
+        attention::Kind::Kernel { norm: true, rpe: true, fft: true },
+        attention::Kind::Kernel { norm: true, rpe: false, fft: false },
+    ];
+    forall(
+        "attention-convexity",
+        20,
+        3,
+        &Pair(UsizeRange(2, 24), UsizeRange(2, 12)),
+        |&(n, d)| {
+            let mut rng = Rng::new((n * 1000 + d) as u64);
+            let q = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+            let k = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+            let v = Mat::from_vec(n, d, vec![1.0; n * d]);
+            let w = draw_gaussian_features(8, d, &mut rng);
+            let b = rng.normal_vec(2 * n - 1, 0.5);
+            for kind in kinds {
+                let z = attention::attend(kind, &q, &k, &v, Some(&w),
+                                          Some(&b), false);
+                for x in &z.data {
+                    if (x - 1.0).abs() > 1e-3 {
+                        return Err(format!("{kind:?}: got {x}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_causal_prefix_consistency_rust() {
+    // Changing future keys/values must not change past outputs.
+    forall("causal-prefix", 15, 4, &UsizeRange(6, 24), |&n| {
+        let d = 6;
+        let mut rng = Rng::new(n as u64);
+        let q = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let mut k = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let mut v = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let w = draw_gaussian_features(6, d, &mut rng);
+        let c: Vec<f32> =
+            (0..2 * n - 1).map(|_| rng.normal_f32().exp()).collect();
+        let phi_q = phi_prf(&q.l2_normalize_rows(), &w);
+        let phi_k = phi_prf(&k.l2_normalize_rows(), &w);
+        let z1 = attention::nprf_rpe_fft_path(&phi_q, &phi_k, &v, &c, true);
+        // poison the last row
+        for j in 0..d {
+            *k.at_mut(n - 1, j) = 99.0;
+            *v.at_mut(n - 1, j) = -99.0;
+        }
+        let phi_k2 = phi_prf(&k.l2_normalize_rows(), &w);
+        let z2 = attention::nprf_rpe_fft_path(&phi_q, &phi_k2, &v, &c, true);
+        for i in 0..n - 1 {
+            for j in 0..d {
+                let (a, b) = (z1.at(i, j), z2.at(i, j));
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("row {i} changed: {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mt_batches_are_well_framed() {
+    forall(
+        "mt-framing",
+        20,
+        5,
+        &Pair(UsizeRange(8, 32), UsizeRange(1, 8)),
+        |&(len, batch)| {
+            for task in MtTask::all() {
+                let mut g = MtGen::new(task, 32, len, len, len as u64);
+                let b = g.next_batch(batch);
+                for bi in 0..batch {
+                    let w = &b.weights[bi * len..(bi + 1) * len];
+                    let out = &b.tgt_out[bi * len..(bi + 1) * len];
+                    // exactly one EOS inside the weighted span
+                    let weighted_eos = out
+                        .iter()
+                        .zip(w)
+                        .filter(|(&t, &ww)| ww > 0.0 && t == EOS)
+                        .count();
+                    if weighted_eos != 1 {
+                        return Err(format!(
+                            "{}: {weighted_eos} EOS in weighted span",
+                            task.name()
+                        ));
+                    }
+                    // padding carries zero weight
+                    for (t, ww) in out.iter().zip(w) {
+                        if *t == PAD && *ww != 0.0 {
+                            return Err("PAD with nonzero weight".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bleu_bounds_and_identity() {
+    forall("bleu-bounds", 30, 6, &Tokens { len: 12, vocab: 20 }, |toks| {
+        let refs = vec![toks.clone()];
+        let self_bleu = bleu(&refs, &refs.clone());
+        if !(99.9..=100.0 + 1e-9).contains(&self_bleu) {
+            return Err(format!("self-BLEU {self_bleu}"));
+        }
+        let other: Vec<i32> = toks.iter().map(|t| t + 100).collect();
+        let cross = bleu(&refs, &[other]);
+        if !(0.0..=20.0).contains(&cross) {
+            return Err(format!("disjoint BLEU {cross}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_strings() {
+    forall("json-roundtrip", 50, 7, &VecF32 { len: 6, scale: 1e6 }, |v| {
+        let mut s = String::from("payload_");
+        for x in v {
+            s.push_str(&format!("{x}_\"\\\n\t"));
+        }
+        let j = Json::obj(vec![
+            ("s", Json::Str(s.clone())),
+            ("xs", Json::arr_f64(&v.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+        ]);
+        let re = Json::parse(&j.to_string_compact())
+            .map_err(|e| format!("parse: {e}"))?;
+        if re != j {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rpe_coeffs_scale_free() {
+    // attention output invariant to constant shifts of b.
+    forall("rpe-shift", 15, 8, &UsizeRange(4, 20), |&n| {
+        let d = 4;
+        let mut rng = Rng::new(n as u64 + 99);
+        let q = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let k = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let v = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let w = draw_gaussian_features(4, d, &mut rng);
+        let b = rng.normal_vec(2 * n - 1, 1.0);
+        let b_shift: Vec<f32> = b.iter().map(|x| x + 5.0).collect();
+        let kind = attention::Kind::Kernel { norm: true, rpe: true, fft: true };
+        let z1 = attention::attend(kind, &q, &k, &v, Some(&w), Some(&b), false);
+        let z2 = attention::attend(kind, &q, &k, &v, Some(&w), Some(&b_shift), false);
+        if z1.max_abs_diff(&z2) > 1e-3 {
+            return Err(format!("shift changed output by {}", z1.max_abs_diff(&z2)));
+        }
+        Ok(())
+    });
+}

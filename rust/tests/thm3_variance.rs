@@ -1,0 +1,67 @@
+//! Lemma 2 + Theorem 3 numerical verification: the PRF estimator's
+//! variance matches the closed form and the attention approximation
+//! error scales the way the sample-complexity bound predicts.
+
+use kafft::attention::simulation::{prf_approx_error, prf_estimator_variance};
+use kafft::rng::Rng;
+
+#[test]
+fn lemma2_closed_form_variance() {
+    let mut rng = Rng::new(1);
+    for (scale, m) in [(0.5f64, 16usize), (1.0, 32)] {
+        let q: Vec<f32> = rng.sphere(8, scale);
+        let k: Vec<f32> = rng.sphere(8, scale);
+        let r = prf_estimator_variance(&q, &k, m, 6000, 2);
+        let ratio = r.empirical / r.analytic;
+        assert!(
+            (0.55..1.8).contains(&ratio),
+            "scale={scale} m={m}: empirical={} analytic={} ratio={ratio}",
+            r.empirical,
+            r.analytic
+        );
+    }
+}
+
+#[test]
+fn variance_scales_inverse_m() {
+    let mut rng = Rng::new(2);
+    let q: Vec<f32> = rng.sphere(8, 1.0);
+    let k: Vec<f32> = rng.sphere(8, 1.0);
+    let v8 = prf_estimator_variance(&q, &k, 8, 6000, 3).empirical;
+    let v64 = prf_estimator_variance(&q, &k, 64, 6000, 3).empirical;
+    let ratio = v8 / v64;
+    assert!((4.0..16.0).contains(&ratio), "v8/v64 = {ratio}");
+}
+
+#[test]
+fn thm3_error_explodes_with_r_at_fixed_m() {
+    // Fig. 1b / Thm. 3: at fixed m, error grows sharply with R.
+    let e1 = prf_approx_error(32, 128, 1.0, 64, 10, 4).mean_l1;
+    let e4 = prf_approx_error(32, 128, 4.0, 64, 10, 4).mean_l1;
+    assert!(e4 > 4.0 * e1, "R=1: {e1}, R=4: {e4}");
+    // At large R the L1 error approaches its maximum of 2.
+    assert!(e4 > 0.5, "e4={e4}");
+}
+
+#[test]
+fn thm3_error_shrinks_like_inv_sqrt_m_at_r1() {
+    // ||A - Â||_1 should drop roughly as 1/sqrt(m) for R = 1.
+    let e16 = prf_approx_error(32, 128, 1.0, 16, 24, 5).mean_l1;
+    let e256 = prf_approx_error(32, 128, 1.0, 256, 24, 5).mean_l1;
+    let ratio = e16 / e256;
+    // sqrt(256/16) = 4; allow a wide band for Monte-Carlo noise.
+    assert!((2.0..8.0).contains(&ratio), "e16/e256 = {ratio}");
+}
+
+#[test]
+fn error_at_large_r_barely_improves_with_m() {
+    // The paper's headline: at R = 8, going m: 64 -> 512 doesn't rescue
+    // the approximation.
+    let e64 = prf_approx_error(32, 128, 8.0, 64, 8, 6).mean_l1;
+    let e512 = prf_approx_error(32, 128, 8.0, 512, 8, 6).mean_l1;
+    assert!(
+        e512 > 0.25 * e64,
+        "large-R error improved too much: {e64} -> {e512}"
+    );
+    assert!(e512 > 0.3, "e512={e512}");
+}
