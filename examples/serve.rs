@@ -4,9 +4,13 @@
 //! into padded batches over the compiled .fwd_b{1,2,4,8} executables.
 //!
 //!   cargo run --release --example serve -- [requests] [clients]
+//!   cargo run --release --example serve -- --streaming [sessions] [gen]
 //!
-//! Reports throughput, latency percentiles, the batch-size histogram
-//! and padding waste — the L3 serving metrics for EXPERIMENTS.md §Perf.
+//! With --streaming the demo instead drives the recurrent-state
+//! streaming server (`coordinator::server::StreamingServer`): N
+//! concurrent client sessions generate greedily token by token against
+//! per-session (S, z) caches — no PJRT artifacts needed. Reports
+//! throughput, latency percentiles, batching / session-cache stats.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -16,7 +20,11 @@ use kafft::rng::Rng;
 use kafft::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(i) = args.iter().position(|a| a == "--streaming") {
+        args.remove(i);
+        return streaming_demo(&args);
+    }
     let n_req: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
     let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
 
@@ -98,5 +106,100 @@ fn main() -> anyhow::Result<()> {
     );
     println!("PJRT exec total: {:.2}s ({:.0}% of wall)", stats.exec_secs,
              100.0 * stats.exec_secs / wall);
+    Ok(())
+}
+
+/// Streaming-server demo: N client threads, one greedy session each,
+/// submitting one token at a time against server-side recurrent state.
+fn streaming_demo(args: &[String]) -> anyhow::Result<()> {
+    use kafft::coordinator::decode::argmax;
+    use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
+
+    let sessions: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let gen: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let prompt_len = 32;
+    let cfg = StreamingServerConfig {
+        max_len: prompt_len + gen,
+        window: prompt_len + gen,
+        max_live: (sessions / 2).max(1), // force some spill/restore traffic
+        ..StreamingServerConfig::default()
+    };
+    let vocab = cfg.vocab;
+    println!(
+        "streaming server: {sessions} sessions x ({prompt_len} prompt + \
+         {gen} gen), max_live={}",
+        cfg.max_live
+    );
+    let server = Arc::new(StreamingServer::start(cfg)?);
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for s in 0..sessions {
+        let server = server.clone();
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut rng = Rng::new(200 + s as u64);
+            let prompt: Vec<i32> =
+                (0..prompt_len).map(|_| rng.below_usize(vocab) as i32).collect();
+            // Step latencies only: the one-off prefill is a batched FFT
+            // pass and would skew the per-token percentiles.
+            let mut lat = Vec::with_capacity(gen);
+            let mut resp = server
+                .submit(s as u64 + 1, prompt)
+                .expect("submit")
+                .recv()
+                .expect("recv")
+                .expect("prefill");
+            for _ in 0..gen {
+                let next = argmax(&resp.next_logits) as i32;
+                resp = server
+                    .submit_at(s as u64 + 1, vec![next], resp.positions)
+                    .expect("submit")
+                    .recv()
+                    .expect("recv")
+                    .expect("step");
+                lat.push(resp.latency.as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let stats = server.shutdown();
+
+    if lat.is_empty() {
+        anyhow::bail!("nothing decoded (need sessions >= 1 and gen >= 1)");
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)];
+    // Report the O(1)-per-token decode rate; prefill is a separate
+    // batched FFT pass and would inflate it.
+    let decoded = stats.tokens - stats.prefill_tokens;
+    println!(
+        "\nthroughput: {:.0} decoded tok/s ({} decoded + {} prefill \
+         tokens in {wall:.2}s)",
+        decoded as f64 / wall,
+        decoded,
+        stats.prefill_tokens
+    );
+    println!(
+        "step latency: p50={:.2}ms p90={:.2}ms p99={:.2}ms",
+        pct(0.5) * 1e3,
+        pct(0.9) * 1e3,
+        pct(0.99) * 1e3
+    );
+    println!(
+        "sessions: created={} restores={} spills={} requests={} \
+         exec={:.2}s ({:.0}% of wall)",
+        stats.sessions_created,
+        stats.restores,
+        stats.spills,
+        stats.requests,
+        stats.exec_secs,
+        100.0 * stats.exec_secs / wall
+    );
     Ok(())
 }

@@ -1,0 +1,111 @@
+//! `cargo bench --bench streaming_decode` — tokens/sec of the
+//! recurrent streaming decoder vs the per-token full re-forward
+//! baseline (the paper's own decode, §3.2 footnote), as a function of
+//! sequence length.
+//!
+//! Acceptance target: streaming (W = n, exact) beats the re-forward
+//! baseline by >= 5x tokens/sec at n = 1024. The bounded-window column
+//! (W = 128) shows the O(1)-per-token regime: throughput stays flat as
+//! the sequence grows.
+
+use std::time::Instant;
+
+use kafft::attention::Kind;
+use kafft::coordinator::decode::{argmax, greedy_decode_cpu, CpuLm};
+use kafft::rng::Rng;
+use kafft::streaming::StreamingDecoder;
+use kafft::util::bench::Table;
+
+const VOCAB: usize = 256;
+const D: usize = 32;
+const M: usize = 32;
+const BOUNDED_W: usize = 128;
+
+fn random_prompt(len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below_usize(VOCAB) as i32).collect()
+}
+
+/// Greedy-decode `gen` tokens by re-running the full forward per token
+/// so each step costs a length-~n forward. Returns tokens/sec.
+fn bench_reforward(lm: &CpuLm, n: usize, gen: usize) -> f64 {
+    let mut tokens = random_prompt(n - gen, 1);
+    let t0 = Instant::now();
+    for _ in 0..gen {
+        let logits = lm.full_logits(&tokens);
+        tokens.push(argmax(&logits) as i32);
+    }
+    gen as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Prefill to n - gen, then time `gen` recurrent steps ending at
+/// length n. Returns tokens/sec for the stepped portion.
+fn bench_streaming(lm: &CpuLm, n: usize, gen: usize, window: usize) -> f64 {
+    let prompt = random_prompt(n - gen, 2);
+    let mut dec: StreamingDecoder = lm.session(window).expect("session");
+    let (q, k, v) = lm.qkv(&prompt);
+    let pre = dec.prefill(&[q], &[k], &[v]).expect("prefill");
+    let mut logits = lm.logits(pre[0].row(prompt.len() - 1));
+    let t0 = Instant::now();
+    for _ in 0..gen {
+        let next = argmax(&logits) as i32;
+        let (q, k, v) = lm.qkv(&[next]);
+        let y = dec.step(&q, &k, &v).expect("step");
+        logits = lm.logits(y.row(0));
+    }
+    gen as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+
+    // Correctness gate before any timing: streaming greedy decode must
+    // reproduce the re-forward token sequence exactly (W >= n).
+    let lm = CpuLm::new(kind, VOCAB, D, M, 96, 11).expect("lm");
+    let prompt = random_prompt(32, 3);
+    let full = greedy_decode_cpu(&lm, &prompt, 48, false).expect("full");
+    let fast = greedy_decode_cpu(&lm, &prompt, 48, true).expect("fast");
+    assert_eq!(full, fast, "streaming decode diverged from re-forward");
+    println!("cross-validation: streaming == re-forward over 48 tokens  OK\n");
+
+    let bounded_hdr = format!("stream W={BOUNDED_W} tok/s");
+    let mut table = Table::new(&[
+        "n",
+        "reforward tok/s",
+        "stream W=n tok/s",
+        "speedup",
+        bounded_hdr.as_str(),
+    ]);
+    let mut speedup_at_1024 = 0.0;
+    for n in [128usize, 256, 512, 1024] {
+        let lm = CpuLm::new(kind, VOCAB, D, M, n, n as u64).expect("lm");
+        let gen_base = 8.min(n / 4);
+        let gen_stream = (n / 2).min(256);
+        let base = bench_reforward(&lm, n, gen_base);
+        let exact = bench_streaming(&lm, n, gen_stream, n);
+        let bounded = bench_streaming(&lm, n, gen_stream, BOUNDED_W);
+        let speedup = exact / base;
+        if n == 1024 {
+            speedup_at_1024 = speedup;
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{base:.0}"),
+            format!("{exact:.0}"),
+            format!("{speedup:.1}x"),
+            format!("{bounded:.0}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nspeedup at n=1024: {speedup_at_1024:.1}x (target >= 5x): {}",
+        if speedup_at_1024 >= 5.0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "W={BOUNDED_W} column stays ~flat in n: the O(1)-per-token regime."
+    );
+    assert!(
+        speedup_at_1024 >= 5.0,
+        "streaming decode speedup {speedup_at_1024:.1}x < 5x at n=1024"
+    );
+}

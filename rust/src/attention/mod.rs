@@ -150,6 +150,13 @@ pub enum Kind {
 }
 
 impl Kind {
+    /// True for kinds the streaming decoder (`crate::streaming`) can
+    /// serve with the recurrent (S, z) step: every kernelized form.
+    /// Softmax kinds have no exact constant-state recurrence.
+    pub fn streamable(&self) -> bool {
+        matches!(self, Kind::Kernel { .. })
+    }
+
     pub fn parse(s: &str) -> Option<Kind> {
         Some(match s {
             "softmax" => Kind::Softmax { norm: false, rpe: false },
@@ -171,6 +178,30 @@ impl Kind {
     }
 }
 
+/// PRF feature rows for a kernel kind: the q/k preprocessing
+/// (l2-normalize for `norm`, d^{-1/4} pre-scale otherwise) followed by
+/// phi_PRF. Shared by `attend` and the streaming incremental step so
+/// the two paths cannot drift apart numerically.
+pub fn kernel_features(kind: Kind, x: &Mat, w: &Mat) -> Mat {
+    let norm = match kind {
+        Kind::Kernel { norm, .. } => norm,
+        Kind::Softmax { .. } => panic!("kernel_features needs a kernel kind"),
+    };
+    if norm {
+        phi_prf(&x.l2_normalize_rows(), w)
+    } else {
+        phi_prf(&x.scale((x.cols as f32).powf(-0.25)), w)
+    }
+}
+
+/// RPE correlation coefficients c = exp(b - max b) from raw biases —
+/// the max-shift keeps the exponentials bounded; the row normalization
+/// in the attention cancels the global scale.
+pub fn rpe_correlations(b: &[f32]) -> Vec<f32> {
+    let bmax = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    b.iter().map(|&x| (x - bmax).exp()).collect()
+}
+
 /// Full single-head attention dispatch (PRF feature map for kernel
 /// kinds; unnormalized kinds pre-scale q/k by d^{-1/4} like the L2).
 pub fn attend(kind: Kind, q: &Mat, k: &Mat, v: &Mat, w: Option<&Mat>,
@@ -190,22 +221,15 @@ pub fn attend(kind: Kind, q: &Mat, k: &Mat, v: &Mat, w: Option<&Mat>,
                 softmax_attention(q, k, v, &bias, causal, None)
             }
         }
-        Kind::Kernel { norm, rpe, fft } => {
+        Kind::Kernel { rpe, fft, .. } => {
             let w = w.expect("kernel kinds need feature weights");
-            let (qq, kk) = if norm {
-                (q.l2_normalize_rows(), k.l2_normalize_rows())
-            } else {
-                let s = (q.cols as f32).powf(-0.25);
-                (q.scale(s), k.scale(s))
-            };
-            let phi_q = phi_prf(&qq, w);
-            let phi_k = phi_prf(&kk, w);
+            let phi_q = kernel_features(kind, q, w);
+            let phi_k = kernel_features(kind, k, w);
             if !rpe {
                 return kernel_attention(&phi_q, &phi_k, v, None, causal);
             }
             let b = b.expect("rpe kinds need b");
-            let bmax = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let c: Vec<f32> = b.iter().map(|&x| (x - bmax).exp()).collect();
+            let c = rpe_correlations(b);
             if fft {
                 nprf_rpe_fft_path(&phi_q, &phi_k, v, &c, causal)
             } else {
@@ -394,6 +418,31 @@ mod tests {
         for i in 0..n - 1 {
             assert!(s.at(i, i + 1) > 0.9, "i={i} got {}", s.at(i, i + 1));
         }
+    }
+
+    #[test]
+    fn rpe_correlations_bounded_and_ratio_preserving() {
+        let b = [0.5f32, -1.0, 3.0, 0.0];
+        let c = rpe_correlations(&b);
+        let cmax = c.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!((cmax - 1.0).abs() < 1e-6);
+        assert!((c[0] / c[1] - (b[0] - b[1]).exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn kernel_features_matches_manual_prescale() {
+        let d = 6;
+        let mut rng = Rng::new(77);
+        let x = rand_mat(5, d, 78);
+        let w = draw_gaussian_features(4, d, &mut rng);
+        let kind = Kind::Kernel { norm: false, rpe: false, fft: false };
+        let got = kernel_features(kind, &x, &w);
+        let want = phi_prf(&x.scale((d as f32).powf(-0.25)), &w);
+        assert!(got.max_abs_diff(&want) < 1e-7);
+        let kind = Kind::Kernel { norm: true, rpe: false, fft: false };
+        let got = kernel_features(kind, &x, &w);
+        let want = phi_prf(&x.l2_normalize_rows(), &w);
+        assert!(got.max_abs_diff(&want) < 1e-7);
     }
 
     #[test]

@@ -252,7 +252,7 @@ verbose = true
             LrSchedule::InverseSqrt { peak, .. } => {
                 assert!((peak - 0.01).abs() < 1e-12) // file value
             }
-            _ => panic!(),
+            other => panic!("expected InverseSqrt schedule, got {other:?}"),
         }
     }
 }

@@ -1,16 +1,27 @@
 //! Decoding helpers: greedy seq2seq decode for BLEU (Tables 3, Figs.
-//! 2-3) and top-k accuracy from classifier forwards.
+//! 2-3), top-k accuracy from classifier forwards, and the CPU-side
+//! streaming-vs-reforward greedy decode.
 //!
 //! Note the paper's own limitation (§3.2 footnote): the FFT fast path
-//! does not accelerate token-by-token generation, so decode re-runs
-//! the full forward per emitted token — exactly what the paper does.
+//! does not accelerate token-by-token generation, so the PJRT decode
+//! re-runs the full forward per emitted token — exactly what the
+//! paper does. `greedy_decode_cpu` is the counterpoint: the same
+//! greedy loop over the CPU oracle, either re-forwarding per token
+//! (baseline) or stepping the `streaming` recurrence in O(1)/token,
+//! cross-validated to produce identical token sequences.
 
-use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::{attend, draw_gaussian_features, Kind};
 use crate::data::mt::{strip_special, BOS};
 use crate::data::MtBatch;
 use crate::metrics;
+use crate::rng::Rng;
 use crate::runtime::{HostTensor, Runtime};
+use crate::streaming::{StreamSpec, StreamingDecoder};
+use crate::tensor::Mat;
 
 /// Greedy decode a batch of sources with a seq2seq `.fwd` artifact.
 /// Returns per-example hypothesis token vectors (specials stripped).
@@ -79,6 +90,171 @@ pub fn bleu_of(rt: &Runtime, fwd_artifact: &str, flat: &[f32],
     Ok(metrics::bleu(&refs, &hyps))
 }
 
+// ---------------------------------------------------------------------------
+// CPU kernelized LM: the streaming-decode testbed
+// ---------------------------------------------------------------------------
+
+/// A tiny single-head kernelized-attention language model built from
+/// deterministic random projections (tied embeddings, no training).
+/// It exists to exercise *decode serving* end to end on the CPU: the
+/// next token genuinely depends on the attention output, so streaming
+/// and re-forward decode can be cross-validated token for token.
+pub struct CpuLm {
+    pub kind: Kind,
+    pub vocab: usize,
+    pub d: usize,
+    pub max_len: usize,
+    embed: Mat,          // (vocab, d), tied with the output head
+    wq: Mat,             // (d, d)
+    wk: Mat,
+    wv: Mat,
+    features: Mat,       // (m, d) PRF weights
+    bias_half: Vec<f32>, // b_t for offsets t = 0..max_len-1 (symmetric RPE)
+}
+
+impl CpuLm {
+    pub fn new(kind: Kind, vocab: usize, d: usize, m: usize, max_len: usize,
+               seed: u64) -> Result<CpuLm> {
+        if !kind.streamable() {
+            bail!("CpuLm serves kernel kinds only, got {kind:?}");
+        }
+        if vocab == 0 || d == 0 || m == 0 || max_len == 0 {
+            bail!(
+                "CpuLm dimensions must be positive \
+                 (vocab={vocab} d={d} m={m} max_len={max_len})"
+            );
+        }
+        let base = Rng::new(seed);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut mk = |stream: u64, rows: usize, cols: usize| {
+            let mut rng = base.fold_in(stream);
+            Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, scale))
+        };
+        let embed = mk(1, vocab, d);
+        let wq = mk(2, d, d);
+        let wk = mk(3, d, d);
+        let wv = mk(4, d, d);
+        let mut frng = base.fold_in(5);
+        let features = draw_gaussian_features(m, d, &mut frng);
+        let mut brng = base.fold_in(6);
+        let bias_half: Vec<f32> =
+            (0..max_len).map(|_| brng.normal_f32() * 0.5).collect();
+        Ok(CpuLm { kind, vocab, d, max_len, embed, wq, wk, wv, features, bias_half })
+    }
+
+    /// RPE biases in the (2n-1) layout `attend` expects. Symmetric in
+    /// the offset so the vector is consistent across prefix lengths.
+    pub fn bias_full(&self, n: usize) -> Vec<f32> {
+        assert!(n <= self.max_len, "n={n} > max_len={}", self.max_len);
+        let mut b = vec![0.0f32; 2 * n - 1];
+        for t in 0..n {
+            b[n - 1 - t] = self.bias_half[t];
+            b[n - 1 + t] = self.bias_half[t];
+        }
+        b
+    }
+
+    /// The streaming spec for this model (shared across sessions).
+    pub fn spec(&self, window: usize) -> Result<Arc<StreamSpec>> {
+        let b = self.bias_full(self.max_len);
+        Ok(Arc::new(StreamSpec::new(
+            self.kind,
+            self.features.clone(),
+            Some(&b),
+            window,
+        )?))
+    }
+
+    /// Embed a token prefix and project to (q, k, v), each (n, d).
+    pub fn qkv(&self, tokens: &[i32]) -> (Mat, Mat, Mat) {
+        let n = tokens.len();
+        let mut x = Mat::zeros(n, self.d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = (t.rem_euclid(self.vocab as i32)) as usize;
+            x.row_mut(i).copy_from_slice(self.embed.row(t));
+        }
+        (x.matmul(&self.wq), x.matmul(&self.wk), x.matmul(&self.wv))
+    }
+
+    /// Tied-embedding readout: logits over the vocabulary for one
+    /// attention output row.
+    pub fn logits(&self, y_row: &[f32]) -> Vec<f32> {
+        let y = Mat::from_vec(1, self.d, y_row.to_vec());
+        y.matmul_t(&self.embed).data
+    }
+
+    /// Full re-forward: next-token logits after `tokens`, running the
+    /// complete causal attention over the prefix (the per-token
+    /// baseline the paper is stuck with).
+    pub fn full_logits(&self, tokens: &[i32]) -> Vec<f32> {
+        let n = tokens.len();
+        assert!(n > 0);
+        let (q, k, v) = self.qkv(tokens);
+        let b = self.bias_full(n);
+        let y = attend(
+            self.kind, &q, &k, &v, Some(&self.features), Some(&b), true,
+        );
+        self.logits(y.row(n - 1))
+    }
+
+    /// Fresh streaming session for this model.
+    pub fn session(&self, window: usize) -> Result<StreamingDecoder> {
+        Ok(StreamingDecoder::new(self.spec(window)?, 1, self.d))
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Greedy decode `gen` tokens after `prompt` with the CPU oracle.
+/// `streaming=false` re-runs the full forward per token (O(n) each);
+/// `streaming=true` prefills once through the FFT path and then steps
+/// the recurrence in O(1) per token. With window >= prompt+gen the two
+/// modes produce identical token sequences (cross-validated in tests
+/// and by `kafft decode`).
+pub fn greedy_decode_cpu(lm: &CpuLm, prompt: &[i32], gen: usize,
+                         streaming: bool) -> Result<Vec<i32>> {
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    if prompt.len() + gen > lm.max_len {
+        bail!(
+            "prompt {} + gen {gen} exceeds max_len {}",
+            prompt.len(),
+            lm.max_len
+        );
+    }
+    let mut tokens = prompt.to_vec();
+    if !streaming {
+        for _ in 0..gen {
+            let logits = lm.full_logits(&tokens);
+            tokens.push(argmax(&logits) as i32);
+        }
+        return Ok(tokens);
+    }
+    let mut dec = lm.session(lm.max_len)?;
+    let (q, k, v) = lm.qkv(prompt);
+    let pre = dec.prefill(&[q], &[k], &[v])?;
+    let mut logits = lm.logits(pre[0].row(prompt.len() - 1));
+    for _ in 0..gen {
+        let next = argmax(&logits) as i32;
+        tokens.push(next);
+        let (q, k, v) = lm.qkv(&[next]);
+        let y = dec.step(&q, &k, &v)?;
+        logits = lm.logits(y.row(0));
+    }
+    // The last computed logits belong to the position after the final
+    // emitted token; greedy decode only needed them if gen continued.
+    Ok(tokens)
+}
+
 /// Classification accuracy over an eval set using a `.fwd` artifact
 /// whose logits are (B, classes).
 pub fn accuracy_of(rt: &Runtime, fwd_artifact: &str, flat: &[f32],
@@ -102,4 +278,59 @@ pub fn accuracy_of(rt: &Runtime, fwd_artifact: &str, flat: &[f32],
         count += labels.len();
     }
     Ok(total / count.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-2.0]), 0);
+    }
+
+    #[test]
+    fn streaming_decode_matches_reforward() {
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let lm = CpuLm::new(kind, 50, 8, 8, 64, 42).expect("lm");
+        let prompt: Vec<i32> = vec![3, 14, 15, 9, 2, 6];
+        let full = greedy_decode_cpu(&lm, &prompt, 20, false).expect("full");
+        let fast = greedy_decode_cpu(&lm, &prompt, 20, true).expect("fast");
+        assert_eq!(full, fast);
+        let gen = &full[prompt.len()..];
+        assert_eq!(gen.len(), 20);
+        assert!(gen.iter().all(|&t| (0..50).contains(&t)), "{gen:?}");
+    }
+
+    #[test]
+    fn streaming_decode_matches_reforward_direct_kind() {
+        let kind = Kind::Kernel { norm: false, rpe: true, fft: false };
+        let lm = CpuLm::new(kind, 32, 6, 6, 48, 7).expect("lm");
+        let prompt: Vec<i32> = vec![1, 2, 3, 5, 8];
+        let full = greedy_decode_cpu(&lm, &prompt, 12, false).expect("full");
+        let fast = greedy_decode_cpu(&lm, &prompt, 12, true).expect("fast");
+        assert_eq!(full, fast);
+    }
+
+    #[test]
+    fn decode_respects_max_len() {
+        let kind = Kind::Kernel { norm: true, rpe: false, fft: false };
+        let lm = CpuLm::new(kind, 16, 4, 4, 8, 1).expect("lm");
+        assert!(greedy_decode_cpu(&lm, &[1, 2, 3], 6, false).is_err());
+        assert!(greedy_decode_cpu(&lm, &[], 2, true).is_err());
+        assert_eq!(
+            greedy_decode_cpu(&lm, &[1, 2, 3], 5, true).expect("fits").len(),
+            8
+        );
+    }
+
+    #[test]
+    fn cpu_lm_rejects_softmax_and_zero_dims() {
+        let kind = Kind::Softmax { norm: false, rpe: false };
+        assert!(CpuLm::new(kind, 16, 4, 4, 8, 1).is_err());
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        assert!(CpuLm::new(kind, 0, 4, 4, 8, 1).is_err());
+        assert!(CpuLm::new(kind, 16, 4, 4, 0, 1).is_err());
+    }
 }

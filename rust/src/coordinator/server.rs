@@ -1,13 +1,21 @@
-//! Batched inference server: request router + dynamic batcher over the
-//! `.fwd_b{1,2,4,8}` forward artifacts (vllm-router-style, scaled to
-//! this testbed).
+//! Inference serving: the dynamic batcher over the `.fwd_b{1,2,4,8}`
+//! forward artifacts (vllm-router-style, scaled to this testbed) plus
+//! the streaming request path over `crate::streaming`.
 //!
-//! Requests (token sequences) arrive on a channel; a worker thread
-//! drains the queue, groups up to `max_batch` requests within
-//! `max_wait`, picks the smallest compiled batch size that fits, pads
-//! with the first request repeated, executes one PJRT call, and
-//! returns per-request next-token distributions. Padding waste and
-//! batch-size histograms are tracked for the perf study.
+//! Batch path: requests (token sequences) arrive on a channel; a
+//! worker thread drains the queue, groups up to `max_batch` requests
+//! within `max_wait`, picks the smallest compiled batch size that
+//! fits, pads with the *shortest* request of the group repeated, runs
+//! one PJRT call, and returns per-request next-token distributions.
+//! Padding waste and batch-size histograms are tracked for the perf
+//! study.
+//!
+//! Streaming path: `StreamingServer` keeps per-session recurrent
+//! decoder state (`streaming::SessionStore`) so a session's n-th token
+//! costs O(1) instead of an O(n) re-forward. New sessions prefill
+//! through the FFT path; existing sessions step the recurrence; idle
+//! sessions spill to snapshots under the byte budget and restore
+//! transparently.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -15,7 +23,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::attention::Kind;
+use crate::coordinator::decode::CpuLm;
 use crate::runtime::{HostTensor, Runtime};
+use crate::streaming::{Origin, SessionStore};
 
 #[derive(Debug, Clone)]
 pub struct LmRequest {
@@ -169,17 +180,10 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
             .find(|(b, _)| *b >= group.len())
             .unwrap_or_else(|| sizes.last().unwrap())
             .clone();
-        let mut tokens = Vec::with_capacity(bsz * seq_len);
-        for p in &group {
-            let mut t = p.req.tokens.clone();
-            t.resize(seq_len, 0);
-            tokens.extend(t);
-        }
-        // Pad with copies of the first request.
-        for _ in group.len()..bsz {
-            tokens.extend(&tokens[..seq_len].to_vec());
-        }
-        stats.padded_slots += bsz - group.len();
+        let rows: Vec<&[i32]> =
+            group.iter().map(|p| p.req.tokens.as_slice()).collect();
+        let (tokens, padded) = build_batch_tokens(&rows, bsz, seq_len);
+        stats.padded_slots += padded;
         let inputs = vec![
             HostTensor::f32(flat.clone(), &[flat.len()]),
             HostTensor::i32(tokens, &[bsz, seq_len]),
@@ -211,4 +215,453 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
     }
     stats.batch_hist = hist.into_iter().collect();
     stats
+}
+
+/// Flatten a request group into a (bsz, seq_len) token block. Slots
+/// beyond the group repeat the *shortest* request of the group — the
+/// cheapest row to recompute and the least likely to skew padded-slot
+/// activation statistics. Returns the block and the padded-slot count,
+/// which is always `bsz - group.len()`.
+fn build_batch_tokens(group: &[&[i32]], bsz: usize, seq_len: usize)
+                      -> (Vec<i32>, usize) {
+    assert!(!group.is_empty() && group.len() <= bsz);
+    let mut tokens = Vec::with_capacity(bsz * seq_len);
+    for req in group {
+        let mut t = req.to_vec();
+        t.resize(seq_len, 0);
+        tokens.extend(t);
+    }
+    let shortest = group
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, r)| r.len())
+        .map(|(i, _)| i)
+        .expect("nonempty group");
+    let pad_row = tokens[shortest * seq_len..(shortest + 1) * seq_len].to_vec();
+    for _ in group.len()..bsz {
+        tokens.extend(&pad_row);
+    }
+    (tokens, bsz - group.len())
+}
+
+// ---------------------------------------------------------------------------
+// Streaming request path
+// ---------------------------------------------------------------------------
+
+/// A streaming request: append `tokens` to session `session` and
+/// return the next-token logits. The first request of a session
+/// carries the whole prompt (prefilled via the FFT path); follow-ups
+/// usually carry the one token the client committed.
+#[derive(Debug, Clone)]
+pub struct StreamRequest {
+    pub session: u64,
+    pub tokens: Vec<i32>,
+    /// Position the client believes the session is at (tokens absorbed
+    /// so far). When set, a mismatch — e.g. the session expired
+    /// server-side and was silently recreated — is rejected instead of
+    /// decoding from the wrong context. Continuations should set it.
+    pub expect_pos: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StreamResponse {
+    pub session: u64,
+    /// logits over the vocabulary after the appended tokens
+    pub next_logits: Vec<f32>,
+    pub latency: Duration,
+    /// how the session was obtained for this request
+    pub origin: Origin,
+    /// total tokens the session has absorbed after this request
+    pub positions: usize,
+}
+
+struct StreamPending {
+    req: StreamRequest,
+    enqueued: Instant,
+    reply: Sender<Result<StreamResponse, String>>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct StreamStats {
+    pub requests: usize,
+    pub tokens: usize,
+    pub prefill_tokens: usize,
+    pub sessions_created: usize,
+    pub restores: usize,
+    pub spills: usize,
+    pub exec_secs: f64,
+}
+
+pub struct StreamingServerConfig {
+    pub kind: Kind,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub features: usize,
+    pub max_len: usize,
+    /// RPE ring-buffer window (>= max_len makes decode exact).
+    pub window: usize,
+    /// Byte budget for live session state before LRU spill.
+    pub budget_bytes: usize,
+    pub max_live: usize,
+    pub seed: u64,
+}
+
+impl Default for StreamingServerConfig {
+    fn default() -> StreamingServerConfig {
+        StreamingServerConfig {
+            kind: Kind::Kernel { norm: true, rpe: true, fft: true },
+            vocab: 256,
+            d_model: 32,
+            features: 32,
+            max_len: 512,
+            window: 512,
+            budget_bytes: 32 << 20,
+            max_live: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// The streaming decode server: one worker thread owning the model and
+/// the session store. Submissions are cheap; state lives server-side.
+pub struct StreamingServer {
+    tx: Sender<StreamPending>,
+    handle: Option<std::thread::JoinHandle<StreamStats>>,
+}
+
+impl StreamingServer {
+    pub fn start(cfg: StreamingServerConfig) -> Result<StreamingServer> {
+        let lm = CpuLm::new(
+            cfg.kind, cfg.vocab, cfg.d_model, cfg.features, cfg.max_len,
+            cfg.seed,
+        )?;
+        let spec = lm.spec(cfg.window)?;
+        let store = SessionStore::new(
+            spec, 1, cfg.d_model, cfg.budget_bytes, cfg.max_live,
+        );
+        let (tx, rx): (Sender<StreamPending>, Receiver<StreamPending>) =
+            channel();
+        let handle =
+            std::thread::spawn(move || stream_worker(lm, store, rx));
+        Ok(StreamingServer { tx, handle: Some(handle) })
+    }
+
+    /// Open or blindly extend a session (no position check).
+    pub fn submit(&self, session: u64, tokens: Vec<i32>)
+                  -> Result<Receiver<Result<StreamResponse, String>>> {
+        self.send(StreamRequest { session, tokens, expect_pos: None })
+    }
+
+    /// Continue a session the client believes is at `expect_pos`
+    /// absorbed tokens; rejected if the server-side state disagrees.
+    pub fn submit_at(&self, session: u64, tokens: Vec<i32>,
+                     expect_pos: usize)
+                     -> Result<Receiver<Result<StreamResponse, String>>> {
+        self.send(StreamRequest {
+            session,
+            tokens,
+            expect_pos: Some(expect_pos),
+        })
+    }
+
+    fn send(&self, req: StreamRequest)
+            -> Result<Receiver<Result<StreamResponse, String>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(StreamPending {
+                req,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("streaming server is shut down"))?;
+        Ok(reply_rx)
+    }
+
+    pub fn shutdown(mut self) -> StreamStats {
+        drop(self.tx);
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+fn stream_worker(lm: CpuLm, mut store: SessionStore,
+                 rx: Receiver<StreamPending>) -> StreamStats {
+    let mut stats = StreamStats::default();
+    while let Ok(p) = rx.recv() {
+        let t0 = Instant::now();
+        let out = serve_stream_request(&lm, &mut store, &p.req);
+        stats.exec_secs += t0.elapsed().as_secs_f64();
+        stats.requests += 1;
+        match &out {
+            Ok(resp) => {
+                stats.tokens += p.req.tokens.len();
+                if resp.origin == Origin::Created {
+                    stats.prefill_tokens += p.req.tokens.len();
+                }
+            }
+            Err(e) => crate::error!("stream request failed: {e}"),
+        }
+        store.enforce();
+        let _ = p.reply.send(out.map(|mut r| {
+            r.latency = p.enqueued.elapsed();
+            r
+        }).map_err(|e| format!("{e:#}")));
+    }
+    // Session-cache counters come straight from the store so the two
+    // accountings cannot drift.
+    stats.sessions_created = store.stats.created;
+    stats.restores = store.stats.restores;
+    stats.spills = store.stats.spills;
+    stats
+}
+
+fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
+                        req: &StreamRequest) -> Result<StreamResponse> {
+    if req.tokens.is_empty() {
+        bail!("streaming request with no tokens");
+    }
+    // A continuation for a session the store no longer knows can be
+    // rejected before creating anything (keeps the created/hit stats
+    // honest for retried stale continuations).
+    if let Some(want) = req.expect_pos {
+        if want != 0 && !store.contains(req.session) {
+            bail!(
+                "session {} is unknown or expired, client expected \
+                 position {want}",
+                req.session
+            );
+        }
+    }
+    // The block scopes the &mut session so the rejection path below can
+    // clean the store up again.
+    let outcome = {
+        let (dec, origin) = store.get_or_create(req.session)?;
+        let pos = dec.positions();
+        if let Some(want) = req.expect_pos.filter(|&w| w != pos) {
+            Err((
+                pos,
+                anyhow!(
+                    "session {} is at position {pos}, client expected {want} \
+                     (session may have expired server-side)",
+                    req.session
+                ),
+            ))
+        } else if pos + req.tokens.len() > lm.max_len {
+            Err((
+                pos,
+                anyhow!(
+                    "session {} over max_len {} ({pos} + {})",
+                    req.session,
+                    lm.max_len,
+                    req.tokens.len()
+                ),
+            ))
+        } else {
+            let last = if pos == 0 {
+                // Fresh session: absorb the whole prompt through the
+                // FFT prefill instead of token-by-token stepping.
+                let (q, k, v) = lm.qkv(&req.tokens);
+                let pre = dec.prefill(&[q], &[k], &[v])?;
+                pre[0].row(req.tokens.len() - 1).to_vec()
+            } else {
+                let mut last = Vec::new();
+                for &t in &req.tokens {
+                    let (q, k, v) = lm.qkv(&[t]);
+                    last = dec.step(&q, &k, &v)?.row(0).to_vec();
+                }
+                last
+            };
+            Ok(StreamResponse {
+                session: req.session,
+                next_logits: lm.logits(&last),
+                latency: Duration::ZERO, // filled in by the worker
+                origin,
+                positions: dec.positions(),
+            })
+        }
+    };
+    match outcome {
+        Ok(resp) => Ok(resp),
+        Err((pos, e)) => {
+            if pos == 0 {
+                // Don't leave an empty just-created session occupying
+                // a cache slot after rejecting its first request.
+                store.remove(req.session);
+            }
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::decode;
+
+    #[test]
+    fn batch_padding_uses_shortest_and_accounts_slots() {
+        let a: Vec<i32> = vec![1, 2, 3, 4, 5];
+        let b: Vec<i32> = vec![9, 8];
+        let c: Vec<i32> = vec![7, 7, 7, 7, 7, 7, 7];
+        let group: Vec<&[i32]> = vec![&a, &b, &c];
+        let (bsz, seq_len) = (8, 6);
+        let (tokens, padded) = build_batch_tokens(&group, bsz, seq_len);
+        assert_eq!(tokens.len(), bsz * seq_len);
+        // The padded-slot accounting must match batch - group.len().
+        assert_eq!(padded, bsz - group.len());
+        // Row 1 (the shortest request, zero-padded) fills every pad slot.
+        let shortest_row = &tokens[seq_len..2 * seq_len];
+        assert_eq!(shortest_row, &[9, 8, 0, 0, 0, 0]);
+        for slot in group.len()..bsz {
+            assert_eq!(
+                &tokens[slot * seq_len..(slot + 1) * seq_len],
+                shortest_row,
+                "slot {slot}"
+            );
+        }
+        // Over-long requests truncate to seq_len.
+        assert_eq!(&tokens[2 * seq_len..3 * seq_len], &[7; 6]);
+    }
+
+    #[test]
+    fn batch_padding_full_group_pads_nothing() {
+        let a: Vec<i32> = vec![1];
+        let b: Vec<i32> = vec![2, 3];
+        let group: Vec<&[i32]> = vec![&a, &b];
+        let (tokens, padded) = build_batch_tokens(&group, 2, 4);
+        assert_eq!(padded, 0);
+        assert_eq!(tokens, vec![1, 0, 0, 0, 2, 3, 0, 0]);
+    }
+
+    #[test]
+    fn streaming_server_matches_reforward_decode() {
+        let cfg = StreamingServerConfig {
+            vocab: 40,
+            d_model: 8,
+            features: 8,
+            max_len: 48,
+            window: 48,
+            seed: 5,
+            ..StreamingServerConfig::default()
+        };
+        let kind = cfg.kind;
+        let lm = CpuLm::new(
+            kind, cfg.vocab, cfg.d_model, cfg.features, cfg.max_len, cfg.seed,
+        )
+        .unwrap();
+        let server = StreamingServer::start(cfg).unwrap();
+
+        // Drive a greedy session through the server, one token at a
+        // time, and cross-validate against the local re-forward path.
+        let prompt: Vec<i32> = vec![4, 8, 15, 16, 23, 42];
+        let mut tokens = prompt.clone();
+        let mut resp = server
+            .submit(1, prompt.clone())
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("prefill ok");
+        assert_eq!(resp.origin, Origin::Created);
+        for _ in 0..10 {
+            let next = decode::argmax(&resp.next_logits) as i32;
+            let want = decode::argmax(&lm.full_logits(&tokens)) as i32;
+            assert_eq!(next, want, "server vs re-forward divergence");
+            tokens.push(next);
+            resp = server
+                .submit_at(1, vec![next], tokens.len() - 1)
+                .unwrap()
+                .recv()
+                .unwrap()
+                .expect("step ok");
+            assert_eq!(resp.positions, tokens.len());
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 11);
+        assert_eq!(stats.sessions_created, 1);
+        assert_eq!(stats.tokens, prompt.len() + 10);
+    }
+
+    #[test]
+    fn streaming_server_sessions_survive_eviction() {
+        let cfg = StreamingServerConfig {
+            vocab: 30,
+            d_model: 6,
+            features: 6,
+            max_len: 32,
+            window: 32,
+            max_live: 1, // every other session gets spilled
+            seed: 9,
+            ..StreamingServerConfig::default()
+        };
+        let server = StreamingServer::start(cfg).unwrap();
+        // Interleave two sessions so each access of one evicts the other.
+        let mut a = server.submit(1, vec![1, 2, 3]).unwrap().recv().unwrap()
+            .expect("a prefill");
+        let mut b = server.submit(2, vec![4, 5, 6]).unwrap().recv().unwrap()
+            .expect("b prefill");
+        for _ in 0..4 {
+            let na = decode::argmax(&a.next_logits) as i32;
+            a = server.submit_at(1, vec![na], a.positions).unwrap().recv()
+                .unwrap().expect("a step");
+            let nb = decode::argmax(&b.next_logits) as i32;
+            b = server.submit_at(2, vec![nb], b.positions).unwrap().recv()
+                .unwrap().expect("b step");
+        }
+        assert_eq!(a.positions, 7);
+        assert_eq!(b.positions, 7);
+        // At least one of the later accesses must have gone through a
+        // snapshot restore for the interleave to have been exercised.
+        let stats = server.shutdown();
+        assert!(stats.restores >= 4, "restores={}", stats.restores);
+        assert!(stats.spills >= 4, "spills={}", stats.spills);
+        assert_eq!(stats.sessions_created, 2);
+    }
+
+    #[test]
+    fn streaming_server_rejects_overlong_session() {
+        let cfg = StreamingServerConfig {
+            vocab: 16,
+            d_model: 4,
+            features: 4,
+            max_len: 4,
+            window: 4,
+            seed: 2,
+            ..StreamingServerConfig::default()
+        };
+        let server = StreamingServer::start(cfg).unwrap();
+        let r = server.submit(7, vec![1, 2, 3]).unwrap().recv().unwrap();
+        assert!(r.is_ok());
+        let r = server.submit(7, vec![1, 2]).unwrap().recv().unwrap();
+        assert!(r.is_err(), "expected over-max_len rejection");
+        server.shutdown();
+    }
+
+    #[test]
+    fn streaming_server_rejects_stale_continuation() {
+        let cfg = StreamingServerConfig {
+            vocab: 16,
+            d_model: 4,
+            features: 4,
+            max_len: 16,
+            window: 16,
+            seed: 3,
+            ..StreamingServerConfig::default()
+        };
+        let server = StreamingServer::start(cfg).unwrap();
+        // A continuation for a session the server has never seen (e.g.
+        // it expired) must fail loudly, not decode from a fresh state.
+        let r = server.submit_at(5, vec![9], 7).unwrap().recv().unwrap();
+        assert!(r.is_err(), "expected position-mismatch rejection");
+        // The rejected id is free again: a proper start works.
+        let r = server.submit(5, vec![1, 2]).unwrap().recv().unwrap()
+            .expect("fresh start after rejection");
+        assert_eq!(r.positions, 2);
+        // And a correct continuation passes the check.
+        let r = server.submit_at(5, vec![3], 2).unwrap().recv().unwrap()
+            .expect("continuation");
+        assert_eq!(r.positions, 3);
+        server.shutdown();
+    }
 }

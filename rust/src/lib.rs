@@ -9,7 +9,13 @@
 //!     training/serving loops (`coordinator`), generates workloads
 //!     (`data`), scores them (`metrics`), and re-implements the paper's
 //!     numerics on the CPU (`attention`, `fft`, `toeplitz`, `tensor`)
-//!     for simulation studies and cross-validation of the artifacts.
+//!     for simulation studies and cross-validation of the artifacts;
+//!   * `streaming` is the serving-side decode subsystem: the (S, z)
+//!     recurrence over kernelized attention with a windowed causal RPE
+//!     (`streaming::state`, `streaming::engine`) plus per-session
+//!     caches with LRU spill/restore (`streaming::session`), wired
+//!     into `coordinator::decode` (streaming greedy decode) and
+//!     `coordinator::server` (the streaming request path).
 
 pub mod attention;
 pub mod config;
@@ -19,6 +25,7 @@ pub mod fft;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod streaming;
 pub mod tensor;
 pub mod toeplitz;
 pub mod util;

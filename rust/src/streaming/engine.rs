@@ -1,0 +1,463 @@
+//! The streaming decode engine: FFT prefill + O(1)-per-token stepping.
+//!
+//! A `StreamSpec` freezes everything immutable about a served model
+//! head group — the attention kind, the PRF feature weights, and the
+//! windowed causal RPE correlations. A `StreamingDecoder` pairs one
+//! spec with a `DecoderState`: `prefill` runs the prompt through the
+//! existing `ToeplitzPlan` FFT path (O(n log n) for the whole prompt)
+//! while loading the recurrent state, then `step` emits one token at a
+//! time in O(window * (m + d)) regardless of how long the session gets.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::attention::{kernel_features, nprf_rpe_fft_path, rpe_correlations, Kind};
+use crate::tensor::Mat;
+
+use super::state::DecoderState;
+
+/// Immutable per-model streaming configuration, shared across sessions.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    pub kind: Kind,
+    /// PRF feature weights, (m, d_qk).
+    pub features: Mat,
+    /// Causal correlation window: coeffs[t] = c_{-t} (already
+    /// exponentiated). Offsets at or beyond the window reuse the last
+    /// entry — the tail approximation. For non-RPE kinds this is [1.0]
+    /// and the recurrence is exact with a single-slot ring.
+    pub coeffs: Vec<f64>,
+}
+
+impl StreamSpec {
+    /// Build a spec from the same raw inputs `attend` takes: the kind,
+    /// the feature weights and (for RPE kinds) the full-bias vector in
+    /// the (2n-1) layout with b[t + n - 1] = b_t. `window` bounds the
+    /// ring buffer; window >= n makes streaming exact (README).
+    pub fn new(kind: Kind, features: Mat, bias: Option<&[f32]>,
+               window: usize) -> Result<StreamSpec> {
+        if !kind.streamable() {
+            bail!("streaming decode requires a kernelized attention kind");
+        }
+        let rpe = matches!(kind, Kind::Kernel { rpe: true, .. });
+        let coeffs = if !rpe {
+            vec![1.0]
+        } else {
+            let b = match bias {
+                Some(b) if !b.is_empty() => b,
+                _ => bail!("rpe kind needs a bias vector"),
+            };
+            if b.len() % 2 == 0 {
+                bail!("bias must have odd length 2n-1, got {}", b.len());
+            }
+            let n = (b.len() + 1) / 2;
+            if window == 0 {
+                bail!("window must be >= 1");
+            }
+            let w = window.min(n);
+            // Same normalization as attend: exp(b - max over the FULL
+            // bias), so the two paths agree to within the eps floor.
+            let c = rpe_correlations(b);
+            // Negative-offset half: c_{-t} lives at index n - 1 - t.
+            (0..w).map(|t| c[n - 1 - t] as f64).collect()
+        };
+        Ok(StreamSpec { kind, features, coeffs })
+    }
+
+    pub fn window(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    fn c_tail(&self) -> f64 {
+        *self.coeffs.last().expect("coeffs nonempty")
+    }
+
+    /// Effective causal correlations for a length-n prefix in the
+    /// (2n-1) layout attend understands: the window applied exactly,
+    /// the tail saturated. Positive offsets are zero (causal).
+    pub fn effective_coeffs(&self, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; 2 * n - 1];
+        for t in 0..n {
+            let idx = t.min(self.coeffs.len() - 1);
+            c[n - 1 - t] = self.coeffs[idx] as f32;
+        }
+        c
+    }
+}
+
+/// One decoding session: spec + recurrent state + position counter.
+#[derive(Debug, Clone)]
+pub struct StreamingDecoder {
+    spec: Arc<StreamSpec>,
+    state: DecoderState,
+    pos: usize,
+}
+
+const SNAP_MAGIC: u64 = 0x4b41_4646_5354_524d; // "KAFFSTRM"
+
+impl StreamingDecoder {
+    /// Fresh session with `heads` attention heads producing `d`-dim
+    /// value rows.
+    pub fn new(spec: Arc<StreamSpec>, heads: usize, d: usize) -> StreamingDecoder {
+        let m = spec.features.rows;
+        let window = spec.window();
+        StreamingDecoder {
+            spec,
+            state: DecoderState::new(heads, m, d, window),
+            pos: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &Arc<StreamSpec> {
+        &self.spec
+    }
+
+    /// Tokens absorbed so far (prefill + steps).
+    pub fn positions(&self) -> usize {
+        self.pos
+    }
+
+    /// True while the session is still within the exact window: every
+    /// causal offset seen so far has its own coefficient.
+    pub fn exact(&self) -> bool {
+        self.pos <= self.spec.window()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.state.bytes() + std::mem::size_of::<StreamingDecoder>()
+    }
+
+    /// Absorb a whole prompt and return its attention outputs, one Mat
+    /// of shape (n, d) per head. The outputs come from the ToeplitzPlan
+    /// FFT path (via `nprf_rpe_fft_path`) — O(f n log n) for the whole
+    /// prompt instead of n recurrent steps — while the recurrent state
+    /// is loaded row by row for the steps that follow.
+    pub fn prefill(&mut self, q: &[Mat], k: &[Mat], v: &[Mat]) -> Result<Vec<Mat>> {
+        if self.pos != 0 {
+            bail!("prefill on a non-fresh session (pos={})", self.pos);
+        }
+        let heads = self.state.num_heads();
+        if q.len() != heads || k.len() != heads || v.len() != heads {
+            bail!("prefill expects {heads} per-head q/k/v matrices");
+        }
+        let n = q[0].rows;
+        if n == 0 {
+            return Ok(vec![Mat::zeros(0, self.state.value_dim()); heads]);
+        }
+        let c = self.spec.effective_coeffs(n);
+        let c_tail = self.spec.c_tail();
+        let mut outs = Vec::with_capacity(heads);
+        for h in 0..heads {
+            if k[h].rows != n || v[h].rows != n || q[h].rows != n {
+                bail!("prefill head {h}: ragged q/k/v lengths");
+            }
+            if v[h].cols != self.state.value_dim() {
+                bail!("prefill head {h}: value dim {} != {}", v[h].cols,
+                      self.state.value_dim());
+            }
+            let phi_q = kernel_features(self.spec.kind, &q[h], &self.spec.features);
+            let phi_k = kernel_features(self.spec.kind, &k[h], &self.spec.features);
+            // The effective coefficients already encode the window +
+            // tail, so the FFT prefill and the recurrent steps realize
+            // the same operator.
+            outs.push(nprf_rpe_fft_path(&phi_q, &phi_k, &v[h], &c, true));
+            for j in 0..n {
+                self.state.push(h, phi_k.row(j), v[h].row(j), c_tail);
+            }
+        }
+        self.pos = n;
+        Ok(outs)
+    }
+
+    /// One decode step: absorb the new token's (k, v) and return the
+    /// attention output for its q — rows indexed by head. This is the
+    /// `Kind`-aware incremental mirror of `attention::attend` for the
+    /// last causal position.
+    pub fn step(&mut self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        let heads = self.state.num_heads();
+        if q.rows != heads || k.rows != heads || v.rows != heads {
+            bail!("step expects one row per head ({heads})");
+        }
+        let c_tail = self.spec.c_tail();
+        let d = self.state.value_dim();
+        let mut out = Mat::zeros(heads, d);
+        for h in 0..heads {
+            let phi_k = kernel_features(
+                self.spec.kind,
+                &Mat::from_vec(1, k.cols, k.row(h).to_vec()),
+                &self.spec.features,
+            );
+            self.state.push(h, phi_k.row(0), v.row(h), c_tail);
+            let phi_q = kernel_features(
+                self.spec.kind,
+                &Mat::from_vec(1, q.cols, q.row(h).to_vec()),
+                &self.spec.features,
+            );
+            let y = self.state.query(h, phi_q.row(0), &self.spec.coeffs);
+            out.row_mut(h).copy_from_slice(&y);
+        }
+        self.pos += 1;
+        Ok(out)
+    }
+
+    // -- snapshot / restore ------------------------------------------------
+
+    /// Serialize the session so it can survive server rebatching or be
+    /// migrated across workers. The spec is *not* embedded — restore
+    /// re-attaches it and validates the dimensions.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(SNAP_MAGIC.to_le_bytes());
+        out.extend(1u64.to_le_bytes()); // version
+        out.extend((self.pos as u64).to_le_bytes());
+        out.extend(self.state.to_bytes());
+        out
+    }
+
+    /// Rebuild a session from `snapshot` bytes. `heads` and `d` are the
+    /// serving configuration the session must match — all dimensions
+    /// are validated so a mismatched snapshot fails here instead of
+    /// panicking inside a later `step`.
+    pub fn restore(spec: Arc<StreamSpec>, heads: usize, d: usize,
+                   bytes: &[u8]) -> Result<StreamingDecoder> {
+        if bytes.len() < 24 {
+            bail!("session snapshot: too short");
+        }
+        let magic = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        if magic != SNAP_MAGIC {
+            bail!("session snapshot: bad magic {magic:#x}");
+        }
+        let version = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        if version != 1 {
+            bail!("session snapshot: unsupported version {version}");
+        }
+        let pos = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let state = DecoderState::from_bytes(&bytes[24..])?;
+        if state.feature_dim() != spec.features.rows {
+            bail!(
+                "session snapshot: feature dim {} != spec {}",
+                state.feature_dim(),
+                spec.features.rows
+            );
+        }
+        if state.window() != spec.window() {
+            bail!(
+                "session snapshot: window {} != spec {}",
+                state.window(),
+                spec.window()
+            );
+        }
+        if state.num_heads() != heads {
+            bail!(
+                "session snapshot: {} heads != serving config {heads}",
+                state.num_heads()
+            );
+        }
+        if state.value_dim() != d {
+            bail!(
+                "session snapshot: value dim {} != serving config {d}",
+                state.value_dim()
+            );
+        }
+        Ok(StreamingDecoder { spec, state, pos })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{attend, draw_gaussian_features};
+    use crate::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(r, c, rng.normal_vec(r * c, 0.5))
+    }
+
+    fn spec_for(kind: Kind, n: usize, d: usize, m: usize, window: usize,
+                seed: u64) -> Arc<StreamSpec> {
+        let mut rng = Rng::new(seed);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32() * 0.5).collect();
+        Arc::new(StreamSpec::new(kind, w, Some(&b), window).expect("spec"))
+    }
+
+    #[test]
+    fn rejects_softmax_kinds() {
+        let w = Mat::zeros(2, 2);
+        let err = StreamSpec::new(
+            Kind::Softmax { norm: false, rpe: false }, w, None, 4,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn non_rpe_spec_is_single_slot() {
+        let w = Mat::zeros(4, 4);
+        let kind = Kind::Kernel { norm: true, rpe: false, fft: false };
+        let spec = StreamSpec::new(kind, w, None, 99).expect("spec");
+        assert_eq!(spec.window(), 1);
+        assert_eq!(spec.coeffs, vec![1.0]);
+    }
+
+    #[test]
+    fn step_by_step_matches_attend_when_window_covers_n() {
+        let (n, d, m) = (17, 6, 5); // non-pow2 n exercises Bluestein-free embedding
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let mut rng = Rng::new(3);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32() * 0.5).collect();
+        let q = rand_mat(n, d, 10);
+        let k = rand_mat(n, d, 11);
+        let v = rand_mat(n, d, 12);
+        let oracle = attend(kind, &q, &k, &v, Some(&w), Some(&b), true);
+
+        let spec = Arc::new(
+            StreamSpec::new(kind, w, Some(&b), n).expect("spec"),
+        );
+        let mut dec = StreamingDecoder::new(spec, 1, d);
+        for i in 0..n {
+            let qi = Mat::from_vec(1, d, q.row(i).to_vec());
+            let ki = Mat::from_vec(1, d, k.row(i).to_vec());
+            let vi = Mat::from_vec(1, d, v.row(i).to_vec());
+            let y = dec.step(&qi, &ki, &vi).expect("step");
+            for di in 0..d {
+                let diff = (y.at(0, di) - oracle.at(i, di)).abs();
+                assert!(diff < 1e-4, "i={i} di={di} diff={diff}");
+            }
+        }
+        assert!(dec.exact());
+    }
+
+    #[test]
+    fn prefill_then_step_matches_all_steps() {
+        let (n, d, m) = (24, 4, 6);
+        let kind = Kind::Kernel { norm: false, rpe: true, fft: false };
+        let spec = spec_for(kind, n, d, m, n, 7);
+        let q = rand_mat(n, d, 20);
+        let k = rand_mat(n, d, 21);
+        let v = rand_mat(n, d, 22);
+
+        let mut stepped = StreamingDecoder::new(spec.clone(), 1, d);
+        let mut step_rows = Vec::new();
+        for i in 0..n {
+            let qi = Mat::from_vec(1, d, q.row(i).to_vec());
+            let ki = Mat::from_vec(1, d, k.row(i).to_vec());
+            let vi = Mat::from_vec(1, d, v.row(i).to_vec());
+            step_rows.push(stepped.step(&qi, &ki, &vi).expect("step"));
+        }
+
+        let p = n / 2;
+        let take = |mat: &Mat, lo: usize, hi: usize| {
+            Mat::from_vec(
+                hi - lo,
+                mat.cols,
+                mat.data[lo * mat.cols..hi * mat.cols].to_vec(),
+            )
+        };
+        let mut mixed = StreamingDecoder::new(spec, 1, d);
+        let pre = mixed
+            .prefill(&[take(&q, 0, p)], &[take(&k, 0, p)], &[take(&v, 0, p)])
+            .expect("prefill");
+        for i in 0..p {
+            for di in 0..d {
+                let diff = (pre[0].at(i, di) - step_rows[i].at(0, di)).abs();
+                assert!(diff < 1e-4, "prefill i={i} diff={diff}");
+            }
+        }
+        for (i, want) in step_rows.iter().enumerate().skip(p) {
+            let qi = Mat::from_vec(1, d, q.row(i).to_vec());
+            let ki = Mat::from_vec(1, d, k.row(i).to_vec());
+            let vi = Mat::from_vec(1, d, v.row(i).to_vec());
+            let y = mixed.step(&qi, &ki, &vi).expect("step");
+            for di in 0..d {
+                let diff = (y.at(0, di) - want.at(0, di)).abs();
+                assert!(diff < 1e-4, "step i={i} diff={diff}");
+            }
+        }
+        assert_eq!(mixed.positions(), n);
+    }
+
+    #[test]
+    fn windowed_session_matches_saturated_oracle() {
+        // Window < n: streaming must equal the dense oracle run with
+        // the tail-saturated coefficients (the window semantics are a
+        // *defined* operator, not an unchecked approximation).
+        let (n, d, m, window) = (20, 4, 5, 6);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: false };
+        let spec = spec_for(kind, n, d, m, window, 13);
+        let q = rand_mat(n, d, 30);
+        let k = rand_mat(n, d, 31);
+        let v = rand_mat(n, d, 32);
+        let phi_q = kernel_features(kind, &q, &spec.features);
+        let phi_k = kernel_features(kind, &k, &spec.features);
+        let c = spec.effective_coeffs(n);
+        let oracle =
+            crate::attention::kernel_attention(&phi_q, &phi_k, &v, Some(&c), true);
+
+        let mut dec = StreamingDecoder::new(spec, 1, d);
+        for i in 0..n {
+            let qi = Mat::from_vec(1, d, q.row(i).to_vec());
+            let ki = Mat::from_vec(1, d, k.row(i).to_vec());
+            let vi = Mat::from_vec(1, d, v.row(i).to_vec());
+            let y = dec.step(&qi, &ki, &vi).expect("step");
+            for di in 0..d {
+                let diff = (y.at(0, di) - oracle.at(i, di)).abs();
+                assert!(diff < 1e-4, "i={i} di={di} diff={diff}");
+            }
+        }
+        assert!(!dec.exact());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_identically() {
+        let (n, d, m) = (12, 4, 4);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let spec = spec_for(kind, n, d, m, n, 17);
+        let q = rand_mat(n, d, 40);
+        let k = rand_mat(n, d, 41);
+        let v = rand_mat(n, d, 42);
+        let rows = |mat: &Mat, i: usize| Mat::from_vec(1, d, mat.row(i).to_vec());
+
+        let mut a = StreamingDecoder::new(spec.clone(), 1, d);
+        for i in 0..6 {
+            a.step(&rows(&q, i), &rows(&k, i), &rows(&v, i)).unwrap();
+        }
+        let snap = a.snapshot();
+        let mut b =
+            StreamingDecoder::restore(spec, 1, d, &snap).expect("restore");
+        assert_eq!(b.positions(), 6);
+        for i in 6..n {
+            let ya = a.step(&rows(&q, i), &rows(&k, i), &rows(&v, i)).unwrap();
+            let yb = b.step(&rows(&q, i), &rows(&k, i), &rows(&v, i)).unwrap();
+            assert_eq!(ya.data, yb.data, "i={i}");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_spec() {
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let spec = spec_for(kind, 8, 4, 4, 8, 19);
+        let dec = StreamingDecoder::new(spec, 1, 4);
+        let snap = dec.snapshot();
+        let other = spec_for(kind, 8, 4, 6, 8, 23); // m differs
+        assert!(StreamingDecoder::restore(other, 1, 4, &snap).is_err());
+        assert!(StreamingDecoder::restore(
+            spec_for(kind, 8, 4, 4, 4, 19), // window differs
+            1,
+            4,
+            &snap
+        )
+        .is_err());
+        // Serving-config mismatches must fail cleanly too.
+        assert!(StreamingDecoder::restore(
+            spec_for(kind, 8, 4, 4, 8, 19), 2, 4, &snap
+        )
+        .is_err());
+        assert!(StreamingDecoder::restore(
+            spec_for(kind, 8, 4, 4, 8, 19), 1, 6, &snap
+        )
+        .is_err());
+    }
+}

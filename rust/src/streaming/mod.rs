@@ -1,0 +1,26 @@
+//! Recurrent-state streaming decode: O(1)-per-token kernelized
+//! generation with a windowed causal RPE and per-session caches.
+//!
+//! The paper's FFT fast path (Alg. 1) speeds up full forwards but not
+//! token-by-token generation (§3.2 footnote). Kernelized attention
+//! (Eq. 3/10) does admit an exact recurrence, and the Toeplitz
+//! structure of RPE lets a bounded window of recent feature/value rows
+//! carry the position-dependent coefficients exactly while older rows
+//! fold into constant-size (S, z) accumulators. See README.md in this
+//! directory for the derivation and the W >= n exactness condition.
+//!
+//! Layout:
+//!   * `state`   — `DecoderState`: per-head (S, z) accumulators + the
+//!                 ring buffer of the last W feature/value rows;
+//!   * `engine`  — `StreamSpec` / `StreamingDecoder`: FFT prefill via
+//!                 the `ToeplitzPlan` path, then recurrent stepping;
+//!   * `session` — `SessionStore`: LRU + byte-budget session cache
+//!                 with snapshot spill/restore for server rebatching.
+
+pub mod engine;
+pub mod session;
+pub mod state;
+
+pub use engine::{StreamSpec, StreamingDecoder};
+pub use session::{Origin, SessionStore, StoreStats};
+pub use state::DecoderState;

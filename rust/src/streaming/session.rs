@@ -1,0 +1,335 @@
+//! Per-session state management for the streaming server.
+//!
+//! A `SessionStore` keeps live `StreamingDecoder`s keyed by request id
+//! under a byte budget with LRU eviction. Evicted sessions are not
+//! lost: their snapshots spill into a cold map and are transparently
+//! restored on next access, so a session survives server rebatching
+//! (and the same snapshot bytes could migrate across workers). The
+//! cold map has its own byte budget (`cold_budget_bytes`, default 8x
+//! the live budget); beyond it the oldest snapshots expire for good so
+//! abandoned sessions cannot grow the process without bound.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::engine::{StreamSpec, StreamingDecoder};
+
+#[derive(Debug, Default, Clone)]
+pub struct StoreStats {
+    /// get_or_create found the session live.
+    pub hits: usize,
+    /// get_or_create created a fresh session.
+    pub created: usize,
+    /// Live sessions evicted to the cold map (snapshots).
+    pub spills: usize,
+    /// Cold sessions brought back live.
+    pub restores: usize,
+    /// Cold snapshots dropped for good under the cold byte budget.
+    pub expired: usize,
+}
+
+struct LiveEntry {
+    dec: StreamingDecoder,
+    last_used: u64,
+    bytes: usize,
+}
+
+struct ColdEntry {
+    stamp: u64,
+    snap: Vec<u8>,
+}
+
+/// Where a session came from on access (surfaced in server responses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    Live,
+    Restored,
+    Created,
+}
+
+pub struct SessionStore {
+    spec: Arc<StreamSpec>,
+    heads: usize,
+    d: usize,
+    budget_bytes: usize,
+    /// Budget for spilled snapshots; oldest expire beyond it.
+    pub cold_budget_bytes: usize,
+    max_live: usize,
+    live: HashMap<u64, LiveEntry>,
+    cold: HashMap<u64, ColdEntry>,
+    clock: u64,
+    pub stats: StoreStats,
+}
+
+impl SessionStore {
+    pub fn new(spec: Arc<StreamSpec>, heads: usize, d: usize,
+               budget_bytes: usize, max_live: usize) -> SessionStore {
+        SessionStore {
+            spec,
+            heads,
+            d,
+            budget_bytes,
+            cold_budget_bytes: budget_bytes.saturating_mul(8),
+            max_live: max_live.max(1),
+            live: HashMap::new(),
+            cold: HashMap::new(),
+            clock: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn cold_count(&self) -> usize {
+        self.cold.len()
+    }
+
+    /// Byte accounting over live sessions (refreshed by `enforce`).
+    pub fn live_bytes(&self) -> usize {
+        self.live.values().map(|e| e.bytes).sum()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.live.contains_key(&id) || self.cold.contains_key(&id)
+    }
+
+    /// Fetch a session, restoring it from a spilled snapshot or
+    /// creating it fresh. The returned `Origin` says which happened.
+    pub fn get_or_create(&mut self, id: u64)
+                         -> Result<(&mut StreamingDecoder, Origin)> {
+        self.clock += 1;
+        let origin = if self.live.contains_key(&id) {
+            self.stats.hits += 1;
+            Origin::Live
+        } else if let Some(entry) = self.cold.remove(&id) {
+            match StreamingDecoder::restore(
+                self.spec.clone(), self.heads, self.d, &entry.snap,
+            ) {
+                Ok(dec) => {
+                    self.stats.restores += 1;
+                    self.insert_live(id, dec);
+                    Origin::Restored
+                }
+                Err(e) => {
+                    // Keep the snapshot: a bad spec pairing must not
+                    // silently destroy the session.
+                    self.cold.insert(id, entry);
+                    return Err(e);
+                }
+            }
+        } else {
+            let dec = StreamingDecoder::new(self.spec.clone(), self.heads, self.d);
+            self.stats.created += 1;
+            self.insert_live(id, dec);
+            Origin::Created
+        };
+        let entry = self.live.get_mut(&id).expect("just ensured live");
+        entry.last_used = self.clock;
+        Ok((&mut entry.dec, origin))
+    }
+
+    fn insert_live(&mut self, id: u64, dec: StreamingDecoder) {
+        let bytes = dec.bytes();
+        self.live.insert(
+            id,
+            LiveEntry { dec, last_used: self.clock, bytes },
+        );
+    }
+
+    /// Finish a session for good: drop both hot and cold copies.
+    pub fn remove(&mut self, id: u64) {
+        self.live.remove(&id);
+        self.cold.remove(&id);
+    }
+
+    /// Bytes held by spilled snapshots.
+    pub fn cold_bytes(&self) -> usize {
+        self.cold.values().map(|e| e.snap.len()).sum()
+    }
+
+    /// Explicit snapshot (live sessions are serialized on the spot).
+    pub fn snapshot(&self, id: u64) -> Option<Vec<u8>> {
+        if let Some(e) = self.live.get(&id) {
+            return Some(e.dec.snapshot());
+        }
+        self.cold.get(&id).map(|e| e.snap.clone())
+    }
+
+    /// Install a snapshot taken elsewhere (e.g. after a rebatch or a
+    /// worker handoff) as the session's cold copy.
+    pub fn restore(&mut self, id: u64, snapshot: Vec<u8>) {
+        self.clock += 1;
+        self.live.remove(&id);
+        self.cold
+            .insert(id, ColdEntry { stamp: self.clock, snap: snapshot });
+    }
+
+    /// Refresh byte accounting and evict least-recently-used sessions
+    /// until the store is within budget and max_live. The most recently
+    /// used session always stays live so the request being served never
+    /// evicts itself. Beyond the cold budget the oldest snapshots are
+    /// dropped for good. Returns how many sessions were spilled.
+    pub fn enforce(&mut self) -> usize {
+        for e in self.live.values_mut() {
+            e.bytes = e.dec.bytes();
+        }
+        let mut spilled = 0;
+        while self.live.len() > 1
+            && (self.live.len() > self.max_live
+                || self.live_bytes() > self.budget_bytes)
+        {
+            let victim = self
+                .live
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&id, _)| id)
+                .expect("live nonempty");
+            let entry = self.live.remove(&victim).expect("victim live");
+            self.clock += 1;
+            self.cold.insert(
+                victim,
+                ColdEntry { stamp: self.clock, snap: entry.dec.snapshot() },
+            );
+            self.stats.spills += 1;
+            spilled += 1;
+        }
+        while !self.cold.is_empty() && self.cold_bytes() > self.cold_budget_bytes
+        {
+            let victim = self
+                .cold
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&id, _)| id)
+                .expect("cold nonempty");
+            self.cold.remove(&victim);
+            self.stats.expired += 1;
+        }
+        spilled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{draw_gaussian_features, Kind};
+    use crate::rng::Rng;
+    use crate::tensor::Mat;
+
+    fn store(budget_bytes: usize, max_live: usize) -> SessionStore {
+        let d = 4;
+        let mut rng = Rng::new(1);
+        let w = draw_gaussian_features(4, d, &mut rng);
+        let b: Vec<f32> = (0..15).map(|_| rng.normal_f32() * 0.5).collect();
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let spec = Arc::new(StreamSpec::new(kind, w, Some(&b), 8).unwrap());
+        SessionStore::new(spec, 1, d, budget_bytes, max_live)
+    }
+
+    fn feed(store: &mut SessionStore, id: u64, tokens: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let (dec, _) = store.get_or_create(id).unwrap();
+        for _ in 0..tokens {
+            let q = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
+            let k = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
+            let v = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
+            dec.step(&q, &k, &v).unwrap();
+        }
+    }
+
+    #[test]
+    fn create_hit_and_counts() {
+        let mut s = store(1 << 20, 8);
+        let (_, o1) = s.get_or_create(7).unwrap();
+        assert_eq!(o1, Origin::Created);
+        let (_, o2) = s.get_or_create(7).unwrap();
+        assert_eq!(o2, Origin::Live);
+        assert_eq!(s.stats.created, 1);
+        assert_eq!(s.stats.hits, 1);
+        assert_eq!(s.live_count(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_spills_and_restores() {
+        let mut s = store(1 << 20, 2);
+        feed(&mut s, 1, 3, 10);
+        feed(&mut s, 2, 3, 11);
+        feed(&mut s, 3, 3, 12);
+        let spilled = s.enforce();
+        assert_eq!(spilled, 1);
+        assert_eq!(s.live_count(), 2);
+        assert_eq!(s.cold_count(), 1);
+        // Session 1 was least recently used; it must come back intact.
+        assert!(s.contains(1));
+        let (dec, origin) = s.get_or_create(1).unwrap();
+        assert_eq!(origin, Origin::Restored);
+        assert_eq!(dec.positions(), 3);
+        assert_eq!(s.stats.restores, 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts() {
+        // A budget smaller than two live sessions forces a spill, but
+        // the most recent session always survives.
+        let mut s = store(1, 8);
+        feed(&mut s, 1, 8, 20);
+        feed(&mut s, 2, 8, 21);
+        s.enforce();
+        assert_eq!(s.live_count(), 1);
+        assert!(s.live_bytes() > 1); // the guard kept one despite the budget
+        let (dec, origin) = s.get_or_create(2).unwrap();
+        assert_eq!(origin, Origin::Live);
+        assert_eq!(dec.positions(), 8);
+    }
+
+    #[test]
+    fn restored_session_continues_exactly() {
+        let mut s = store(1 << 20, 4);
+        feed(&mut s, 5, 6, 30);
+        let direct = {
+            let (dec, _) = s.get_or_create(5).unwrap();
+            let mut probe = dec.clone();
+            let q = Mat::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.4]);
+            probe.step(&q, &q, &q).unwrap()
+        };
+        // Round-trip through an explicit snapshot (simulated rebatch).
+        let snap = s.snapshot(5).unwrap();
+        s.remove(5);
+        assert!(!s.contains(5));
+        s.restore(5, snap);
+        let (dec, origin) = s.get_or_create(5).unwrap();
+        assert_eq!(origin, Origin::Restored);
+        let q = Mat::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.4]);
+        let after = dec.step(&q, &q, &q).unwrap();
+        assert_eq!(direct.data, after.data);
+    }
+
+    #[test]
+    fn cold_budget_expires_oldest_snapshots() {
+        let mut s = store(1 << 20, 1);
+        s.cold_budget_bytes = 0; // no room for any snapshot
+        feed(&mut s, 1, 4, 50);
+        feed(&mut s, 2, 4, 51); // evicts 1 to cold...
+        s.enforce();
+        // ...and the cold budget immediately expires it for good.
+        assert_eq!(s.cold_count(), 0);
+        assert!(s.stats.expired >= 1);
+        assert!(!s.contains(1));
+        let (dec, origin) = s.get_or_create(1).unwrap();
+        assert_eq!(origin, Origin::Created);
+        assert_eq!(dec.positions(), 0);
+    }
+
+    #[test]
+    fn remove_forgets_session() {
+        let mut s = store(1 << 20, 4);
+        feed(&mut s, 9, 2, 40);
+        s.remove(9);
+        let (dec, origin) = s.get_or_create(9).unwrap();
+        assert_eq!(origin, Origin::Created);
+        assert_eq!(dec.positions(), 0);
+    }
+}

@@ -1,0 +1,356 @@
+//! Per-session recurrent decoder state: the (S, z) accumulators of the
+//! kernelized-attention recurrence plus the bounded ring buffer that
+//! makes the causal RPE window exact.
+//!
+//! For a kernel kind the causal attention output at position i is
+//!
+//!   y_i = ( sum_{j<=i} c_{j-i} phi(q_i)·phi(k_j) v_j )
+//!       / ( sum_{j<=i} c_{j-i} phi(q_i)·phi(k_j) + eps ).
+//!
+//! With W window coefficients c_0, c_{-1}, .., c_{-(W-1)} applied
+//! exactly to the W most recent keys (the ring buffer) and the tail
+//! approximation c_{-t} = c_{-(W-1)} for t >= W, every row that ages
+//! out of the ring folds into a single running accumulator
+//!
+//!   S = sum_{aged j} c_tail * phi(k_j) [v_j | 1]^T
+//!
+//! (the trailing column is the z normalizer), so a decode step costs
+//! O(W (m + d)) — constant in the sequence length. W >= n makes the
+//! window cover every offset that can occur and the recurrence is
+//! *exact* (see streaming/README.md).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::attention::EPS;
+
+/// One attention head's recurrent state.
+#[derive(Debug, Clone)]
+struct HeadState {
+    /// Tail accumulator: m x (d+1) row-major, already scaled by c_tail.
+    tail: Vec<f64>,
+    /// The last <= W (phi(k_j), v_j) rows, oldest at the front.
+    ring: VecDeque<(Vec<f64>, Vec<f64>)>,
+}
+
+/// Recurrent state for all heads of one decoding session.
+#[derive(Debug, Clone)]
+pub struct DecoderState {
+    m: usize,
+    d: usize,
+    window: usize,
+    heads: Vec<HeadState>,
+}
+
+impl DecoderState {
+    pub fn new(heads: usize, m: usize, d: usize, window: usize) -> DecoderState {
+        assert!(heads > 0 && m > 0 && d > 0 && window > 0);
+        let head = HeadState {
+            tail: vec![0.0; m * (d + 1)],
+            ring: VecDeque::with_capacity(window),
+        };
+        DecoderState { m, d, window, heads: vec![head; heads] }
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.m
+    }
+
+    pub fn value_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Number of key/value rows currently held in one head's ring.
+    pub fn ring_len(&self) -> usize {
+        self.heads[0].ring.len()
+    }
+
+    /// Absorb one new (key-feature, value) row for `head`. If the ring
+    /// is full the oldest row ages out: it is folded into the tail
+    /// accumulator with the boundary coefficient `c_tail`.
+    pub fn push(&mut self, head: usize, phi_k: &[f32], v: &[f32], c_tail: f64) {
+        assert_eq!(phi_k.len(), self.m);
+        assert_eq!(v.len(), self.d);
+        let d = self.d;
+        let hs = &mut self.heads[head];
+        if hs.ring.len() == self.window {
+            let (old_phi, old_v) = hs.ring.pop_front().expect("ring nonempty");
+            for (mi, &pk) in old_phi.iter().enumerate() {
+                let base = mi * (d + 1);
+                let w = c_tail * pk;
+                for (di, &vd) in old_v.iter().enumerate() {
+                    hs.tail[base + di] += w * vd;
+                }
+                hs.tail[base + d] += w;
+            }
+        }
+        hs.ring.push_back((
+            phi_k.iter().map(|&x| x as f64).collect(),
+            v.iter().map(|&x| x as f64).collect(),
+        ));
+    }
+
+    /// Attention output row for `head` against the current state.
+    /// `coeffs[t]` is the correlation at offset -t (newest ring row is
+    /// offset 0); `coeffs.len()` must equal the window.
+    pub fn query(&self, head: usize, phi_q: &[f32], coeffs: &[f64]) -> Vec<f32> {
+        assert_eq!(phi_q.len(), self.m);
+        assert_eq!(coeffs.len(), self.window);
+        let d = self.d;
+        let hs = &self.heads[head];
+        let mut num = vec![0.0f64; d];
+        let mut den = 0.0f64;
+        // Tail: num += phi_q^T S, den += phi_q^T z.
+        for (mi, &pq) in phi_q.iter().enumerate() {
+            let pq = pq as f64;
+            if pq == 0.0 {
+                continue;
+            }
+            let base = mi * (d + 1);
+            for (di, nn) in num.iter_mut().enumerate() {
+                *nn += pq * hs.tail[base + di];
+            }
+            den += pq * hs.tail[base + d];
+        }
+        // Window: newest row (back of the ring) sits at offset 0.
+        for (t, (phi_k, v)) in hs.ring.iter().rev().enumerate() {
+            let mut dot = 0.0f64;
+            for (pq, pk) in phi_q.iter().zip(phi_k) {
+                dot += *pq as f64 * pk;
+            }
+            let s = coeffs[t] * dot;
+            for (nn, vd) in num.iter_mut().zip(v) {
+                *nn += s * vd;
+            }
+            den += s;
+        }
+        let inv = 1.0 / (den + EPS as f64);
+        num.iter().map(|&x| (x * inv) as f32).collect()
+    }
+
+    /// Approximate live heap footprint, for the session byte budget.
+    pub fn bytes(&self) -> usize {
+        let per_row = (self.m + self.d) * 8 + 64;
+        self.heads
+            .iter()
+            .map(|h| h.tail.len() * 8 + h.ring.len() * per_row)
+            .sum()
+    }
+
+    // -- snapshot / restore ------------------------------------------------
+
+    /// Serialize to a flat little-endian byte vector.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &x in &[self.heads.len(), self.m, self.d, self.window] {
+            out.extend((x as u64).to_le_bytes());
+        }
+        for hs in &self.heads {
+            out.extend((hs.ring.len() as u64).to_le_bytes());
+            for &x in &hs.tail {
+                out.extend(x.to_le_bytes());
+            }
+            for (phi, v) in &hs.ring {
+                for &x in phi {
+                    out.extend(x.to_le_bytes());
+                }
+                for &x in v {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<DecoderState> {
+        let mut cur = Cursor { bytes, pos: 0 };
+        let heads = cur.u64()? as usize;
+        let m = cur.u64()? as usize;
+        let d = cur.u64()? as usize;
+        let window = cur.u64()? as usize;
+        if heads == 0 || m == 0 || d == 0 || window == 0 {
+            bail!("decoder snapshot: zero dimension");
+        }
+        let cells = heads
+            .checked_mul(m)
+            .and_then(|x| x.checked_mul(d + 1))
+            .unwrap_or(usize::MAX);
+        if cells > 1 << 30 || window > 1 << 24 {
+            bail!("decoder snapshot: implausible dimensions");
+        }
+        let mut out = DecoderState::new(heads, m, d, window);
+        for hs in out.heads.iter_mut() {
+            let ring_len = cur.u64()? as usize;
+            if ring_len > window {
+                bail!("decoder snapshot: ring {ring_len} > window {window}");
+            }
+            for x in hs.tail.iter_mut() {
+                *x = cur.f64()?;
+            }
+            hs.ring.clear();
+            for _ in 0..ring_len {
+                let phi: Vec<f64> =
+                    (0..m).map(|_| cur.f64()).collect::<Result<_>>()?;
+                let v: Vec<f64> =
+                    (0..d).map(|_| cur.f64()).collect::<Result<_>>()?;
+                hs.ring.push_back((phi, v));
+            }
+        }
+        if cur.pos != bytes.len() {
+            bail!(
+                "decoder snapshot: {} trailing bytes",
+                bytes.len() - cur.pos
+            );
+        }
+        Ok(out)
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("decoder snapshot: truncated at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_ages_rows_into_tail() {
+        let mut st = DecoderState::new(1, 2, 1, 2);
+        // Three pushes through a window of 2: the first row must age out.
+        st.push(0, &[1.0, 0.0], &[3.0], 0.5);
+        st.push(0, &[0.0, 1.0], &[5.0], 0.5);
+        assert_eq!(st.ring_len(), 2);
+        st.push(0, &[1.0, 1.0], &[7.0], 0.5);
+        assert_eq!(st.ring_len(), 2);
+        // tail = 0.5 * phi [v | 1] for phi=[1,0], v=[3].
+        let y = st.query(0, &[1.0, 0.0], &[0.0, 0.0]);
+        // coeffs zero => only the tail contributes: num=1.5, den=0.5.
+        assert!((y[0] - 1.5 / (0.5 + EPS)).abs() < 1e-5, "{y:?}");
+    }
+
+    #[test]
+    fn query_matches_dense_sum() {
+        // Window large enough: query == dense weighted average.
+        let mut st = DecoderState::new(1, 3, 2, 8);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> = vec![
+            (vec![0.2, 0.1, 0.4], vec![1.0, -1.0]),
+            (vec![0.3, 0.5, 0.1], vec![0.5, 2.0]),
+            (vec![0.1, 0.2, 0.3], vec![-2.0, 0.25]),
+        ];
+        for (phi, v) in &rows {
+            st.push(0, phi, v, 1.0);
+        }
+        let coeffs = [1.0, 0.7, 0.3, 0.3, 0.3, 0.3, 0.3, 0.3];
+        let phi_q = [0.4f32, 0.2, 0.6];
+        let y = st.query(0, &phi_q, &coeffs);
+        let mut num = [0.0f64; 2];
+        let mut den = 0.0f64;
+        for (j, (phi, v)) in rows.iter().enumerate() {
+            let offset = rows.len() - 1 - j; // newest row = offset 0
+            let dot: f64 = phi_q
+                .iter()
+                .zip(phi)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let s = coeffs[offset] * dot;
+            num[0] += s * v[0] as f64;
+            num[1] += s * v[1] as f64;
+            den += s;
+        }
+        for di in 0..2 {
+            let want = (num[di] / (den + EPS as f64)) as f32;
+            assert!((y[di] - want).abs() < 1e-6, "di={di}");
+        }
+    }
+
+    #[test]
+    fn heads_are_independent() {
+        let mut st = DecoderState::new(2, 2, 1, 4);
+        st.push(0, &[1.0, 0.0], &[1.0], 1.0);
+        st.push(1, &[1.0, 0.0], &[-1.0], 1.0);
+        let y0 = st.query(0, &[1.0, 0.0], &[1.0, 1.0, 1.0, 1.0]);
+        let y1 = st.query(1, &[1.0, 0.0], &[1.0, 1.0, 1.0, 1.0]);
+        assert!(y0[0] > 0.0 && y1[0] < 0.0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_queries() {
+        let mut st = DecoderState::new(2, 4, 3, 3);
+        for i in 0..7 {
+            let phi: Vec<f32> = (0..4).map(|j| (i * 4 + j) as f32 * 0.1).collect();
+            let v: Vec<f32> = (0..3).map(|j| (i + j) as f32 * 0.2 - 1.0).collect();
+            st.push(0, &phi, &v, 0.8);
+            let phi2: Vec<f32> = phi.iter().map(|x| x + 0.5).collect();
+            st.push(1, &phi2, &v, 0.8);
+        }
+        let bytes = st.to_bytes();
+        let back = DecoderState::from_bytes(&bytes).expect("roundtrip");
+        let coeffs = [1.0, 0.9, 0.8];
+        let phi_q = [0.3f32, -0.2, 0.5, 0.1];
+        for head in 0..2 {
+            let a = st.query(head, &phi_q, &coeffs);
+            let b = back.query(head, &phi_q, &coeffs);
+            assert_eq!(a, b, "head {head}");
+        }
+        assert_eq!(st.ring_len(), back.ring_len());
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(DecoderState::from_bytes(&[]).is_err());
+        assert!(DecoderState::from_bytes(&[0u8; 32]).is_err());
+        let st = DecoderState::new(1, 2, 2, 2);
+        let mut bytes = st.to_bytes();
+        bytes.pop();
+        assert!(DecoderState::from_bytes(&bytes).is_err());
+        bytes.push(0);
+        bytes.push(0);
+        assert!(DecoderState::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bytes_grow_with_ring() {
+        let mut st = DecoderState::new(1, 8, 8, 16);
+        let b0 = st.bytes();
+        for _ in 0..16 {
+            st.push(0, &[0.1; 8], &[0.2; 8], 1.0);
+        }
+        assert!(st.bytes() > b0);
+        let full = st.bytes();
+        // Ring is saturated: pushing more keeps the footprint flat.
+        for _ in 0..16 {
+            st.push(0, &[0.1; 8], &[0.2; 8], 1.0);
+        }
+        assert_eq!(st.bytes(), full);
+    }
+}

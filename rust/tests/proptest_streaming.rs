@@ -1,0 +1,206 @@
+//! Property tests for the streaming decode subsystem: the recurrent
+//! `StreamingDecoder` must reproduce `attention::attend` for every
+//! kernel kind once the window covers the sequence (W >= n), including
+//! non-power-of-two lengths through the `ToeplitzPlan` prefill, at
+//! 1e-4 tolerance; and bounded windows must equal the tail-saturated
+//! dense oracle.
+
+use std::sync::Arc;
+
+use kafft::attention::{self, draw_gaussian_features, kernel_features, Kind};
+use kafft::rng::Rng;
+use kafft::streaming::{StreamSpec, StreamingDecoder};
+use kafft::tensor::Mat;
+use kafft::util::prop::{forall, Gen};
+
+/// All streamable attention kinds (every Kind::Kernel{..} variant).
+const KERNEL_KINDS: [&str; 6] = [
+    "prf",
+    "nprf",
+    "prf_rpe_fft",
+    "prf_rpe_direct",
+    "nprf_rpe_fft",
+    "nprf_rpe_direct",
+];
+
+/// (n, d, m, prefill split, seed) with shrinking toward tiny shapes.
+struct StreamCase;
+
+impl Gen for StreamCase {
+    type Value = (usize, usize, usize, usize, u64);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        // n in [2, 41] hits plenty of non-powers-of-two; the split
+        // puts anywhere from nothing to all-but-one token in prefill.
+        let n = 2 + rng.below_usize(40);
+        let d = 2 + rng.below_usize(6);
+        let m = 1 + rng.below_usize(7);
+        let split = rng.below_usize(n);
+        (n, d, m, split, rng.next_u64())
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 2 {
+            out.push((2, v.1, v.2, 0, v.4));
+            out.push((v.0 / 2, v.1, v.2, v.3.min(v.0 / 2 - 1), v.4));
+        }
+        if v.3 > 0 {
+            out.push((v.0, v.1, v.2, 0, v.4));
+        }
+        out
+    }
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, rng.normal_vec(r * c, 0.5))
+}
+
+fn take_rows(mat: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_vec(hi - lo, mat.cols, mat.data[lo * mat.cols..hi * mat.cols].to_vec())
+}
+
+fn row_mat(mat: &Mat, i: usize) -> Mat {
+    Mat::from_vec(1, mat.cols, mat.row(i).to_vec())
+}
+
+/// Run prefill(split) + steps over the rest; return the (n, d) output.
+fn stream_all(spec: Arc<StreamSpec>, q: &Mat, k: &Mat, v: &Mat,
+              split: usize) -> Mat {
+    let n = q.rows;
+    let d = v.cols;
+    let mut dec = StreamingDecoder::new(spec, 1, d);
+    let mut out = Mat::zeros(n, d);
+    if split > 0 {
+        let pre = dec
+            .prefill(
+                &[take_rows(q, 0, split)],
+                &[take_rows(k, 0, split)],
+                &[take_rows(v, 0, split)],
+            )
+            .expect("prefill");
+        for i in 0..split {
+            out.row_mut(i).copy_from_slice(pre[0].row(i));
+        }
+    }
+    for i in split..n {
+        let y = dec
+            .step(&row_mat(q, i), &row_mat(k, i), &row_mat(v, i))
+            .expect("step");
+        out.row_mut(i).copy_from_slice(y.row(0));
+    }
+    out
+}
+
+#[test]
+fn prop_streaming_matches_attend_all_kernel_kinds() {
+    for kind_s in KERNEL_KINDS {
+        let kind = Kind::parse(kind_s).expect("kernel kind");
+        assert!(kind.streamable());
+        forall(
+            &format!("streaming=={kind_s}"),
+            12,
+            0xC0FFEE,
+            &StreamCase,
+            |&(n, d, m, split, seed)| {
+                let mut rng = Rng::new(seed);
+                let q = rand_mat(&mut rng, n, d);
+                let k = rand_mat(&mut rng, n, d);
+                let v = rand_mat(&mut rng, n, d);
+                let w = draw_gaussian_features(m, d, &mut rng);
+                let b = rng.normal_vec(2 * n - 1, 0.5);
+                let oracle = attention::attend(
+                    kind, &q, &k, &v, Some(&w), Some(&b), true,
+                );
+                // W = n: the window covers every causal offset.
+                let spec = StreamSpec::new(kind, w, Some(&b), n)
+                    .map_err(|e| format!("spec: {e}"))?;
+                let got = stream_all(Arc::new(spec), &q, &k, &v, split);
+                let err = got.max_abs_diff(&oracle);
+                if err < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("max err {err} (split={split})"))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_windowed_streaming_matches_saturated_oracle() {
+    // W < n is a *defined* operator: dense attention with the
+    // tail-saturated coefficient vector. Streaming must match it.
+    forall(
+        "windowed-streaming==saturated-oracle",
+        15,
+        0xBEEF,
+        &StreamCase,
+        |&(n, d, m, split, seed)| {
+            let kind = Kind::Kernel { norm: true, rpe: true, fft: false };
+            let mut rng = Rng::new(seed);
+            let q = rand_mat(&mut rng, n, d);
+            let k = rand_mat(&mut rng, n, d);
+            let v = rand_mat(&mut rng, n, d);
+            let w = draw_gaussian_features(m, d, &mut rng);
+            let b = rng.normal_vec(2 * n - 1, 0.5);
+            let window = 1 + seed as usize % n;
+            let spec = StreamSpec::new(kind, w.clone(), Some(&b), window)
+                .map_err(|e| format!("spec: {e}"))?;
+            let c = spec.effective_coeffs(n);
+            let phi_q = kernel_features(kind, &q, &w);
+            let phi_k = kernel_features(kind, &k, &w);
+            let oracle =
+                attention::kernel_attention(&phi_q, &phi_k, &v, Some(&c), true);
+            let got = stream_all(Arc::new(spec), &q, &k, &v, split);
+            let err = got.max_abs_diff(&oracle);
+            if err < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("max err {err} (window={window}, split={split})"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_snapshot_restore_is_transparent() {
+    // Snapshot/restore at an arbitrary point must not perturb any
+    // later output bit (the state is exact f64 data, not approximate).
+    forall(
+        "snapshot-transparent",
+        12,
+        0xFADE,
+        &StreamCase,
+        |&(n, d, m, split, seed)| {
+            let kind = Kind::Kernel { norm: false, rpe: true, fft: true };
+            let mut rng = Rng::new(seed);
+            let q = rand_mat(&mut rng, n, d);
+            let k = rand_mat(&mut rng, n, d);
+            let v = rand_mat(&mut rng, n, d);
+            let w = draw_gaussian_features(m, d, &mut rng);
+            let b = rng.normal_vec(2 * n - 1, 0.5);
+            let spec = Arc::new(
+                StreamSpec::new(kind, w, Some(&b), n)
+                    .map_err(|e| format!("spec: {e}"))?,
+            );
+            let mut a = StreamingDecoder::new(spec.clone(), 1, d);
+            for i in 0..split {
+                a.step(&row_mat(&q, i), &row_mat(&k, i), &row_mat(&v, i))
+                    .map_err(|e| format!("step: {e}"))?;
+            }
+            let mut b2 = StreamingDecoder::restore(spec, 1, d, &a.snapshot())
+                .map_err(|e| format!("restore: {e}"))?;
+            for i in split..n {
+                let ya = a
+                    .step(&row_mat(&q, i), &row_mat(&k, i), &row_mat(&v, i))
+                    .map_err(|e| format!("step a: {e}"))?;
+                let yb = b2
+                    .step(&row_mat(&q, i), &row_mat(&k, i), &row_mat(&v, i))
+                    .map_err(|e| format!("step b: {e}"))?;
+                if ya.data != yb.data {
+                    return Err(format!("restored path diverged at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
