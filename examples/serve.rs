@@ -4,7 +4,7 @@
 //! into padded batches over the compiled .fwd_b{1,2,4,8} executables.
 //!
 //!   cargo run --release --example serve -- [requests] [clients]
-//!   cargo run --release --example serve -- --streaming [sessions] [gen]
+//!   cargo run --release --example serve -- --streaming [sessions] [gen] [workers] [cache_mb]
 //!
 //! With --streaming the demo instead drives the recurrent-state
 //! streaming server (`coordinator::server::StreamingServer`): N
@@ -117,17 +117,24 @@ fn streaming_demo(args: &[String]) -> anyhow::Result<()> {
 
     let sessions: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
     let gen: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    // Optional third/fourth positionals: engine workers (0 = one per
+    // core) and plan-cache budget in MiB.
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let cache_mb: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(64);
     let prompt_len = 32;
     let cfg = StreamingServerConfig {
         max_len: prompt_len + gen,
         window: prompt_len + gen,
         max_live: (sessions / 2).max(1), // force some spill/restore traffic
+        workers,
+        plan_cache_bytes: cache_mb << 20,
         ..StreamingServerConfig::default()
     };
     let vocab = cfg.vocab;
     println!(
         "streaming server: {sessions} sessions x ({prompt_len} prompt + \
-         {gen} gen), max_live={}",
+         {gen} gen), max_live={}, workers={workers} (0=auto), plan cache \
+         {cache_mb} MiB",
         cfg.max_live
     );
     let server = Arc::new(StreamingServer::start(cfg)?);
@@ -200,6 +207,15 @@ fn streaming_demo(args: &[String]) -> anyhow::Result<()> {
         stats.requests,
         stats.exec_secs,
         100.0 * stats.exec_secs / wall
+    );
+    println!(
+        "plan cache: {} plans, {:.1}% hit rate ({} hits / {} misses), \
+         {} KiB resident",
+        stats.plan_cache.plans,
+        100.0 * stats.plan_cache.hit_rate(),
+        stats.plan_cache.hits,
+        stats.plan_cache.misses,
+        stats.plan_cache.bytes >> 10
     );
     Ok(())
 }

@@ -261,7 +261,10 @@ fn kv_aggregate_f64(phi_k: &Mat, v: &Mat) -> Vec<f64> {
 }
 
 /// The O(n log n) path: kv aggregation + Toeplitz-FFT + readout —
-/// the Rust mirror of Algorithm 1.
+/// the Rust mirror of Algorithm 1. Builds a fresh `ToeplitzPlan` per
+/// call; serving paths should prefer `nprf_rpe_fft_path_with_plan`
+/// with a plan from `engine::PlanCache` so the coefficient spectrum is
+/// amortized across the batch.
 pub fn nprf_rpe_fft_path(phi_q: &Mat, phi_k: &Mat, v: &Mat, c: &[f32],
                          causal: bool) -> Mat {
     let n = phi_k.rows;
@@ -271,6 +274,21 @@ pub fn nprf_rpe_fft_path(phi_q: &Mat, phi_k: &Mat, v: &Mat, c: &[f32],
     let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
     let c64 = if causal { causal_coeffs(&c64, n) } else { c64 };
     let dmat = toeplitz_mul_fft(&c64, &p, n, f);
+    readout(phi_q, &dmat, d)
+}
+
+/// `nprf_rpe_fft_path` against a prebuilt (typically cached) plan whose
+/// coefficients already carry the causal mask. Uses the multi-column
+/// batched FFT; bitwise equal to the per-call path for the same
+/// coefficients (see `ToeplitzPlan::apply_batched`).
+pub fn nprf_rpe_fft_path_with_plan(phi_q: &Mat, phi_k: &Mat, v: &Mat,
+                                   plan: &crate::toeplitz::ToeplitzPlan) -> Mat {
+    let n = phi_k.rows;
+    assert_eq!(plan.n(), n, "plan length {} != sequence length {n}", plan.n());
+    let d = v.cols;
+    let f = phi_k.cols * (d + 1);
+    let p = kv_aggregate_f64(phi_k, v);
+    let dmat = plan.apply_batched(&p, f);
     readout(phi_q, &dmat, d)
 }
 
@@ -358,6 +376,29 @@ mod tests {
             let a = nprf_rpe_fft_path(&phi_q, &phi_k, &v, &c, causal);
             let bb = nprf_rpe_direct_path(&phi_q, &phi_k, &v, &c, causal);
             assert!(a.max_abs_diff(&bb) < 1e-4, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn fft_path_with_plan_bitwise_matches_per_call_path() {
+        let n = 21;
+        let d = 5;
+        let m = 4;
+        let mut rng = Rng::new(17);
+        let q = rand_mat(n, d, 60).l2_normalize_rows();
+        let k = rand_mat(n, d, 61).l2_normalize_rows();
+        let v = rand_mat(n, d, 62);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let phi_q = phi_prf(&q, &w);
+        let phi_k = phi_prf(&k, &w);
+        let c: Vec<f32> = (0..2 * n - 1).map(|i| (0.05 * i as f32).exp()).collect();
+        for causal in [false, true] {
+            let want = nprf_rpe_fft_path(&phi_q, &phi_k, &v, &c, causal);
+            let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+            let c64 = if causal { causal_coeffs(&c64, n) } else { c64 };
+            let plan = crate::toeplitz::ToeplitzPlan::new(&c64, n);
+            let got = nprf_rpe_fft_path_with_plan(&phi_q, &phi_k, &v, &plan);
+            assert_eq!(got.data, want.data, "causal={causal}");
         }
     }
 

@@ -154,6 +154,12 @@ impl CpuLm {
         b
     }
 
+    /// The PRF feature weights, (m, d) — shared by every request so
+    /// the batched engine can reference them per item.
+    pub fn features(&self) -> &Mat {
+        &self.features
+    }
+
     /// The streaming spec for this model (shared across sessions).
     pub fn spec(&self, window: usize) -> Result<Arc<StreamSpec>> {
         let b = self.bias_full(self.max_len);

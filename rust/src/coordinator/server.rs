@@ -25,8 +25,10 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::attention::Kind;
 use crate::coordinator::decode::CpuLm;
+use crate::engine::{AttendItem, CacheStats, Engine, EngineConfig, PlanCache};
 use crate::runtime::{HostTensor, Runtime};
 use crate::streaming::{Origin, SessionStore};
+use crate::tensor::Mat;
 
 #[derive(Debug, Clone)]
 pub struct LmRequest {
@@ -281,6 +283,27 @@ struct StreamPending {
     reply: Sender<Result<StreamResponse, String>>,
 }
 
+/// A stateless batched request: next-token logits for each prompt,
+/// computed through the engine's plan-cached batched attention. Shares
+/// the per-model `PlanCache` with the streaming prefills.
+struct BatchPending {
+    prompts: Vec<Vec<i32>>,
+    enqueued: Instant,
+    reply: Sender<Result<BatchResponse, String>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchResponse {
+    /// One logits row per submitted prompt, in order.
+    pub next_logits: Vec<Vec<f32>>,
+    pub latency: Duration,
+}
+
+enum StreamJob {
+    Stream(StreamPending),
+    Batch(BatchPending),
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct StreamStats {
     pub requests: usize,
@@ -290,6 +313,13 @@ pub struct StreamStats {
     pub restores: usize,
     pub spills: usize,
     pub exec_secs: f64,
+    /// Batched (stateless) requests served through the engine.
+    pub batch_requests: usize,
+    /// Prompts across all batched requests.
+    pub batch_prompts: usize,
+    /// Shared Toeplitz plan cache counters at shutdown: one cache per
+    /// model, drawn on by both streaming prefills and batch requests.
+    pub plan_cache: CacheStats,
 }
 
 pub struct StreamingServerConfig {
@@ -304,6 +334,10 @@ pub struct StreamingServerConfig {
     pub budget_bytes: usize,
     pub max_live: usize,
     pub seed: u64,
+    /// Engine worker threads for batched attention (0 = one per core).
+    pub workers: usize,
+    /// Byte budget for the shared Toeplitz plan cache.
+    pub plan_cache_bytes: usize,
 }
 
 impl Default for StreamingServerConfig {
@@ -318,6 +352,8 @@ impl Default for StreamingServerConfig {
             budget_bytes: 32 << 20,
             max_live: 64,
             seed: 0,
+            workers: 0,
+            plan_cache_bytes: PlanCache::DEFAULT_BUDGET_BYTES,
         }
     }
 }
@@ -325,7 +361,7 @@ impl Default for StreamingServerConfig {
 /// The streaming decode server: one worker thread owning the model and
 /// the session store. Submissions are cheap; state lives server-side.
 pub struct StreamingServer {
-    tx: Sender<StreamPending>,
+    tx: Sender<StreamJob>,
     handle: Option<std::thread::JoinHandle<StreamStats>>,
 }
 
@@ -336,13 +372,22 @@ impl StreamingServer {
             cfg.seed,
         )?;
         let spec = lm.spec(cfg.window)?;
+        let engine = Engine::new(EngineConfig {
+            workers: cfg.workers,
+            plan_cache_bytes: cfg.plan_cache_bytes,
+        });
+        // One plan cache per model: streaming prefills (via the store)
+        // and batched requests (via the engine) share its byte budget,
+        // counters, and twiddle tables. (Their *entries* stay distinct:
+        // prefill keys on the spec's windowed coefficients, the batch
+        // path on the raw per-length bias.)
         let store = SessionStore::new(
             spec, 1, cfg.d_model, cfg.budget_bytes, cfg.max_live,
-        );
-        let (tx, rx): (Sender<StreamPending>, Receiver<StreamPending>) =
-            channel();
+        )
+        .with_plan_cache(engine.cache().clone());
+        let (tx, rx): (Sender<StreamJob>, Receiver<StreamJob>) = channel();
         let handle =
-            std::thread::spawn(move || stream_worker(lm, store, rx));
+            std::thread::spawn(move || stream_worker(lm, store, engine, rx));
         Ok(StreamingServer { tx, handle: Some(handle) })
     }
 
@@ -364,15 +409,32 @@ impl StreamingServer {
         })
     }
 
+    /// Submit a stateless prompt batch: next-token logits for every
+    /// prompt, fanned across the engine workers, plans drawn from the
+    /// per-model cache (one budget and twiddle-table pool shared with
+    /// the streaming prefills).
+    pub fn submit_prompt_batch(&self, prompts: Vec<Vec<i32>>)
+                               -> Result<Receiver<Result<BatchResponse, String>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(StreamJob::Batch(BatchPending {
+                prompts,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow!("streaming server is shut down"))?;
+        Ok(reply_rx)
+    }
+
     fn send(&self, req: StreamRequest)
             -> Result<Receiver<Result<StreamResponse, String>>> {
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(StreamPending {
+            .send(StreamJob::Stream(StreamPending {
                 req,
                 enqueued: Instant::now(),
                 reply: reply_tx,
-            })
+            }))
             .map_err(|_| anyhow!("streaming server is shut down"))?;
         Ok(reply_rx)
     }
@@ -386,35 +448,102 @@ impl StreamingServer {
     }
 }
 
-fn stream_worker(lm: CpuLm, mut store: SessionStore,
-                 rx: Receiver<StreamPending>) -> StreamStats {
+fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
+                 rx: Receiver<StreamJob>) -> StreamStats {
     let mut stats = StreamStats::default();
-    while let Ok(p) = rx.recv() {
-        let t0 = Instant::now();
-        let out = serve_stream_request(&lm, &mut store, &p.req);
-        stats.exec_secs += t0.elapsed().as_secs_f64();
-        stats.requests += 1;
-        match &out {
-            Ok(resp) => {
-                stats.tokens += p.req.tokens.len();
-                if resp.origin == Origin::Created {
-                    stats.prefill_tokens += p.req.tokens.len();
+    while let Ok(job) = rx.recv() {
+        match job {
+            StreamJob::Stream(p) => {
+                let t0 = Instant::now();
+                let out = serve_stream_request(&lm, &mut store, &p.req);
+                stats.exec_secs += t0.elapsed().as_secs_f64();
+                stats.requests += 1;
+                match &out {
+                    Ok(resp) => {
+                        stats.tokens += p.req.tokens.len();
+                        if resp.origin == Origin::Created {
+                            stats.prefill_tokens += p.req.tokens.len();
+                        }
+                    }
+                    Err(e) => crate::error!("stream request failed: {e}"),
                 }
+                store.enforce();
+                let _ = p.reply.send(out.map(|mut r| {
+                    r.latency = p.enqueued.elapsed();
+                    r
+                }).map_err(|e| format!("{e:#}")));
             }
-            Err(e) => crate::error!("stream request failed: {e}"),
+            StreamJob::Batch(p) => {
+                let t0 = Instant::now();
+                let out = serve_prompt_batch(&lm, &engine, &p.prompts);
+                stats.exec_secs += t0.elapsed().as_secs_f64();
+                stats.batch_requests += 1;
+                match &out {
+                    Ok(_) => stats.batch_prompts += p.prompts.len(),
+                    Err(e) => crate::error!("batch request failed: {e}"),
+                }
+                let _ = p.reply.send(
+                    out.map(|next_logits| BatchResponse {
+                        next_logits,
+                        latency: p.enqueued.elapsed(),
+                    })
+                    .map_err(|e| format!("{e:#}")),
+                );
+            }
         }
-        store.enforce();
-        let _ = p.reply.send(out.map(|mut r| {
-            r.latency = p.enqueued.elapsed();
-            r
-        }).map_err(|e| format!("{e:#}")));
     }
     // Session-cache counters come straight from the store so the two
-    // accountings cannot drift.
+    // accountings cannot drift; same for the shared plan cache.
     stats.sessions_created = store.stats.created;
     stats.restores = store.stats.restores;
     stats.spills = store.stats.spills;
+    stats.plan_cache = store.plan_cache().stats();
     stats
+}
+
+/// Next-token logits for each prompt via the engine: one `AttendItem`
+/// per prompt (the CPU testbed LM is single-head), all drawing their
+/// Toeplitz plans from the shared per-model cache.
+fn serve_prompt_batch(lm: &CpuLm, engine: &Engine,
+                      prompts: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+    if prompts.is_empty() {
+        bail!("batch request with no prompts");
+    }
+    for (i, p) in prompts.iter().enumerate() {
+        if p.is_empty() {
+            bail!("batch request: prompt {i} is empty");
+        }
+        if p.len() > lm.max_len {
+            bail!(
+                "batch request: prompt {i} has {} tokens, over max_len {}",
+                p.len(),
+                lm.max_len
+            );
+        }
+    }
+    let qkv: Vec<(Mat, Mat, Mat)> =
+        prompts.iter().map(|p| lm.qkv(p)).collect();
+    let biases: Vec<Vec<f32>> =
+        prompts.iter().map(|p| lm.bias_full(p.len())).collect();
+    let items: Vec<AttendItem> = qkv
+        .iter()
+        .zip(&biases)
+        .map(|((q, k, v), b)| AttendItem {
+            kind: lm.kind,
+            q,
+            k,
+            v,
+            features: Some(lm.features()),
+            bias: Some(b),
+            causal: true,
+        })
+        .collect();
+    let outs = engine.attend_batch(&items)?;
+    Ok(outs
+        .iter()
+        .zip(prompts)
+        .map(|(y, p)| lm.logits(y.row(p.len() - 1)))
+        .collect())
 }
 
 fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
@@ -435,7 +564,9 @@ fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
         }
     }
     // The block scopes the &mut session so the rejection path below can
-    // clean the store up again.
+    // clean the store up again. The plan cache is cloned out first so
+    // the prefill can use it while the session is mutably borrowed.
+    let plan_cache = store.plan_cache();
     let outcome = {
         let (dec, origin) = store.get_or_create(req.session)?;
         let pos = dec.positions();
@@ -461,9 +592,10 @@ fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
         } else {
             let last = if pos == 0 {
                 // Fresh session: absorb the whole prompt through the
-                // FFT prefill instead of token-by-token stepping.
+                // FFT prefill (plan drawn from the shared per-model
+                // cache) instead of token-by-token stepping.
                 let (q, k, v) = lm.qkv(&req.tokens);
-                let pre = dec.prefill(&[q], &[k], &[v])?;
+                let pre = dec.prefill_cached(&[q], &[k], &[v], &plan_cache)?;
                 pre[0].row(req.tokens.len() - 1).to_vec()
             } else {
                 let mut last = Vec::new();
@@ -617,6 +749,92 @@ mod tests {
         assert!(stats.restores >= 4, "restores={}", stats.restores);
         assert!(stats.spills >= 4, "spills={}", stats.spills);
         assert_eq!(stats.sessions_created, 2);
+    }
+
+    #[test]
+    fn prompt_batch_matches_full_logits_and_shares_cache() {
+        let cfg = StreamingServerConfig {
+            vocab: 32,
+            d_model: 8,
+            features: 8,
+            max_len: 24,
+            window: 24,
+            seed: 13,
+            // One worker keeps the hit/miss accounting below exact
+            // (concurrent first-misses on one key may double-build).
+            workers: 1,
+            ..StreamingServerConfig::default()
+        };
+        let kind = cfg.kind;
+        let lm = CpuLm::new(
+            kind, cfg.vocab, cfg.d_model, cfg.features, cfg.max_len, cfg.seed,
+        )
+        .unwrap();
+        let server = StreamingServer::start(cfg).unwrap();
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![1, 2, 3, 4, 5, 6, 7, 8],
+            vec![9, 10, 11, 12, 13, 14, 15, 16],
+            vec![4, 4, 4, 4, 4, 4, 4, 4],
+        ];
+        let resp = server
+            .submit_prompt_batch(prompts.clone())
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("batch ok");
+        assert_eq!(resp.next_logits.len(), prompts.len());
+        for (i, p) in prompts.iter().enumerate() {
+            let want = lm.full_logits(p);
+            assert_eq!(resp.next_logits[i], want, "prompt {i}");
+        }
+        // A streaming session with the same prompt length must hit the
+        // plan the batch populated (one cache per model).
+        let r = server
+            .submit(1, prompts[0].clone())
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("prefill ok");
+        assert_eq!(r.positions, prompts[0].len());
+        let stats = server.shutdown();
+        assert_eq!(stats.batch_requests, 1);
+        assert_eq!(stats.batch_prompts, 3);
+        // Four plan lookups total: 3 batch items sharing one length
+        // (1 miss + 2 hits) plus the streaming prefill, which keys on
+        // the spec's windowed coefficients — usually a second miss,
+        // or a hit if the window's max-shift coincides.
+        let pc = &stats.plan_cache;
+        assert_eq!(pc.hits + pc.misses, 4, "{pc:?}");
+        assert!((1..=2).contains(&pc.misses), "{pc:?}");
+    }
+
+    #[test]
+    fn prompt_batch_rejects_bad_prompts() {
+        let cfg = StreamingServerConfig {
+            vocab: 16,
+            d_model: 4,
+            features: 4,
+            max_len: 8,
+            window: 8,
+            seed: 1,
+            ..StreamingServerConfig::default()
+        };
+        let server = StreamingServer::start(cfg).unwrap();
+        let r = server.submit_prompt_batch(vec![]).unwrap().recv().unwrap();
+        assert!(r.is_err(), "empty batch must be rejected");
+        let r = server
+            .submit_prompt_batch(vec![vec![1, 2], vec![]])
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(r.is_err(), "empty prompt must be rejected");
+        let r = server
+            .submit_prompt_batch(vec![vec![0; 9]])
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(r.is_err(), "over-max_len prompt must be rejected");
+        server.shutdown();
     }
 
     #[test]

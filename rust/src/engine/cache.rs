@@ -1,0 +1,392 @@
+//! The shared `ToeplitzPlan` cache.
+//!
+//! The RPE coefficient vector of a layer/head is fixed across requests,
+//! so the FFT of its circulant embedding (the expensive half of
+//! `ToeplitzPlan::new`) should be computed once per (coefficients,
+//! length, causality) triple and reused by every request that hits the
+//! same shape — not rebuilt for every head of every call the way
+//! `toeplitz_mul_fft` does. Keys carry a 64-bit FNV-1a fingerprint of
+//! the raw coefficient bits; values are `Arc<ToeplitzPlan>` so an
+//! evicted plan stays alive for callers still holding it. Twiddle
+//! tables (`FftPlan`) are cached one level deeper, keyed by embedded
+//! FFT length, because `next_pow2(2n)` collapses many sequence lengths
+//! onto one table.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::fft::{next_pow2, FftPlan};
+use crate::toeplitz::{causal_coeffs, ToeplitzPlan};
+
+/// FNV-1a over the length and the raw f64 bit patterns. Bit-exact:
+/// coefficient vectors that differ in any ULP get different plans.
+pub fn coeff_fingerprint(c: &[f64]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |word: u64| {
+        for byte in word.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(c.len() as u64);
+    for &x in c {
+        eat(x.to_bits());
+    }
+    h
+}
+
+/// Cache key: sequence length, causal masking, coefficient fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub n: usize,
+    pub causal: bool,
+    pub fingerprint: u64,
+}
+
+/// Counters + occupancy snapshot (see `PlanCache::stats`).
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Resident Toeplitz plans.
+    pub plans: usize,
+    /// Bytes held by resident kernel spectra.
+    pub bytes: usize,
+    /// Configured byte budget.
+    pub budget_bytes: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    plan: Arc<ToeplitzPlan>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// How many distinct embedded FFT lengths keep their twiddle tables
+/// resident; beyond this the least-recently-used table is dropped.
+const MAX_FFT_TABLES: usize = 8;
+
+struct Inner {
+    plans: HashMap<PlanKey, Entry>,
+    ffts: HashMap<usize, (Arc<FftPlan>, u64)>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe LRU plan cache under a byte budget. Shared across the
+/// batch and streaming serving paths of one model (`Arc<PlanCache>`).
+pub struct PlanCache {
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    pub const DEFAULT_BUDGET_BYTES: usize = 64 << 20;
+
+    pub fn new(budget_bytes: usize) -> PlanCache {
+        PlanCache {
+            budget_bytes,
+            inner: Mutex::new(Inner {
+                plans: HashMap::new(),
+                ffts: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Fetch (or build and insert) the plan for raw coefficients `c`
+    /// (length 2n-1, NOT yet causally masked) at sequence length `n`.
+    /// `causal` masks positive offsets before the spectrum is taken, and
+    /// is part of the key, so causal and bidirectional plans coexist.
+    pub fn get(&self, c: &[f64], n: usize, causal: bool) -> Arc<ToeplitzPlan> {
+        assert_eq!(c.len(), 2 * n - 1, "coefficient vector must be 2n-1");
+        let key = PlanKey { n, causal, fingerprint: coeff_fingerprint(c) };
+        let len = next_pow2(2 * n);
+        // Fast path + FFT-table fetch under one short critical section.
+        let fft = {
+            let mut g = self.inner.lock().expect("plan cache poisoned");
+            g.clock += 1;
+            let now = g.clock;
+            if let Some(e) = g.plans.get_mut(&key) {
+                e.last_used = now;
+                let plan = e.plan.clone();
+                g.hits += 1;
+                return plan;
+            }
+            g.misses += 1;
+            if let Some((fft, stamp)) = g.ffts.get_mut(&len) {
+                *stamp = now;
+                fft.clone()
+            } else {
+                let fft = Arc::new(FftPlan::new(len));
+                g.ffts.insert(len, (fft.clone(), now));
+                while g.ffts.len() > MAX_FFT_TABLES {
+                    let victim = g
+                        .ffts
+                        .iter()
+                        .min_by_key(|(_, (_, stamp))| *stamp)
+                        .map(|(&l, _)| l)
+                        .expect("ffts nonempty");
+                    g.ffts.remove(&victim);
+                }
+                fft
+            }
+        };
+        // Build the kernel spectrum outside the lock: misses are rare
+        // and must not stall concurrent hits on other keys.
+        let masked;
+        let cc: &[f64] = if causal {
+            masked = causal_coeffs(c, n);
+            &masked
+        } else {
+            c
+        };
+        let plan = Arc::new(ToeplitzPlan::with_fft_plan(cc, n, fft));
+        let bytes = plan.bytes();
+        let mut g = self.inner.lock().expect("plan cache poisoned");
+        g.clock += 1;
+        let now = g.clock;
+        if let Some(e) = g.plans.get_mut(&key) {
+            // Another worker built the same plan while we were outside
+            // the lock; keep the resident one so hits stay shared.
+            e.last_used = now;
+            return e.plan.clone();
+        }
+        g.plans.insert(key, Entry { plan: plan.clone(), bytes, last_used: now });
+        g.bytes += bytes;
+        while g.bytes > self.budget_bytes && g.plans.len() > 1 {
+            let victim = g
+                .plans
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(vk) => {
+                    let e = g.plans.remove(&vk).expect("victim resident");
+                    g.bytes -= e.bytes;
+                    g.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        plan
+    }
+
+    /// True if the plan for (c, n, causal) is resident. Does not touch
+    /// LRU stamps or counters (a pure probe, used by tests).
+    pub fn contains(&self, c: &[f64], n: usize, causal: bool) -> bool {
+        let key = PlanKey { n, causal, fingerprint: coeff_fingerprint(c) };
+        self.inner
+            .lock()
+            .expect("plan cache poisoned")
+            .plans
+            .contains_key(&key)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("plan cache poisoned");
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            plans: g.plans.len(),
+            bytes: g.bytes,
+            budget_bytes: self.budget_bytes,
+        }
+    }
+
+    /// Drop every resident plan and FFT table (counters survive).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().expect("plan cache poisoned");
+        g.plans.clear();
+        g.ffts.clear();
+        g.bytes = 0;
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache::new(PlanCache::DEFAULT_BUDGET_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn coeffs(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n - 1).map(|_| rng.normal().exp()).collect()
+    }
+
+    #[test]
+    fn same_coeffs_and_length_hit() {
+        let cache = PlanCache::new(1 << 20);
+        let n = 16;
+        let c = coeffs(n, 1);
+        let a = cache.get(&c, n, true);
+        let b = cache.get(&c, n, true);
+        assert!(Arc::ptr_eq(&a, &b), "second get must return the same plan");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.plans, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perturbed_coeffs_miss() {
+        let cache = PlanCache::new(1 << 20);
+        let n = 12;
+        let c = coeffs(n, 2);
+        let mut c2 = c.clone();
+        c2[3] += 1e-15; // one ULP-ish nudge must be a different plan
+        assert_ne!(coeff_fingerprint(&c), coeff_fingerprint(&c2));
+        let a = cache.get(&c, n, true);
+        let b = cache.get(&c2, n, true);
+        assert!(!Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 2));
+        assert_eq!(s.plans, 2);
+    }
+
+    #[test]
+    fn causal_and_bidirectional_are_distinct() {
+        let cache = PlanCache::new(1 << 20);
+        let n = 8;
+        let c = coeffs(n, 3);
+        let a = cache.get(&c, n, true);
+        let b = cache.get(&c, n, false);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats().misses, 2);
+        // The causal plan actually masked positive offsets: row 0 of a
+        // causal Toeplitz product sees only x_0.
+        let x: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let y = a.apply(&x, 1);
+        assert!((y[0] - c[n - 1] * x[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_order() {
+        let n = 32;
+        let c1 = coeffs(n, 10);
+        let c2 = coeffs(n, 11);
+        let c3 = coeffs(n, 12);
+        let per_plan = ToeplitzPlan::new(&c1, n).bytes();
+        // Room for exactly two plans.
+        let cache = PlanCache::new(2 * per_plan);
+        cache.get(&c1, n, true);
+        cache.get(&c2, n, true);
+        assert_eq!(cache.stats().plans, 2);
+        cache.get(&c1, n, true); // refresh c1: c2 becomes the LRU
+        cache.get(&c3, n, true); // overflow: c2 must go, c1 must stay
+        assert!(cache.contains(&c1, n, true), "recently-used plan evicted");
+        assert!(!cache.contains(&c2, n, true), "LRU plan survived");
+        assert!(cache.contains(&c3, n, true));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.plans, 2);
+        assert!(s.bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn budget_smaller_than_one_plan_keeps_newest() {
+        let n = 16;
+        let cache = PlanCache::new(1); // nothing fits
+        let c1 = coeffs(n, 20);
+        let c2 = coeffs(n, 21);
+        cache.get(&c1, n, false);
+        cache.get(&c2, n, false);
+        // The just-inserted plan is never evicted by its own insert.
+        assert!(cache.contains(&c2, n, false));
+        assert!(!cache.contains(&c1, n, false));
+        assert_eq!(cache.stats().plans, 1);
+    }
+
+    #[test]
+    fn counters_track_every_access() {
+        let cache = PlanCache::new(1 << 20);
+        let n = 9;
+        let c = coeffs(n, 30);
+        let d = coeffs(n, 31);
+        for _ in 0..5 {
+            cache.get(&c, n, true);
+        }
+        for _ in 0..3 {
+            cache.get(&d, n, true);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 2, "one miss per distinct key");
+        assert_eq!(s.hits, 6, "4 repeat hits on c + 2 on d");
+        assert_eq!(s.hits + s.misses, 8, "every access counted once");
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fft_tables_shared_across_coeffs_and_lengths() {
+        let cache = PlanCache::new(1 << 20);
+        // n = 12 and n = 16 both embed into next_pow2(2n) = 32.
+        let a = cache.get(&coeffs(12, 40), 12, true);
+        let b = cache.get(&coeffs(16, 41), 16, true);
+        assert!(Arc::ptr_eq(a.fft_plan(), b.fft_plan()));
+    }
+
+    #[test]
+    fn cached_plan_output_matches_oneshot() {
+        let cache = PlanCache::new(1 << 20);
+        let n = 20;
+        let f = 3;
+        let c = coeffs(n, 50);
+        let mut rng = Rng::new(51);
+        let x: Vec<f64> = (0..n * f).map(|_| rng.normal()).collect();
+        for causal in [false, true] {
+            let plan = cache.get(&c, n, causal);
+            let cc = if causal {
+                causal_coeffs(&c, n)
+            } else {
+                c.clone()
+            };
+            let want = crate::toeplitz::toeplitz_mul_fft(&cc, &x, n, f);
+            assert_eq!(plan.apply(&x, f), want, "causal={causal}");
+            assert_eq!(plan.apply_batched(&x, f), want, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn clear_drops_plans_keeps_counters() {
+        let cache = PlanCache::new(1 << 20);
+        let n = 8;
+        let c = coeffs(n, 60);
+        cache.get(&c, n, true);
+        cache.get(&c, n, true);
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!(s.plans, 0);
+        assert_eq!(s.bytes, 0);
+        assert_eq!((s.hits, s.misses), (1, 1));
+        cache.get(&c, n, true);
+        assert_eq!(cache.stats().misses, 2, "cleared plan rebuilds");
+    }
+}

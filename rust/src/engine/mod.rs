@@ -1,0 +1,287 @@
+//! The batched attention engine: plan-cached, multi-column-FFT,
+//! thread-fanned attention for serving-scale workloads.
+//!
+//! The paper's O(n log n) claim (Eq. 12/13) only pays off in serving if
+//! the fixed-per-layer work — the FFT of the RPE coefficient vector and
+//! the twiddle tables — is amortized across the batch instead of being
+//! rebuilt per head per request (what `toeplitz_mul_fft` does). This
+//! module owns that amortization:
+//!
+//!   * `cache::PlanCache` — shared `ToeplitzPlan`s keyed by (length,
+//!     causal, coefficient fingerprint) with hit/miss counters and a
+//!     byte-budget LRU; twiddle tables cached one level deeper;
+//!   * `ToeplitzPlan::apply_batched` (in `toeplitz`) — all f = m·(d+1)
+//!     Toeplitz columns through one multi-column FFT;
+//!   * `attend_batch` — a [batch × heads] workload fanned across a
+//!     scoped `std::thread` pool (the crate outside `runtime` stays
+//!     dependency-free: no rayon, no crossbeam).
+//!
+//! See README.md in this directory for when each lever wins.
+
+pub mod cache;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+
+use anyhow::{bail, Result};
+
+use crate::attention::{
+    kernel_attention, kernel_features, nprf_rpe_fft_path_with_plan,
+    rpe_correlations, Kind,
+};
+use crate::tensor::Mat;
+
+pub use cache::{coeff_fingerprint, CacheStats, PlanCache, PlanKey};
+
+/// One unit of a batched attention workload: a single (batch item,
+/// head) slice. `q`/`k`/`v` are (n, d); `features` are the PRF weights
+/// for kernel kinds; `bias` is the raw (2n-1) RPE vector for rpe kinds.
+#[derive(Clone, Copy)]
+pub struct AttendItem<'a> {
+    pub kind: Kind,
+    pub q: &'a Mat,
+    pub k: &'a Mat,
+    pub v: &'a Mat,
+    pub features: Option<&'a Mat>,
+    pub bias: Option<&'a [f32]>,
+    pub causal: bool,
+}
+
+/// Engine configuration, surfaced as `--workers` / `--cache-mb` on the
+/// CLI and server configs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads for `attend_batch`; 0 means one per available
+    /// core (capped by the number of items at call time).
+    pub workers: usize,
+    /// `PlanCache` byte budget.
+    pub plan_cache_bytes: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            workers: 0,
+            plan_cache_bytes: PlanCache::DEFAULT_BUDGET_BYTES,
+        }
+    }
+}
+
+/// Shared per-model attention engine: one plan cache + one worker
+/// count, used by both the batch and streaming serving paths.
+pub struct Engine {
+    cache: std::sync::Arc<PlanCache>,
+    workers: usize,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        Engine {
+            cache: std::sync::Arc::new(PlanCache::new(cfg.plan_cache_bytes)),
+            workers: resolve_workers(cfg.workers),
+        }
+    }
+
+    pub fn cache(&self) -> &std::sync::Arc<PlanCache> {
+        &self.cache
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run a [batch × heads] attention workload; outputs line up with
+    /// `items` by index.
+    pub fn attend_batch(&self, items: &[AttendItem]) -> Result<Vec<Mat>> {
+        attend_batch_with(items, &self.cache, self.workers)
+    }
+}
+
+/// 0 -> one worker per available core.
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Batched attention against an explicit cache and worker count. Items
+/// are pulled off a shared atomic counter, so stragglers do not idle
+/// the pool; with `workers == 1` everything runs on the caller's
+/// thread. Output order and values are independent of the worker count
+/// (each item's computation is self-contained and deterministic).
+pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
+                         workers: usize) -> Result<Vec<Mat>> {
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers == 1 {
+        return items.iter().map(|it| attend_one(it, cache)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = channel::<(usize, Result<Mat>)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                if tx.send((i, attend_one(&items[i], cache))).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut out: Vec<Option<Mat>> = items.iter().map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r?);
+    }
+    let mut mats = Vec::with_capacity(out.len());
+    for (i, slot) in out.into_iter().enumerate() {
+        match slot {
+            Some(m) => mats.push(m),
+            None => bail!("attend_batch: worker dropped item {i}"),
+        }
+    }
+    Ok(mats)
+}
+
+/// One item, mirroring `attention::attend` exactly — except that for
+/// fft+rpe kernel kinds the Toeplitz plan comes from the cache and the
+/// columns go through the batched FFT. Both substitutions are bitwise
+/// equivalent to the uncached path (tests/proptest_engine.rs).
+fn attend_one(it: &AttendItem, cache: &PlanCache) -> Result<Mat> {
+    match it.kind {
+        Kind::Softmax { rpe, .. } => {
+            if rpe && it.bias.is_none() {
+                bail!("softmax rpe item needs a bias vector");
+            }
+            Ok(crate::attention::attend(
+                it.kind, it.q, it.k, it.v, None, it.bias, it.causal,
+            ))
+        }
+        Kind::Kernel { rpe, fft, .. } => {
+            let w = match it.features {
+                Some(w) => w,
+                None => bail!("kernel item needs feature weights"),
+            };
+            let phi_q = kernel_features(it.kind, it.q, w);
+            let phi_k = kernel_features(it.kind, it.k, w);
+            if !rpe {
+                return Ok(kernel_attention(&phi_q, &phi_k, it.v, None, it.causal));
+            }
+            let b = match it.bias {
+                Some(b) => b,
+                None => bail!("rpe item needs a bias vector"),
+            };
+            let n = it.k.rows;
+            if it.q.rows != n {
+                bail!("rpe item needs square attention (q rows {} != k rows {n})",
+                      it.q.rows);
+            }
+            if b.len() != 2 * n - 1 {
+                bail!("bias length {} != 2n-1 = {}", b.len(), 2 * n - 1);
+            }
+            let c = rpe_correlations(b);
+            if fft {
+                let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+                let plan = cache.get(&c64, n, it.causal);
+                Ok(nprf_rpe_fft_path_with_plan(&phi_q, &phi_k, it.v, &plan))
+            } else {
+                Ok(kernel_attention(&phi_q, &phi_k, it.v, Some(&c), it.causal))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{attend, draw_gaussian_features};
+    use crate::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(r, c, rng.normal_vec(r * c, 0.5))
+    }
+
+    #[test]
+    fn attend_batch_matches_attend_per_item() {
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let (n, d, m) = (19, 4, 3);
+        let mut rng = Rng::new(5);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let b = rng.normal_vec(2 * n - 1, 0.5);
+        let qs: Vec<Mat> = (0..6).map(|i| rand_mat(n, d, 100 + i)).collect();
+        let ks: Vec<Mat> = (0..6).map(|i| rand_mat(n, d, 200 + i)).collect();
+        let vs: Vec<Mat> = (0..6).map(|i| rand_mat(n, d, 300 + i)).collect();
+        let items: Vec<AttendItem> = (0..6)
+            .map(|i| AttendItem {
+                kind,
+                q: &qs[i],
+                k: &ks[i],
+                v: &vs[i],
+                features: Some(&w),
+                bias: Some(&b),
+                causal: true,
+            })
+            .collect();
+        let cache = PlanCache::default();
+        let got = attend_batch_with(&items, &cache, 2).expect("batch");
+        for i in 0..6 {
+            let want =
+                attend(kind, &qs[i], &ks[i], &vs[i], Some(&w), Some(&b), true);
+            assert_eq!(got[i].data, want.data, "item {i}");
+        }
+        // Six items, one shared bias/length: one miss (two workers may
+        // race the first build), the rest hits.
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 6);
+        assert!((1..=2).contains(&s.misses), "{s:?}");
+        assert_eq!(s.plans, 1);
+    }
+
+    #[test]
+    fn attend_batch_rejects_malformed_items() {
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let q = rand_mat(4, 2, 1);
+        let cache = PlanCache::default();
+        // Missing features.
+        let item = AttendItem {
+            kind, q: &q, k: &q, v: &q, features: None, bias: None, causal: true,
+        };
+        assert!(attend_batch_with(&[item], &cache, 1).is_err());
+        // Missing bias for an rpe kind.
+        let w = rand_mat(3, 2, 2);
+        let item = AttendItem {
+            kind, q: &q, k: &q, v: &q, features: Some(&w), bias: None,
+            causal: true,
+        };
+        assert!(attend_batch_with(&[item], &cache, 1).is_err());
+        // Wrong bias length.
+        let b = vec![0.0f32; 3];
+        let item = AttendItem {
+            kind, q: &q, k: &q, v: &q, features: Some(&w), bias: Some(&b),
+            causal: true,
+        };
+        assert!(attend_batch_with(&[item], &cache, 1).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let cache = PlanCache::default();
+        let out = attend_batch_with(&[], &cache, 4).expect("empty");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn resolve_workers_defaults_to_cores() {
+        assert_eq!(resolve_workers(3), 3);
+        assert!(resolve_workers(0) >= 1);
+    }
+}

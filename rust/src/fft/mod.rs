@@ -97,46 +97,81 @@ impl FftPlan {
         FftPlan { n, twiddles, bitrev }
     }
 
-    /// In-place forward FFT.
+    /// In-place forward FFT. A batch of one: `forward_batch` is the
+    /// single implementation of the butterfly schedule, so the single-
+    /// and multi-column paths cannot drift apart.
     pub fn forward(&self, x: &mut [Complex]) {
-        assert_eq!(x.len(), self.n);
-        // bit-reversal permutation
-        for i in 0..self.n {
-            let j = self.bitrev[i];
-            if i < j {
-                x.swap(i, j);
+        self.forward_batch(x, 1);
+    }
+
+    /// In-place inverse FFT (normalized by 1/n).
+    pub fn inverse(&self, x: &mut [Complex]) {
+        self.inverse_batch(x, 1);
+    }
+
+    /// Forward FFT of `count` independent signals packed contiguously in
+    /// `x` (`x.len() == count * self.n`). Stages iterate outermost so
+    /// each stage's twiddle table is loaded once and stays hot across
+    /// the whole batch — the multi-column schedule the Toeplitz product
+    /// wants for its f = m·(d+1) columns. The butterfly order *within*
+    /// one signal is identical to `forward`, so per-signal results are
+    /// bitwise equal to transforming each signal alone.
+    pub fn forward_batch(&self, x: &mut [Complex], count: usize) {
+        assert_eq!(x.len(), count * self.n);
+        let n = self.n;
+        for s in 0..count {
+            let sig = &mut x[s * n..(s + 1) * n];
+            for i in 0..n {
+                let j = self.bitrev[i];
+                if i < j {
+                    sig.swap(i, j);
+                }
             }
         }
         let mut len = 2;
         let mut stage = 0;
-        while len <= self.n {
+        while len <= n {
             let half = len / 2;
             let tw = &self.twiddles[stage];
-            let mut base = 0;
-            while base < self.n {
-                for k in 0..half {
-                    let u = x[base + k];
-                    let v = x[base + k + half].mul(tw[k]);
-                    x[base + k] = u.add(v);
-                    x[base + k + half] = u.sub(v);
+            for s in 0..count {
+                let sig = &mut x[s * n..(s + 1) * n];
+                let mut base = 0;
+                while base < n {
+                    for k in 0..half {
+                        let u = sig[base + k];
+                        let v = sig[base + k + half].mul(tw[k]);
+                        sig[base + k] = u.add(v);
+                        sig[base + k + half] = u.sub(v);
+                    }
+                    base += len;
                 }
-                base += len;
             }
             len <<= 1;
             stage += 1;
         }
     }
 
-    /// In-place inverse FFT (normalized by 1/n).
-    pub fn inverse(&self, x: &mut [Complex]) {
+    /// Inverse FFT of `count` packed signals (see `forward_batch`);
+    /// per-signal results are bitwise equal to `inverse`.
+    pub fn inverse_batch(&self, x: &mut [Complex], count: usize) {
+        assert_eq!(x.len(), count * self.n);
         for c in x.iter_mut() {
             *c = c.conj();
         }
-        self.forward(x);
+        self.forward_batch(x, count);
         let inv = 1.0 / self.n as f64;
         for c in x.iter_mut() {
             *c = c.conj().scale(inv);
         }
+    }
+
+    /// Approximate heap footprint (twiddle tables + bit-reversal map),
+    /// used by the engine's plan-cache byte accounting.
+    pub fn bytes(&self) -> usize {
+        let tw: usize = self.twiddles.iter().map(|t| t.len()).sum();
+        tw * std::mem::size_of::<Complex>()
+            + self.bitrev.len() * std::mem::size_of::<usize>()
+            + std::mem::size_of::<FftPlan>()
     }
 }
 
@@ -330,6 +365,57 @@ mod tests {
                 }
                 assert!((fast[i] - acc).abs() < 1e-9, "n={n} i={i}");
             }
+        }
+    }
+
+    #[test]
+    fn forward_batch_bitwise_matches_forward() {
+        let n = 64;
+        let count = 5;
+        let plan = FftPlan::new(n);
+        let signals: Vec<Vec<Complex>> =
+            (0..count).map(|s| rand_signal(n, 20 + s as u64)).collect();
+        let mut packed: Vec<Complex> =
+            signals.iter().flat_map(|s| s.iter().copied()).collect();
+        plan.forward_batch(&mut packed, count);
+        for (s, sig) in signals.iter().enumerate() {
+            let mut one = sig.clone();
+            plan.forward(&mut one);
+            for (a, b) in packed[s * n..(s + 1) * n].iter().zip(&one) {
+                assert_eq!(a.re, b.re, "signal {s}");
+                assert_eq!(a.im, b.im, "signal {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_batch_roundtrip() {
+        let n = 128;
+        let count = 3;
+        let plan = FftPlan::new(n);
+        let orig: Vec<Complex> = (0..count)
+            .flat_map(|s| rand_signal(n, 40 + s as u64))
+            .collect();
+        let mut buf = orig.clone();
+        plan.forward_batch(&mut buf, count);
+        plan.inverse_batch(&mut buf, count);
+        let err = max_err(&buf, &orig);
+        assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn batch_of_one_matches_single() {
+        let n = 32;
+        let plan = FftPlan::new(n);
+        let x = rand_signal(n, 60);
+        let mut a = x.clone();
+        plan.forward(&mut a);
+        let mut b = x.clone();
+        plan.forward_batch(&mut b, 1);
+        assert_eq!(a.len(), b.len());
+        for (p, q) in a.iter().zip(&b) {
+            assert_eq!(p.re, q.re);
+            assert_eq!(p.im, q.im);
         }
     }
 

@@ -15,12 +15,22 @@
 //!     (`streaming::state`, `streaming::engine`) plus per-session
 //!     caches with LRU spill/restore (`streaming::session`), wired
 //!     into `coordinator::decode` (streaming greedy decode) and
-//!     `coordinator::server` (the streaming request path).
+//!     `coordinator::server` (the streaming request path);
+//!   * `engine` is the batched attention engine shared by the serving
+//!     paths: `engine::PlanCache` amortizes each layer's Toeplitz
+//!     spectrum + twiddle tables across requests (keyed by length,
+//!     causality, and a coefficient fingerprint), the multi-column FFT
+//!     (`toeplitz::ToeplitzPlan::apply_batched`) runs all f = m·(d+1)
+//!     aggregate columns through one transform schedule, and
+//!     `engine::attend_batch` fans [batch × heads] workloads across a
+//!     scoped thread pool. Streaming prefill and the server's batch
+//!     path draw plans from one cache per model.
 
 pub mod attention;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod fft;
 pub mod metrics;
 pub mod rng;

@@ -72,6 +72,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \u{20}                             table3 table4 table6 | all  (--steps --seeds --full)\n\
                  \u{20}  serve [--requests N]       batched-inference server demo\n\
                  \u{20}  serve --sessions N --streaming  streaming decode server demo\n\
+                 \u{20}                             (--workers N --cache-mb MB\n\
+                 \u{20}                             --batch-requests N share one\n\
+                 \u{20}                             plan cache per model)\n\
                  \u{20}  decode [--streaming]       CPU greedy decode (--prompt-len --gen\n\
                  \u{20}                             --kind --vocab); --streaming uses the\n\
                  \u{20}                             O(1)/token recurrence and cross-\n\
@@ -265,18 +268,24 @@ fn streaming_serve(args: &Args) -> Result<()> {
     let sessions = args.get_usize("sessions", 8);
     let gen = args.get_usize("gen", 32);
     let prompt_len = args.get_usize("prompt-len", 16);
+    let batch_requests = args.get_usize("batch-requests", 0);
     let cfg = StreamingServerConfig {
         max_len: prompt_len + gen,
         window: args.get_usize("window", prompt_len + gen),
         max_live: args.get_usize("max-live", 4),
         seed: args.get_u64("seed", 0),
+        workers: args.get_usize("workers", 0),
+        plan_cache_bytes: args.get_usize("cache-mb", 64) << 20,
         ..StreamingServerConfig::default()
     };
     let vocab = cfg.vocab;
     info!(
         "streaming server: {sessions} sessions x ({prompt_len} prompt + \
-         {gen} gen), window={}, max_live={}",
-        cfg.window, cfg.max_live
+         {gen} gen), window={}, max_live={}, workers={}, plan cache {} MiB",
+        cfg.window,
+        cfg.max_live,
+        if cfg.workers == 0 { "auto".to_string() } else { cfg.workers.to_string() },
+        cfg.plan_cache_bytes >> 20
     );
     let server = StreamingServer::start(cfg)?;
     let mut rng = Rng::new(11);
@@ -305,7 +314,26 @@ fn streaming_serve(args: &Args) -> Result<()> {
             sess[s] = (resp.next_logits, resp.positions);
         }
     }
+    // Decode throughput is measured before the batch leg so the two
+    // workloads don't pollute each other's wall clock.
     let wall = t0.elapsed().as_secs_f64();
+    // Optional stateless prompt batches after the decode loop: the
+    // engine path, drawing from the same per-model plan cache (shared
+    // byte budget, counters, and twiddle tables) as the prefills.
+    for _ in 0..batch_requests {
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|_| {
+                (0..prompt_len)
+                    .map(|_| rng.below_usize(vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        let resp = server
+            .submit_prompt_batch(prompts)?
+            .recv()?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        debug_assert_eq!(resp.next_logits.len(), 4);
+    }
     let stats = server.shutdown();
     // Decode rate excludes prefill: those tokens went through one
     // batched FFT pass, not the per-token recurrence.
@@ -321,6 +349,17 @@ fn streaming_serve(args: &Args) -> Result<()> {
         "sessions created={} restores={} spills={} requests={} exec={:.2}s",
         stats.sessions_created, stats.restores, stats.spills, stats.requests,
         stats.exec_secs
+    );
+    println!(
+        "plan cache: {} plans, {:.1}% hit rate ({} hits / {} misses, \
+         {} evictions, {} KiB), batch requests={}",
+        stats.plan_cache.plans,
+        100.0 * stats.plan_cache.hit_rate(),
+        stats.plan_cache.hits,
+        stats.plan_cache.misses,
+        stats.plan_cache.evictions,
+        stats.plan_cache.bytes >> 10,
+        stats.batch_requests
     );
     Ok(())
 }

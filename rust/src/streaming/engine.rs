@@ -12,7 +12,11 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::attention::{kernel_features, nprf_rpe_fft_path, rpe_correlations, Kind};
+use crate::attention::{
+    kernel_features, nprf_rpe_fft_path, nprf_rpe_fft_path_with_plan,
+    rpe_correlations, Kind,
+};
+use crate::engine::PlanCache;
 use crate::tensor::Mat;
 
 use super::state::DecoderState;
@@ -134,6 +138,20 @@ impl StreamingDecoder {
     /// prompt instead of n recurrent steps — while the recurrent state
     /// is loaded row by row for the steps that follow.
     pub fn prefill(&mut self, q: &[Mat], k: &[Mat], v: &[Mat]) -> Result<Vec<Mat>> {
+        self.prefill_impl(q, k, v, None)
+    }
+
+    /// `prefill`, drawing the Toeplitz plan from a shared per-model
+    /// `PlanCache` so concurrent sessions with the same prompt length
+    /// reuse one coefficient spectrum instead of rebuilding it. The
+    /// cached and uncached paths are bitwise identical.
+    pub fn prefill_cached(&mut self, q: &[Mat], k: &[Mat], v: &[Mat],
+                          cache: &PlanCache) -> Result<Vec<Mat>> {
+        self.prefill_impl(q, k, v, Some(cache))
+    }
+
+    fn prefill_impl(&mut self, q: &[Mat], k: &[Mat], v: &[Mat],
+                    cache: Option<&PlanCache>) -> Result<Vec<Mat>> {
         if self.pos != 0 {
             bail!("prefill on a non-fresh session (pos={})", self.pos);
         }
@@ -146,6 +164,12 @@ impl StreamingDecoder {
             return Ok(vec![Mat::zeros(0, self.state.value_dim()); heads]);
         }
         let c = self.spec.effective_coeffs(n);
+        // One plan lookup covers every head: the spec's correlations
+        // are shared across the head group.
+        let plan = cache.map(|pc| {
+            let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+            pc.get(&c64, n, true)
+        });
         let c_tail = self.spec.c_tail();
         let mut outs = Vec::with_capacity(heads);
         for h in 0..heads {
@@ -161,7 +185,10 @@ impl StreamingDecoder {
             // The effective coefficients already encode the window +
             // tail, so the FFT prefill and the recurrent steps realize
             // the same operator.
-            outs.push(nprf_rpe_fft_path(&phi_q, &phi_k, &v[h], &c, true));
+            outs.push(match &plan {
+                Some(p) => nprf_rpe_fft_path_with_plan(&phi_q, &phi_k, &v[h], p),
+                None => nprf_rpe_fft_path(&phi_q, &phi_k, &v[h], &c, true),
+            });
             for j in 0..n {
                 self.state.push(h, phi_k.row(j), v[h].row(j), c_tail);
             }
@@ -377,6 +404,33 @@ mod tests {
             }
         }
         assert_eq!(mixed.positions(), n);
+    }
+
+    #[test]
+    fn prefill_cached_bitwise_matches_prefill() {
+        let (n, d, m) = (23, 4, 5);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let spec = spec_for(kind, n, d, m, n, 29);
+        let q = rand_mat(n, d, 70);
+        let k = rand_mat(n, d, 71);
+        let v = rand_mat(n, d, 72);
+        let mut plain = StreamingDecoder::new(spec.clone(), 1, d);
+        let want = plain
+            .prefill(&[q.clone()], &[k.clone()], &[v.clone()])
+            .expect("prefill");
+        let cache = PlanCache::default();
+        let mut cached = StreamingDecoder::new(spec.clone(), 1, d);
+        let got = cached
+            .prefill_cached(&[q.clone()], &[k.clone()], &[v.clone()], &cache)
+            .expect("prefill_cached");
+        assert_eq!(got[0].data, want[0].data);
+        assert_eq!(cache.stats().misses, 1);
+        // A second session with the same prompt length hits the cache.
+        let mut again = StreamingDecoder::new(spec, 1, d);
+        again
+            .prefill_cached(&[q], &[k], &[v], &cache)
+            .expect("prefill_cached 2");
+        assert_eq!(cache.stats().hits, 1);
     }
 
     #[test]

@@ -14,6 +14,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::engine::PlanCache;
+
 use super::engine::{StreamSpec, StreamingDecoder};
 
 #[derive(Debug, Default, Clone)]
@@ -61,6 +63,10 @@ pub struct SessionStore {
     cold: HashMap<u64, ColdEntry>,
     clock: u64,
     pub stats: StoreStats,
+    /// Shared Toeplitz plan cache for session prefills. Defaults to a
+    /// store-private cache; servers inject the per-model cache with
+    /// `with_plan_cache` so batch + streaming paths amortize together.
+    plan_cache: Arc<PlanCache>,
 }
 
 impl SessionStore {
@@ -77,7 +83,20 @@ impl SessionStore {
             cold: HashMap::new(),
             clock: 0,
             stats: StoreStats::default(),
+            plan_cache: Arc::new(PlanCache::default()),
         }
+    }
+
+    /// Share an externally-owned plan cache (one per served model).
+    pub fn with_plan_cache(mut self, cache: Arc<PlanCache>) -> SessionStore {
+        self.plan_cache = cache;
+        self
+    }
+
+    /// The plan cache prefills should draw from. Cloned out (`Arc`) so
+    /// callers can hold it across a mutable `get_or_create` borrow.
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        self.plan_cache.clone()
     }
 
     pub fn live_count(&self) -> usize {

@@ -10,6 +10,8 @@
 //! Convention: `c` has length 2n-1 with `c[t + n - 1] = c_t` for the
 //! relative offset t = j - i; y_i = sum_j c_{j-i} x_j.
 
+use std::sync::Arc;
+
 use crate::fft::{next_pow2, Complex, FftPlan};
 
 /// Naive O(n^2 f) reference.
@@ -34,19 +36,30 @@ pub fn toeplitz_mul_naive(c: &[f64], x: &[f64], n: usize, f: usize) -> Vec<f64> 
 }
 
 /// Reusable FFT plan + kernel spectrum for a fixed coefficient vector.
+/// The `FftPlan` is shared (`Arc`): every plan of the same embedded
+/// length reuses one twiddle/bit-reversal table, so a plan-cache miss
+/// only pays for the kernel spectrum, not trig table rebuilds.
 pub struct ToeplitzPlan {
     n: usize,
     len: usize,
-    plan: FftPlan,
+    plan: Arc<FftPlan>,
     /// FFT of the circulant-embedded kernel g (g[t] = c_{-t mod L}).
     kernel_hat: Vec<Complex>,
 }
 
 impl ToeplitzPlan {
     pub fn new(c: &[f64], n: usize) -> ToeplitzPlan {
+        let len = next_pow2(2 * n);
+        ToeplitzPlan::with_fft_plan(c, n, Arc::new(FftPlan::new(len)))
+    }
+
+    /// Build against an existing (shared) FFT plan of the right size —
+    /// the entry point the engine's `PlanCache` uses so twiddle tables
+    /// amortize across coefficient vectors and sequence lengths.
+    pub fn with_fft_plan(c: &[f64], n: usize, plan: Arc<FftPlan>) -> ToeplitzPlan {
         assert_eq!(c.len(), 2 * n - 1);
         let len = next_pow2(2 * n);
-        let plan = FftPlan::new(len);
+        assert_eq!(plan.n, len, "FFT plan size {} != {len}", plan.n);
         let mut g = vec![Complex::ZERO; len];
         // g[t] = c_{-t} for t = 0..n-1; g[L-p] = c_p for p = 1..n-1.
         for t in 0..n {
@@ -58,6 +71,28 @@ impl ToeplitzPlan {
         let mut kernel_hat = g;
         plan.forward(&mut kernel_hat);
         ToeplitzPlan { n, len, plan, kernel_hat }
+    }
+
+    /// Sequence length the plan was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Power-of-two circulant embedding length.
+    pub fn fft_len(&self) -> usize {
+        self.len
+    }
+
+    /// The shared FFT plan (twiddle tables) backing this plan.
+    pub fn fft_plan(&self) -> &Arc<FftPlan> {
+        &self.plan
+    }
+
+    /// Approximate heap footprint of the kernel spectrum. The shared
+    /// `FftPlan` is accounted separately by the cache that owns it.
+    pub fn bytes(&self) -> usize {
+        self.kernel_hat.len() * std::mem::size_of::<Complex>()
+            + std::mem::size_of::<ToeplitzPlan>()
     }
 
     /// y = T x for one column vector (length n).
@@ -77,31 +112,56 @@ impl ToeplitzPlan {
 
     /// y = T X for row-major X of shape (n, f). Columns are packed two
     /// per complex FFT (re/im trick), halving the number of transforms.
+    /// Delegates to the batched schedule — one implementation of the
+    /// packing, so the two entry points are bitwise identical by
+    /// construction.
     pub fn apply(&self, x: &[f64], f: usize) -> Vec<f64> {
+        self.apply_batched(x, f)
+    }
+
+    /// y = T X with all ceil(f/2) packed column pairs going through ONE
+    /// multi-column FFT (`FftPlan::forward_batch`) instead of one
+    /// transform at a time: one contiguous scratch buffer, one pass per
+    /// FFT stage over the whole batch with that stage's twiddles hot in
+    /// cache. Per-signal butterfly order matches the single-column
+    /// path, so results are independent of how columns are batched.
+    pub fn apply_batched(&self, x: &[f64], f: usize) -> Vec<f64> {
         assert_eq!(x.len(), self.n * f);
         let n = self.n;
-        let mut y = vec![0.0; n * f];
-        let mut col = 0;
-        while col < f {
+        let pairs = (f + 1) / 2;
+        if pairs == 0 {
+            return Vec::new();
+        }
+        let mut buf = vec![Complex::ZERO; pairs * self.len];
+        for p in 0..pairs {
+            let col = 2 * p;
             let pair = col + 1 < f;
-            let mut buf = vec![Complex::ZERO; self.len];
+            let sig = &mut buf[p * self.len..(p + 1) * self.len];
             for i in 0..n {
                 let re = x[i * f + col];
                 let im = if pair { x[i * f + col + 1] } else { 0.0 };
-                buf[i] = Complex::new(re, im);
+                sig[i] = Complex::new(re, im);
             }
-            self.plan.forward(&mut buf);
-            for (b, k) in buf.iter_mut().zip(&self.kernel_hat) {
+        }
+        self.plan.forward_batch(&mut buf, pairs);
+        for p in 0..pairs {
+            let sig = &mut buf[p * self.len..(p + 1) * self.len];
+            for (b, k) in sig.iter_mut().zip(&self.kernel_hat) {
                 *b = b.mul(*k);
             }
-            self.plan.inverse(&mut buf);
+        }
+        self.plan.inverse_batch(&mut buf, pairs);
+        let mut y = vec![0.0; n * f];
+        for p in 0..pairs {
+            let col = 2 * p;
+            let pair = col + 1 < f;
+            let sig = &buf[p * self.len..(p + 1) * self.len];
             for i in 0..n {
-                y[i * f + col] = buf[i].re;
+                y[i * f + col] = sig[i].re;
                 if pair {
-                    y[i * f + col + 1] = buf[i].im;
+                    y[i * f + col + 1] = sig[i].im;
                 }
             }
-            col += 2;
         }
         y
     }
@@ -205,6 +265,36 @@ mod tests {
         let x2 = rand_vec(n * 3, 12);
         assert_eq!(plan.apply(&x1, 3), toeplitz_mul_fft(&c, &x1, n, 3));
         assert_eq!(plan.apply(&x2, 3), toeplitz_mul_fft(&c, &x2, n, 3));
+    }
+
+    #[test]
+    fn apply_batched_bitwise_matches_apply() {
+        // Odd and even f, pow2 and non-pow2 n, including n = 1.
+        for (n, f) in [(1, 1), (1, 4), (7, 3), (16, 5), (33, 6), (64, 1)] {
+            let c = rand_vec(2 * n - 1, 500 + n as u64);
+            let x = rand_vec(n * f, 600 + (n * f) as u64);
+            let plan = ToeplitzPlan::new(&c, n);
+            let a = plan.apply(&x, f);
+            let b = plan.apply_batched(&x, f);
+            assert_eq!(a, b, "n={n} f={f}");
+        }
+    }
+
+    #[test]
+    fn with_fft_plan_shares_tables() {
+        let n = 24;
+        let c1 = rand_vec(2 * n - 1, 70);
+        let c2 = rand_vec(2 * n - 1, 71);
+        let fft = Arc::new(FftPlan::new(next_pow2(2 * n)));
+        let p1 = ToeplitzPlan::with_fft_plan(&c1, n, fft.clone());
+        let p2 = ToeplitzPlan::with_fft_plan(&c2, n, fft.clone());
+        assert!(Arc::ptr_eq(p1.fft_plan(), p2.fft_plan()));
+        let x = rand_vec(n * 2, 72);
+        assert_eq!(p1.apply(&x, 2), toeplitz_mul_fft(&c1, &x, n, 2));
+        assert_eq!(p2.apply(&x, 2), toeplitz_mul_fft(&c2, &x, n, 2));
+        assert_eq!(p1.n(), n);
+        assert_eq!(p1.fft_len(), next_pow2(2 * n));
+        assert!(p1.bytes() > 0);
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Conformance net for the batched attention engine.
+//!
+//! The engine substitutes three things for the per-call fast path: a
+//! cached `ToeplitzPlan` (same coefficients -> same spectrum), the
+//! multi-column batched FFT (`apply_batched`), and a worker pool. All
+//! three must be *invisible* numerically:
+//!
+//!   * `attend_batch` == the uncached `attention::attend` /
+//!     `toeplitz_mul_fft` path to 1e-12 (bitwise in practice: the
+//!     batched FFT preserves per-signal butterfly order);
+//!   * for fft+rpe kinds, `attend_batch` == the quadratic
+//!     `nprf_rpe_direct_path` oracle to 1e-6;
+//!   * output is independent of the worker count (1..=8);
+//!   * a `StreamingServer` soak shares one `PlanCache` across
+//!     interleaved batch + streaming traffic, ends with >= 90% hit
+//!     rate, and does not deadlock.
+
+use kafft::attention::{
+    self, draw_gaussian_features, kernel_features, Kind,
+};
+use kafft::coordinator::decode::CpuLm;
+use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
+use kafft::engine::{attend_batch_with, AttendItem, PlanCache};
+use kafft::rng::Rng;
+use kafft::tensor::Mat;
+use kafft::util::prop::{forall, Gen};
+
+/// Every kernelized attention kind (the six `Kind::Kernel` variants).
+const KERNEL_KINDS: [&str; 6] = [
+    "prf",
+    "nprf",
+    "prf_rpe_fft",
+    "prf_rpe_direct",
+    "nprf_rpe_fft",
+    "nprf_rpe_direct",
+];
+
+/// (n, d, m, seed): n spans [1, 257] so the plan exercises n = 1,
+/// powers of two, and the just-past-a-power length 257.
+struct EngineCase;
+
+impl Gen for EngineCase {
+    type Value = (usize, usize, usize, u64);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = 1 + rng.below_usize(257);
+        let d = 1 + rng.below_usize(6);
+        let m = 1 + rng.below_usize(6);
+        (n, d, m, rng.next_u64())
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 1 {
+            out.push((1, v.1, v.2, v.3));
+            out.push((v.0 / 2, v.1, v.2, v.3));
+        }
+        if v.1 > 1 {
+            out.push((v.0, 1, v.2, v.3));
+        }
+        out
+    }
+}
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, rng.normal_vec(r * c, 0.5))
+}
+
+fn case_inputs(n: usize, d: usize, m: usize, seed: u64)
+               -> (Mat, Mat, Mat, Mat, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let q = rand_mat(&mut rng, n, d);
+    let k = rand_mat(&mut rng, n, d);
+    let v = rand_mat(&mut rng, n, d);
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b = rng.normal_vec(2 * n - 1, 0.5);
+    (q, k, v, w, b)
+}
+
+#[test]
+fn prop_attend_batch_matches_uncached_path_all_kinds() {
+    for kind_s in KERNEL_KINDS {
+        let kind = Kind::parse(kind_s).expect("kernel kind");
+        for causal in [false, true] {
+            forall(
+                &format!("engine=={kind_s}/causal={causal}"),
+                8,
+                0xEA51E,
+                &EngineCase,
+                |&(n, d, m, seed)| {
+                    let (q, k, v, w, b) = case_inputs(n, d, m, seed);
+                    let want = attention::attend(
+                        kind, &q, &k, &v, Some(&w), Some(&b), causal,
+                    );
+                    let cache = PlanCache::default();
+                    let item = AttendItem {
+                        kind,
+                        q: &q,
+                        k: &k,
+                        v: &v,
+                        features: Some(&w),
+                        bias: Some(&b),
+                        causal,
+                    };
+                    let got = attend_batch_with(&[item], &cache, 1)
+                        .map_err(|e| format!("attend_batch: {e}"))?;
+                    let err = got[0].max_abs_diff(&want);
+                    if err as f64 > 1e-12 {
+                        return Err(format!(
+                            "cached vs uncached max err {err} (n={n})"
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fft_engine_matches_quadratic_direct_oracle() {
+    for kind_s in ["prf_rpe_fft", "nprf_rpe_fft"] {
+        let kind = Kind::parse(kind_s).expect("fft kind");
+        for causal in [false, true] {
+            forall(
+                &format!("engine-vs-direct=={kind_s}/causal={causal}"),
+                8,
+                0xD1BEC7,
+                &EngineCase,
+                |&(n, d, m, seed)| {
+                    let (q, k, v, w, b) = case_inputs(n, d, m, seed);
+                    let phi_q = kernel_features(kind, &q, &w);
+                    let phi_k = kernel_features(kind, &k, &w);
+                    let c = attention::rpe_correlations(&b);
+                    let direct = attention::nprf_rpe_direct_path(
+                        &phi_q, &phi_k, &v, &c, causal,
+                    );
+                    let cache = PlanCache::default();
+                    let item = AttendItem {
+                        kind,
+                        q: &q,
+                        k: &k,
+                        v: &v,
+                        features: Some(&w),
+                        bias: Some(&b),
+                        causal,
+                    };
+                    let got = attend_batch_with(&[item], &cache, 1)
+                        .map_err(|e| format!("attend_batch: {e}"))?;
+                    let err = got[0].max_abs_diff(&direct);
+                    if err > 1e-6 {
+                        return Err(format!(
+                            "engine vs quadratic oracle max err {err} (n={n})"
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn attend_batch_output_independent_of_worker_count() {
+    // A mixed-kind [batch x heads] workload: every output must be
+    // bitwise identical for 1 through 8 workers.
+    let (n, d, m) = (33, 4, 3);
+    let mut rng = Rng::new(0x17EAD5);
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b = rng.normal_vec(2 * n - 1, 0.5);
+    let qs: Vec<Mat> = (0..12u64)
+        .map(|i| rand_mat(&mut Rng::new(1000 + i), n, d))
+        .collect();
+    let ks: Vec<Mat> = (0..12u64)
+        .map(|i| rand_mat(&mut Rng::new(2000 + i), n, d))
+        .collect();
+    let vs: Vec<Mat> = (0..12u64)
+        .map(|i| rand_mat(&mut Rng::new(3000 + i), n, d))
+        .collect();
+    let kinds: Vec<Kind> = KERNEL_KINDS
+        .iter()
+        .map(|s| Kind::parse(s).expect("kind"))
+        .collect();
+    let items: Vec<AttendItem> = (0..12)
+        .map(|i| AttendItem {
+            kind: kinds[i % kinds.len()],
+            q: &qs[i],
+            k: &ks[i],
+            v: &vs[i],
+            features: Some(&w),
+            bias: Some(&b),
+            causal: i % 2 == 0,
+        })
+        .collect();
+    let cache = PlanCache::default();
+    let baseline = attend_batch_with(&items, &cache, 1).expect("workers=1");
+    for workers in 2..=8 {
+        let got = attend_batch_with(&items, &cache, workers)
+            .unwrap_or_else(|e| panic!("workers={workers}: {e}"));
+        assert_eq!(got.len(), baseline.len());
+        for (i, (a, b)) in got.iter().zip(&baseline).enumerate() {
+            assert_eq!(a.data, b.data, "workers={workers} item={i}");
+        }
+    }
+}
+
+#[test]
+fn streaming_server_soak_shares_one_plan_cache() {
+    // Interleave streaming sessions (prefill + steps) with stateless
+    // prompt batches against one server. Everything must complete (no
+    // deadlock between the two request paths), batch outputs must match
+    // the re-forward oracle, and the shared plan cache must end >= 90%
+    // hits: only the first occurrence of each (coeffs, length) builds.
+    let prompt_len = 12;
+    let rounds = 15;
+    let sessions = 6u64;
+    let cfg = StreamingServerConfig {
+        vocab: 32,
+        d_model: 8,
+        features: 8,
+        max_len: 32,
+        window: 32,
+        seed: 7,
+        workers: 2,
+        max_live: 4,
+        ..StreamingServerConfig::default()
+    };
+    let kind = cfg.kind;
+    let lm = CpuLm::new(
+        kind, cfg.vocab, cfg.d_model, cfg.features, cfg.max_len, cfg.seed,
+    )
+    .expect("lm");
+    let server = StreamingServer::start(cfg).expect("server");
+    let mut rng = Rng::new(99);
+    let mut positions = vec![0usize; sessions as usize];
+    for round in 0..rounds {
+        // Streaming leg: prefill on round 0, then one step per round.
+        for s in 0..sessions {
+            let resp = if round == 0 {
+                let prompt: Vec<i32> = (0..prompt_len)
+                    .map(|_| rng.below_usize(32) as i32)
+                    .collect();
+                server.submit(s + 1, prompt).expect("submit")
+            } else {
+                let tok = rng.below_usize(32) as i32;
+                server
+                    .submit_at(s + 1, vec![tok], positions[s as usize])
+                    .expect("submit_at")
+            }
+            .recv()
+            .expect("recv")
+            .expect("stream leg");
+            positions[s as usize] = resp.positions;
+        }
+        // Batch leg: four stateless prompts of the same length.
+        let prompts: Vec<Vec<i32>> = (0..4)
+            .map(|_| {
+                (0..prompt_len)
+                    .map(|_| rng.below_usize(32) as i32)
+                    .collect()
+            })
+            .collect();
+        let resp = server
+            .submit_prompt_batch(prompts.clone())
+            .expect("submit batch")
+            .recv()
+            .expect("recv batch")
+            .expect("batch leg");
+        for (i, p) in prompts.iter().enumerate() {
+            assert_eq!(
+                resp.next_logits[i],
+                lm.full_logits(p),
+                "round {round} prompt {i} diverged from re-forward"
+            );
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.batch_requests, rounds);
+    assert_eq!(stats.batch_prompts, rounds * 4);
+    assert_eq!(stats.sessions_created, sessions as usize);
+    let pc = &stats.plan_cache;
+    let total = pc.hits + pc.misses;
+    // 6 prefills + 60 batch items draw plans; only the first sighting
+    // of each key (plus at most one concurrent double-build) misses.
+    assert!(total >= 60, "expected >= 60 plan lookups, got {total}");
+    assert!(
+        pc.hit_rate() >= 0.9,
+        "plan cache hit rate {:.3} < 0.9 ({pc:?})",
+        pc.hit_rate()
+    );
+}
