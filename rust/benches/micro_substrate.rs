@@ -5,7 +5,7 @@
 //! §Perf.
 
 use kafft::attention::{self, draw_gaussian_features, phi_prf};
-use kafft::fft::{fft, Complex, FftPlan};
+use kafft::fft::{fft, Complex, FftPlan, RfftPlan, Scratch};
 use kafft::rng::Rng;
 use kafft::tensor::Mat;
 use kafft::toeplitz::{toeplitz_mul_naive, ToeplitzPlan};
@@ -28,6 +28,17 @@ fn main() {
         print_result(&r);
         let r = bench_for(&format!("fft oneshot n={n}"), 3, 0.3, 20, || {
             std::hint::black_box(fft(&x));
+        });
+        print_result(&r);
+        // Real-spectrum path: same length, half the butterflies.
+        let xr: Vec<f64> = x.iter().map(|c| c.re).collect();
+        let rplan = RfftPlan::new(n);
+        let mut scratch = Scratch::new();
+        let mut sre = vec![0.0; rplan.bins()];
+        let mut sim = vec![0.0; rplan.bins()];
+        let r = bench_for(&format!("rfft plan n={n}"), 3, 0.3, 20, || {
+            rplan.rfft(&xr, &mut sre, &mut sim, &mut scratch);
+            std::hint::black_box(&sre);
         });
         print_result(&r);
     }

@@ -279,16 +279,34 @@ pub fn nprf_rpe_fft_path(phi_q: &Mat, phi_k: &Mat, v: &Mat, c: &[f32],
 
 /// `nprf_rpe_fft_path` against a prebuilt (typically cached) plan whose
 /// coefficients already carry the causal mask. Uses the multi-column
-/// batched FFT; bitwise equal to the per-call path for the same
-/// coefficients (see `ToeplitzPlan::apply_batched`).
+/// half-spectrum rfft with this thread's shared scratch arena; bitwise
+/// equal to the per-call path for the same coefficients (see
+/// `ToeplitzPlan::apply_batched`).
 pub fn nprf_rpe_fft_path_with_plan(phi_q: &Mat, phi_k: &Mat, v: &Mat,
                                    plan: &crate::toeplitz::ToeplitzPlan) -> Mat {
+    crate::fft::Scratch::with_thread_local(|s| {
+        nprf_rpe_fft_path_with_plan_scratch(phi_q, phi_k, v, plan, s)
+    })
+}
+
+/// `nprf_rpe_fft_path_with_plan` against an explicit scratch arena —
+/// the entry point the engine's workers and streaming prefill share so
+/// one arena serves a whole [batch x heads] fan-out. Scratch contents
+/// do not influence results: outputs are bitwise identical whichever
+/// arena is passed (tests/proptest_rfft.rs).
+pub fn nprf_rpe_fft_path_with_plan_scratch(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    plan: &crate::toeplitz::ToeplitzPlan,
+    scratch: &mut crate::fft::Scratch,
+) -> Mat {
     let n = phi_k.rows;
     assert_eq!(plan.n(), n, "plan length {} != sequence length {n}", plan.n());
     let d = v.cols;
     let f = phi_k.cols * (d + 1);
     let p = kv_aggregate_f64(phi_k, v);
-    let dmat = plan.apply_batched(&p, f);
+    let dmat = plan.apply_batched_with(&p, f, scratch);
     readout(phi_q, &dmat, d)
 }
 

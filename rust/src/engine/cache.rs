@@ -8,14 +8,20 @@
 //! `toeplitz_mul_fft` does. Keys carry a 64-bit FNV-1a fingerprint of
 //! the raw coefficient bits; values are `Arc<ToeplitzPlan>` so an
 //! evicted plan stays alive for callers still holding it. Twiddle
-//! tables (`FftPlan`) are cached one level deeper, keyed by embedded
-//! FFT length, because `next_pow2(2n)` collapses many sequence lengths
-//! onto one table.
+//! tables (`RfftPlan`, the real-spectrum substrate) are cached one
+//! level deeper, keyed by embedded FFT length, because `next_pow2(2n)`
+//! collapses many sequence lengths onto one table.
+//!
+//! Byte accounting rides `ToeplitzPlan::bytes()`, which since the
+//! real-spectrum refactor counts the *half*-spectrum — (L/2 + 1) split
+//! re/im bins instead of L complex values — so a fixed budget holds
+//! about twice the plans it used to (`half_spectrum_doubles_capacity`
+//! below pins that down).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::fft::{next_pow2, FftPlan};
+use crate::fft::{next_pow2, RfftPlan};
 use crate::toeplitz::{causal_coeffs, ToeplitzPlan};
 
 /// FNV-1a over the length and the raw f64 bit patterns. Bit-exact:
@@ -82,7 +88,7 @@ const MAX_FFT_TABLES: usize = 8;
 
 struct Inner {
     plans: HashMap<PlanKey, Entry>,
-    ffts: HashMap<usize, (Arc<FftPlan>, u64)>,
+    ffts: HashMap<usize, (Arc<RfftPlan>, u64)>,
     clock: u64,
     bytes: usize,
     hits: u64,
@@ -139,7 +145,7 @@ impl PlanCache {
                 *stamp = now;
                 fft.clone()
             } else {
-                let fft = Arc::new(FftPlan::new(len));
+                let fft = Arc::new(RfftPlan::new(len));
                 g.ffts.insert(len, (fft.clone(), now));
                 while g.ffts.len() > MAX_FFT_TABLES {
                     let victim = g
@@ -162,7 +168,7 @@ impl PlanCache {
         } else {
             c
         };
-        let plan = Arc::new(ToeplitzPlan::with_fft_plan(cc, n, fft));
+        let plan = Arc::new(ToeplitzPlan::with_rfft_plan(cc, n, fft));
         let bytes = plan.bytes();
         let mut g = self.inner.lock().expect("plan cache poisoned");
         g.clock += 1;
@@ -350,7 +356,36 @@ mod tests {
         // n = 12 and n = 16 both embed into next_pow2(2n) = 32.
         let a = cache.get(&coeffs(12, 40), 12, true);
         let b = cache.get(&coeffs(16, 41), 16, true);
-        assert!(Arc::ptr_eq(a.fft_plan(), b.fft_plan()));
+        assert!(Arc::ptr_eq(a.rfft_plan(), b.rfft_plan()));
+    }
+
+    #[test]
+    fn half_spectrum_doubles_capacity() {
+        // The budget counts kernel-spectrum bytes; with half-spectrum
+        // plans a budget sized for two full-spectrum plans (plus the
+        // constant struct overhead) holds four, where it could never
+        // have held more than two of the old complex plans.
+        let n = 256;
+        let len = next_pow2(2 * n);
+        let overhead = std::mem::size_of::<ToeplitzPlan>();
+        let full_spectrum_plan = len * 16 + overhead; // L complex bins
+        let per_plan = ToeplitzPlan::new(&coeffs(n, 80), n).bytes();
+        assert!(
+            2 * (per_plan - overhead) <= (full_spectrum_plan - overhead) + 64,
+            "per-plan spectrum bytes {per_plan} not ~half of \
+             {full_spectrum_plan}"
+        );
+        // Slack covers the 4x struct overhead + the extra Nyquist bin
+        // per plan; far below one more full-spectrum plan.
+        let budget = 2 * full_spectrum_plan + 2 * overhead + 256;
+        assert!(budget < 3 * full_spectrum_plan, "budget fits 2 full plans");
+        let cache = PlanCache::new(budget);
+        for seed in 0..4 {
+            cache.get(&coeffs(n, 81 + seed), n, true);
+        }
+        let s = cache.stats();
+        assert_eq!(s.plans, 4, "halved accounting must fit 4 plans: {s:?}");
+        assert_eq!(s.evictions, 0);
     }
 
     #[test]

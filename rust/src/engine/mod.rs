@@ -9,12 +9,16 @@
 //!
 //!   * `cache::PlanCache` — shared `ToeplitzPlan`s keyed by (length,
 //!     causal, coefficient fingerprint) with hit/miss counters and a
-//!     byte-budget LRU; twiddle tables cached one level deeper;
+//!     byte-budget LRU; half-spectrum storage since the real-spectrum
+//!     refactor, so a budget holds ~2x the plans; `RfftPlan` twiddle
+//!     tables cached one level deeper;
 //!   * `ToeplitzPlan::apply_batched` (in `toeplitz`) — all f = m·(d+1)
-//!     Toeplitz columns through one multi-column FFT;
+//!     Toeplitz columns through one multi-column half-spectrum rfft;
 //!   * `attend_batch` — a [batch × heads] workload fanned across a
 //!     scoped `std::thread` pool (the crate outside `runtime` stays
-//!     dependency-free: no rayon, no crossbeam).
+//!     dependency-free: no rayon, no crossbeam), each worker owning
+//!     one `fft::Scratch` arena reused across every item it claims so
+//!     the steady-state fan-out allocates no FFT workspace.
 //!
 //! See README.md in this directory for when each lever wins.
 
@@ -26,9 +30,10 @@ use std::sync::mpsc::channel;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_attention, kernel_features, nprf_rpe_fft_path_with_plan,
+    kernel_attention, kernel_features, nprf_rpe_fft_path_with_plan_scratch,
     rpe_correlations, Kind,
 };
+use crate::fft::Scratch;
 use crate::tensor::Mat;
 
 pub use cache::{coeff_fingerprint, CacheStats, PlanCache, PlanKey};
@@ -117,7 +122,13 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
                          workers: usize) -> Result<Vec<Mat>> {
     let workers = workers.max(1).min(items.len().max(1));
     if workers == 1 {
-        return items.iter().map(|it| attend_one(it, cache)).collect();
+        // One arena for the whole batch: after the largest item has
+        // sized it, the remaining items transform allocation-free.
+        let mut scratch = Scratch::new();
+        return items
+            .iter()
+            .map(|it| attend_one(it, cache, &mut scratch))
+            .collect();
     }
     let next = AtomicUsize::new(0);
     let (tx, rx) = channel::<(usize, Result<Mat>)>();
@@ -125,13 +136,22 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
         for _ in 0..workers {
             let tx = tx.clone();
             let next = &next;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                if tx.send((i, attend_one(&items[i], cache))).is_err() {
-                    break;
+            s.spawn(move || {
+                // Worker-local arena, reused across every item this
+                // worker claims from the [batch x heads] fan-out.
+                // Scratch contents never leak into results, so the
+                // claim order (which varies run to run) cannot change
+                // any output bit.
+                let mut scratch = Scratch::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = attend_one(&items[i], cache, &mut scratch);
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -152,10 +172,13 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
 }
 
 /// One item, mirroring `attention::attend` exactly — except that for
-/// fft+rpe kernel kinds the Toeplitz plan comes from the cache and the
-/// columns go through the batched FFT. Both substitutions are bitwise
-/// equivalent to the uncached path (tests/proptest_engine.rs).
-fn attend_one(it: &AttendItem, cache: &PlanCache) -> Result<Mat> {
+/// fft+rpe kernel kinds the Toeplitz plan comes from the cache, the
+/// columns go through the batched half-spectrum rfft, and the FFT
+/// workspace comes from the worker's reusable arena. All three
+/// substitutions are bitwise equivalent to the uncached path
+/// (tests/proptest_engine.rs).
+fn attend_one(it: &AttendItem, cache: &PlanCache,
+              scratch: &mut Scratch) -> Result<Mat> {
     match it.kind {
         Kind::Softmax { rpe, .. } => {
             if rpe && it.bias.is_none() {
@@ -191,7 +214,9 @@ fn attend_one(it: &AttendItem, cache: &PlanCache) -> Result<Mat> {
             if fft {
                 let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
                 let plan = cache.get(&c64, n, it.causal);
-                Ok(nprf_rpe_fft_path_with_plan(&phi_q, &phi_k, it.v, &plan))
+                Ok(nprf_rpe_fft_path_with_plan_scratch(
+                    &phi_q, &phi_k, it.v, &plan, scratch,
+                ))
             } else {
                 Ok(kernel_attention(&phi_q, &phi_k, it.v, Some(&c), it.causal))
             }

@@ -1,10 +1,21 @@
 //! FFT substrate: iterative radix-2 Cooley-Tukey + Bluestein for
-//! arbitrary sizes, f64 complex.
+//! arbitrary sizes, f64 complex, plus the real-to-complex half-spectrum
+//! layer in [`real`] that the Toeplitz hot path runs on.
 //!
 //! Used by `toeplitz` for the O(n log n) position-correlation product
 //! (the Rust-side mirror of the paper's Eq. 12/13 fast path) and by the
 //! Fig. 1b simulation. Precision is f64 throughout so the CPU oracle is
-//! strictly tighter than the f32 artifacts it cross-checks.
+//! strictly tighter than the f32 artifacts it cross-checks. The complex
+//! `FftPlan` is the substrate's oracle: the real path in `real` must
+//! match it to 1e-12 (tests/proptest_rfft.rs), and one-shot helpers
+//! (`fft`/`ifft`/`bluestein`) draw their power-of-two plans from a
+//! small shared table cache instead of rebuilding trig tables per call.
+
+pub mod real;
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+pub use real::{RfftPlan, Scratch};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Complex {
@@ -175,6 +186,43 @@ impl FftPlan {
     }
 }
 
+/// How many power-of-two plans the shared one-shot table keeps warm.
+const SHARED_PLAN_SLOTS: usize = 8;
+
+/// Process-wide MRU cache of power-of-two `FftPlan`s backing the
+/// one-shot helpers (`fft`, `ifft`, and Bluestein's embedded
+/// convolution), so arbitrary-size transforms stop paying twiddle +
+/// bit-reversal construction on every call. Distinct from the engine's
+/// `PlanCache`, which owns the serving-path (r)fft tables with LRU
+/// statistics; this one is a last-resort amortizer for library
+/// one-shots and oracles.
+pub fn shared_plan(n: usize) -> Arc<FftPlan> {
+    static CACHE: OnceLock<Mutex<Vec<Arc<FftPlan>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(Vec::new()));
+    {
+        let mut g = cache.lock().expect("shared fft plan cache poisoned");
+        if let Some(pos) = g.iter().position(|p| p.n == n) {
+            let plan = g.remove(pos);
+            g.insert(0, plan.clone());
+            return plan;
+        }
+    }
+    // Build outside the lock: a miss's O(n) trig-table construction
+    // must not stall concurrent one-shots of other sizes. A racing
+    // double-build is harmless — plans are deterministic, and whichever
+    // build lost simply adopts the resident winner.
+    let plan = Arc::new(FftPlan::new(n));
+    let mut g = cache.lock().expect("shared fft plan cache poisoned");
+    if let Some(pos) = g.iter().position(|p| p.n == n) {
+        let existing = g.remove(pos);
+        g.insert(0, existing.clone());
+        return existing;
+    }
+    g.insert(0, plan.clone());
+    g.truncate(SHARED_PLAN_SLOTS);
+    plan
+}
+
 /// Forward FFT of arbitrary size (radix-2 fast path, Bluestein otherwise).
 pub fn fft(x: &[Complex]) -> Vec<Complex> {
     let n = x.len();
@@ -183,7 +231,7 @@ pub fn fft(x: &[Complex]) -> Vec<Complex> {
     }
     if n.is_power_of_two() {
         let mut buf = x.to_vec();
-        FftPlan::new(n).forward(&mut buf);
+        shared_plan(n).forward(&mut buf);
         buf
     } else {
         bluestein(x, false)
@@ -198,7 +246,7 @@ pub fn ifft(x: &[Complex]) -> Vec<Complex> {
     }
     if n.is_power_of_two() {
         let mut buf = x.to_vec();
-        FftPlan::new(n).inverse(&mut buf);
+        shared_plan(n).inverse(&mut buf);
         buf
     } else {
         bluestein(x, true)
@@ -219,7 +267,10 @@ fn bluestein(x: &[Complex], inverse: bool) -> Vec<Complex> {
         })
         .collect();
     let m = next_pow2(2 * n - 1);
-    let plan = FftPlan::new(m);
+    // The embedded power-of-two plan comes from the shared table cache:
+    // repeated odd-size one-shots (the Fig. 1b sweeps call fft() in a
+    // loop) stop rebuilding the same twiddle + bit-reversal tables.
+    let plan = shared_plan(m);
     let mut a = vec![Complex::ZERO; m];
     for k in 0..n {
         a[k] = x[k].mul(chirp[k]);
@@ -264,12 +315,30 @@ pub fn dft_naive(x: &[Complex]) -> Vec<Complex> {
 }
 
 /// Circular convolution via FFT: len(a) == len(b) == result length.
+///
+/// Both inputs are real, so they ride one complex transform via the
+/// two-reals-in-one-complex packing z = a + i*b: conjugate symmetry
+/// untangles A and B from Z, and the result needs only one inverse —
+/// two transforms total where the naive formulation pays three.
 pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
     let n = a.len();
     assert_eq!(n, b.len());
-    let fa = fft(&a.iter().map(|&x| Complex::new(x, 0.0)).collect::<Vec<_>>());
-    let fb = fft(&b.iter().map(|&x| Complex::new(x, 0.0)).collect::<Vec<_>>());
-    let prod: Vec<Complex> = fa.iter().zip(&fb).map(|(x, y)| x.mul(*y)).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    let z: Vec<Complex> =
+        a.iter().zip(b).map(|(&x, &y)| Complex::new(x, y)).collect();
+    let fz = fft(&z);
+    let mut prod = vec![Complex::ZERO; n];
+    for (k, p) in prod.iter_mut().enumerate() {
+        let zk = fz[k];
+        let zm = fz[(n - k) % n].conj();
+        // A[k] = (Z[k] + conj(Z[n-k]))/2, B[k] = (Z[k] - conj(Z[n-k]))/2i.
+        let fa = zk.add(zm).scale(0.5);
+        let diff = zk.sub(zm);
+        let fb = Complex::new(0.5 * diff.im, -0.5 * diff.re);
+        *p = fa.mul(fb);
+    }
     ifft(&prod).iter().map(|c| c.re).collect()
 }
 
@@ -417,6 +486,31 @@ mod tests {
             assert_eq!(p.re, q.re);
             assert_eq!(p.im, q.im);
         }
+    }
+
+    #[test]
+    fn shared_plan_reuses_tables() {
+        use std::sync::Arc;
+        let a = shared_plan(64);
+        let b = shared_plan(64);
+        assert!(Arc::ptr_eq(&a, &b), "same size must share one plan");
+        assert_eq!(a.n, 64);
+        // Distinct sizes are distinct plans.
+        let c = shared_plan(128);
+        assert_eq!(c.n, 128);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn circular_convolution_degenerate_sizes() {
+        assert!(circular_convolve(&[], &[]).is_empty());
+        let y = circular_convolve(&[3.0], &[-2.5]);
+        assert_eq!(y.len(), 1);
+        assert!((y[0] + 7.5).abs() < 1e-12);
+        // n = 2: y_0 = a0 b0 + a1 b1, y_1 = a0 b1 + a1 b0.
+        let y = circular_convolve(&[1.0, 2.0], &[5.0, -3.0]);
+        assert!((y[0] - (5.0 - 6.0)).abs() < 1e-12);
+        assert!((y[1] - (-3.0 + 10.0)).abs() < 1e-12);
     }
 
     #[test]

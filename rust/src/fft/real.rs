@@ -1,0 +1,502 @@
+//! Real-to-complex FFT: the half-spectrum substrate for the Toeplitz
+//! fast path.
+//!
+//! Every signal the engine transforms — kernel features, value
+//! aggregates, RPE coefficient vectors — is purely real, so its
+//! spectrum is conjugate-symmetric and only the first L/2 + 1 bins
+//! carry information. `RfftPlan` exploits that: a length-L real
+//! transform runs as one half-size (L/2) complex FFT over split re/im
+//! (SoA) `f64` slices plus an O(L) untangle pass, halving both the
+//! butterfly count and every stored spectrum relative to the AoS
+//! `Complex` path in `FftPlan` (which stays alive as the oracle).
+//!
+//! The batch entry points (`rfft_batch` / `irfft_batch`) iterate FFT
+//! stages outermost — one pass per stage over the whole batch with that
+//! stage's twiddles hot — and draw all intermediate storage from a
+//! caller-owned [`Scratch`] arena, so steady-state calls perform zero
+//! heap allocations (gated by `benches/fft_substrate.rs`).
+//!
+//! Layout conventions:
+//!   * real signals: `count` rows of length `n`, packed contiguously;
+//!   * half-spectra: `count` rows of `bins() = n/2 + 1` values in split
+//!     re/im slices; bin 0 is DC, bin n/2 is Nyquist (both real up to
+//!     rounding of the untangle twiddles).
+
+use std::cell::RefCell;
+
+/// Grow-only length fix-up for scratch vectors: zero-fills to `len`
+/// without ever shrinking capacity, so a steady-state workload (same
+/// shapes every call) never reallocates. Use for buffers whose stale
+/// contents must not leak (e.g. circulant zero-padding).
+pub(crate) fn ensure_len(v: &mut Vec<f64>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
+}
+
+/// `ensure_len` without the zero-fill, for buffers every consumer
+/// fully overwrites before reading (FFT workspaces, spectrum staging):
+/// skips a redundant O(len) memset per call on the hot path. Stale
+/// contents are observable to the next writer, so callers must
+/// guarantee full overwrite — the scratch-reuse determinism tests pin
+/// that contract down bitwise.
+pub(crate) fn reserve_len(v: &mut Vec<f64>, len: usize) {
+    if v.len() != len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Reusable workspace for the real-spectrum paths. One arena serves
+/// every plan size: buffers grow to the high-water mark and are reused
+/// verbatim afterwards. Contents carry no state between calls — every
+/// consumer fully overwrites what it reads — so reusing one arena
+/// across unrelated workloads is bitwise harmless (tested in
+/// `tests/proptest_rfft.rs`).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Half-size SoA complex workspace owned by the rfft butterflies.
+    work_re: Vec<f64>,
+    work_im: Vec<f64>,
+    /// Staging used by `ToeplitzPlan`: zero-padded real columns.
+    pub(crate) real: Vec<f64>,
+    /// Staging used by `ToeplitzPlan`: the batch's half-spectra.
+    pub(crate) spec_re: Vec<f64>,
+    pub(crate) spec_im: Vec<f64>,
+}
+
+thread_local! {
+    static TLS_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Currently reserved heap footprint across all arenas.
+    pub fn bytes(&self) -> usize {
+        (self.work_re.capacity()
+            + self.work_im.capacity()
+            + self.real.capacity()
+            + self.spec_re.capacity()
+            + self.spec_im.capacity())
+            * std::mem::size_of::<f64>()
+    }
+
+    /// Run `f` against this thread's shared arena — the fallback the
+    /// convenience entry points (`ToeplitzPlan::apply_batched` without
+    /// an explicit scratch) use so one-shot callers still amortize
+    /// across calls. Do not nest: the arena is a `RefCell`.
+    pub fn with_thread_local<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+        TLS_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+    }
+}
+
+/// Precomputed tables for a fixed power-of-two real transform length.
+///
+/// Internally: stage twiddles + bit-reversal map for the half-size SoA
+/// complex FFT, plus the length-L untangle twiddles e^{-2*pi*i*k/L}.
+#[derive(Debug, Clone)]
+pub struct RfftPlan {
+    /// Real signal length L.
+    n: usize,
+    /// L / 2 — the size of the internal complex FFT.
+    half: usize,
+    /// tw_re[s] / tw_im[s] hold the stage-s roots of unity (split).
+    tw_re: Vec<Vec<f64>>,
+    tw_im: Vec<Vec<f64>>,
+    bitrev: Vec<usize>,
+    /// Untangle twiddles for k = 0..=half.
+    un_re: Vec<f64>,
+    un_im: Vec<f64>,
+}
+
+impl RfftPlan {
+    pub fn new(n: usize) -> RfftPlan {
+        assert!(
+            n.is_power_of_two() && n >= 2,
+            "RfftPlan requires power-of-two n >= 2, got {n}"
+        );
+        let half = n / 2;
+        let stages = half.trailing_zeros() as usize;
+        let mut tw_re = Vec::with_capacity(stages);
+        let mut tw_im = Vec::with_capacity(stages);
+        let mut len = 2;
+        while len <= half {
+            let hl = len / 2;
+            let mut re = Vec::with_capacity(hl);
+            let mut im = Vec::with_capacity(hl);
+            for k in 0..hl {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                re.push(ang.cos());
+                im.push(ang.sin());
+            }
+            tw_re.push(re);
+            tw_im.push(im);
+            len <<= 1;
+        }
+        let mut bitrev = vec![0usize; half];
+        if stages > 0 {
+            for (i, item) in bitrev.iter_mut().enumerate() {
+                *item = i.reverse_bits() >> (usize::BITS as usize - stages);
+            }
+        }
+        let mut un_re = Vec::with_capacity(half + 1);
+        let mut un_im = Vec::with_capacity(half + 1);
+        for k in 0..=half {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            un_re.push(ang.cos());
+            un_im.push(ang.sin());
+        }
+        RfftPlan { n, half, tw_re, tw_im, bitrev, un_re, un_im }
+    }
+
+    /// Real transform length L.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Half-spectrum bin count, L/2 + 1.
+    pub fn bins(&self) -> usize {
+        self.half + 1
+    }
+
+    /// Approximate heap footprint (twiddles + bit-reversal + untangle
+    /// tables), for the engine's table-cache accounting.
+    pub fn bytes(&self) -> usize {
+        let tw: usize = self.tw_re.iter().map(|t| 2 * t.len()).sum();
+        (tw + self.un_re.len() + self.un_im.len())
+            * std::mem::size_of::<f64>()
+            + self.bitrev.len() * std::mem::size_of::<usize>()
+            + std::mem::size_of::<RfftPlan>()
+    }
+
+    /// Forward transforms of `count` packed real signals
+    /// (`x.len() == count * n`) into split half-spectra
+    /// (`out_re.len() == out_im.len() == count * bins()`).
+    pub fn rfft_batch(
+        &self,
+        x: &[f64],
+        count: usize,
+        out_re: &mut [f64],
+        out_im: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        let n = self.n;
+        let h = self.half;
+        let bins = h + 1;
+        assert_eq!(x.len(), count * n, "rfft_batch: bad input length");
+        assert_eq!(out_re.len(), count * bins, "rfft_batch: bad out_re");
+        assert_eq!(out_im.len(), count * bins, "rfft_batch: bad out_im");
+        // The pack loop below writes every workspace element, so stale
+        // contents need no clearing.
+        reserve_len(&mut scratch.work_re, count * h);
+        reserve_len(&mut scratch.work_im, count * h);
+        let zr = &mut scratch.work_re[..count * h];
+        let zi = &mut scratch.work_im[..count * h];
+        // Pack z[j] = x[2j] + i*x[2j+1], gathered straight into
+        // bit-reversed order so the DIT butterflies emit a
+        // natural-order spectrum.
+        for s in 0..count {
+            let sig = &x[s * n..(s + 1) * n];
+            let r = &mut zr[s * h..(s + 1) * h];
+            let i = &mut zi[s * h..(s + 1) * h];
+            for (t, &j) in self.bitrev.iter().enumerate() {
+                r[t] = sig[2 * j];
+                i[t] = sig[2 * j + 1];
+            }
+        }
+        self.butterflies(zr, zi, count, false);
+        // Untangle: with E/O the even/odd-sample DFTs recovered from
+        // the packed transform Z via conjugate symmetry,
+        //   X[k] = E[k] + w^k * O[k],  w = e^{-2*pi*i/L},  k = 0..=L/2.
+        for s in 0..count {
+            let r = &zr[s * h..(s + 1) * h];
+            let i = &zi[s * h..(s + 1) * h];
+            let ore = &mut out_re[s * bins..(s + 1) * bins];
+            let oim = &mut out_im[s * bins..(s + 1) * bins];
+            for k in 0..bins {
+                let kk = k % h;
+                let mm = (h - k) % h;
+                let (zkr, zki) = (r[kk], i[kk]);
+                let (zmr, zmi) = (r[mm], i[mm]);
+                let er = 0.5 * (zkr + zmr);
+                let ei = 0.5 * (zki - zmi);
+                let or_ = 0.5 * (zki + zmi);
+                let oi_ = -0.5 * (zkr - zmr);
+                let (wr, wi) = (self.un_re[k], self.un_im[k]);
+                ore[k] = er + or_ * wr - oi_ * wi;
+                oim[k] = ei + or_ * wi + oi_ * wr;
+            }
+        }
+    }
+
+    /// Inverse of `rfft_batch` (normalized): split half-spectra back to
+    /// packed real signals. The input is read as the half-spectrum of a
+    /// real signal — conjugate symmetry of the missing bins is implied,
+    /// and the imaginary parts of bins 0 and L/2 are honored as given
+    /// (pass 0.0 there for a mathematically real result).
+    pub fn irfft_batch(
+        &self,
+        in_re: &[f64],
+        in_im: &[f64],
+        count: usize,
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        let n = self.n;
+        let h = self.half;
+        let bins = h + 1;
+        assert_eq!(in_re.len(), count * bins, "irfft_batch: bad in_re");
+        assert_eq!(in_im.len(), count * bins, "irfft_batch: bad in_im");
+        assert_eq!(out.len(), count * n, "irfft_batch: bad output length");
+        // The retangle scatter hits every workspace element (bitrev is
+        // a permutation), so stale contents need no clearing.
+        reserve_len(&mut scratch.work_re, count * h);
+        reserve_len(&mut scratch.work_im, count * h);
+        let zr = &mut scratch.work_re[..count * h];
+        let zi = &mut scratch.work_im[..count * h];
+        for s in 0..count {
+            let xr = &in_re[s * bins..(s + 1) * bins];
+            let xi = &in_im[s * bins..(s + 1) * bins];
+            let r = &mut zr[s * h..(s + 1) * h];
+            let i = &mut zi[s * h..(s + 1) * h];
+            // Retangle: E[k] = (X[k] + conj(X[h-k]))/2 and
+            // w^k*O[k] = (X[k] - conj(X[h-k]))/2, so
+            // Z[k] = E[k] + i*O[k], scattered straight into
+            // bit-reversed order for the inverse butterflies.
+            for k in 0..h {
+                let m = h - k;
+                let er = 0.5 * (xr[k] + xr[m]);
+                let ei = 0.5 * (xi[k] - xi[m]);
+                let gr = 0.5 * (xr[k] - xr[m]);
+                let gi = 0.5 * (xi[k] + xi[m]);
+                let (wr, wi) = (self.un_re[k], self.un_im[k]);
+                let or_ = gr * wr + gi * wi;
+                let oi_ = gi * wr - gr * wi;
+                let t = self.bitrev[k];
+                r[t] = er - oi_;
+                i[t] = ei + or_;
+            }
+        }
+        self.butterflies(zr, zi, count, true);
+        let inv = 1.0 / h as f64;
+        for s in 0..count {
+            let r = &zr[s * h..(s + 1) * h];
+            let i = &zi[s * h..(s + 1) * h];
+            let sig = &mut out[s * n..(s + 1) * n];
+            for j in 0..h {
+                sig[2 * j] = r[j] * inv;
+                sig[2 * j + 1] = i[j] * inv;
+            }
+        }
+    }
+
+    /// Single-signal forward transform: a batch of one.
+    pub fn rfft(
+        &self,
+        x: &[f64],
+        out_re: &mut [f64],
+        out_im: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        self.rfft_batch(x, 1, out_re, out_im, scratch);
+    }
+
+    /// Single-signal inverse transform: a batch of one.
+    pub fn irfft(
+        &self,
+        in_re: &[f64],
+        in_im: &[f64],
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        self.irfft_batch(in_re, in_im, 1, out, scratch);
+    }
+
+    /// The shared half-size SoA butterfly schedule: stages outermost so
+    /// each stage's twiddles stay hot across the whole batch, split
+    /// re/im inner loops so the butterflies autovectorize. Input must
+    /// be in bit-reversed order; output is natural. `invert` conjugates
+    /// the twiddles (unnormalized inverse — callers scale by 1/half).
+    fn butterflies(&self, re: &mut [f64], im: &mut [f64], count: usize,
+                   invert: bool) {
+        let h = self.half;
+        let sign = if invert { -1.0 } else { 1.0 };
+        let mut len = 2;
+        let mut stage = 0;
+        while len <= h {
+            let hl = len / 2;
+            let twr = &self.tw_re[stage];
+            let twi = &self.tw_im[stage];
+            for s in 0..count {
+                let r = &mut re[s * h..(s + 1) * h];
+                let i = &mut im[s * h..(s + 1) * h];
+                let mut base = 0;
+                while base < h {
+                    for k in 0..hl {
+                        let wr = twr[k];
+                        let wi = sign * twi[k];
+                        let br = r[base + k + hl];
+                        let bi = i[base + k + hl];
+                        let vr = br * wr - bi * wi;
+                        let vi = br * wi + bi * wr;
+                        let ar = r[base + k];
+                        let ai = i[base + k];
+                        r[base + k] = ar + vr;
+                        i[base + k] = ai + vi;
+                        r[base + k + hl] = ar - vr;
+                        i[base + k + hl] = ai - vi;
+                    }
+                    base += len;
+                }
+            }
+            len <<= 1;
+            stage += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, Complex, FftPlan};
+    use crate::rng::Rng;
+
+    fn rand_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn rfft_to_vec(plan: &RfftPlan, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let bins = plan.bins();
+        let mut re = vec![0.0; bins];
+        let mut im = vec![0.0; bins];
+        let mut scratch = Scratch::new();
+        plan.rfft(x, &mut re, &mut im, &mut scratch);
+        (re, im)
+    }
+
+    #[test]
+    fn half_spectrum_matches_naive_dft() {
+        for l in [2usize, 4, 8, 64, 256] {
+            let x = rand_real(l, l as u64);
+            let plan = RfftPlan::new(l);
+            let (re, im) = rfft_to_vec(&plan, &x);
+            let cx: Vec<Complex> =
+                x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let want = dft_naive(&cx);
+            for k in 0..plan.bins() {
+                let dr = (re[k] - want[k].re).abs();
+                let di = (im[k] - want[k].im).abs();
+                assert!(dr < 1e-9 && di < 1e-9, "l={l} k={k} ({dr}, {di})");
+            }
+        }
+    }
+
+    #[test]
+    fn half_spectrum_matches_complex_plan() {
+        for l in [2usize, 4, 8, 64, 1024] {
+            let x = rand_real(l, 100 + l as u64);
+            let rplan = RfftPlan::new(l);
+            let (re, im) = rfft_to_vec(&rplan, &x);
+            let mut buf: Vec<Complex> =
+                x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            FftPlan::new(l).forward(&mut buf);
+            for k in 0..rplan.bins() {
+                let dr = (re[k] - buf[k].re).abs();
+                let di = (im[k] - buf[k].im).abs();
+                assert!(dr < 1e-12 && di < 1e-12, "l={l} k={k} ({dr}, {di})");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_recovers_signal() {
+        for l in [2usize, 8, 128, 1024] {
+            let x = rand_real(l, 300 + l as u64);
+            let plan = RfftPlan::new(l);
+            let (re, im) = rfft_to_vec(&plan, &x);
+            let mut back = vec![0.0; l];
+            let mut scratch = Scratch::new();
+            plan.irfft(&re, &im, &mut back, &mut scratch);
+            for j in 0..l {
+                assert!((back[j] - x[j]).abs() < 1e-12, "l={l} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_and_nyquist_bins_are_real() {
+        let l = 64;
+        let x = rand_real(l, 9);
+        let plan = RfftPlan::new(l);
+        let (_, im) = rfft_to_vec(&plan, &x);
+        assert_eq!(im[0], 0.0, "DC bin must be exactly real");
+        assert!(im[plan.bins() - 1].abs() < 1e-13, "Nyquist bin ~real");
+    }
+
+    #[test]
+    fn batch_bitwise_matches_single() {
+        let l = 128;
+        let count = 5;
+        let plan = RfftPlan::new(l);
+        let signals: Vec<Vec<f64>> =
+            (0..count).map(|s| rand_real(l, 500 + s as u64)).collect();
+        let packed: Vec<f64> =
+            signals.iter().flat_map(|s| s.iter().copied()).collect();
+        let bins = plan.bins();
+        let mut bre = vec![0.0; count * bins];
+        let mut bim = vec![0.0; count * bins];
+        let mut scratch = Scratch::new();
+        plan.rfft_batch(&packed, count, &mut bre, &mut bim, &mut scratch);
+        for (s, sig) in signals.iter().enumerate() {
+            let (re, im) = rfft_to_vec(&plan, sig);
+            assert_eq!(&bre[s * bins..(s + 1) * bins], &re[..], "sig {s}");
+            assert_eq!(&bim[s * bins..(s + 1) * bins], &im[..], "sig {s}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_deterministic() {
+        // One arena shared across mixed sizes must reproduce the
+        // fresh-arena outputs bit for bit.
+        let mut shared = Scratch::new();
+        for l in [8usize, 1024, 2, 64, 8] {
+            let x = rand_real(l, 700 + l as u64);
+            let plan = RfftPlan::new(l);
+            let bins = plan.bins();
+            let mut re = vec![0.0; bins];
+            let mut im = vec![0.0; bins];
+            plan.rfft(&x, &mut re, &mut im, &mut shared);
+            let (fre, fim) = rfft_to_vec(&plan, &x);
+            assert_eq!(re, fre, "l={l}");
+            assert_eq!(im, fim, "l={l}");
+        }
+        assert!(shared.bytes() > 0);
+    }
+
+    #[test]
+    fn thread_local_arena_runs() {
+        let l = 16;
+        let x = rand_real(l, 11);
+        let plan = RfftPlan::new(l);
+        let (want_re, _) = rfft_to_vec(&plan, &x);
+        let got = Scratch::with_thread_local(|s| {
+            let mut re = vec![0.0; plan.bins()];
+            let mut im = vec![0.0; plan.bins()];
+            plan.rfft(&x, &mut re, &mut im, s);
+            re
+        });
+        assert_eq!(got, want_re);
+    }
+
+    #[test]
+    fn plan_reports_sane_metadata() {
+        let plan = RfftPlan::new(256);
+        assert_eq!(plan.n(), 256);
+        assert_eq!(plan.bins(), 129);
+        assert!(plan.bytes() > 0);
+        // Untangle + stage tables are about half the complex plan's.
+        assert!(plan.bytes() < FftPlan::new(256).bytes());
+    }
+}

@@ -24,7 +24,19 @@
 //!     aggregate columns through one transform schedule, and
 //!     `engine::attend_batch` fans [batch × heads] workloads across a
 //!     scoped thread pool. Streaming prefill and the server's batch
-//!     path draw plans from one cache per model.
+//!     path draw plans from one cache per model;
+//!   * the numerical substrate under all of that is the real-spectrum
+//!     layer in `fft::real`: every signal on the Toeplitz hot path is
+//!     real, so `RfftPlan` transforms length-L signals as one
+//!     half-size SoA complex FFT plus an untangle pass (half the
+//!     butterflies, half the cached spectrum bytes — which is why the
+//!     `PlanCache` budget fits ~2x the plans), with all workspace in
+//!     reusable `fft::Scratch` arenas (one per engine worker, one per
+//!     streaming prefill) so steady-state transforms allocate nothing.
+//!     The complex `FftPlan` survives as the conformance oracle
+//!     (`tests/proptest_rfft.rs`) and as Bluestein's engine for
+//!     non-power-of-two one-shots, which now draw shared cached tables
+//!     via `fft::shared_plan`.
 
 pub mod attention;
 pub mod config;

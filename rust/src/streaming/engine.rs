@@ -13,10 +13,11 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_features, nprf_rpe_fft_path, nprf_rpe_fft_path_with_plan,
+    kernel_features, nprf_rpe_fft_path, nprf_rpe_fft_path_with_plan_scratch,
     rpe_correlations, Kind,
 };
 use crate::engine::PlanCache;
+use crate::fft::Scratch;
 use crate::tensor::Mat;
 
 use super::state::DecoderState;
@@ -165,11 +166,14 @@ impl StreamingDecoder {
         }
         let c = self.spec.effective_coeffs(n);
         // One plan lookup covers every head: the spec's correlations
-        // are shared across the head group.
+        // are shared across the head group. Likewise one scratch arena:
+        // after head 0 sizes it, the remaining heads' rfft batches run
+        // allocation-free (arena contents never affect outputs).
         let plan = cache.map(|pc| {
             let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
             pc.get(&c64, n, true)
         });
+        let mut scratch = Scratch::new();
         let c_tail = self.spec.c_tail();
         let mut outs = Vec::with_capacity(heads);
         for h in 0..heads {
@@ -186,7 +190,9 @@ impl StreamingDecoder {
             // tail, so the FFT prefill and the recurrent steps realize
             // the same operator.
             outs.push(match &plan {
-                Some(p) => nprf_rpe_fft_path_with_plan(&phi_q, &phi_k, &v[h], p),
+                Some(p) => nprf_rpe_fft_path_with_plan_scratch(
+                    &phi_q, &phi_k, &v[h], p, &mut scratch,
+                ),
                 None => nprf_rpe_fft_path(&phi_q, &phi_k, &v[h], &c, true),
             });
             for j in 0..n {

@@ -7,12 +7,24 @@
 //! used by the CPU attention oracle, the Fig. 1a/1b simulations, and
 //! property tests.
 //!
+//! Everything that crosses this product is real, so the hot path runs
+//! on the half-spectrum substrate (`fft::RfftPlan`): the kernel
+//! spectrum is stored as L/2 + 1 split re/im bins (half the bytes of
+//! the old full `Complex` spectrum — which is what the engine's
+//! `PlanCache` budget counts), each column rides one half-size SoA
+//! transform, and all intermediates live in a caller-reusable
+//! `fft::Scratch` arena so steady-state applies allocate nothing
+//! beyond the output. The pre-real-spectrum complex formulation is
+//! retained verbatim as `apply_batched_complex` — the conformance
+//! oracle for tests and benches, never the serving path.
+//!
 //! Convention: `c` has length 2n-1 with `c[t + n - 1] = c_t` for the
 //! relative offset t = j - i; y_i = sum_j c_{j-i} x_j.
 
 use std::sync::Arc;
 
-use crate::fft::{next_pow2, Complex, FftPlan};
+use crate::fft::real::{ensure_len, reserve_len};
+use crate::fft::{next_pow2, Complex, RfftPlan, Scratch};
 
 /// Naive O(n^2 f) reference.
 pub fn toeplitz_mul_naive(c: &[f64], x: &[f64], n: usize, f: usize) -> Vec<f64> {
@@ -35,42 +47,49 @@ pub fn toeplitz_mul_naive(c: &[f64], x: &[f64], n: usize, f: usize) -> Vec<f64> 
     y
 }
 
-/// Reusable FFT plan + kernel spectrum for a fixed coefficient vector.
-/// The `FftPlan` is shared (`Arc`): every plan of the same embedded
-/// length reuses one twiddle/bit-reversal table, so a plan-cache miss
-/// only pays for the kernel spectrum, not trig table rebuilds.
+/// Reusable rfft plan + half-spectrum kernel for a fixed coefficient
+/// vector. The `RfftPlan` is shared (`Arc`): every plan of the same
+/// embedded length reuses one twiddle/bit-reversal table, so a
+/// plan-cache miss only pays for the kernel spectrum, not trig-table
+/// rebuilds.
 pub struct ToeplitzPlan {
     n: usize,
     len: usize,
-    plan: Arc<FftPlan>,
-    /// FFT of the circulant-embedded kernel g (g[t] = c_{-t mod L}).
-    kernel_hat: Vec<Complex>,
+    plan: Arc<RfftPlan>,
+    /// Half-spectrum of the circulant-embedded kernel g
+    /// (g[t] = c_{-t mod L}), split re/im; L/2 + 1 bins.
+    kh_re: Vec<f64>,
+    kh_im: Vec<f64>,
 }
 
 impl ToeplitzPlan {
     pub fn new(c: &[f64], n: usize) -> ToeplitzPlan {
         let len = next_pow2(2 * n);
-        ToeplitzPlan::with_fft_plan(c, n, Arc::new(FftPlan::new(len)))
+        ToeplitzPlan::with_rfft_plan(c, n, Arc::new(RfftPlan::new(len)))
     }
 
-    /// Build against an existing (shared) FFT plan of the right size —
+    /// Build against an existing (shared) rfft plan of the right size —
     /// the entry point the engine's `PlanCache` uses so twiddle tables
     /// amortize across coefficient vectors and sequence lengths.
-    pub fn with_fft_plan(c: &[f64], n: usize, plan: Arc<FftPlan>) -> ToeplitzPlan {
+    pub fn with_rfft_plan(c: &[f64], n: usize,
+                          plan: Arc<RfftPlan>) -> ToeplitzPlan {
         assert_eq!(c.len(), 2 * n - 1);
         let len = next_pow2(2 * n);
-        assert_eq!(plan.n, len, "FFT plan size {} != {len}", plan.n);
-        let mut g = vec![Complex::ZERO; len];
+        assert_eq!(plan.n(), len, "rfft plan size {} != {len}", plan.n());
+        let mut g = vec![0.0f64; len];
         // g[t] = c_{-t} for t = 0..n-1; g[L-p] = c_p for p = 1..n-1.
         for t in 0..n {
-            g[t] = Complex::new(c[n - 1 - t], 0.0);
+            g[t] = c[n - 1 - t];
         }
         for p in 1..n {
-            g[len - p] = Complex::new(c[p + n - 1], 0.0);
+            g[len - p] = c[p + n - 1];
         }
-        let mut kernel_hat = g;
-        plan.forward(&mut kernel_hat);
-        ToeplitzPlan { n, len, plan, kernel_hat }
+        let bins = plan.bins();
+        let mut kh_re = vec![0.0; bins];
+        let mut kh_im = vec![0.0; bins];
+        let mut scratch = Scratch::new();
+        plan.rfft(&g, &mut kh_re, &mut kh_im, &mut scratch);
+        ToeplitzPlan { n, len, plan, kh_re, kh_im }
     }
 
     /// Sequence length the plan was built for.
@@ -83,79 +102,151 @@ impl ToeplitzPlan {
         self.len
     }
 
-    /// The shared FFT plan (twiddle tables) backing this plan.
-    pub fn fft_plan(&self) -> &Arc<FftPlan> {
+    /// The shared rfft plan (twiddle tables) backing this plan.
+    pub fn rfft_plan(&self) -> &Arc<RfftPlan> {
         &self.plan
     }
 
-    /// Approximate heap footprint of the kernel spectrum. The shared
-    /// `FftPlan` is accounted separately by the cache that owns it.
+    /// Approximate heap footprint of the kernel half-spectrum — about
+    /// half the full-spectrum bytes the complex formulation stored,
+    /// which is what doubles the effective `PlanCache` capacity. The
+    /// shared `RfftPlan` is accounted separately by the cache that
+    /// owns it.
     pub fn bytes(&self) -> usize {
-        self.kernel_hat.len() * std::mem::size_of::<Complex>()
+        (self.kh_re.len() + self.kh_im.len()) * std::mem::size_of::<f64>()
             + std::mem::size_of::<ToeplitzPlan>()
     }
 
-    /// y = T x for one column vector (length n).
+    /// y = T x for one column vector (length n). Delegates to the
+    /// batched schedule with f = 1 — one implementation, so the
+    /// single-column path cannot drift from the batch path.
     pub fn apply_col(&self, col: &[f64]) -> Vec<f64> {
         assert_eq!(col.len(), self.n);
-        let mut buf = vec![Complex::ZERO; self.len];
-        for (i, &v) in col.iter().enumerate() {
-            buf[i] = Complex::new(v, 0.0);
-        }
-        self.plan.forward(&mut buf);
-        for (b, k) in buf.iter_mut().zip(&self.kernel_hat) {
-            *b = b.mul(*k);
-        }
-        self.plan.inverse(&mut buf);
-        buf[..self.n].iter().map(|cx| cx.re).collect()
+        self.apply_batched(col, 1)
     }
 
-    /// y = T X for row-major X of shape (n, f). Columns are packed two
-    /// per complex FFT (re/im trick), halving the number of transforms.
-    /// Delegates to the batched schedule — one implementation of the
-    /// packing, so the two entry points are bitwise identical by
-    /// construction.
+    /// y = T X for row-major X of shape (n, f). Delegates to the
+    /// batched schedule — one implementation, so the entry points are
+    /// bitwise identical by construction.
     pub fn apply(&self, x: &[f64], f: usize) -> Vec<f64> {
         self.apply_batched(x, f)
     }
 
-    /// y = T X with all ceil(f/2) packed column pairs going through ONE
-    /// multi-column FFT (`FftPlan::forward_batch`) instead of one
-    /// transform at a time: one contiguous scratch buffer, one pass per
-    /// FFT stage over the whole batch with that stage's twiddles hot in
-    /// cache. Per-signal butterfly order matches the single-column
-    /// path, so results are independent of how columns are batched.
+    /// y = T X on the real-spectrum path, drawing workspace from this
+    /// thread's shared `Scratch` arena. Serving paths that own a
+    /// per-worker arena should call `apply_batched_with` instead.
     pub fn apply_batched(&self, x: &[f64], f: usize) -> Vec<f64> {
+        Scratch::with_thread_local(|s| self.apply_batched_with(x, f, s))
+    }
+
+    /// `apply_batched` against an explicit scratch arena. Allocates
+    /// only the output vector; see `apply_batched_into` for the
+    /// allocation-free core.
+    pub fn apply_batched_with(&self, x: &[f64], f: usize,
+                              scratch: &mut Scratch) -> Vec<f64> {
+        let mut y = vec![0.0; self.n * f];
+        self.apply_batched_into(x, f, &mut y, scratch);
+        y
+    }
+
+    /// The real-spectrum Toeplitz product: stage all f columns as
+    /// zero-padded real signals, one multi-column rfft, a pointwise
+    /// half-spectrum product against the kernel (the upper bins follow
+    /// by conjugate symmetry), one multi-column irfft, and a scatter
+    /// back to (n, f). Every intermediate lives in `scratch`, so a
+    /// steady-state workload (same shapes each call) performs zero
+    /// heap allocations here — gated by `benches/fft_substrate.rs`.
+    pub fn apply_batched_into(&self, x: &[f64], f: usize, y: &mut [f64],
+                              scratch: &mut Scratch) {
+        assert_eq!(x.len(), self.n * f);
+        assert_eq!(y.len(), self.n * f);
+        if f == 0 {
+            return;
+        }
+        let n = self.n;
+        let len = self.len;
+        let bins = self.plan.bins();
+        // Take the staging arenas out of the scratch so the rfft can
+        // still borrow its own workspace; take/put moves are
+        // allocation-free.
+        let mut real = std::mem::take(&mut scratch.real);
+        let mut sre = std::mem::take(&mut scratch.spec_re);
+        let mut sim = std::mem::take(&mut scratch.spec_im);
+        // Only the column staging needs zeroing (its n..len tail is the
+        // circulant padding); the spectra are fully overwritten by
+        // rfft_batch before anything reads them.
+        ensure_len(&mut real, f * len);
+        reserve_len(&mut sre, f * bins);
+        reserve_len(&mut sim, f * bins);
+        for col in 0..f {
+            let sig = &mut real[col * len..col * len + n];
+            for (i, slot) in sig.iter_mut().enumerate() {
+                *slot = x[i * f + col];
+            }
+        }
+        self.plan.rfft_batch(&real, f, &mut sre, &mut sim, scratch);
+        for col in 0..f {
+            let re = &mut sre[col * bins..(col + 1) * bins];
+            let im = &mut sim[col * bins..(col + 1) * bins];
+            for k in 0..bins {
+                let (ar, ai) = (re[k], im[k]);
+                let (br, bi) = (self.kh_re[k], self.kh_im[k]);
+                re[k] = ar * br - ai * bi;
+                im[k] = ar * bi + ai * br;
+            }
+        }
+        self.plan.irfft_batch(&sre, &sim, f, &mut real, scratch);
+        for col in 0..f {
+            let sig = &real[col * len..col * len + n];
+            for (i, &v) in sig.iter().enumerate() {
+                y[i * f + col] = v;
+            }
+        }
+        scratch.real = real;
+        scratch.spec_re = sre;
+        scratch.spec_im = sim;
+    }
+
+    /// The retained complex-path oracle: the identical circulant
+    /// product computed with the full AoS `Complex` FFT and the
+    /// pre-real-spectrum two-columns-per-transform packing. The full
+    /// kernel spectrum is reconstructed from the stored half-spectrum
+    /// by conjugate symmetry. Conformance tests and the
+    /// `fft_substrate` bench call this; serving paths never do.
+    pub fn apply_batched_complex(&self, x: &[f64], f: usize) -> Vec<f64> {
         assert_eq!(x.len(), self.n * f);
         let n = self.n;
-        let pairs = (f + 1) / 2;
+        let len = self.len;
+        let pairs = f.div_ceil(2);
         if pairs == 0 {
             return Vec::new();
         }
-        let mut buf = vec![Complex::ZERO; pairs * self.len];
+        let plan = crate::fft::shared_plan(len);
+        let kernel_hat = self.full_kernel_hat();
+        let mut buf = vec![Complex::ZERO; pairs * len];
         for p in 0..pairs {
             let col = 2 * p;
             let pair = col + 1 < f;
-            let sig = &mut buf[p * self.len..(p + 1) * self.len];
+            let sig = &mut buf[p * len..(p + 1) * len];
             for i in 0..n {
                 let re = x[i * f + col];
                 let im = if pair { x[i * f + col + 1] } else { 0.0 };
                 sig[i] = Complex::new(re, im);
             }
         }
-        self.plan.forward_batch(&mut buf, pairs);
+        plan.forward_batch(&mut buf, pairs);
         for p in 0..pairs {
-            let sig = &mut buf[p * self.len..(p + 1) * self.len];
-            for (b, k) in sig.iter_mut().zip(&self.kernel_hat) {
+            let sig = &mut buf[p * len..(p + 1) * len];
+            for (b, k) in sig.iter_mut().zip(&kernel_hat) {
                 *b = b.mul(*k);
             }
         }
-        self.plan.inverse_batch(&mut buf, pairs);
+        plan.inverse_batch(&mut buf, pairs);
         let mut y = vec![0.0; n * f];
         for p in 0..pairs {
             let col = 2 * p;
             let pair = col + 1 < f;
-            let sig = &buf[p * self.len..(p + 1) * self.len];
+            let sig = &buf[p * len..(p + 1) * len];
             for i in 0..n {
                 y[i * f + col] = sig[i].re;
                 if pair {
@@ -164,6 +255,21 @@ impl ToeplitzPlan {
             }
         }
         y
+    }
+
+    /// Full complex kernel spectrum rebuilt from the half-spectrum:
+    /// bins above Nyquist are the conjugate mirror.
+    fn full_kernel_hat(&self) -> Vec<Complex> {
+        let len = self.len;
+        let bins = self.plan.bins();
+        let mut out = vec![Complex::ZERO; len];
+        for k in 0..bins {
+            out[k] = Complex::new(self.kh_re[k], self.kh_im[k]);
+        }
+        for k in bins..len {
+            out[k] = out[len - k].conj();
+        }
+        out
     }
 }
 
@@ -197,6 +303,13 @@ mod tests {
         (0..n).map(|_| rng.normal()).collect()
     }
 
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max)
+    }
+
     #[test]
     fn fft_matches_naive() {
         for (n, f) in [(1, 1), (2, 3), (7, 2), (16, 5), (33, 4), (128, 3)] {
@@ -204,12 +317,21 @@ mod tests {
             let x = rand_vec(n * f, 100 + n as u64);
             let a = toeplitz_mul_naive(&c, &x, n, f);
             let b = toeplitz_mul_fft(&c, &x, n, f);
-            let err = a
-                .iter()
-                .zip(&b)
-                .map(|(p, q)| (p - q).abs())
-                .fold(0.0, f64::max);
+            let err = max_abs_diff(&a, &b);
             assert!(err < 1e-9, "n={n} f={f} err={err}");
+        }
+    }
+
+    #[test]
+    fn real_path_matches_complex_oracle() {
+        for (n, f) in [(1, 1), (2, 3), (7, 2), (16, 5), (33, 4), (257, 3)] {
+            let c = rand_vec(2 * n - 1, 800 + n as u64);
+            let x = rand_vec(n * f, 900 + n as u64);
+            let plan = ToeplitzPlan::new(&c, n);
+            let real = plan.apply_batched(&x, f);
+            let complex = plan.apply_batched_complex(&x, f);
+            let err = max_abs_diff(&real, &complex);
+            assert!(err < 1e-12, "n={n} f={f} err={err}");
         }
     }
 
@@ -281,14 +403,30 @@ mod tests {
     }
 
     #[test]
-    fn with_fft_plan_shares_tables() {
+    fn explicit_scratch_bitwise_matches_thread_local() {
+        let mut scratch = Scratch::new();
+        for (n, f) in [(16, 5), (33, 6), (7, 3), (16, 5)] {
+            let c = rand_vec(2 * n - 1, 40 + n as u64);
+            let x = rand_vec(n * f, 50 + (n * f) as u64);
+            let plan = ToeplitzPlan::new(&c, n);
+            let a = plan.apply_batched(&x, f);
+            let b = plan.apply_batched_with(&x, f, &mut scratch);
+            assert_eq!(a, b, "n={n} f={f}");
+            let mut y = vec![0.0; n * f];
+            plan.apply_batched_into(&x, f, &mut y, &mut scratch);
+            assert_eq!(a, y, "into n={n} f={f}");
+        }
+    }
+
+    #[test]
+    fn with_rfft_plan_shares_tables() {
         let n = 24;
         let c1 = rand_vec(2 * n - 1, 70);
         let c2 = rand_vec(2 * n - 1, 71);
-        let fft = Arc::new(FftPlan::new(next_pow2(2 * n)));
-        let p1 = ToeplitzPlan::with_fft_plan(&c1, n, fft.clone());
-        let p2 = ToeplitzPlan::with_fft_plan(&c2, n, fft.clone());
-        assert!(Arc::ptr_eq(p1.fft_plan(), p2.fft_plan()));
+        let rfft = Arc::new(RfftPlan::new(next_pow2(2 * n)));
+        let p1 = ToeplitzPlan::with_rfft_plan(&c1, n, rfft.clone());
+        let p2 = ToeplitzPlan::with_rfft_plan(&c2, n, rfft.clone());
+        assert!(Arc::ptr_eq(p1.rfft_plan(), p2.rfft_plan()));
         let x = rand_vec(n * 2, 72);
         assert_eq!(p1.apply(&x, 2), toeplitz_mul_fft(&c1, &x, n, 2));
         assert_eq!(p2.apply(&x, 2), toeplitz_mul_fft(&c2, &x, n, 2));
@@ -298,16 +436,30 @@ mod tests {
     }
 
     #[test]
-    fn apply_col_matches_apply() {
+    fn half_spectrum_halves_plan_bytes() {
+        let n = 64;
+        let c = rand_vec(2 * n - 1, 73);
+        let plan = ToeplitzPlan::new(&c, n);
+        let len = plan.fft_len();
+        let spectrum = plan.bytes() - std::mem::size_of::<ToeplitzPlan>();
+        // Half-spectrum: (L/2 + 1) split re/im f64 bins = (L + 2) * 8
+        // bytes, vs L * 16 for the old full Complex spectrum.
+        assert_eq!(spectrum, (len + 2) * std::mem::size_of::<f64>());
+        let full = len * std::mem::size_of::<Complex>();
+        assert!(
+            2 * spectrum <= full + 4 * std::mem::size_of::<Complex>(),
+            "spectrum {spectrum} not ~half of full {full}"
+        );
+    }
+
+    #[test]
+    fn apply_col_bitwise_matches_apply() {
         let n = 40;
         let c = rand_vec(2 * n - 1, 13);
         let plan = ToeplitzPlan::new(&c, n);
         let x = rand_vec(n, 14);
-        let via_col = plan.apply_col(&x);
-        let via_mat = plan.apply(&x, 1);
-        for (a, b) in via_col.iter().zip(&via_mat) {
-            assert!((a - b).abs() < 1e-10);
-        }
+        // apply_col delegates to apply_batched, so equality is bitwise.
+        assert_eq!(plan.apply_col(&x), plan.apply(&x, 1));
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Conformance net for the real-spectrum FFT substrate.
+//!
+//! The half-spectrum path replaces the complex AoS transforms on the
+//! whole Toeplitz hot path, so it is held to the oracle chain from
+//! tightest to loosest:
+//!
+//!   * `RfftPlan` == naive DFT and == the complex `FftPlan` to 1e-12
+//!     across L in {2, 4, 8, 64, 1024}, with 1e-12 roundtrips;
+//!   * half-spectrum `ToeplitzPlan::apply_batched` == the retained
+//!     complex path (`apply_batched_complex`) to 1e-12 and ==
+//!     `toeplitz_mul_naive` to 1e-9 for n in {1, 2, 3, 7, 16, 33, 257}
+//!     x odd/even f x causal;
+//!   * scratch arenas are pure workspace: reusing one arena across
+//!     mixed workloads is bitwise invisible.
+
+use kafft::fft::{dft_naive, Complex, FftPlan, RfftPlan, Scratch};
+use kafft::rng::Rng;
+use kafft::toeplitz::{causal_coeffs, toeplitz_mul_naive, ToeplitzPlan};
+use kafft::util::prop::{forall, Gen};
+
+/// Random u64 seed per case (the shapes are swept exhaustively).
+struct SeedGen;
+
+impl Gen for SeedGen {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.next_u64()
+    }
+}
+
+fn rand_real(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn rfft_of(plan: &RfftPlan, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let bins = plan.bins();
+    let mut re = vec![0.0; bins];
+    let mut im = vec![0.0; bins];
+    let mut scratch = Scratch::new();
+    plan.rfft(x, &mut re, &mut im, &mut scratch);
+    (re, im)
+}
+
+#[test]
+fn prop_rfft_matches_naive_dft_and_complex_plan() {
+    for l in [2usize, 4, 8, 64, 1024] {
+        let plan = RfftPlan::new(l);
+        let cplan = FftPlan::new(l);
+        let cases = if l >= 1024 { 3 } else { 8 };
+        forall(&format!("rfft[L={l}]"), cases, 0xF0F7 + l as u64, &SeedGen,
+               |&seed| {
+            let x = rand_real(l, seed);
+            let (re, im) = rfft_of(&plan, &x);
+            let cx: Vec<Complex> =
+                x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let naive = dft_naive(&cx);
+            let mut fast = cx;
+            cplan.forward(&mut fast);
+            for k in 0..plan.bins() {
+                let en = (re[k] - naive[k].re)
+                    .abs()
+                    .max((im[k] - naive[k].im).abs());
+                if en > 1e-12 {
+                    return Err(format!("vs dft_naive: bin {k} err {en}"));
+                }
+                let ec = (re[k] - fast[k].re)
+                    .abs()
+                    .max((im[k] - fast[k].im).abs());
+                if ec > 1e-12 {
+                    return Err(format!("vs FftPlan: bin {k} err {ec}"));
+                }
+            }
+            let mut back = vec![0.0; l];
+            let mut scratch = Scratch::new();
+            plan.irfft(&re, &im, &mut back, &mut scratch);
+            for j in 0..l {
+                let er = (back[j] - x[j]).abs();
+                if er > 1e-12 {
+                    return Err(format!("roundtrip: sample {j} err {er}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn prop_half_spectrum_toeplitz_matches_naive_and_complex() {
+    // Odd and even column counts; RPE-like positive coefficients.
+    for n in [1usize, 2, 3, 7, 16, 33, 257] {
+        for f in [1usize, 3, 4] {
+            for causal in [false, true] {
+                let cases = if n >= 257 { 2 } else { 4 };
+                forall(
+                    &format!("toeplitz[n={n} f={f} causal={causal}]"),
+                    cases,
+                    0x70E0 + (n * 8 + f) as u64,
+                    &SeedGen,
+                    |&seed| {
+                        let mut rng = Rng::new(seed);
+                        let c: Vec<f64> = (0..2 * n - 1)
+                            .map(|_| rng.normal().exp())
+                            .collect();
+                        let c = if causal { causal_coeffs(&c, n) } else { c };
+                        let x: Vec<f64> =
+                            (0..n * f).map(|_| rng.normal()).collect();
+                        let plan = ToeplitzPlan::new(&c, n);
+                        let real = plan.apply_batched(&x, f);
+                        let complex = plan.apply_batched_complex(&x, f);
+                        let naive = toeplitz_mul_naive(&c, &x, n, f);
+                        let ec = real
+                            .iter()
+                            .zip(&complex)
+                            .map(|(a, b)| (a - b).abs())
+                            .fold(0.0, f64::max);
+                        if ec > 1e-12 {
+                            return Err(format!("vs complex path: err {ec}"));
+                        }
+                        let en = real
+                            .iter()
+                            .zip(&naive)
+                            .map(|(a, b)| (a - b).abs())
+                            .fold(0.0, f64::max);
+                        if en > 1e-9 {
+                            return Err(format!("vs naive: err {en}"));
+                        }
+                        Ok(())
+                    },
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_is_bitwise_invisible_across_workloads() {
+    // One arena dragged through interleaved rfft, irfft, and Toeplitz
+    // applies of different sizes must reproduce fresh-arena outputs bit
+    // for bit — scratch contents are workspace, never state.
+    let mut arena = Scratch::new();
+    for round in 0..3u64 {
+        for (l, n, f) in [(8usize, 3usize, 2usize), (1024, 33, 5), (64, 16, 1)]
+        {
+            let seed = 0x5EED + round * 100 + (l + n + f) as u64;
+            let x = rand_real(l, seed);
+            let plan = RfftPlan::new(l);
+            let bins = plan.bins();
+            let mut re = vec![0.0; bins];
+            let mut im = vec![0.0; bins];
+            plan.rfft(&x, &mut re, &mut im, &mut arena);
+            let (fre, fim) = rfft_of(&plan, &x);
+            assert_eq!(re, fre, "rfft l={l} round={round}");
+            assert_eq!(im, fim, "rfft l={l} round={round}");
+            let mut back = vec![0.0; l];
+            plan.irfft(&re, &im, &mut back, &mut arena);
+            let mut fresh_back = vec![0.0; l];
+            plan.irfft(&fre, &fim, &mut fresh_back, &mut Scratch::new());
+            assert_eq!(back, fresh_back, "irfft l={l} round={round}");
+
+            let c = rand_real(2 * n - 1, seed + 1);
+            let xs = rand_real(n * f, seed + 2);
+            let tplan = ToeplitzPlan::new(&c, n);
+            let reused = tplan.apply_batched_with(&xs, f, &mut arena);
+            let fresh =
+                tplan.apply_batched_with(&xs, f, &mut Scratch::new());
+            assert_eq!(reused, fresh, "toeplitz n={n} f={f} round={round}");
+        }
+    }
+    assert!(arena.bytes() > 0, "arena must have warmed up");
+}
+
+#[test]
+fn engine_and_streaming_share_the_real_path_bitwise() {
+    // The cached plan (engine/streaming entry points) and the one-shot
+    // path build the same half-spectrum, so explicit-scratch, shared
+    // thread-local, and per-call results are all bitwise equal.
+    use kafft::attention::{
+        draw_gaussian_features, kernel_features, nprf_rpe_fft_path,
+        nprf_rpe_fft_path_with_plan, nprf_rpe_fft_path_with_plan_scratch,
+        rpe_correlations, Kind,
+    };
+    use kafft::tensor::Mat;
+
+    let (n, d, m) = (29usize, 4usize, 3usize);
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+    let mut rng = Rng::new(0xACE);
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b = rng.normal_vec(2 * n - 1, 0.5);
+    let q = Mat::from_vec(n, d, rng.normal_vec(n * d, 0.5));
+    let k = Mat::from_vec(n, d, rng.normal_vec(n * d, 0.5));
+    let v = Mat::from_vec(n, d, rng.normal_vec(n * d, 0.5));
+    let phi_q = kernel_features(kind, &q, &w);
+    let phi_k = kernel_features(kind, &k, &w);
+    let c = rpe_correlations(&b);
+    for causal in [false, true] {
+        let want = nprf_rpe_fft_path(&phi_q, &phi_k, &v, &c, causal);
+        let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+        let c64 = if causal { causal_coeffs(&c64, n) } else { c64 };
+        let plan = ToeplitzPlan::new(&c64, n);
+        let via_plan = nprf_rpe_fft_path_with_plan(&phi_q, &phi_k, &v, &plan);
+        assert_eq!(via_plan.data, want.data, "causal={causal}");
+        let mut scratch = Scratch::new();
+        let via_scratch = nprf_rpe_fft_path_with_plan_scratch(
+            &phi_q, &phi_k, &v, &plan, &mut scratch,
+        );
+        assert_eq!(via_scratch.data, want.data, "causal={causal} scratch");
+    }
+}
