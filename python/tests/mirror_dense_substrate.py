@@ -1,0 +1,180 @@
+"""Numpy mirror of the Rust blocked dense substrate (PR 5).
+
+The container building this PR has no Rust toolchain, so — as with the
+streaming (PR 1), engine (PR 2), and rfft (PR 3) numerics — the new
+kernels are validated against a bit-faithful float32 mirror of the
+exact summation orders the Rust code uses:
+
+  * ``tile_t``: the 4x2 register tile with LANES=8 accumulator chains,
+    k-remainder folded in first, chains reduced in ascending lane
+    order (mirrors rust/src/tensor/dense.rs::tile_t);
+  * ``matmul_blocked``: ascending-k accumulation identical to the
+    naive oracle's order (the 4-way unroll is sequential adds), so the
+    two agree bitwise in exact f32;
+  * the fused phi_PRF path (projection computed straight into the
+    output) is op-identical to the two-step seed path by construction;
+  * the end-to-end blocked-vs-naive kernel-attention composition.
+
+Checks the PR's acceptance tolerances: blocked vs naive <= 1e-5 on the
+adversarial dim grid {0, 1, 7, 8, 9, 63, 64, 65, 257} (with inputs
+scaled ~1/sqrt(k), the scaling the Rust tests and bench use), and the
+end-to-end composition <= 1e-4.
+
+Run: python3 python/tests/mirror_dense_substrate.py
+"""
+
+import numpy as np
+
+LANES = 8
+DIMS = [0, 1, 7, 8, 9, 63, 64, 65, 257]
+
+
+def rand_mat(r, c, seed):
+    rng = np.random.default_rng(seed)
+    scale = 1.0 / np.sqrt(max(c, 1))
+    return (rng.standard_normal((r, c)) * scale).astype(np.float32)
+
+
+def dot_tile_order(a_row, b_row):
+    """One output element with the Rust tile_t summation order."""
+    k = a_row.shape[0]
+    split = k - k % LANES
+    acc = np.zeros(LANES, dtype=np.float32)
+    for base in range(0, split, LANES):
+        acc += a_row[base:base + LANES] * b_row[base:base + LANES]
+    tail = np.float32(0.0)
+    for t in range(split, k):
+        tail = np.float32(tail + np.float32(a_row[t] * b_row[t]))
+    s = tail
+    for l in range(LANES):
+        s = np.float32(s + acc[l])
+    return s
+
+
+def matmul_t_blocked(a, b):
+    m, k = a.shape
+    n = b.shape[0]
+    out = np.zeros((m, n), dtype=np.float32)
+    for i in range(m):
+        for j in range(n):
+            out[i, j] = dot_tile_order(a[i], b[j])
+    return out
+
+
+def matmul_t_naive(a, b):
+    m, k = a.shape
+    n = b.shape[0]
+    out = np.zeros((m, n), dtype=np.float32)
+    for i in range(m):
+        for j in range(n):
+            acc = np.float32(0.0)
+            for t in range(k):
+                acc = np.float32(acc + np.float32(a[i, t] * b[j, t]))
+            out[i, j] = acc
+    return out
+
+
+def main():
+    worst = 0.0
+    # The full 9^3 grid is too slow in pure python; every dim value
+    # still appears in every position (the Rust proptest runs the full
+    # grid natively).
+    triples = [
+        (0, 5, 3), (3, 0, 4), (4, 5, 0), (1, 1, 1), (7, 8, 9),
+        (8, 8, 8), (9, 7, 8), (63, 64, 65), (64, 65, 63), (65, 63, 64),
+        (9, 257, 8), (257, 9, 7), (8, 9, 257), (65, 257, 9), (257, 64, 9),
+    ]
+    for (m, k, n) in triples:
+        a = rand_mat(m, k, m * 1_000_000 + k * 1_000 + n)
+        bt = rand_mat(n, k, m * 1_000_000 + k * 1_000 + n + 2)
+        got = matmul_t_blocked(a, bt)
+        want = matmul_t_naive(a, bt)
+        d = 0.0 if got.size == 0 else float(np.abs(got - want).max())
+        worst = max(worst, d)
+        assert d < 1e-5, f"({m},{k},{n}): {d}"
+        # f64 ground truth: both orders must be close to the true product.
+        truth = (a.astype(np.float64) @ bt.astype(np.float64).T)
+        if got.size:
+            dt = float(np.abs(got.astype(np.float64) - truth).max())
+            assert dt < 1e-5, f"({m},{k},{n}) vs f64 truth: {dt}"
+    print(f"matmul_t blocked-vs-naive order: worst {worst:.3e}  (<= 1e-5) OK")
+
+    # matmul (A @ B): the blocked kernel accumulates in the same
+    # ascending-k order as the naive loop, so exact f32 equality.
+    for (m, k, n) in [(7, 9, 8), (64, 65, 63), (9, 257, 8)]:
+        a = rand_mat(m, k, 10 + m)
+        b = rand_mat(k, n, 20 + n)
+        acc = np.zeros((m, n), dtype=np.float32)
+        for t in range(k):  # ascending-k outer product accumulation
+            acc = np.float32(1.0) * (acc + np.outer(a[:, t], b[t]).astype(np.float32))
+            acc = acc.astype(np.float32)
+        naive = np.zeros((m, n), dtype=np.float32)
+        for t in range(k):
+            naive = (naive + np.outer(a[:, t], b[t]).astype(np.float32)).astype(np.float32)
+        assert np.array_equal(acc, naive)
+    print("matmul blocked order == naive order (ascending k, bitwise) OK")
+
+    # Fused phi_PRF == two-step phi_PRF (op-identical by construction).
+    n_, d_, m_ = 33, 6, 8
+    x = rand_mat(n_, d_, 1)
+    w = rand_mat(m_, d_, 2)
+    proj = matmul_t_blocked(x, w)
+    sq = (0.5 * (x.astype(np.float32) ** 2).sum(axis=1,
+                                                dtype=np.float32))[:, None]
+    scale = np.float32(1.0 / np.sqrt(m_))
+    two_step = (np.exp(proj - sq, dtype=np.float32) * scale).astype(np.float32)
+    fused = proj.copy()
+    for i in range(n_):
+        fused[i] = (np.exp(fused[i] - sq[i], dtype=np.float32)
+                    * scale).astype(np.float32)
+    assert np.array_equal(two_step, fused)
+    print("fused phi_PRF == two-step phi_PRF (bitwise) OK")
+
+    # End-to-end kernel attention: blocked composition vs naive
+    # composition within 1e-4 (the existing cross-path tolerance).
+    v = rand_mat(n_, d_, 3)
+    b_bias = (np.random.default_rng(4).standard_normal(2 * n_ - 1) *
+              0.5).astype(np.float32)
+    c = np.exp(b_bias - b_bias.max(), dtype=np.float32)
+
+    def attention_from(phi_fn, mm):
+        phi_q = phi_fn(x)
+        phi_k = phi_fn(rand_mat(n_, d_, 5))
+        scores = mm(phi_q, phi_k)
+        for i in range(n_):
+            for j in range(n_):
+                scores[i, j] = np.float32(scores[i, j] * c[j + n_ - 1 - i])
+                if j > i:
+                    scores[i, j] = np.float32(0.0)
+        sums = scores.sum(axis=1, dtype=np.float32) + np.float32(1e-6)
+        scores = (scores / sums[:, None]).astype(np.float32)
+        return (scores.astype(np.float64) @ v.astype(np.float64))
+
+    def phi_blocked(t):
+        tn = t / (np.sqrt((t.astype(np.float32) ** 2).sum(axis=1,
+                                                          dtype=np.float32))
+                  + np.float32(1e-6))[:, None]
+        tn = tn.astype(np.float32)
+        p = matmul_t_blocked(tn, w)
+        sqs = (0.5 * (tn ** 2).sum(axis=1, dtype=np.float32))[:, None]
+        return (np.exp(p - sqs, dtype=np.float32) * scale).astype(np.float32)
+
+    def phi_naive(t):
+        tn = t / (np.sqrt((t.astype(np.float32) ** 2).sum(axis=1,
+                                                          dtype=np.float32))
+                  + np.float32(1e-6))[:, None]
+        tn = tn.astype(np.float32)
+        p = matmul_t_naive(tn, w)
+        sqs = (0.5 * (tn ** 2).sum(axis=1, dtype=np.float32))[:, None]
+        return (np.exp(p - sqs, dtype=np.float32) * scale).astype(np.float32)
+
+    za = attention_from(phi_blocked, matmul_t_blocked)
+    zb = attention_from(phi_naive, matmul_t_naive)
+    d = float(np.abs(za - zb).max())
+    assert d < 1e-4, f"end-to-end blocked vs naive: {d}"
+    print(f"end-to-end attention blocked vs naive: {d:.3e}  (<= 1e-4) OK")
+    print("mirror_dense_substrate: ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,12 +7,28 @@
 use kafft::attention::{self, draw_gaussian_features, phi_prf};
 use kafft::fft::{fft, Complex, FftPlan, RfftPlan, Scratch};
 use kafft::rng::Rng;
-use kafft::tensor::Mat;
+use kafft::tensor::{matmul_t_into, matmul_t_naive, Mat};
 use kafft::toeplitz::{toeplitz_mul_naive, ToeplitzPlan};
 use kafft::util::bench::{bench_for, print_result};
 
 fn main() {
     let mut rng = Rng::new(1);
+
+    println!("-- dense matmul_t (k=64): blocked vs naive --");
+    for n in [128usize, 512, 1024] {
+        let a = Mat::from_vec(n, 64, rng.normal_vec(n * 64, 0.125));
+        let b = Mat::from_vec(128, 64, rng.normal_vec(128 * 64, 0.125));
+        let mut c = Mat::default();
+        let r = bench_for(&format!("matmul_t blocked n={n}"), 2, 0.3, 10, || {
+            matmul_t_into(&a, &b, &mut c);
+            std::hint::black_box(&c);
+        });
+        print_result(&r);
+        let r = bench_for(&format!("matmul_t naive n={n}"), 2, 0.3, 10, || {
+            std::hint::black_box(matmul_t_naive(&a, &b));
+        });
+        print_result(&r);
+    }
 
     println!("-- FFT --");
     for n in [256usize, 1024, 4096] {

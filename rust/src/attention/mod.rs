@@ -10,7 +10,7 @@
 pub mod simulation;
 
 use crate::rng::Rng;
-use crate::tensor::Mat;
+use crate::tensor::{matmul_into, matmul_t_into, Arena, Mat};
 use crate::toeplitz::{causal_coeffs, toeplitz_mul_fft, toeplitz_mul_naive};
 
 pub const EPS: f32 = 1e-6;
@@ -18,45 +18,74 @@ pub const EPS: f32 = 1e-6;
 // ---------------------------------------------------------------------------
 // Feature maps (Eq. 4 / Eq. 5)
 // ---------------------------------------------------------------------------
+//
+// Every feature map has a fused `_into` form that writes into a
+// caller-owned (typically arena-held) matrix on the blocked matmul
+// substrate, plus the historical allocating wrapper. The wrappers
+// delegate to the `_into` forms, so the two can never drift — the
+// engine's bitwise attend/attend_batch parity tests lean on that.
 
-/// phi_PRF(x) = exp(-|x|^2/2)/sqrt(m) * exp(x W^T); x: (n, d), w: (m, d).
-pub fn phi_prf(x: &Mat, w: &Mat) -> Mat {
+/// phi_PRF into a caller buffer. Fused: the projection x W^T is
+/// computed directly into `out` (same (n, m) shape) and exponentiated
+/// in place — no intermediate projection matrix exists at all.
+pub fn phi_prf_into(x: &Mat, w: &Mat, out: &mut Mat) {
     let m = w.rows;
-    let proj = x.matmul_t(w); // (n, m)
-    let mut out = Mat::zeros(x.rows, m);
+    matmul_t_into(x, w, out); // (n, m), fused projection
     let scale = 1.0 / (m as f32).sqrt();
     for i in 0..x.rows {
         let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
-        for j in 0..m {
-            *out.at_mut(i, j) = (proj.at(i, j) - sq).exp() * scale;
+        for v in out.row_mut(i).iter_mut() {
+            *v = (*v - sq).exp() * scale;
         }
     }
+}
+
+/// phi_PRF(x) = exp(-|x|^2/2)/sqrt(m) * exp(x W^T); x: (n, d), w: (m, d).
+pub fn phi_prf(x: &Mat, w: &Mat) -> Mat {
+    let mut out = Mat::default();
+    phi_prf_into(x, w, &mut out);
     out
 }
 
-/// phi_TRF(x) = exp(|x|^2/2)/sqrt(m) * [sin(xW^T), cos(xW^T)]; -> (n, 2m).
-pub fn phi_trf(x: &Mat, w: &Mat) -> Mat {
+/// phi_TRF into a caller buffer. The (n, m) projection is staged in
+/// the arena (the output is (n, 2m), so it cannot be fused in place
+/// like PRF), then expanded to [sin, cos] directly into `out`.
+pub fn phi_trf_into(x: &Mat, w: &Mat, out: &mut Mat, arena: &mut Arena) {
     let m = w.rows;
-    let proj = x.matmul_t(w);
-    let mut out = Mat::zeros(x.rows, 2 * m);
+    matmul_t_into(x, w, &mut arena.proj);
+    out.resize_uninit(x.rows, 2 * m);
     let scale = 1.0 / (m as f32).sqrt();
     for i in 0..x.rows {
         let sq: f32 = x.row(i).iter().map(|v| v * v).sum::<f32>() * 0.5;
         let s = sq.exp() * scale;
-        for j in 0..m {
-            *out.at_mut(i, j) = proj.at(i, j).sin() * s;
-            *out.at_mut(i, j + m) = proj.at(i, j).cos() * s;
+        let proj = arena.proj.row(i);
+        let row = out.row_mut(i);
+        for (j, &p) in proj.iter().enumerate() {
+            row[j] = p.sin() * s;
+            row[j + m] = p.cos() * s;
         }
     }
+}
+
+/// phi_TRF(x) = exp(|x|^2/2)/sqrt(m) * [sin(xW^T), cos(xW^T)]; -> (n, 2m).
+pub fn phi_trf(x: &Mat, w: &Mat) -> Mat {
+    let mut out = Mat::default();
+    Arena::with_thread_local(|a| phi_trf_into(x, w, &mut out, a));
     out
+}
+
+/// elu(x)+1 into a caller buffer.
+pub fn phi_elu1_into(x: &Mat, out: &mut Mat) {
+    out.resize_uninit(x.rows, x.cols);
+    for (o, &v) in out.data.iter_mut().zip(&x.data) {
+        *o = if v > 0.0 { v + 1.0 } else { v.exp() };
+    }
 }
 
 /// elu(x)+1 applied elementwise.
 pub fn phi_elu1(x: &Mat) -> Mat {
-    let mut out = x.clone();
-    for v in out.data.iter_mut() {
-        *v = if *v > 0.0 { *v + 1.0 } else { v.exp() };
-    }
+    let mut out = Mat::default();
+    phi_elu1_into(x, &mut out);
     out
 }
 
@@ -105,41 +134,64 @@ pub fn softmax_attention(q: &Mat, k: &Mat, v: &Mat, b: &[f32], causal: bool,
 // Kernelized attention (Eq. 3 / Eq. 10)
 // ---------------------------------------------------------------------------
 
-/// Kernelized attention scores from explicit feature matrices, with
-/// optional RPE coefficients c (length 2n-1, already exponentiated).
-pub fn kernel_scores(phi_q: &Mat, phi_k: &Mat, c: Option<&[f32]>,
-                     causal: bool) -> Mat {
+/// `kernel_scores` into a caller buffer (no arena needed: the score
+/// matrix is the output).
+pub fn kernel_scores_into(phi_q: &Mat, phi_k: &Mat, c: Option<&[f32]>,
+                          causal: bool, out: &mut Mat) {
     let n_q = phi_q.rows;
     let n_k = phi_k.rows;
-    let mut scores = phi_q.matmul_t(phi_k);
+    matmul_t_into(phi_q, phi_k, out);
     if let Some(c) = c {
         assert_eq!(c.len(), n_q + n_k - 1);
         for i in 0..n_q {
             for j in 0..n_k {
-                *scores.at_mut(i, j) *= c[j + n_q - 1 - i];
+                *out.at_mut(i, j) *= c[j + n_q - 1 - i];
             }
         }
     }
     if causal {
         for i in 0..n_q {
             for j in (i + 1)..n_k {
-                *scores.at_mut(i, j) = 0.0;
+                *out.at_mut(i, j) = 0.0;
             }
         }
     }
     for i in 0..n_q {
-        let row = scores.row_mut(i);
+        let row = out.row_mut(i);
         let sum: f32 = row.iter().sum::<f32>() + EPS;
         for x in row.iter_mut() {
             *x /= sum;
         }
     }
-    scores
+}
+
+/// Kernelized attention scores from explicit feature matrices, with
+/// optional RPE coefficients c (length 2n-1, already exponentiated).
+pub fn kernel_scores(phi_q: &Mat, phi_k: &Mat, c: Option<&[f32]>,
+                     causal: bool) -> Mat {
+    let mut out = Mat::default();
+    kernel_scores_into(phi_q, phi_k, c, causal, &mut out);
+    out
+}
+
+/// `kernel_attention` into a caller buffer; the (n, n) score matrix is
+/// staged in the arena, so a steady-state call allocates nothing.
+pub fn kernel_attention_into(phi_q: &Mat, phi_k: &Mat, v: &Mat,
+                             c: Option<&[f32]>, causal: bool, out: &mut Mat,
+                             arena: &mut Arena) {
+    let mut scores = std::mem::take(&mut arena.scores);
+    kernel_scores_into(phi_q, phi_k, c, causal, &mut scores);
+    matmul_into(&scores, v, out);
+    arena.scores = scores;
 }
 
 pub fn kernel_attention(phi_q: &Mat, phi_k: &Mat, v: &Mat,
                         c: Option<&[f32]>, causal: bool) -> Mat {
-    kernel_scores(phi_q, phi_k, c, causal).matmul(v)
+    let mut out = Mat::default();
+    Arena::with_thread_local(|a| {
+        kernel_attention_into(phi_q, phi_k, v, c, causal, &mut out, a)
+    });
+    out
 }
 
 /// Attention kind selector mirroring python attention.ATTENTION_KINDS.
@@ -178,28 +230,48 @@ impl Kind {
     }
 }
 
-/// PRF feature rows for a kernel kind: the q/k preprocessing
-/// (l2-normalize for `norm`, d^{-1/4} pre-scale otherwise) followed by
-/// phi_PRF. Shared by `attend` and the streaming incremental step so
-/// the two paths cannot drift apart numerically.
-pub fn kernel_features(kind: Kind, x: &Mat, w: &Mat) -> Mat {
+/// `kernel_features` into a caller buffer: the normalized/pre-scaled
+/// copy of x is staged in the arena, the feature map writes straight
+/// into `out`. Steady-state calls allocate nothing.
+pub fn kernel_features_into(kind: Kind, x: &Mat, w: &Mat, out: &mut Mat,
+                            arena: &mut Arena) {
     let norm = match kind {
         Kind::Kernel { norm, .. } => norm,
         Kind::Softmax { .. } => panic!("kernel_features needs a kernel kind"),
     };
     if norm {
-        phi_prf(&x.l2_normalize_rows(), w)
+        x.l2_normalize_rows_into(&mut arena.xnorm);
     } else {
-        phi_prf(&x.scale((x.cols as f32).powf(-0.25)), w)
+        x.scale_into((x.cols as f32).powf(-0.25), &mut arena.xnorm);
     }
+    phi_prf_into(&arena.xnorm, w, out);
+}
+
+/// PRF feature rows for a kernel kind: the q/k preprocessing
+/// (l2-normalize for `norm`, d^{-1/4} pre-scale otherwise) followed by
+/// phi_PRF. Shared by `attend` and the streaming incremental step so
+/// the two paths cannot drift apart numerically.
+pub fn kernel_features(kind: Kind, x: &Mat, w: &Mat) -> Mat {
+    let mut out = Mat::default();
+    Arena::with_thread_local(|a| kernel_features_into(kind, x, w, &mut out, a));
+    out
+}
+
+/// `rpe_correlations` into a caller buffer (grow-only).
+pub fn rpe_correlations_into(b: &[f32], out: &mut Vec<f32>) {
+    let bmax = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    out.clear();
+    out.reserve(b.len());
+    out.extend(b.iter().map(|&x| (x - bmax).exp()));
 }
 
 /// RPE correlation coefficients c = exp(b - max b) from raw biases —
 /// the max-shift keeps the exponentials bounded; the row normalization
 /// in the attention cancels the global scale.
 pub fn rpe_correlations(b: &[f32]) -> Vec<f32> {
-    let bmax = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    b.iter().map(|&x| (x - bmax).exp()).collect()
+    let mut out = Vec::new();
+    rpe_correlations_into(b, &mut out);
+    out
 }
 
 /// Full single-head attention dispatch (PRF feature map for kernel
@@ -239,24 +311,34 @@ pub fn attend(kind: Kind, q: &Mat, k: &Mat, v: &Mat, w: Option<&Mat>,
     }
 }
 
-/// Per-position aggregates P[j] = vec(phi_k_j^T [v_j | 1]) as f64.
-fn kv_aggregate_f64(phi_k: &Mat, v: &Mat) -> Vec<f64> {
+/// Per-position aggregates P[j] = vec(phi_k_j^T [v_j | 1]) as f64,
+/// written into a caller (typically arena-held) buffer. Grow-only:
+/// every element is overwritten, so stale contents never leak.
+pub fn kv_aggregate_f64_into(phi_k: &Mat, v: &Mat, out: &mut Vec<f64>) {
     let n = phi_k.rows;
     let m = phi_k.cols;
     let d = v.cols;
     let f = m * (d + 1);
-    let mut p = vec![0.0f64; n * f];
+    if out.len() != n * f {
+        out.resize(n * f, 0.0);
+    }
     for j in 0..n {
         let pk = phi_k.row(j);
         let vr = v.row(j);
         for (mi, &pkm) in pk.iter().enumerate() {
             let base = j * f + mi * (d + 1);
             for (di, &vd) in vr.iter().enumerate() {
-                p[base + di] = (pkm * vd) as f64;
+                out[base + di] = (pkm * vd) as f64;
             }
-            p[base + d] = pkm as f64;
+            out[base + d] = pkm as f64;
         }
     }
+}
+
+/// Per-position aggregates P[j] = vec(phi_k_j^T [v_j | 1]) as f64.
+fn kv_aggregate_f64(phi_k: &Mat, v: &Mat) -> Vec<f64> {
+    let mut p = Vec::new();
+    kv_aggregate_f64_into(phi_k, v, &mut p);
     p
 }
 
@@ -301,13 +383,48 @@ pub fn nprf_rpe_fft_path_with_plan_scratch(
     plan: &crate::toeplitz::ToeplitzPlan,
     scratch: &mut crate::fft::Scratch,
 ) -> Mat {
+    let mut out = Mat::default();
+    Arena::with_thread_local(|a| {
+        nprf_rpe_fft_path_into(phi_q, phi_k, v, plan, &mut out, a, scratch)
+    });
+    out
+}
+
+/// The fully arena-threaded fast path: kv aggregation, the Toeplitz
+/// product, and the readout all stage in the dense `Arena`; the FFT
+/// workspace comes from `scratch`; the result lands in `out`
+/// (grow-only). A steady-state call — same shapes, warmed arena —
+/// performs zero heap allocations (gated by
+/// `benches/dense_substrate.rs`). Bitwise identical to
+/// `nprf_rpe_fft_path_with_plan_scratch` for the same plan.
+pub fn nprf_rpe_fft_path_into(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    plan: &crate::toeplitz::ToeplitzPlan,
+    out: &mut Mat,
+    arena: &mut Arena,
+    scratch: &mut crate::fft::Scratch,
+) {
     let n = phi_k.rows;
     assert_eq!(plan.n(), n, "plan length {} != sequence length {n}", plan.n());
     let d = v.cols;
     let f = phi_k.cols * (d + 1);
-    let p = kv_aggregate_f64(phi_k, v);
-    let dmat = plan.apply_batched_with(&p, f, scratch);
-    readout(phi_q, &dmat, d)
+    // Take the f64 buffers out of the arena so later stages can borrow
+    // the arena's remaining staging alongside them; take/put moves are
+    // allocation-free (the `toeplitz::apply_batched_into` idiom).
+    let mut agg = std::mem::take(&mut arena.agg);
+    kv_aggregate_f64_into(phi_k, v, &mut agg);
+    let mut dmat = std::mem::take(&mut arena.dmat);
+    if dmat.len() != n * f {
+        dmat.resize(n * f, 0.0);
+    }
+    plan.apply_batched_into(&agg, f, &mut dmat, scratch);
+    let mut num = std::mem::take(&mut arena.num);
+    readout_into(phi_q, &dmat, d, out, &mut num);
+    arena.agg = agg;
+    arena.dmat = dmat;
+    arena.num = num;
 }
 
 /// Quadratic-Toeplitz variant (ablation / oracle).
@@ -323,13 +440,20 @@ pub fn nprf_rpe_direct_path(phi_q: &Mat, phi_k: &Mat, v: &Mat, c: &[f32],
     readout(phi_q, &dmat, d)
 }
 
-fn readout(phi_q: &Mat, dmat: &[f64], d: usize) -> Mat {
+/// Readout z_i = (phi_q_i D_i[:, :d]) / (phi_q_i D_i[:, d] + eps) into
+/// a caller buffer; `num` is the per-row f64 numerator staging
+/// (arena-held on serving paths). Grow-only, fully overwritten.
+pub fn readout_into(phi_q: &Mat, dmat: &[f64], d: usize, out: &mut Mat,
+                    num: &mut Vec<f64>) {
     let n = phi_q.rows;
     let m = phi_q.cols;
-    let mut z = Mat::zeros(n, d);
+    out.resize_uninit(n, d);
+    if num.len() != d {
+        num.resize(d, 0.0);
+    }
     for i in 0..n {
         let pq = phi_q.row(i);
-        let mut num = vec![0.0f64; d];
+        num.fill(0.0);
         let mut den = 0.0f64;
         for (mi, &pqm) in pq.iter().enumerate() {
             let base = i * (m * (d + 1)) + mi * (d + 1);
@@ -339,11 +463,18 @@ fn readout(phi_q: &Mat, dmat: &[f64], d: usize) -> Mat {
             den += pqm as f64 * dmat[base + d];
         }
         let inv = 1.0 / (den + EPS as f64);
-        for (di, &nn) in num.iter().enumerate() {
-            *z.at_mut(i, di) = (nn * inv) as f32;
+        let row = out.row_mut(i);
+        for (o, &nn) in row.iter_mut().zip(num.iter()) {
+            *o = (nn * inv) as f32;
         }
     }
-    z
+}
+
+fn readout(phi_q: &Mat, dmat: &[f64], d: usize) -> Mat {
+    let mut out = Mat::default();
+    let mut num = Vec::new();
+    readout_into(phi_q, dmat, d, &mut out, &mut num);
+    out
 }
 
 #[cfg(test)]
@@ -514,6 +645,87 @@ mod tests {
             assert!(Kind::parse(s).is_some(), "{s}");
         }
         assert!(Kind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn into_paths_bitwise_match_wrappers() {
+        let (n, d, m) = (13, 5, 4);
+        let mut rng = Rng::new(91);
+        let x = rand_mat(n, d, 92);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let mut arena = crate::tensor::Arena::new();
+        // Dirty output buffer: stale contents must not leak.
+        let mut out = Mat::from_vec(2, 2, vec![f32::NAN; 4]);
+        phi_prf_into(&x, &w, &mut out);
+        assert_eq!(out.data, phi_prf(&x, &w).data);
+        phi_trf_into(&x, &w, &mut out, &mut arena);
+        assert_eq!(out.data, phi_trf(&x, &w).data);
+        phi_elu1_into(&x, &mut out);
+        assert_eq!(out.data, phi_elu1(&x).data);
+        for kind in [
+            Kind::Kernel { norm: true, rpe: true, fft: false },
+            Kind::Kernel { norm: false, rpe: false, fft: false },
+        ] {
+            kernel_features_into(kind, &x, &w, &mut out, &mut arena);
+            assert_eq!(out.data, kernel_features(kind, &x, &w).data);
+        }
+        let mut c = Vec::new();
+        let b: Vec<f32> = (0..7).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        rpe_correlations_into(&b, &mut c);
+        assert_eq!(c, rpe_correlations(&b));
+    }
+
+    #[test]
+    fn kernel_attention_into_bitwise_matches_wrapper() {
+        let (n, d, m) = (11, 4, 3);
+        let mut rng = Rng::new(95);
+        let q = rand_mat(n, d, 96);
+        let k = rand_mat(n, d, 97);
+        let v = rand_mat(n, d, 98);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let phi_q = phi_prf(&q, &w);
+        let phi_k = phi_prf(&k, &w);
+        let c: Vec<f32> = (0..2 * n - 1).map(|i| (0.1 * i as f32).exp()).collect();
+        let mut arena = crate::tensor::Arena::new();
+        let mut out = Mat::default();
+        for causal in [false, true] {
+            for cc in [None, Some(&c[..])] {
+                kernel_attention_into(
+                    &phi_q, &phi_k, &v, cc, causal, &mut out, &mut arena,
+                );
+                let want = kernel_attention(&phi_q, &phi_k, &v, cc, causal);
+                assert_eq!(out.data, want.data, "causal={causal}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_path_into_bitwise_matches_plan_scratch_path() {
+        let (n, d, m) = (18, 4, 3);
+        let mut rng = Rng::new(101);
+        let q = rand_mat(n, d, 102).l2_normalize_rows();
+        let k = rand_mat(n, d, 103).l2_normalize_rows();
+        let v = rand_mat(n, d, 104);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let phi_q = phi_prf(&q, &w);
+        let phi_k = phi_prf(&k, &w);
+        let c: Vec<f64> =
+            (0..2 * n - 1).map(|i| (0.03 * i as f64).exp()).collect();
+        let plan = crate::toeplitz::ToeplitzPlan::new(&c, n);
+        let mut scratch = crate::fft::Scratch::new();
+        let want =
+            nprf_rpe_fft_path_with_plan_scratch(&phi_q, &phi_k, &v, &plan,
+                                                &mut scratch);
+        let mut arena = crate::tensor::Arena::new();
+        let mut out = Mat::from_vec(1, 1, vec![f32::NAN]);
+        // Twice through the same arena: warmed reuse must be bitwise
+        // stable too.
+        for _ in 0..2 {
+            nprf_rpe_fft_path_into(
+                &phi_q, &phi_k, &v, &plan, &mut out, &mut arena, &mut scratch,
+            );
+            assert_eq!(out.data, want.data);
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::metrics;
 use crate::rng::Rng;
 use crate::runtime::{HostTensor, Runtime};
 use crate::streaming::{StreamSpec, StreamingDecoder};
-use crate::tensor::Mat;
+use crate::tensor::{matmul_into, matmul_t_slices, Mat};
 
 /// Greedy decode a batch of sources with a seq2seq `.fwd` artifact.
 /// Returns per-example hypothesis token vectors (specials stripped).
@@ -173,20 +173,46 @@ impl CpuLm {
 
     /// Embed a token prefix and project to (q, k, v), each (n, d).
     pub fn qkv(&self, tokens: &[i32]) -> (Mat, Mat, Mat) {
+        let (mut x, mut q, mut k, mut v) =
+            (Mat::default(), Mat::default(), Mat::default(), Mat::default());
+        self.qkv_into(tokens, &mut x, &mut q, &mut k, &mut v);
+        (q, k, v)
+    }
+
+    /// `qkv` into caller buffers (grow-only) on the blocked matmul
+    /// substrate — the form the streaming decode loop uses so its
+    /// per-token projections reuse one set of buffers instead of
+    /// allocating three matrices per emitted token.
+    pub fn qkv_into(&self, tokens: &[i32], x: &mut Mat, q: &mut Mat,
+                    k: &mut Mat, v: &mut Mat) {
         let n = tokens.len();
-        let mut x = Mat::zeros(n, self.d);
+        x.resize_uninit(n, self.d);
         for (i, &t) in tokens.iter().enumerate() {
             let t = (t.rem_euclid(self.vocab as i32)) as usize;
             x.row_mut(i).copy_from_slice(self.embed.row(t));
         }
-        (x.matmul(&self.wq), x.matmul(&self.wk), x.matmul(&self.wv))
+        matmul_into(x, &self.wq, q);
+        matmul_into(x, &self.wk, k);
+        matmul_into(x, &self.wv, v);
     }
 
     /// Tied-embedding readout: logits over the vocabulary for one
     /// attention output row.
     pub fn logits(&self, y_row: &[f32]) -> Vec<f32> {
-        let y = Mat::from_vec(1, self.d, y_row.to_vec());
-        y.matmul_t(&self.embed).data
+        let mut out = Vec::new();
+        self.logits_into(y_row, &mut out);
+        out
+    }
+
+    /// `logits` into a caller buffer (grow-only): one blocked
+    /// (1, d) @ (vocab, d)^T product straight on the slice substrate,
+    /// no temporary matrices.
+    pub fn logits_into(&self, y_row: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(y_row.len(), self.d, "logits_into: bad row length");
+        if out.len() != self.vocab {
+            out.resize(self.vocab, 0.0);
+        }
+        matmul_t_slices(y_row, 1, self.d, &self.embed.data, self.vocab, out);
     }
 
     /// Full re-forward: next-token logits after `tokens`, running the
@@ -249,12 +275,17 @@ pub fn greedy_decode_cpu(lm: &CpuLm, prompt: &[i32], gen: usize,
     let (q, k, v) = lm.qkv(prompt);
     let pre = dec.prefill(&[q], &[k], &[v])?;
     let mut logits = lm.logits(pre[0].row(prompt.len() - 1));
+    // Per-token q/k/v/logit projections reuse one buffer set on the
+    // blocked substrate: after the first step the loop's dense layer
+    // runs without reallocating.
+    let (mut xb, mut qb, mut kb, mut vb) =
+        (Mat::default(), Mat::default(), Mat::default(), Mat::default());
     for _ in 0..gen {
         let next = argmax(&logits) as i32;
         tokens.push(next);
-        let (q, k, v) = lm.qkv(&[next]);
-        let y = dec.step(&q, &k, &v)?;
-        logits = lm.logits(y.row(0));
+        lm.qkv_into(&[next], &mut xb, &mut qb, &mut kb, &mut vb);
+        let y = dec.step(&qb, &kb, &vb)?;
+        lm.logits_into(y.row(0), &mut logits);
     }
     // The last computed logits belong to the position after the final
     // emitted token; greedy decode only needed them if gen continued.

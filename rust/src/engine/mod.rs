@@ -17,8 +17,16 @@
 //!   * `attend_batch` — a [batch × heads] workload fanned across a
 //!     scoped `std::thread` pool (the crate outside `runtime` stays
 //!     dependency-free: no rayon, no crossbeam), each worker owning
-//!     one `fft::Scratch` arena reused across every item it claims so
-//!     the steady-state fan-out allocates no FFT workspace.
+//!     one [`Workspace`] — a combined dense (`tensor::Arena`) + FFT
+//!     (`fft::Scratch`) arena plus the phi staging matrices — reused
+//!     across every item it claims, so the steady-state fan-out
+//!     allocates neither FFT workspace nor dense intermediates;
+//!   * `attend_batch_into` — the fully write-into-caller-buffer form:
+//!     outputs and workspaces are caller-owned, so a warmed
+//!     steady-state batch performs zero heap allocations end to end
+//!     on the single-workspace path (gated by
+//!     `benches/dense_substrate.rs`; the multi-workspace path still
+//!     pays only the per-call thread spawns).
 //!
 //! See README.md in this directory for when each lever wins.
 
@@ -30,13 +38,46 @@ use std::sync::mpsc::channel;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_attention, kernel_features, nprf_rpe_fft_path_with_plan_scratch,
-    rpe_correlations, Kind,
+    kernel_attention_into, kernel_features_into, nprf_rpe_fft_path_into,
+    rpe_correlations_into, Kind,
 };
 use crate::fft::Scratch;
-use crate::tensor::Mat;
+use crate::tensor::{Arena, Mat};
 
 pub use cache::{coeff_fingerprint, CacheStats, PlanCache, PlanKey};
+
+/// Per-worker reusable state for the batched attention paths: the
+/// dense arena, the FFT scratch, and the feature-matrix staging. One
+/// workspace serves any sequence of item shapes; buffers grow to the
+/// high-water mark and are reused verbatim (the `fft::Scratch`
+/// contract). Contents are workspace, never state: outputs are
+/// bitwise independent of which workspace served an item.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// phi(Q) / phi(K) staging for kernel kinds.
+    pub phi_q: Mat,
+    pub phi_k: Mat,
+    /// Dense-layer intermediates (normalized x, scores, kv aggregates,
+    /// Toeplitz product, readout staging, RPE correlations).
+    pub dense: Arena,
+    /// FFT workspace for the Toeplitz fast path.
+    pub fft: Scratch,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Currently reserved heap footprint across both arenas and the
+    /// phi staging.
+    pub fn bytes(&self) -> usize {
+        (self.phi_q.data.capacity() + self.phi_k.data.capacity())
+            * std::mem::size_of::<f32>()
+            + self.dense.bytes()
+            + self.fft.bytes()
+    }
+}
 
 /// One unit of a batched attention workload: a single (batch item,
 /// head) slice. `q`/`k`/`v` are (n, d); `features` are the PRF weights
@@ -100,6 +141,13 @@ impl Engine {
     pub fn attend_batch(&self, items: &[AttendItem]) -> Result<Vec<Mat>> {
         attend_batch_with(items, &self.cache, self.workers)
     }
+
+    /// `attend_batch` into caller-owned outputs and workspaces — the
+    /// allocation-free serving form (see [`attend_batch_into`]).
+    pub fn attend_batch_into(&self, items: &[AttendItem], outs: &mut [Mat],
+                             workspaces: &mut [Workspace]) -> Result<()> {
+        attend_batch_into(items, outs, &self.cache, workspaces)
+    }
 }
 
 /// 0 -> one worker per available core.
@@ -122,12 +170,13 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
                          workers: usize) -> Result<Vec<Mat>> {
     let workers = workers.max(1).min(items.len().max(1));
     if workers == 1 {
-        // One arena for the whole batch: after the largest item has
-        // sized it, the remaining items transform allocation-free.
-        let mut scratch = Scratch::new();
+        // One workspace for the whole batch: after the largest item
+        // has sized it, the remaining items run allocation-free in
+        // both the dense and FFT layers.
+        let mut ws = Workspace::new();
         return items
             .iter()
-            .map(|it| attend_one(it, cache, &mut scratch))
+            .map(|it| attend_one(it, cache, &mut ws))
             .collect();
     }
     let next = AtomicUsize::new(0);
@@ -137,18 +186,19 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
             let tx = tx.clone();
             let next = &next;
             s.spawn(move || {
-                // Worker-local arena, reused across every item this
-                // worker claims from the [batch x heads] fan-out.
-                // Scratch contents never leak into results, so the
-                // claim order (which varies run to run) cannot change
-                // any output bit.
-                let mut scratch = Scratch::new();
+                // Worker-local workspace (dense arena + FFT scratch +
+                // phi staging), reused across every item this worker
+                // claims from the [batch x heads] fan-out. Workspace
+                // contents never leak into results, so the claim order
+                // (which varies run to run) cannot change any output
+                // bit.
+                let mut ws = Workspace::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= items.len() {
                         break;
                     }
-                    let out = attend_one(&items[i], cache, &mut scratch);
+                    let out = attend_one(&items[i], cache, &mut ws);
                     if tx.send((i, out)).is_err() {
                         break;
                     }
@@ -171,32 +221,110 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
     Ok(mats)
 }
 
+/// Batched attention written into caller-owned outputs with
+/// caller-owned workspaces — the steady-state serving form. One
+/// workspace runs the batch on the caller's thread: once outputs,
+/// workspaces, and the plan cache are warm, a call performs **zero**
+/// heap allocations (measured by the counting-allocator gate in
+/// `benches/dense_substrate.rs`). With several workspaces the items
+/// are split into contiguous chunks, one scoped worker thread per
+/// workspace; the numeric path stays allocation-free and only the
+/// thread spawns themselves touch the allocator. Outputs line up with
+/// `items` by index and are bitwise independent of the workspace
+/// count (each item is self-contained and deterministic).
+pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
+                         cache: &PlanCache,
+                         workspaces: &mut [Workspace]) -> Result<()> {
+    if outs.len() != items.len() {
+        bail!(
+            "attend_batch_into: {} outputs for {} items",
+            outs.len(),
+            items.len()
+        );
+    }
+    if items.is_empty() {
+        return Ok(());
+    }
+    if workspaces.is_empty() {
+        bail!("attend_batch_into needs at least one workspace");
+    }
+    let workers = workspaces.len().min(items.len());
+    if workers == 1 {
+        let ws = &mut workspaces[0];
+        for (it, out) in items.iter().zip(outs.iter_mut()) {
+            attend_one_into(it, cache, ws, out)?;
+        }
+        return Ok(());
+    }
+    let chunk = items.len().div_ceil(workers);
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(workers);
+        for ((ichunk, ochunk), ws) in items
+            .chunks(chunk)
+            .zip(outs.chunks_mut(chunk))
+            .zip(workspaces.iter_mut())
+        {
+            handles.push(s.spawn(move || -> Result<()> {
+                for (it, out) in ichunk.iter().zip(ochunk.iter_mut()) {
+                    attend_one_into(it, cache, ws, out)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("attend_batch_into: worker panicked"),
+            }
+        }
+        Ok(())
+    })
+}
+
+/// `attend_one_into` with an allocated output — the form the
+/// channel-based `attend_batch_with` fan-out uses.
+fn attend_one(it: &AttendItem, cache: &PlanCache,
+              ws: &mut Workspace) -> Result<Mat> {
+    let mut out = Mat::default();
+    attend_one_into(it, cache, ws, &mut out)?;
+    Ok(out)
+}
+
 /// One item, mirroring `attention::attend` exactly — except that for
 /// fft+rpe kernel kinds the Toeplitz plan comes from the cache, the
-/// columns go through the batched half-spectrum rfft, and the FFT
-/// workspace comes from the worker's reusable arena. All three
-/// substitutions are bitwise equivalent to the uncached path
-/// (tests/proptest_engine.rs).
-fn attend_one(it: &AttendItem, cache: &PlanCache,
-              scratch: &mut Scratch) -> Result<Mat> {
+/// columns go through the batched half-spectrum rfft, and every
+/// intermediate (phi staging, RPE correlations, kv aggregates,
+/// readout, FFT workspace) comes from the worker's reusable
+/// workspace. All substitutions are bitwise equivalent to the
+/// uncached path (tests/proptest_engine.rs); a warmed kernel-kind
+/// item allocates nothing.
+fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
+                   out: &mut Mat) -> Result<()> {
     match it.kind {
         Kind::Softmax { rpe, .. } => {
             if rpe && it.bias.is_none() {
                 bail!("softmax rpe item needs a bias vector");
             }
-            Ok(crate::attention::attend(
+            // Reference path: softmax kinds are served for coverage,
+            // not speed, and keep the allocating oracle code.
+            *out = crate::attention::attend(
                 it.kind, it.q, it.k, it.v, None, it.bias, it.causal,
-            ))
+            );
+            Ok(())
         }
         Kind::Kernel { rpe, fft, .. } => {
             let w = match it.features {
                 Some(w) => w,
                 None => bail!("kernel item needs feature weights"),
             };
-            let phi_q = kernel_features(it.kind, it.q, w);
-            let phi_k = kernel_features(it.kind, it.k, w);
+            kernel_features_into(it.kind, it.q, w, &mut ws.phi_q, &mut ws.dense);
+            kernel_features_into(it.kind, it.k, w, &mut ws.phi_k, &mut ws.dense);
             if !rpe {
-                return Ok(kernel_attention(&phi_q, &phi_k, it.v, None, it.causal));
+                kernel_attention_into(
+                    &ws.phi_q, &ws.phi_k, it.v, None, it.causal, out,
+                    &mut ws.dense,
+                );
+                return Ok(());
             }
             let b = match it.bias {
                 Some(b) => b,
@@ -210,16 +338,28 @@ fn attend_one(it: &AttendItem, cache: &PlanCache,
             if b.len() != 2 * n - 1 {
                 bail!("bias length {} != 2n-1 = {}", b.len(), 2 * n - 1);
             }
-            let c = rpe_correlations(b);
+            let mut coeffs = std::mem::take(&mut ws.dense.coeffs);
+            rpe_correlations_into(b, &mut coeffs);
             if fft {
-                let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+                let mut c64 = std::mem::take(&mut ws.dense.coeffs64);
+                c64.clear();
+                c64.reserve(coeffs.len());
+                c64.extend(coeffs.iter().map(|&x| x as f64));
                 let plan = cache.get(&c64, n, it.causal);
-                Ok(nprf_rpe_fft_path_with_plan_scratch(
-                    &phi_q, &phi_k, it.v, &plan, scratch,
-                ))
+                ws.dense.coeffs = coeffs;
+                ws.dense.coeffs64 = c64;
+                nprf_rpe_fft_path_into(
+                    &ws.phi_q, &ws.phi_k, it.v, &plan, out, &mut ws.dense,
+                    &mut ws.fft,
+                );
             } else {
-                Ok(kernel_attention(&phi_q, &phi_k, it.v, Some(&c), it.causal))
+                kernel_attention_into(
+                    &ws.phi_q, &ws.phi_k, it.v, Some(&coeffs), it.causal, out,
+                    &mut ws.dense,
+                );
+                ws.dense.coeffs = coeffs;
             }
+            Ok(())
         }
     }
 }
@@ -302,6 +442,81 @@ mod tests {
         let cache = PlanCache::default();
         let out = attend_batch_with(&[], &cache, 4).expect("empty");
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn attend_batch_into_bitwise_matches_channel_path() {
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let (n, d, m) = (23, 4, 3);
+        let mut rng = Rng::new(8);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let b = rng.normal_vec(2 * n - 1, 0.5);
+        let qs: Vec<Mat> = (0..5).map(|i| rand_mat(n, d, 400 + i)).collect();
+        let ks: Vec<Mat> = (0..5).map(|i| rand_mat(n, d, 500 + i)).collect();
+        let vs: Vec<Mat> = (0..5).map(|i| rand_mat(n, d, 600 + i)).collect();
+        let items: Vec<AttendItem> = (0..5)
+            .map(|i| AttendItem {
+                kind,
+                q: &qs[i],
+                k: &ks[i],
+                v: &vs[i],
+                features: Some(&w),
+                bias: Some(&b),
+                causal: true,
+            })
+            .collect();
+        let cache = PlanCache::default();
+        let want = attend_batch_with(&items, &cache, 2).expect("batch");
+        // Dirty output slots + both workspace counts: results must be
+        // bitwise identical to the channel path in every case.
+        for nws in [1usize, 3] {
+            let mut outs: Vec<Mat> =
+                (0..5).map(|_| Mat::from_vec(1, 1, vec![f32::NAN])).collect();
+            let mut wss: Vec<Workspace> =
+                (0..nws).map(|_| Workspace::new()).collect();
+            attend_batch_into(&items, &mut outs, &cache, &mut wss)
+                .expect("into");
+            for i in 0..5 {
+                assert_eq!(outs[i].data, want[i].data, "nws={nws} item {i}");
+            }
+            // Second pass through the same warmed workspaces: reuse
+            // must be bitwise stable.
+            attend_batch_into(&items, &mut outs, &cache, &mut wss)
+                .expect("into again");
+            for i in 0..5 {
+                assert_eq!(outs[i].data, want[i].data, "reuse item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn attend_batch_into_rejects_bad_arguments() {
+        let kind = Kind::Kernel { norm: true, rpe: false, fft: false };
+        let q = rand_mat(4, 2, 1);
+        let w = rand_mat(3, 2, 2);
+        let cache = PlanCache::default();
+        let item = AttendItem {
+            kind, q: &q, k: &q, v: &q, features: Some(&w), bias: None,
+            causal: true,
+        };
+        // Output count mismatch.
+        let mut outs: Vec<Mat> = Vec::new();
+        let mut wss = vec![Workspace::new()];
+        assert!(
+            attend_batch_into(&[item], &mut outs, &cache, &mut wss).is_err()
+        );
+        // No workspaces.
+        let mut outs = vec![Mat::default()];
+        assert!(
+            attend_batch_into(&[item], &mut outs, &cache, &mut []).is_err()
+        );
+        // Malformed item surfaces through the into path too.
+        let bad = AttendItem {
+            kind, q: &q, k: &q, v: &q, features: None, bias: None, causal: true,
+        };
+        assert!(
+            attend_batch_into(&[bad], &mut outs, &cache, &mut wss).is_err()
+        );
     }
 
     #[test]

@@ -25,18 +25,29 @@
 //!     `engine::attend_batch` fans [batch × heads] workloads across a
 //!     scoped thread pool. Streaming prefill and the server's batch
 //!     path draw plans from one cache per model;
-//!   * the numerical substrate under all of that is the real-spectrum
-//!     layer in `fft::real`: every signal on the Toeplitz hot path is
-//!     real, so `RfftPlan` transforms length-L signals as one
-//!     half-size SoA complex FFT plus an untangle pass (half the
-//!     butterflies, half the cached spectrum bytes — which is why the
-//!     `PlanCache` budget fits ~2x the plans), with all workspace in
-//!     reusable `fft::Scratch` arenas (one per engine worker, one per
-//!     streaming prefill) so steady-state transforms allocate nothing.
-//!     The complex `FftPlan` survives as the conformance oracle
+//!   * the numerical substrate under all of that is two layers. The
+//!     real-spectrum layer in `fft::real`: every signal on the
+//!     Toeplitz hot path is real, so `RfftPlan` transforms length-L
+//!     signals as one half-size SoA complex FFT plus an untangle pass
+//!     (half the butterflies, half the cached spectrum bytes — which
+//!     is why the `PlanCache` budget fits ~2x the plans), with all
+//!     workspace in reusable `fft::Scratch` arenas. The complex
+//!     `FftPlan` survives as the conformance oracle
 //!     (`tests/proptest_rfft.rs`) and as Bluestein's engine for
-//!     non-power-of-two one-shots, which now draw shared cached tables
-//!     via `fft::shared_plan`.
+//!     non-power-of-two one-shots, which draw shared cached tables
+//!     via `fft::shared_plan`;
+//!   * and the blocked dense layer in `tensor::dense`: cache-tiled,
+//!     register-blocked `matmul_into` / `matmul_t_into` (plain
+//!     autovectorizable Rust, the seed's naive loops retained as
+//!     oracles) under every feature-map, score, and projection
+//!     product, with intermediates in grow-only `tensor::Arena`s.
+//!     `engine::Workspace` bundles one dense arena + one FFT scratch +
+//!     phi staging per worker: each `attend_batch` worker, each
+//!     streaming prefill, and the `attend_batch_into` serving form own
+//!     exactly one, so a warmed steady-state batch allocates nothing
+//!     in either substrate (`benches/dense_substrate.rs` gates both
+//!     the >= 2x blocked-vs-naive win and the zero-allocation
+//!     property; `tests/proptest_dense.rs` is the conformance net).
 
 pub mod attention;
 pub mod config;

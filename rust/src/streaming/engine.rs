@@ -13,11 +13,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_features, nprf_rpe_fft_path, nprf_rpe_fft_path_with_plan_scratch,
-    rpe_correlations, Kind,
+    kernel_features, kernel_features_into, nprf_rpe_fft_path,
+    nprf_rpe_fft_path_into, rpe_correlations, Kind,
 };
-use crate::engine::PlanCache;
-use crate::fft::Scratch;
+use crate::engine::{PlanCache, Workspace};
 use crate::tensor::Mat;
 
 use super::state::DecoderState;
@@ -166,14 +165,15 @@ impl StreamingDecoder {
         }
         let c = self.spec.effective_coeffs(n);
         // One plan lookup covers every head: the spec's correlations
-        // are shared across the head group. Likewise one scratch arena:
-        // after head 0 sizes it, the remaining heads' rfft batches run
-        // allocation-free (arena contents never affect outputs).
+        // are shared across the head group. Likewise one combined
+        // dense+FFT workspace: after head 0 sizes it, the remaining
+        // heads' feature maps, kv aggregates, and rfft batches all run
+        // allocation-free (workspace contents never affect outputs).
         let plan = cache.map(|pc| {
             let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
             pc.get(&c64, n, true)
         });
-        let mut scratch = Scratch::new();
+        let mut ws = Workspace::new();
         let c_tail = self.spec.c_tail();
         let mut outs = Vec::with_capacity(heads);
         for h in 0..heads {
@@ -184,19 +184,30 @@ impl StreamingDecoder {
                 bail!("prefill head {h}: value dim {} != {}", v[h].cols,
                       self.state.value_dim());
             }
-            let phi_q = kernel_features(self.spec.kind, &q[h], &self.spec.features);
-            let phi_k = kernel_features(self.spec.kind, &k[h], &self.spec.features);
+            kernel_features_into(
+                self.spec.kind, &q[h], &self.spec.features, &mut ws.phi_q,
+                &mut ws.dense,
+            );
+            kernel_features_into(
+                self.spec.kind, &k[h], &self.spec.features, &mut ws.phi_k,
+                &mut ws.dense,
+            );
             // The effective coefficients already encode the window +
             // tail, so the FFT prefill and the recurrent steps realize
             // the same operator.
             outs.push(match &plan {
-                Some(p) => nprf_rpe_fft_path_with_plan_scratch(
-                    &phi_q, &phi_k, &v[h], p, &mut scratch,
-                ),
-                None => nprf_rpe_fft_path(&phi_q, &phi_k, &v[h], &c, true),
+                Some(p) => {
+                    let mut out = Mat::default();
+                    nprf_rpe_fft_path_into(
+                        &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
+                        &mut ws.dense, &mut ws.fft,
+                    );
+                    out
+                }
+                None => nprf_rpe_fft_path(&ws.phi_q, &ws.phi_k, &v[h], &c, true),
             });
             for j in 0..n {
-                self.state.push(h, phi_k.row(j), v[h].row(j), c_tail);
+                self.state.push(h, ws.phi_k.row(j), v[h].row(j), c_tail);
             }
         }
         self.pos = n;

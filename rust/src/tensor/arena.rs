@@ -1,0 +1,100 @@
+//! Grow-only dense workspace, the `fft::Scratch` of the matmul layer.
+//!
+//! Every intermediate the arena-threaded attention paths need — the
+//! normalized q/k copy, feature-map projection staging, kernel score
+//! staging, the f64 kv aggregates and Toeplitz product, RPE
+//! correlation staging — lives in one `Arena`. Buffers grow to the
+//! high-water mark of the shapes they have served and are reused
+//! verbatim afterwards, so a steady-state workload (same shapes call
+//! over call) performs zero heap allocations through the dense layer
+//! (gated by `benches/dense_substrate.rs`).
+//!
+//! Semantics mirror `fft::Scratch`: contents are workspace, never
+//! state — every consumer fully overwrites what it reads before
+//! reading it, so outputs are bitwise independent of which arena
+//! (fresh, reused, thread-local) served the call
+//! (`tests/proptest_dense.rs` pins that down).
+
+use std::cell::RefCell;
+
+use super::Mat;
+
+/// Reusable buffers for the dense attention paths. One arena serves
+/// every shape: see the module docs for the reuse contract.
+#[derive(Debug, Default)]
+pub struct Arena {
+    /// Normalized / pre-scaled copy of x in `kernel_features_into`.
+    pub(crate) xnorm: Mat,
+    /// Projection staging for `phi_trf_into` (whose output is (n, 2m)
+    /// while the projection is (n, m); `phi_prf_into` fuses the
+    /// projection straight into its output instead).
+    pub(crate) proj: Mat,
+    /// Kernel score staging for `kernel_attention_into`.
+    pub(crate) scores: Mat,
+    /// RPE correlation staging (`rpe_correlations_into`) and its f64
+    /// widening for plan-cache lookups.
+    pub(crate) coeffs: Vec<f32>,
+    pub(crate) coeffs64: Vec<f64>,
+    /// Per-position kv aggregates P (f64), `kv_aggregate_f64_into`.
+    pub(crate) agg: Vec<f64>,
+    /// Toeplitz product output D (f64), `nprf_rpe_fft_path_into`.
+    pub(crate) dmat: Vec<f64>,
+    /// Per-row f64 numerator staging in `readout_into`.
+    pub(crate) num: Vec<f64>,
+}
+
+thread_local! {
+    static TLS_ARENA: RefCell<Arena> = RefCell::new(Arena::default());
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Currently reserved heap footprint across all buffers.
+    pub fn bytes(&self) -> usize {
+        (self.xnorm.data.capacity()
+            + self.proj.data.capacity()
+            + self.scores.data.capacity()
+            + self.coeffs.capacity())
+            * std::mem::size_of::<f32>()
+            + (self.coeffs64.capacity()
+                + self.agg.capacity()
+                + self.dmat.capacity()
+                + self.num.capacity())
+                * std::mem::size_of::<f64>()
+    }
+
+    /// Run `f` against this thread's shared arena — the fallback the
+    /// allocating convenience wrappers (`kernel_features`,
+    /// `kernel_attention`, ...) use so one-shot callers still amortize
+    /// across calls. Do not nest: the arena is a `RefCell`.
+    pub fn with_thread_local<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+        TLS_ARENA.with(|a| f(&mut a.borrow_mut()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_tracks_growth() {
+        let mut a = Arena::new();
+        assert_eq!(a.bytes(), 0);
+        a.agg.resize(128, 0.0);
+        a.coeffs.resize(64, 0.0);
+        assert!(a.bytes() >= 128 * 8 + 64 * 4);
+    }
+
+    #[test]
+    fn thread_local_arena_runs() {
+        let n = Arena::with_thread_local(|a| {
+            a.num.clear();
+            a.num.resize(5, 1.5);
+            a.num.len()
+        });
+        assert_eq!(n, 5);
+    }
+}

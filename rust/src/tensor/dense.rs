@@ -1,0 +1,411 @@
+//! Blocked dense kernels: the write-into-caller-buffer matmul substrate.
+//!
+//! The kernel-feature products phi(Q), phi(K), phi(K)^T V dominate the
+//! per-layer wall clock once Toeplitz plans are cached (the FFT term is
+//! O(n log n); the feature GEMMs are O(n m d)), so they get the same
+//! treatment the FFT substrate got in `fft::real`: explicit `_into`
+//! entry points that write into caller-owned storage, cache-aware loop
+//! tiling, and register-blocked microkernels written as plain
+//! autovectorizable Rust (fixed-size lane arrays, no intrinsics, no new
+//! dependencies).
+//!
+//! Two layers of API:
+//!   * slice-level `matmul_slices` / `matmul_t_slices` — the raw
+//!     substrate, shapes passed explicitly, zero allocations;
+//!   * `Mat`-level `matmul_into` / `matmul_t_into` — shape-checked
+//!     wrappers that grow the output in place (grow-only, like
+//!     `fft::real::reserve_len`).
+//!
+//! The seed's naive triple loops are retained verbatim as
+//! `matmul_naive` / `matmul_t_naive`: they are the conformance oracles
+//! for `tests/proptest_dense.rs` and `benches/dense_substrate.rs`,
+//! never a serving path. The naive matmul keeps its historical
+//! `a == 0.0` skip branch; the blocked kernels are branch-free in the
+//! inner loops and deterministic for a given shape (no data-dependent
+//! control flow), which is what makes every `_into` path bitwise
+//! reproducible under buffer reuse.
+
+use super::Mat;
+
+/// f32 accumulation lanes per register-blocked chain. Eight lanes is
+/// one AVX2 vector; on narrower ISAs the compiler splits the lane
+/// array into several chains, which still breaks the serial-add
+/// latency chain the naive dot product is bound by.
+const LANES: usize = 8;
+/// Register tile: MR rows of A by NR rows of B per microkernel call.
+const MR: usize = 4;
+const NR: usize = 2;
+/// Cache tiles: panels of MC rows of A against NC rows of B.
+const MC: usize = 256;
+const NC: usize = 64;
+/// k-blocking for `matmul_slices`, bounding the B panel touched per
+/// output-row pass.
+const KC: usize = 512;
+
+// ---------------------------------------------------------------------------
+// Naive oracles (the seed implementations, retained verbatim)
+// ---------------------------------------------------------------------------
+
+/// C = A @ B, the seed's row-times-row loop with the per-element
+/// `a == 0.0` skip branch. O(m k n), oracle only.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate().take(k) {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// C = A @ B^T, the seed's scalar dot-product loop. O(m k n), oracle
+/// only: the serial `acc +=` chain is latency-bound, which is exactly
+/// what the lane-blocked kernel below removes.
+pub fn matmul_t_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_t shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += arow[t] * brow[t];
+            }
+            out.data[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Register-blocked microkernel for C = A @ B^T
+// ---------------------------------------------------------------------------
+
+/// TM x TN output tile of A @ B^T. `a` starts at the tile's first A
+/// row, `b` at the tile's first B row, both with row stride `k`; the
+/// tile lands at `out[r * ldc + s]`. Accumulation runs in `LANES`
+/// independent chains per output (vectorizable, and free of the
+/// serial-add latency chain), with the k-remainder folded in first and
+/// the chains reduced in ascending lane order — a fixed, data-independent
+/// summation order, so results are bitwise reproducible.
+#[inline(always)]
+fn tile_t<const TM: usize, const TN: usize>(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    out: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[[0.0f32; LANES]; TN]; TM];
+    let mut tail = [[0.0f32; TN]; TM];
+    let split = k - k % LANES;
+    let mut base = 0;
+    while base < split {
+        for (r, acc_r) in acc.iter_mut().enumerate() {
+            let ar = &a[r * k + base..r * k + base + LANES];
+            for (s, acc_rs) in acc_r.iter_mut().enumerate() {
+                let br = &b[s * k + base..s * k + base + LANES];
+                for (ac, (&x, &y)) in acc_rs.iter_mut().zip(ar.iter().zip(br)) {
+                    *ac += x * y;
+                }
+            }
+        }
+        base += LANES;
+    }
+    for t in split..k {
+        for (r, tail_r) in tail.iter_mut().enumerate() {
+            let av = a[r * k + t];
+            for (s, tl) in tail_r.iter_mut().enumerate() {
+                *tl += av * b[s * k + t];
+            }
+        }
+    }
+    for (r, (acc_r, tail_r)) in acc.iter().zip(&tail).enumerate() {
+        for (s, (acc_rs, &tl)) in acc_r.iter().zip(tail_r).enumerate() {
+            let mut sum = tl;
+            for &lane in acc_rs {
+                sum += lane;
+            }
+            out[r * ldc + s] = sum;
+        }
+    }
+}
+
+/// C = A @ B^T into a caller slice: `a` is (m, k), `b` is (n, k), `out`
+/// is (m, n), all row-major. Fully overwrites `out` (no accumulate), so
+/// stale buffer contents never leak into results. Zero allocations.
+pub fn matmul_t_slices(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "matmul_t_slices: bad a length");
+    assert_eq!(b.len(), n * k, "matmul_t_slices: bad b length");
+    assert_eq!(out.len(), m * n, "matmul_t_slices: bad out length");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    // Cache tiling: an NC-row panel of B is streamed against MC-row
+    // panels of A, so the panel working set (NC * k floats) stays hot
+    // across the whole A panel; the register tiles inside do the flops.
+    let mut jc = 0;
+    while jc < n {
+        let nc = (n - jc).min(NC);
+        let mut ic = 0;
+        while ic < m {
+            let mc = (m - ic).min(MC);
+            let mut i = 0;
+            while i < mc {
+                let tm = (mc - i).min(MR);
+                let arow = &a[(ic + i) * k..];
+                let mut j = 0;
+                while j < nc {
+                    let tn = (nc - j).min(NR);
+                    let brow = &b[(jc + j) * k..];
+                    let o = &mut out[(ic + i) * n + (jc + j)..];
+                    match (tm, tn) {
+                        (4, 2) => tile_t::<4, 2>(arow, brow, k, o, n),
+                        (4, 1) => tile_t::<4, 1>(arow, brow, k, o, n),
+                        (3, 2) => tile_t::<3, 2>(arow, brow, k, o, n),
+                        (3, 1) => tile_t::<3, 1>(arow, brow, k, o, n),
+                        (2, 2) => tile_t::<2, 2>(arow, brow, k, o, n),
+                        (2, 1) => tile_t::<2, 1>(arow, brow, k, o, n),
+                        (1, 2) => tile_t::<1, 2>(arow, brow, k, o, n),
+                        (1, 1) => tile_t::<1, 1>(arow, brow, k, o, n),
+                        _ => unreachable!("tile sizes bounded by MR x NR"),
+                    }
+                    j += tn;
+                }
+                i += tm;
+            }
+            ic += mc;
+        }
+        jc += nc;
+    }
+}
+
+/// C = A @ B into a caller slice: `a` is (m, k), `b` is (k, n), `out`
+/// is (m, n), all row-major. Fully overwrites `out` (zeroed, then
+/// accumulated in ascending-k order — the same order as the naive
+/// oracle, minus its zero-skip). The inner loop is elementwise over
+/// the output row with four B-row streams, which autovectorizes;
+/// k-blocking bounds the B panel working set. Zero allocations.
+pub fn matmul_slices(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "matmul_slices: bad a length");
+    assert_eq!(b.len(), k * n, "matmul_slices: bad b length");
+    assert_eq!(out.len(), m * n, "matmul_slices: bad out length");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut kc = 0;
+    while kc < k {
+        let kb = (k - kc).min(KC);
+        for i in 0..m {
+            let arow = &a[i * k + kc..i * k + kc + kb];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut t = 0;
+            while t + 4 <= kb {
+                let a0 = arow[t];
+                let a1 = arow[t + 1];
+                let a2 = arow[t + 2];
+                let a3 = arow[t + 3];
+                let b0 = &b[(kc + t) * n..(kc + t + 1) * n];
+                let b1 = &b[(kc + t + 1) * n..(kc + t + 2) * n];
+                let b2 = &b[(kc + t + 2) * n..(kc + t + 3) * n];
+                let b3 = &b[(kc + t + 3) * n..(kc + t + 4) * n];
+                for ((((o, &v0), &v1), &v2), &v3) in
+                    orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                {
+                    *o = ((*o + a0 * v0) + a1 * v1) + a2 * v2 + a3 * v3;
+                }
+                t += 4;
+            }
+            while t < kb {
+                let av = arow[t];
+                let brow = &b[(kc + t) * n..(kc + t + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+                t += 1;
+            }
+        }
+        kc += kb;
+    }
+}
+
+/// Blocked transpose into a caller slice: `a` is (rows, cols), `out`
+/// is (cols, rows). 32x32 tiles keep both the read and the strided
+/// write streams inside one cache-line working set, replacing the
+/// bounds-checked `from_fn` closure the seed used.
+pub fn transpose_slices(a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), rows * cols, "transpose_slices: bad input length");
+    assert_eq!(out.len(), rows * cols, "transpose_slices: bad output length");
+    const TB: usize = 32;
+    let mut i0 = 0;
+    while i0 < rows {
+        let ib = (rows - i0).min(TB);
+        let mut j0 = 0;
+        while j0 < cols {
+            let jb = (cols - j0).min(TB);
+            for i in i0..i0 + ib {
+                let arow = &a[i * cols + j0..i * cols + j0 + jb];
+                for (dj, &v) in arow.iter().enumerate() {
+                    out[(j0 + dj) * rows + i] = v;
+                }
+            }
+            j0 += jb;
+        }
+        i0 += ib;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mat-level wrappers (grow-only output)
+// ---------------------------------------------------------------------------
+
+/// C = A @ B into `out`, growing it in place (never shrinking capacity).
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    out.resize_uninit(a.rows, b.cols);
+    matmul_slices(&a.data, a.rows, a.cols, &b.data, b.cols, &mut out.data);
+}
+
+/// C = A @ B^T into `out`, growing it in place (never shrinking
+/// capacity).
+pub fn matmul_t_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "matmul_t shape mismatch");
+    out.resize_uninit(a.rows, b.rows);
+    matmul_t_slices(&a.data, a.rows, a.cols, &b.data, b.rows, &mut out.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / ((c.max(1)) as f32).sqrt();
+        Mat::from_vec(
+            r,
+            c,
+            (0..r * c).map(|_| rng.normal_f32() * scale).collect(),
+        )
+    }
+
+    fn max_diff(a: &Mat, b: &Mat) -> f32 {
+        a.max_abs_diff(b)
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_on_mixed_shapes() {
+        for &(m, k, n) in
+            &[(1, 1, 1), (4, 8, 2), (7, 9, 5), (16, 64, 33), (65, 7, 65)]
+        {
+            let a = rand_mat(m, k, 1000 + (m * 31 + k * 7 + n) as u64);
+            let b = rand_mat(k, n, 2000 + (m + k * 13 + n * 3) as u64);
+            let want = matmul_naive(&a, &b);
+            let mut got = Mat::zeros(0, 0);
+            matmul_into(&a, &b, &mut got);
+            assert_eq!((got.rows, got.cols), (m, n));
+            assert!(max_diff(&got, &want) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_t_matches_naive_on_mixed_shapes() {
+        for &(m, k, n) in
+            &[(1, 1, 1), (5, 8, 3), (9, 17, 9), (33, 64, 12), (64, 63, 65)]
+        {
+            let a = rand_mat(m, k, 3000 + (m * 11 + k + n * 5) as u64);
+            let b = rand_mat(n, k, 4000 + (m + k * 3 + n * 17) as u64);
+            let want = matmul_t_naive(&a, &b);
+            let mut got = Mat::zeros(0, 0);
+            matmul_t_into(&a, &b, &mut got);
+            assert_eq!((got.rows, got.cols), (m, n));
+            assert!(max_diff(&got, &want) < 1e-5, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn empty_dims_produce_zeroed_output() {
+        // k = 0: C is all zeros; m or n = 0: C is empty.
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let mut out = Mat::from_vec(1, 1, vec![7.0]); // stale contents
+        matmul_into(&a, &b, &mut out);
+        assert_eq!((out.rows, out.cols), (3, 4));
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        let bt = Mat::zeros(4, 0);
+        let mut out = Mat::from_vec(2, 6, vec![1.0; 12]);
+        matmul_t_into(&a, &bt, &mut out);
+        assert_eq!((out.rows, out.cols), (3, 4));
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        let e = rand_mat(0, 5, 9);
+        let f = rand_mat(5, 3, 10);
+        let mut out = Mat::zeros(0, 0);
+        matmul_into(&e, &f, &mut out);
+        assert_eq!((out.rows, out.cols), (0, 3));
+        assert!(out.data.is_empty());
+    }
+
+    #[test]
+    fn into_is_bitwise_deterministic_under_buffer_reuse() {
+        let a = rand_mat(19, 33, 77);
+        let b = rand_mat(21, 33, 78);
+        let mut fresh = Mat::zeros(0, 0);
+        matmul_t_into(&a, &b, &mut fresh);
+        // Dirty, larger buffer: results must match bit for bit.
+        let mut dirty = Mat::from_vec(40, 40, vec![f32::NAN; 1600]);
+        matmul_t_into(&a, &b, &mut dirty);
+        assert_eq!(fresh.data, dirty.data);
+        assert_eq!((dirty.rows, dirty.cols), (19, 21));
+    }
+
+    #[test]
+    fn transpose_slices_matches_from_fn() {
+        for &(r, c) in &[(1, 1), (3, 5), (33, 65), (64, 64), (7, 257)] {
+            let a = rand_mat(r, c, (r * 100 + c) as u64);
+            let want = Mat::from_fn(c, r, |i, j| a.at(j, i));
+            let mut out = vec![0.0f32; r * c];
+            transpose_slices(&a.data, r, c, &mut out);
+            assert_eq!(out, want.data, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn naive_oracles_preserved_semantics() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul_naive(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+        let c = matmul_t_naive(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+}

@@ -1,9 +1,32 @@
-//! Minimal row-major f32 matrix type + the handful of dense ops the
-//! CPU-side attention oracle and simulations need. Deliberately small:
-//! the heavy lifting happens inside the PJRT executables; this exists
-//! for cross-validation, simulation studies, and workload generation.
+//! Row-major f32 matrices + the blocked dense substrate under the CPU
+//! attention paths.
+//!
+//! The seed version of this module was a deliberately small oracle
+//! layer (naive triple-loop products). Serving moved the hot dense
+//! work — feature-map GEMMs, score products, q/k/v projections — onto
+//! the CPU paths, so the substrate now has three layers:
+//!
+//!   * [`Mat`] — the row-major f32 matrix type. Its `matmul` /
+//!     `matmul_t` / `transpose` methods keep their allocating
+//!     signatures but delegate to the blocked kernels;
+//!   * [`dense`] — cache-tiled, register-blocked `matmul_into` /
+//!     `matmul_t_into` (plus raw slice-level entry points) that write
+//!     into caller-owned buffers, with the seed's naive loops retained
+//!     as `matmul_naive` / `matmul_t_naive` conformance oracles;
+//!   * [`arena::Arena`] — a grow-only workspace mirroring
+//!     `fft::Scratch` semantics, so steady-state attention calls
+//!     allocate nothing in the dense layer.
 
-#[derive(Debug, Clone, PartialEq)]
+pub mod arena;
+pub mod dense;
+
+pub use arena::Arena;
+pub use dense::{
+    matmul_into, matmul_naive, matmul_slices, matmul_t_into, matmul_t_naive,
+    matmul_t_slices, transpose_slices,
+};
+
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -34,6 +57,29 @@ impl Mat {
         Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
+    /// Reshape to (rows, cols) WITHOUT clearing: grow-only (capacity is
+    /// never released), stale contents are observable until written.
+    /// For outputs every kernel fully overwrites — the `fft::real::
+    /// reserve_len` contract; the determinism proptests pin it down.
+    pub fn resize_uninit(&mut self, rows: usize, cols: usize) {
+        let len = rows * cols;
+        if self.data.len() != len {
+            self.data.resize(len, 0.0);
+        }
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Reshape to (rows, cols) and zero-fill, without ever shrinking
+    /// capacity (the `fft::real::ensure_len` contract). For buffers
+    /// that are accumulated into rather than overwritten.
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
@@ -52,55 +98,45 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// C = A @ B, blocked over k for cache friendliness.
+    /// C = A @ B on the blocked substrate (`dense::matmul_into`).
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        let mut out = Mat::default();
+        dense::matmul_into(self, other, &mut out);
         out
     }
 
-    /// C = A @ B^T.
+    /// C = A @ B^T on the blocked substrate (`dense::matmul_t_into`).
     pub fn matmul_t(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            for j in 0..n {
-                let brow = other.row(j);
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += arow[t] * brow[t];
-                }
-                out.data[i * n + j] = acc;
-            }
-        }
+        let mut out = Mat::default();
+        dense::matmul_t_into(self, other, &mut out);
         out
     }
 
+    /// Blocked transpose (`dense::transpose_slices`), replacing the
+    /// seed's bounds-checked `from_fn` copy.
     pub fn transpose(&self) -> Mat {
-        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+        let mut out = Mat::default();
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// `transpose` into a caller buffer (grow-only).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.resize_uninit(self.cols, self.rows);
+        dense::transpose_slices(&self.data, self.rows, self.cols, &mut out.data);
     }
 
     pub fn scale(&self, s: f32) -> Mat {
-        Mat {
-            rows: self.rows,
-            cols: self.cols,
-            data: self.data.iter().map(|&x| x * s).collect(),
+        let mut out = Mat::default();
+        self.scale_into(s, &mut out);
+        out
+    }
+
+    /// `scale` into a caller buffer (grow-only).
+    pub fn scale_into(&self, s: f32, out: &mut Mat) {
+        out.resize_uninit(self.rows, self.cols);
+        for (o, &x) in out.data.iter_mut().zip(&self.data) {
+            *o = x * s;
         }
     }
 
@@ -137,15 +173,23 @@ impl Mat {
 
     /// Row-wise l2 normalization (the paper's q/k normalization).
     pub fn l2_normalize_rows(&self) -> Mat {
-        let mut out = self.clone();
-        for i in 0..out.rows {
-            let row = out.row_mut(i);
-            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
-            for x in row.iter_mut() {
-                *x /= norm;
+        let mut out = Mat::default();
+        self.l2_normalize_rows_into(&mut out);
+        out
+    }
+
+    /// `l2_normalize_rows` into a caller buffer (grow-only).
+    pub fn l2_normalize_rows_into(&self, out: &mut Mat) {
+        out.resize_uninit(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let norm = src.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+            let inv = 1.0 / norm;
+            let dst = &mut out.data[i * self.cols..(i + 1) * self.cols];
+            for (o, &x) in dst.iter_mut().zip(src) {
+                *o = x * inv;
             }
         }
-        out
     }
 
     pub fn max_abs_diff(&self, other: &Mat) -> f32 {
@@ -235,6 +279,34 @@ mod tests {
     }
 
     #[test]
+    fn transpose_roundtrips() {
+        let a = Mat::from_fn(5, 9, |i, j| (i * 13 + j * 3) as f32 * 0.25);
+        let t = a.transpose();
+        assert_eq!((t.rows, t.cols), (9, 5));
+        assert_eq!(t.transpose().data, a.data);
+    }
+
+    #[test]
+    fn resize_helpers_are_grow_only() {
+        let mut m = Mat::zeros(8, 8);
+        let cap = m.data.capacity();
+        m.resize_uninit(2, 3);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert!(m.data.capacity() >= cap, "capacity must never shrink");
+        m.resize_zeroed(4, 4);
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert!(m.data.capacity() >= cap);
+    }
+
+    #[test]
+    fn scale_into_matches_scale() {
+        let a = Mat::from_fn(3, 4, |i, j| (i + 2 * j) as f32);
+        let mut out = Mat::from_vec(1, 2, vec![9.0, 9.0]);
+        a.scale_into(0.5, &mut out);
+        assert_eq!(out.data, a.scale(0.5).data);
+    }
+
+    #[test]
     fn softmax_rows_sum_to_one() {
         let mut a = Mat::from_fn(3, 5, |i, j| (i as f32 - j as f32) * 0.7);
         a.softmax_rows();
@@ -253,6 +325,14 @@ mod tests {
             let norm: f32 = n.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
             assert!((norm - 1.0).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn l2_normalize_into_matches_allocating() {
+        let a = Mat::from_fn(4, 6, |i, j| (i as f32 - j as f32) * 0.3 + 0.1);
+        let mut out = Mat::zeros(9, 9); // dirty, wrong shape
+        a.l2_normalize_rows_into(&mut out);
+        assert_eq!(out.data, a.l2_normalize_rows().data);
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Conformance net for the blocked dense substrate.
+//!
+//! The refactor substitutes three things under every numerics layer:
+//! blocked matmul kernels for the naive triple loops, write-into
+//! caller buffers for per-call allocation, and a grow-only
+//! `tensor::Arena` for the attention intermediates. The net pins down:
+//!
+//!   * blocked `matmul` / `matmul_t` == the retained naive oracles to
+//!     1e-5 across adversarial shapes (every dim in
+//!     {0, 1, 7, 8, 9, 63, 64, 65, 257}: empty, single, sub-tile,
+//!     exact-tile, tile+1, and just-past-a-power sizes);
+//!   * every `_into` path is bitwise deterministic under buffer and
+//!     arena reuse (dirty buffers, mixed-shape sequences, repeats);
+//!   * the serving entry points — `attend`, `attend_batch_with`,
+//!     `attend_batch_into`, streaming prefill — stay bitwise equal to
+//!     each other and within tolerance of a naive-matmul composition
+//!     of the same operator.
+
+use kafft::attention::{
+    self, draw_gaussian_features, kernel_attention_into, kernel_features,
+    kernel_features_into, Kind,
+};
+use kafft::engine::{
+    attend_batch_into, attend_batch_with, AttendItem, PlanCache, Workspace,
+};
+use kafft::rng::Rng;
+use kafft::streaming::{StreamSpec, StreamingDecoder};
+use kafft::tensor::{
+    matmul_into, matmul_naive, matmul_t_into, matmul_t_naive, Arena, Mat,
+};
+use kafft::util::prop::{forall, Gen};
+
+/// The adversarial dimension grid: empty, unit, below/at/above the
+/// 4x2 register tile and the 8-lane chunk, the 63/64/65 straddle of
+/// the NC cache tile, and the just-past-a-power 257.
+const DIMS: [usize; 9] = [0, 1, 7, 8, 9, 63, 64, 65, 257];
+
+fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    // Scale ~ 1/sqrt(k) keeps dot products O(1) so the 1e-5 absolute
+    // tolerance against the naive summation order is meaningful even
+    // at k = 257.
+    let scale = 1.0 / ((c.max(1)) as f32).sqrt();
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal_f32() * scale).collect())
+}
+
+#[test]
+fn blocked_matmul_matches_naive_on_adversarial_shapes() {
+    let mut checked = 0usize;
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                // Bound the debug-mode cost; every dim value still
+                // appears in every position across the grid.
+                if m * k * n > 2_000_000 {
+                    continue;
+                }
+                let seed = (m * 1_000_000 + k * 1_000 + n) as u64;
+                let a = rand_mat(m, k, seed);
+                let b = rand_mat(k, n, seed + 1);
+                let want = matmul_naive(&a, &b);
+                let mut got = Mat::default();
+                matmul_into(&a, &b, &mut got);
+                assert_eq!((got.rows, got.cols), (m, n), "({m},{k},{n})");
+                assert!(
+                    got.max_abs_diff(&want) < 1e-5,
+                    "matmul ({m},{k},{n}): {}",
+                    got.max_abs_diff(&want)
+                );
+                let bt = rand_mat(n, k, seed + 2);
+                let want = matmul_t_naive(&a, &bt);
+                let mut got = Mat::default();
+                matmul_t_into(&a, &bt, &mut got);
+                assert_eq!((got.rows, got.cols), (m, n), "({m},{k},{n})");
+                assert!(
+                    got.max_abs_diff(&want) < 1e-5,
+                    "matmul_t ({m},{k},{n}): {}",
+                    got.max_abs_diff(&want)
+                );
+                checked += 1;
+            }
+        }
+    }
+    // The grid must not silently degenerate.
+    assert!(checked > 600, "only {checked} shape triples checked");
+}
+
+/// (m, k, n, seed) with dims spanning the tile boundaries.
+struct ShapeCase;
+
+impl Gen for ShapeCase {
+    type Value = (usize, usize, usize, u64);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let m = 1 + rng.below_usize(70);
+        let k = 1 + rng.below_usize(70);
+        let n = 1 + rng.below_usize(70);
+        (m, k, n, rng.next_u64())
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.0 > 1 {
+            out.push((1, v.1, v.2, v.3));
+        }
+        if v.1 > 1 {
+            out.push((v.0, v.1 / 2, v.2, v.3));
+        }
+        if v.2 > 1 {
+            out.push((v.0, v.1, 1, v.3));
+        }
+        out
+    }
+}
+
+#[test]
+fn into_kernels_bitwise_deterministic_under_buffer_reuse() {
+    // One dirty buffer reused across every generated shape: each call
+    // must reproduce the fresh-buffer result bit for bit. (RefCell:
+    // `forall` takes an `Fn` closure.)
+    let reused_cell =
+        std::cell::RefCell::new(Mat::from_vec(3, 3, vec![f32::NAN; 9]));
+    forall("dense-into-reuse", 60, 11, &ShapeCase, |&(m, k, n, seed)| {
+        let mut reused = reused_cell.borrow_mut();
+        let a = rand_mat(m, k, seed);
+        let b = rand_mat(k, n, seed ^ 0x9e37_79b9);
+        let bt = rand_mat(n, k, seed ^ 0x7f4a_7c15);
+        let mut fresh = Mat::default();
+        matmul_into(&a, &b, &mut fresh);
+        matmul_into(&a, &b, &mut reused);
+        if fresh.data != reused.data {
+            return Err("matmul differs under buffer reuse".into());
+        }
+        let mut fresh = Mat::default();
+        matmul_t_into(&a, &bt, &mut fresh);
+        matmul_t_into(&a, &bt, &mut reused);
+        if fresh.data != reused.data {
+            return Err("matmul_t differs under buffer reuse".into());
+        }
+        // Repeat in place: overwriting one's own previous output.
+        let before = reused.data.clone();
+        matmul_t_into(&a, &bt, &mut reused);
+        if before != reused.data {
+            return Err("matmul_t not idempotent over its own output".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_reuse_is_bitwise_deterministic_across_mixed_shapes() {
+    // One arena shared across a mixed-shape sequence of feature maps,
+    // kernel attentions, and fft paths must reproduce the fresh-arena
+    // outputs bit for bit.
+    let mut shared = Arena::new();
+    let mut shared_out = Mat::from_vec(1, 1, vec![f32::NAN]);
+    for (i, &(n, d, m)) in
+        [(17usize, 5usize, 4usize), (64, 8, 16), (3, 2, 1), (33, 6, 9), (17, 5, 4)]
+            .iter()
+            .enumerate()
+    {
+        let seed = 900 + i as u64;
+        let x = rand_mat(n, d, seed);
+        let v = rand_mat(n, d, seed + 50);
+        let mut rng = Rng::new(seed + 100);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: false };
+
+        let mut fresh_arena = Arena::new();
+        let mut fresh_out = Mat::default();
+        kernel_features_into(kind, &x, &w, &mut fresh_out, &mut fresh_arena);
+        kernel_features_into(kind, &x, &w, &mut shared_out, &mut shared);
+        assert_eq!(shared_out.data, fresh_out.data, "features case {i}");
+
+        let phi = fresh_out.clone();
+        let c: Vec<f32> =
+            (0..2 * n - 1).map(|t| (0.02 * t as f32).exp()).collect();
+        let mut fresh_out = Mat::default();
+        kernel_attention_into(
+            &phi, &phi, &v, Some(&c), true, &mut fresh_out, &mut fresh_arena,
+        );
+        kernel_attention_into(
+            &phi, &phi, &v, Some(&c), true, &mut shared_out, &mut shared,
+        );
+        assert_eq!(shared_out.data, fresh_out.data, "attention case {i}");
+    }
+    assert!(shared.bytes() > 0);
+}
+
+fn attend_items_case(n: usize, d: usize, m: usize, seed: u64)
+                     -> (Vec<Mat>, Vec<Mat>, Vec<Mat>, Mat, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let count = 4;
+    let qs = (0..count).map(|i| rand_mat(n, d, seed + 10 + i)).collect();
+    let ks = (0..count).map(|i| rand_mat(n, d, seed + 20 + i)).collect();
+    let vs = (0..count).map(|i| rand_mat(n, d, seed + 30 + i)).collect();
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b = rng.normal_vec(2 * n - 1, 0.5);
+    (qs, ks, vs, w, b)
+}
+
+#[test]
+fn serving_entry_points_bitwise_agree() {
+    let kinds = [
+        "prf", "nprf", "prf_rpe_fft", "prf_rpe_direct", "nprf_rpe_fft",
+        "nprf_rpe_direct",
+    ];
+    struct Case;
+    impl Gen for Case {
+        type Value = (usize, usize, usize, usize, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let n = 1 + rng.below_usize(65);
+            let d = 1 + rng.below_usize(5);
+            let m = 1 + rng.below_usize(5);
+            let kind = rng.below_usize(6);
+            (n, d, m, kind, rng.next_u64())
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.0 > 1 {
+                vec![(1, v.1, v.2, v.3, v.4), (v.0 / 2, v.1, v.2, v.3, v.4)]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+    forall("serving-bitwise", 40, 23, &Case, |&(n, d, m, ki, seed)| {
+        let kind = Kind::parse(kinds[ki]).expect("kind");
+        let (qs, ks, vs, w, b) = attend_items_case(n, d, m, seed);
+        let items: Vec<AttendItem> = (0..qs.len())
+            .map(|i| AttendItem {
+                kind,
+                q: &qs[i],
+                k: &ks[i],
+                v: &vs[i],
+                features: Some(&w),
+                bias: Some(&b),
+                causal: true,
+            })
+            .collect();
+        let cache = PlanCache::default();
+        let want: Vec<Mat> = (0..qs.len())
+            .map(|i| {
+                attention::attend(
+                    kind, &qs[i], &ks[i], &vs[i], Some(&w), Some(&b), true,
+                )
+            })
+            .collect();
+        for workers in [1usize, 3] {
+            let got = attend_batch_with(&items, &cache, workers)
+                .map_err(|e| e.to_string())?;
+            for i in 0..items.len() {
+                if got[i].data != want[i].data {
+                    return Err(format!(
+                        "attend_batch_with(workers={workers}) item {i} != attend"
+                    ));
+                }
+            }
+        }
+        for nws in [1usize, 2] {
+            let mut outs: Vec<Mat> =
+                items.iter().map(|_| Mat::from_vec(1, 1, vec![-9.0])).collect();
+            let mut wss: Vec<Workspace> =
+                (0..nws).map(|_| Workspace::new()).collect();
+            attend_batch_into(&items, &mut outs, &cache, &mut wss)
+                .map_err(|e| e.to_string())?;
+            for i in 0..items.len() {
+                if outs[i].data != want[i].data {
+                    return Err(format!(
+                        "attend_batch_into(nws={nws}) item {i} != attend"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn streaming_prefill_matches_attend_rows() {
+    // The arena-threaded prefill path (cached and uncached) must stay
+    // within recurrence tolerance of `attend` — and the two prefill
+    // branches must stay bitwise equal to each other.
+    let (n, d, m) = (29, 4, 5);
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+    let mut rng = Rng::new(77);
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32() * 0.5).collect();
+    let q = rand_mat(n, d, 80);
+    let k = rand_mat(n, d, 81);
+    let v = rand_mat(n, d, 82);
+    let oracle =
+        attention::attend(kind, &q, &k, &v, Some(&w), Some(&b), true);
+    let spec = std::sync::Arc::new(
+        StreamSpec::new(kind, w, Some(&b), n).expect("spec"),
+    );
+    let mut plain = StreamingDecoder::new(spec.clone(), 1, d);
+    let pre = plain
+        .prefill(&[q.clone()], &[k.clone()], &[v.clone()])
+        .expect("prefill");
+    for i in 0..n {
+        for di in 0..d {
+            let diff = (pre[0].at(i, di) - oracle.at(i, di)).abs();
+            assert!(diff < 1e-4, "i={i} di={di} diff={diff}");
+        }
+    }
+    let cache = PlanCache::default();
+    let mut cached = StreamingDecoder::new(spec, 1, d);
+    let got = cached
+        .prefill_cached(&[q], &[k], &[v], &cache)
+        .expect("prefill_cached");
+    assert_eq!(got[0].data, pre[0].data, "cached prefill must be bitwise");
+}
+
+#[test]
+fn blocked_composition_matches_naive_composition() {
+    // Recompose the direct-path operator with the naive oracles only
+    // and hold the blocked end-to-end `attend` to 1e-4 of it: the
+    // blocked substitution must be invisible at the operator level.
+    let (n, d, m) = (33, 6, 8);
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: false };
+    let mut rng = Rng::new(55);
+    let w = draw_gaussian_features(m, d, &mut rng);
+    let b: Vec<f32> = (0..2 * n - 1).map(|_| rng.normal_f32() * 0.5).collect();
+    let q = rand_mat(n, d, 60);
+    let k = rand_mat(n, d, 61);
+    let v = rand_mat(n, d, 62);
+    let got = attention::attend(kind, &q, &k, &v, Some(&w), Some(&b), true);
+
+    let phi_naive = |x: &Mat| -> Mat {
+        let xn = x.l2_normalize_rows();
+        let proj = matmul_t_naive(&xn, &w);
+        let scale = 1.0 / (m as f32).sqrt();
+        Mat::from_fn(n, m, |i, j| {
+            let sq: f32 =
+                xn.row(i).iter().map(|t| t * t).sum::<f32>() * 0.5;
+            (proj.at(i, j) - sq).exp() * scale
+        })
+    };
+    let phi_q = phi_naive(&q);
+    let phi_k = phi_naive(&k);
+    let c = attention::rpe_correlations(&b);
+    let mut scores = matmul_t_naive(&phi_q, &phi_k);
+    for i in 0..n {
+        for j in 0..n {
+            *scores.at_mut(i, j) *= c[j + n - 1 - i];
+            if j > i {
+                *scores.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    for i in 0..n {
+        let row = scores.row_mut(i);
+        let sum: f32 = row.iter().sum::<f32>() + attention::EPS;
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    let want = matmul_naive(&scores, &v);
+    assert!(
+        got.max_abs_diff(&want) < 1e-4,
+        "blocked vs naive composition: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn kernel_features_wrapper_matches_into_via_thread_local() {
+    // The allocating wrapper rides the thread-local arena; it must be
+    // bitwise equal to an explicit-arena call.
+    let (n, d, m) = (19, 5, 6);
+    let mut rng = Rng::new(5);
+    let x = rand_mat(n, d, 6);
+    let w = draw_gaussian_features(m, d, &mut rng);
+    for kind in [
+        Kind::Kernel { norm: true, rpe: false, fft: false },
+        Kind::Kernel { norm: false, rpe: true, fft: true },
+    ] {
+        let via_wrapper = kernel_features(kind, &x, &w);
+        let mut arena = Arena::new();
+        let mut out = Mat::default();
+        kernel_features_into(kind, &x, &w, &mut out, &mut arena);
+        assert_eq!(out.data, via_wrapper.data);
+    }
+}
