@@ -11,6 +11,8 @@
 //! concurrent client sessions generate greedily token by token against
 //! per-session (S, z) caches — no PJRT artifacts needed. Reports
 //! throughput, latency percentiles, batching / session-cache stats.
+//! Either mode accepts `--metrics-json PATH` to dump the server's
+//! telemetry snapshot (schema `kafft.metrics`) on shutdown.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -19,11 +21,24 @@ use kafft::coordinator::server::{LmServer, ServerConfig};
 use kafft::rng::Rng;
 use kafft::runtime::Runtime;
 
+/// Pop `--metrics-json PATH` out of the raw arg list so the positional
+/// parsing below stays index-based.
+fn take_metrics_path(args: &mut Vec<String>) -> Option<String> {
+    let i = args.iter().position(|a| a == "--metrics-json")?;
+    args.remove(i);
+    if i < args.len() {
+        Some(args.remove(i))
+    } else {
+        None
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let metrics_path = take_metrics_path(&mut args);
     if let Some(i) = args.iter().position(|a| a == "--streaming") {
         args.remove(i);
-        return streaming_demo(&args);
+        return streaming_demo(&args, metrics_path);
     }
     let n_req: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
     let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -106,12 +121,19 @@ fn main() -> anyhow::Result<()> {
     );
     println!("PJRT exec total: {:.2}s ({:.0}% of wall)", stats.exec_secs,
              100.0 * stats.exec_secs / wall);
+    if let Some(path) = metrics_path {
+        stats.telemetry.write_json(&path)?;
+        println!("metrics snapshot -> {path}");
+    }
     Ok(())
 }
 
 /// Streaming-server demo: N client threads, one greedy session each,
 /// submitting one token at a time against server-side recurrent state.
-fn streaming_demo(args: &[String]) -> anyhow::Result<()> {
+fn streaming_demo(
+    args: &[String],
+    metrics_path: Option<String>,
+) -> anyhow::Result<()> {
     use kafft::coordinator::decode::argmax;
     use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
 
@@ -217,5 +239,9 @@ fn streaming_demo(args: &[String]) -> anyhow::Result<()> {
         stats.plan_cache.misses,
         stats.plan_cache.bytes >> 10
     );
+    if let Some(path) = metrics_path {
+        stats.telemetry.write_json(&path)?;
+        println!("metrics snapshot -> {path}");
+    }
     Ok(())
 }

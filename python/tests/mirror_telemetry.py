@@ -1,0 +1,172 @@
+"""Executable mirror of rust/src/telemetry/hist.rs (no toolchain in
+this container, so the bucket arithmetic is validated here).
+
+Mirrors the exact Rust operations — floor-log2 bucketing over 44
+buckets, saturating last bucket, nearest-rank quantile walk with the
+max-tightened upper edge — and checks the same properties
+tests/proptest_telemetry.rs pins in-process:
+
+  * bucket_of/bucket_bounds partition the u64 line exactly;
+  * the bucketed (lo, hi) quantile bracket contains the exact
+    nearest-rank quantile of the sorted samples, one bucket wide;
+  * merge-of-shards is indistinguishable from single-shard recording;
+  * p50 <= p95 <= p99 <= max always.
+
+Run: python3 python/tests/mirror_telemetry.py
+"""
+
+import math
+import random
+
+BUCKETS = 44
+U64_MAX = (1 << 64) - 1
+
+
+def bucket_of(v):
+    # Rust: (63 - v.leading_zeros()).min(BUCKETS - 1); v == 0 -> 0.
+    if v == 0:
+        return 0
+    return min(v.bit_length() - 1, BUCKETS - 1)
+
+
+def bucket_bounds(b):
+    assert 0 <= b < BUCKETS
+    if b == 0:
+        return (0, 1)
+    if b == BUCKETS - 1:
+        return (1 << b, U64_MAX)
+    return (1 << b, (1 << (b + 1)) - 1)
+
+
+def quantile_rank(q, count):
+    # ceil(q * count) clamped to [1, count] — Rust uses f64 ceil; for
+    # the counts exercised here the f64 product is exact.
+    return max(1, min(math.ceil(q * count), max(count, 1)))
+
+
+class LocalHist:
+    def __init__(self):
+        self.counts = [0] * BUCKETS
+        self.count = 0
+        self.sum = 0
+        self.max = 0
+
+    def record(self, v):
+        self.counts[bucket_of(v)] += 1
+        self.count += 1
+        self.sum = min(self.sum + v, U64_MAX)  # saturating_add
+        self.max = max(self.max, v)
+
+    def merge(self, other):
+        for b in range(BUCKETS):
+            self.counts[b] += other.counts[b]
+        self.count += other.count
+        self.sum = min(self.sum + other.sum, U64_MAX)
+        self.max = max(self.max, other.max)
+
+    def quantile_bounds(self, q):
+        if self.count == 0:
+            return (0, 0)
+        rank = quantile_rank(q, self.count)
+        seen = 0
+        for b, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank:
+                lo, hi = bucket_bounds(b)
+                return (lo, min(hi, max(self.max, lo)))
+        return (self.max, self.max)
+
+    def quantile(self, q):
+        return self.quantile_bounds(q)[1]
+
+
+def gen_samples(rng, max_len):
+    n = 1 + rng.randrange(max_len)
+    out = []
+    for _ in range(n):
+        r = rng.randrange(16)
+        if r == 0:
+            out.append(0)
+        elif r == 1:
+            out.append(U64_MAX - rng.randrange(1024))
+        else:
+            e = rng.randrange(44)
+            lo = 1 << e
+            out.append(lo + rng.randrange(lo))
+    return out
+
+
+def check_partition():
+    for b in range(BUCKETS):
+        lo, hi = bucket_bounds(b)
+        assert bucket_of(lo) == b or b == 0, b
+        assert bucket_of(hi) == b, b
+        if b + 1 < BUCKETS:
+            assert bucket_bounds(b + 1)[0] == hi + 1, b
+        else:
+            assert hi == U64_MAX
+    rng = random.Random(99)
+    for _ in range(100_000):
+        v = rng.randrange(1 << 64)
+        lo, hi = bucket_bounds(bucket_of(v))
+        assert lo <= v <= hi, v
+    print("bucket partition: exact over edges + 100k random u64  OK")
+
+
+def check_quantile_bounds(trials=2000):
+    rng = random.Random(0x7E1E)
+    worst_ratio = 0.0
+    for _ in range(trials):
+        samples = gen_samples(rng, 400)
+        h = LocalHist()
+        for s in samples:
+            h.record(s)
+        srt = sorted(samples)
+        for q in (0.50, 0.95, 0.99, 1.0):
+            exact = srt[quantile_rank(q, len(srt)) - 1]
+            lo, hi = h.quantile_bounds(q)
+            assert lo <= exact <= hi, (q, exact, lo, hi)
+            if lo > 0:
+                assert bucket_of(lo) == bucket_of(hi), (lo, hi)
+                # 2x resolution holds below the saturating last
+                # bucket; bucket 43 absorbs everything >= 2^43 ns
+                # (~2.4 h), where resolution is deliberately given up.
+                if bucket_of(lo) < BUCKETS - 1:
+                    assert hi < 2 * lo, (lo, hi)
+                    worst_ratio = max(worst_ratio, hi / lo)
+        p50, p95, p99 = (h.quantile(q) for q in (0.50, 0.95, 0.99))
+        assert p50 <= p95 <= p99 <= max(h.max, 1)
+    print(f"quantile bounding: {trials} multisets, non-saturating "
+          f"bracket ratio <= {worst_ratio:.3f} (< 2 enforced)  OK")
+
+
+def check_merge(trials=1000):
+    rng = random.Random(0x5EED)
+    for _ in range(trials):
+        samples = gen_samples(rng, 400)
+        ways = 1 + rng.randrange(7)
+        single = LocalHist()
+        shards = [LocalHist() for _ in range(ways)]
+        for v in samples:
+            single.record(v)
+            shards[rng.randrange(ways)].record(v)
+        merged = LocalHist()
+        for s in shards:
+            merged.merge(s)
+        assert merged.counts == single.counts
+        assert (merged.count, merged.sum, merged.max) == (
+            single.count, single.sum, single.max)
+        for q in (0.5, 0.95, 0.99):
+            assert merged.quantile_bounds(q) == single.quantile_bounds(q)
+    print(f"merge-of-shards == single shard: {trials} random splits  OK")
+
+
+def main():
+    check_partition()
+    check_quantile_bounds()
+    check_merge()
+    print("mirror_telemetry: all properties hold")
+
+
+if __name__ == "__main__":
+    main()

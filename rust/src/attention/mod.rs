@@ -406,22 +406,68 @@ pub fn nprf_rpe_fft_path_into(
     arena: &mut Arena,
     scratch: &mut crate::fft::Scratch,
 ) {
+    nprf_rpe_fft_impl(phi_q, phi_k, v, plan, out, arena, scratch, None)
+}
+
+/// [`nprf_rpe_fft_path_into`] with per-stage span timing recorded into
+/// a telemetry shard (kv aggregation -> `Gemm`, the batched Toeplitz
+/// product -> `ToeplitzApply`, readout -> `Readout`). Identical math
+/// and identical allocation behavior — spans are clock reads plus
+/// fixed-array increments.
+pub fn nprf_rpe_fft_path_traced(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    plan: &crate::toeplitz::ToeplitzPlan,
+    out: &mut Mat,
+    arena: &mut Arena,
+    scratch: &mut crate::fft::Scratch,
+    tel: &mut crate::telemetry::StageShard,
+) {
+    nprf_rpe_fft_impl(phi_q, phi_k, v, plan, out, arena, scratch, Some(tel))
+}
+
+#[allow(clippy::too_many_arguments)] // private fan-in of the two wrappers
+fn nprf_rpe_fft_impl(
+    phi_q: &Mat,
+    phi_k: &Mat,
+    v: &Mat,
+    plan: &crate::toeplitz::ToeplitzPlan,
+    out: &mut Mat,
+    arena: &mut Arena,
+    scratch: &mut crate::fft::Scratch,
+    mut tel: Option<&mut crate::telemetry::StageShard>,
+) {
+    use crate::telemetry::{Stage, StageTimer};
     let n = phi_k.rows;
     assert_eq!(plan.n(), n, "plan length {} != sequence length {n}", plan.n());
     let d = v.cols;
     let f = phi_k.cols * (d + 1);
+    let on = tel.is_some();
     // Take the f64 buffers out of the arena so later stages can borrow
     // the arena's remaining staging alongside them; take/put moves are
     // allocation-free (the `toeplitz::apply_batched_into` idiom).
     let mut agg = std::mem::take(&mut arena.agg);
+    let t = StageTimer::start_if(on);
     kv_aggregate_f64_into(phi_k, v, &mut agg);
+    if let Some(sh) = tel.as_deref_mut() {
+        t.stop(sh, Stage::Gemm);
+    }
     let mut dmat = std::mem::take(&mut arena.dmat);
     if dmat.len() != n * f {
         dmat.resize(n * f, 0.0);
     }
+    let t = StageTimer::start_if(on);
     plan.apply_batched_into(&agg, f, &mut dmat, scratch);
+    if let Some(sh) = tel.as_deref_mut() {
+        t.stop(sh, Stage::ToeplitzApply);
+    }
     let mut num = std::mem::take(&mut arena.num);
+    let t = StageTimer::start_if(on);
     readout_into(phi_q, &dmat, d, out, &mut num);
+    if let Some(sh) = tel.as_deref_mut() {
+        t.stop(sh, Stage::Readout);
+    }
     arena.agg = agg;
     arena.dmat = dmat;
     arena.num = num;

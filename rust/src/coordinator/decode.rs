@@ -17,10 +17,12 @@ use anyhow::{anyhow, bail, Result};
 use crate::attention::{attend, draw_gaussian_features, Kind};
 use crate::data::mt::{strip_special, BOS};
 use crate::data::MtBatch;
+use crate::engine::PlanCache;
 use crate::metrics;
 use crate::rng::Rng;
 use crate::runtime::{HostTensor, Runtime};
 use crate::streaming::{StreamSpec, StreamingDecoder};
+use crate::telemetry::{Stage, StageShard, StageTimer, Telemetry};
 use crate::tensor::{matmul_into, matmul_t_slices, Mat};
 
 /// Greedy decode a batch of sources with a seq2seq `.fwd` artifact.
@@ -253,6 +255,24 @@ pub fn argmax(row: &[f32]) -> usize {
 /// and by `kafft decode`).
 pub fn greedy_decode_cpu(lm: &CpuLm, prompt: &[i32], gen: usize,
                          streaming: bool) -> Result<Vec<i32>> {
+    greedy_decode_cpu_impl(lm, prompt, gen, streaming, None)
+}
+
+/// [`greedy_decode_cpu`] with telemetry: prefill wall time, per-token
+/// streaming-step spans, and token counters recorded into `tel` (the
+/// stage spans ride a local shard absorbed at the end — identical
+/// decode output). The streaming path draws its Toeplitz plan from a
+/// decode-local `PlanCache`, which is bitwise identical to the uncached
+/// prefill.
+pub fn greedy_decode_cpu_traced(lm: &CpuLm, prompt: &[i32], gen: usize,
+                                streaming: bool,
+                                tel: &Telemetry) -> Result<Vec<i32>> {
+    greedy_decode_cpu_impl(lm, prompt, gen, streaming, Some(tel))
+}
+
+fn greedy_decode_cpu_impl(lm: &CpuLm, prompt: &[i32], gen: usize,
+                          streaming: bool,
+                          tel: Option<&Telemetry>) -> Result<Vec<i32>> {
     if prompt.is_empty() {
         bail!("empty prompt");
     }
@@ -265,15 +285,33 @@ pub fn greedy_decode_cpu(lm: &CpuLm, prompt: &[i32], gen: usize,
     }
     let mut tokens = prompt.to_vec();
     if !streaming {
+        // The re-forward baseline runs the allocating oracle; only the
+        // token counter is telemetry-visible.
         for _ in 0..gen {
             let logits = lm.full_logits(&tokens);
             tokens.push(argmax(&logits) as i32);
+        }
+        if let Some(t) = tel {
+            t.add_tokens(gen as u64);
         }
         return Ok(tokens);
     }
     let mut dec = lm.session(lm.max_len)?;
     let (q, k, v) = lm.qkv(prompt);
-    let pre = dec.prefill(&[q], &[k], &[v])?;
+    let mut shard = StageShard::new();
+    let pre = match tel {
+        Some(t) => {
+            let cache = PlanCache::default();
+            let timer = StageTimer::start();
+            let pre = dec.prefill_traced(&[q], &[k], &[v], &cache, &mut shard)?;
+            if crate::telemetry::enabled() {
+                t.record_prefill_ns(timer.elapsed_ns());
+            }
+            t.add_prefill_tokens(prompt.len() as u64);
+            pre
+        }
+        None => dec.prefill(&[q], &[k], &[v])?,
+    };
     let mut logits = lm.logits(pre[0].row(prompt.len() - 1));
     // Per-token q/k/v/logit projections reuse one buffer set on the
     // blocked substrate: after the first step the loop's dense layer
@@ -284,8 +322,14 @@ pub fn greedy_decode_cpu(lm: &CpuLm, prompt: &[i32], gen: usize,
         let next = argmax(&logits) as i32;
         tokens.push(next);
         lm.qkv_into(&[next], &mut xb, &mut qb, &mut kb, &mut vb);
+        let span = StageTimer::start_if(tel.is_some());
         let y = dec.step(&qb, &kb, &vb)?;
+        span.stop(&mut shard, Stage::StreamStep);
         lm.logits_into(y.row(0), &mut logits);
+    }
+    if let Some(t) = tel {
+        t.add_tokens(gen as u64);
+        t.absorb(&mut shard);
     }
     // The last computed logits belong to the position after the final
     // emitted token; greedy decode only needed them if gen continued.
@@ -348,6 +392,27 @@ mod tests {
         let full = greedy_decode_cpu(&lm, &prompt, 12, false).expect("full");
         let fast = greedy_decode_cpu(&lm, &prompt, 12, true).expect("fast");
         assert_eq!(full, fast);
+    }
+
+    #[test]
+    fn traced_decode_matches_untraced_and_records() {
+        let _g = crate::telemetry::test_flag_guard();
+        crate::telemetry::set_enabled(true);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let lm = CpuLm::new(kind, 40, 8, 8, 48, 23).expect("lm");
+        let prompt: Vec<i32> = vec![7, 11, 13];
+        let want = greedy_decode_cpu(&lm, &prompt, 10, true).expect("plain");
+        let tel = Telemetry::new();
+        let got = greedy_decode_cpu_traced(&lm, &prompt, 10, true, &tel)
+            .expect("traced");
+        assert_eq!(got, want, "tracing must not change the decode");
+        let snap = tel.snapshot();
+        assert_eq!(snap.tokens, 10);
+        assert_eq!(snap.prefill_tokens, 3);
+        assert_eq!(snap.prefill.count, 1);
+        assert_eq!(tel.stage_summary(Stage::StreamStep).count, 10);
+        assert_eq!(tel.stage_summary(Stage::ToeplitzApply).count, 1);
+        assert_eq!(tel.stage_summary(Stage::PlanLookup).count, 1);
     }
 
     #[test]

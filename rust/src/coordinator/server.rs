@@ -28,7 +28,17 @@ use crate::coordinator::decode::CpuLm;
 use crate::engine::{AttendItem, CacheStats, Engine, EngineConfig, PlanCache};
 use crate::runtime::{HostTensor, Runtime};
 use crate::streaming::{Origin, SessionStore};
+use crate::telemetry::{
+    MetricsSnapshot, Stage, StageShard, StageTimer, Telemetry,
+};
 use crate::tensor::Mat;
+
+/// Clamp a measured latency away from zero: sub-nanosecond readings on
+/// coarse clocks must still register as real time spent, and downstream
+/// consumers treat `Duration::ZERO` as "never measured".
+fn nonzero(d: Duration) -> Duration {
+    d.max(Duration::from_nanos(1))
+}
 
 #[derive(Debug, Clone)]
 pub struct LmRequest {
@@ -61,6 +71,9 @@ pub struct ServerStats {
     pub padded_slots: usize,
     pub exec_secs: f64,
     pub batch_hist: Vec<(usize, usize)>, // (batch size, count)
+    /// Frozen telemetry at shutdown: queue-wait, batch-size, and
+    /// per-request latency histograms with p50/p95/p99.
+    pub telemetry: MetricsSnapshot,
 }
 
 pub struct ServerConfig {
@@ -156,6 +169,7 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
           vocab: usize, max_wait: Duration, max_batch: usize) -> ServerStats {
     let mut stats = ServerStats::default();
     let mut hist = std::collections::BTreeMap::<usize, usize>::new();
+    let tel = Telemetry::new();
     'outer: loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -182,6 +196,12 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
             .find(|(b, _)| *b >= group.len())
             .unwrap_or_else(|| sizes.last().unwrap())
             .clone();
+        // Queue wait ends when the group is sealed and execution is
+        // about to start.
+        for p in &group {
+            tel.record_queue_wait_ns(p.enqueued.elapsed().as_nanos() as u64);
+        }
+        tel.record_batch_size(group.len() as u64);
         let rows: Vec<&[i32]> =
             group.iter().map(|p| p.req.tokens.as_slice()).collect();
         let (tokens, padded) = build_batch_tokens(&rows, bsz, seq_len);
@@ -207,15 +227,19 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
             let base = (i * seq_len + pos) * vocab;
             let next = logits[base..base + vocab].to_vec();
             stats.requests += 1;
+            let latency = nonzero(p.enqueued.elapsed());
+            tel.record_batch_request_ns(latency.as_nanos() as u64);
+            tel.add_tokens(p.req.tokens.len() as u64);
             let _ = p.reply.send(LmResponse {
                 id: p.req.id,
                 next_logits: next,
-                latency: p.enqueued.elapsed(),
+                latency,
                 served_batch: bsz,
             });
         }
     }
     stats.batch_hist = hist.into_iter().collect();
+    stats.telemetry = tel.snapshot();
     stats
 }
 
@@ -320,6 +344,12 @@ pub struct StreamStats {
     /// Shared Toeplitz plan cache counters at shutdown: one cache per
     /// model, drawn on by both streaming prefills and batch requests.
     pub plan_cache: CacheStats,
+    /// Frozen telemetry at shutdown: per-stage attend-pipeline timing,
+    /// queue-wait / batch-size / request-latency histograms
+    /// (p50/p95/p99), tokens/sec, and the plan-cache + session-store
+    /// sections. Export with `telemetry.write_json(path)` /
+    /// `to_prometheus()`.
+    pub telemetry: MetricsSnapshot,
 }
 
 pub struct StreamingServerConfig {
@@ -451,29 +481,45 @@ impl StreamingServer {
 fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                  rx: Receiver<StreamJob>) -> StreamStats {
     let mut stats = StreamStats::default();
+    // The worker's telemetry shard: prefill/step stage spans land here
+    // lock-free and are absorbed into the engine registry per request.
+    let mut shard = StageShard::new();
+    let tel = engine.telemetry().clone();
     while let Ok(job) = rx.recv() {
         match job {
             StreamJob::Stream(p) => {
+                tel.record_queue_wait_ns(
+                    p.enqueued.elapsed().as_nanos() as u64,
+                );
                 let t0 = Instant::now();
-                let out = serve_stream_request(&lm, &mut store, &p.req);
+                let out = serve_stream_request(
+                    &lm, &mut store, &p.req, p.enqueued, &tel, &mut shard,
+                );
                 stats.exec_secs += t0.elapsed().as_secs_f64();
                 stats.requests += 1;
                 match &out {
                     Ok(resp) => {
                         stats.tokens += p.req.tokens.len();
+                        tel.add_tokens(p.req.tokens.len() as u64);
                         if resp.origin == Origin::Created {
                             stats.prefill_tokens += p.req.tokens.len();
+                            tel.add_prefill_tokens(p.req.tokens.len() as u64);
                         }
                     }
                     Err(e) => crate::error!("stream request failed: {e}"),
                 }
                 store.enforce();
-                let _ = p.reply.send(out.map(|mut r| {
-                    r.latency = p.enqueued.elapsed();
-                    r
-                }).map_err(|e| format!("{e:#}")));
+                tel.absorb(&mut shard);
+                tel.record_stream_request_ns(
+                    nonzero(p.enqueued.elapsed()).as_nanos() as u64,
+                );
+                let _ = p.reply.send(out.map_err(|e| format!("{e:#}")));
             }
             StreamJob::Batch(p) => {
+                tel.record_queue_wait_ns(
+                    p.enqueued.elapsed().as_nanos() as u64,
+                );
+                tel.record_batch_size(p.prompts.len() as u64);
                 let t0 = Instant::now();
                 let out = serve_prompt_batch(&lm, &engine, &p.prompts);
                 stats.exec_secs += t0.elapsed().as_secs_f64();
@@ -482,10 +528,12 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                     Ok(_) => stats.batch_prompts += p.prompts.len(),
                     Err(e) => crate::error!("batch request failed: {e}"),
                 }
+                let latency = nonzero(p.enqueued.elapsed());
+                tel.record_batch_request_ns(latency.as_nanos() as u64);
                 let _ = p.reply.send(
                     out.map(|next_logits| BatchResponse {
                         next_logits,
-                        latency: p.enqueued.elapsed(),
+                        latency,
                     })
                     .map_err(|e| format!("{e:#}")),
                 );
@@ -493,11 +541,14 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
         }
     }
     // Session-cache counters come straight from the store so the two
-    // accountings cannot drift; same for the shared plan cache.
+    // accountings cannot drift; same for the shared plan cache and the
+    // telemetry snapshot (its sections are drawn from the same owners).
     stats.sessions_created = store.stats.created;
     stats.restores = store.stats.restores;
     stats.spills = store.stats.spills;
     stats.plan_cache = store.plan_cache().stats();
+    stats.telemetry =
+        engine.metrics_snapshot().with_session_store(store.stats.clone());
     stats
 }
 
@@ -547,7 +598,9 @@ fn serve_prompt_batch(lm: &CpuLm, engine: &Engine,
 }
 
 fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
-                        req: &StreamRequest) -> Result<StreamResponse> {
+                        req: &StreamRequest, enqueued: Instant,
+                        tel: &Telemetry,
+                        shard: &mut StageShard) -> Result<StreamResponse> {
     if req.tokens.is_empty() {
         bail!("streaming request with no tokens");
     }
@@ -593,22 +646,35 @@ fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
             let last = if pos == 0 {
                 // Fresh session: absorb the whole prompt through the
                 // FFT prefill (plan drawn from the shared per-model
-                // cache) instead of token-by-token stepping.
+                // cache) instead of token-by-token stepping. Stage
+                // spans land in the worker shard; the whole-prefill
+                // wall time goes to its own histogram.
                 let (q, k, v) = lm.qkv(&req.tokens);
-                let pre = dec.prefill_cached(&[q], &[k], &[v], &plan_cache)?;
+                let t = StageTimer::start();
+                let pre =
+                    dec.prefill_traced(&[q], &[k], &[v], &plan_cache, shard)?;
+                if crate::telemetry::enabled() {
+                    tel.record_prefill_ns(t.elapsed_ns());
+                }
                 pre[0].row(req.tokens.len() - 1).to_vec()
             } else {
                 let mut last = Vec::new();
                 for &t in &req.tokens {
                     let (q, k, v) = lm.qkv(&[t]);
+                    let span = StageTimer::start();
                     last = dec.step(&q, &k, &v)?.row(0).to_vec();
+                    span.stop(shard, Stage::StreamStep);
                 }
                 last
             };
             Ok(StreamResponse {
                 session: req.session,
                 next_logits: lm.logits(&last),
-                latency: Duration::ZERO, // filled in by the worker
+                // Populated here, from the enqueue instant the job
+                // carried in — never a placeholder for the worker to
+                // overwrite (and clamped non-zero, so consumers can
+                // rely on "zero means unmeasured").
+                latency: nonzero(enqueued.elapsed()),
                 origin,
                 positions: dec.positions(),
             })
@@ -806,6 +872,62 @@ mod tests {
         let pc = &stats.plan_cache;
         assert_eq!(pc.hits + pc.misses, 4, "{pc:?}");
         assert!((1..=2).contains(&pc.misses), "{pc:?}");
+    }
+
+    #[test]
+    fn responses_carry_nonzero_latency_and_telemetry_snapshot() {
+        let _g = crate::telemetry::test_flag_guard();
+        crate::telemetry::set_enabled(true);
+        let cfg = StreamingServerConfig {
+            vocab: 24,
+            d_model: 6,
+            features: 6,
+            max_len: 24,
+            window: 24,
+            seed: 21,
+            workers: 1,
+            ..StreamingServerConfig::default()
+        };
+        let server = StreamingServer::start(cfg).unwrap();
+        let r = server.submit(1, vec![1, 2, 3, 4]).unwrap().recv().unwrap()
+            .expect("prefill");
+        assert!(r.latency > Duration::ZERO, "stream latency populated");
+        let r = server.submit_at(1, vec![5], 4).unwrap().recv().unwrap()
+            .expect("step");
+        assert!(r.latency > Duration::ZERO, "step latency populated");
+        // Regression: batch responses used to be constructed with a
+        // `Duration::ZERO` placeholder — they must carry real time.
+        let b = server
+            .submit_prompt_batch(vec![vec![1, 2, 3], vec![4, 5, 6]])
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("batch");
+        assert!(b.latency > Duration::ZERO, "batch latency populated");
+        let stats = server.shutdown();
+        let snap = &stats.telemetry;
+        // Every pipeline stage saw work: the prefill + batch cover the
+        // five batch stages, the continuation covers stream_step.
+        for (name, s) in &snap.stages {
+            assert!(s.count > 0, "stage {name} never recorded");
+            assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{name}");
+        }
+        assert_eq!(snap.queue_wait.count, 3, "one per job");
+        assert_eq!(snap.request_stream.count, 2);
+        assert_eq!(snap.request_batch.count, 1);
+        assert_eq!(snap.batch_size.count, 1);
+        assert_eq!(snap.tokens, 5, "prompt + one step");
+        assert_eq!(snap.prefill_tokens, 4);
+        assert!(snap.tokens_per_sec > 0.0);
+        // The sections come from the owning layers.
+        let pc = snap.plan_cache.as_ref().expect("plan cache section");
+        assert!(pc.hits + pc.misses > 0);
+        let ss = snap.session_store.as_ref().expect("session store section");
+        assert_eq!(ss.created, 1);
+        // And the export surfaces round-trip through the JSON layer.
+        let j = snap.to_json();
+        assert_eq!(j.req_str("schema").unwrap(), crate::telemetry::SCHEMA);
+        assert!(crate::util::json::Json::parse(&snap.to_json_string()).is_ok());
     }
 
     #[test]

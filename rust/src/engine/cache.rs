@@ -51,8 +51,9 @@ pub struct PlanKey {
     pub fingerprint: u64,
 }
 
-/// Counters + occupancy snapshot (see `PlanCache::stats`).
-#[derive(Debug, Default, Clone)]
+/// Counters + occupancy snapshot (see `PlanCache::stats`). Exported
+/// verbatim as the `plan_cache` section of telemetry snapshots.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,

@@ -38,10 +38,13 @@ use std::sync::mpsc::channel;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_attention_into, kernel_features_into, nprf_rpe_fft_path_into,
+    kernel_attention_into, kernel_features_into, nprf_rpe_fft_path_traced,
     rpe_correlations_into, Kind,
 };
 use crate::fft::Scratch;
+use crate::telemetry::{
+    MetricsSnapshot, Stage, StageShard, StageTimer, Telemetry,
+};
 use crate::tensor::{Arena, Mat};
 
 pub use cache::{coeff_fingerprint, CacheStats, PlanCache, PlanKey};
@@ -62,6 +65,12 @@ pub struct Workspace {
     pub dense: Arena,
     /// FFT workspace for the Toeplitz fast path.
     pub fft: Scratch,
+    /// Per-worker telemetry shard: stage spans recorded lock-free while
+    /// this workspace serves items, absorbed into a shared
+    /// [`Telemetry`] registry at fan-out boundaries. Plain fixed-size
+    /// counters — owning a shard costs no heap and recording into it
+    /// allocates nothing.
+    pub tel: StageShard,
 }
 
 impl Workspace {
@@ -114,10 +123,12 @@ impl Default for EngineConfig {
 }
 
 /// Shared per-model attention engine: one plan cache + one worker
-/// count, used by both the batch and streaming serving paths.
+/// count + one telemetry registry, used by both the batch and
+/// streaming serving paths.
 pub struct Engine {
     cache: std::sync::Arc<PlanCache>,
     workers: usize,
+    telemetry: std::sync::Arc<Telemetry>,
 }
 
 impl Engine {
@@ -125,6 +136,7 @@ impl Engine {
         Engine {
             cache: std::sync::Arc::new(PlanCache::new(cfg.plan_cache_bytes)),
             workers: resolve_workers(cfg.workers),
+            telemetry: std::sync::Arc::new(Telemetry::new()),
         }
     }
 
@@ -136,17 +148,36 @@ impl Engine {
         self.workers
     }
 
+    /// The engine's merged telemetry registry. Stage spans from every
+    /// batch run through this engine land here.
+    pub fn telemetry(&self) -> &std::sync::Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// Frozen metrics view with the plan-cache section attached; the
+    /// serving layer adds its session-store section on top.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.telemetry.snapshot().with_plan_cache(self.cache.stats())
+    }
+
     /// Run a [batch × heads] attention workload; outputs line up with
     /// `items` by index.
     pub fn attend_batch(&self, items: &[AttendItem]) -> Result<Vec<Mat>> {
-        attend_batch_with(items, &self.cache, self.workers)
+        attend_batch_traced(items, &self.cache, self.workers,
+                            Some(&self.telemetry))
     }
 
     /// `attend_batch` into caller-owned outputs and workspaces — the
-    /// allocation-free serving form (see [`attend_batch_into`]).
+    /// allocation-free serving form (see [`attend_batch_into`]). Worker
+    /// shards are absorbed into the engine registry after the run
+    /// (fixed-size atomic adds — still allocation-free).
     pub fn attend_batch_into(&self, items: &[AttendItem], outs: &mut [Mat],
                              workspaces: &mut [Workspace]) -> Result<()> {
-        attend_batch_into(items, outs, &self.cache, workspaces)
+        let r = attend_batch_into(items, outs, &self.cache, workspaces);
+        for ws in workspaces.iter_mut() {
+            self.telemetry.absorb(&mut ws.tel);
+        }
+        r
     }
 }
 
@@ -168,16 +199,32 @@ pub fn resolve_workers(requested: usize) -> usize {
 /// (each item's computation is self-contained and deterministic).
 pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
                          workers: usize) -> Result<Vec<Mat>> {
+    attend_batch_traced(items, cache, workers, None)
+}
+
+/// [`attend_batch_with`] with stage telemetry: each worker's shard is
+/// absorbed into `tel` before the worker exits (one batch of relaxed
+/// atomic adds per worker per call — never per item, never per span).
+/// With `tel == None` the spans still cost their clock reads (the
+/// global `telemetry::enabled` flag gates those) but land in a
+/// function-local shard that is simply dropped.
+pub fn attend_batch_traced(items: &[AttendItem], cache: &PlanCache,
+                           workers: usize,
+                           tel: Option<&Telemetry>) -> Result<Vec<Mat>> {
     let workers = workers.max(1).min(items.len().max(1));
     if workers == 1 {
         // One workspace for the whole batch: after the largest item
         // has sized it, the remaining items run allocation-free in
         // both the dense and FFT layers.
         let mut ws = Workspace::new();
-        return items
+        let out = items
             .iter()
             .map(|it| attend_one(it, cache, &mut ws))
             .collect();
+        if let Some(t) = tel {
+            t.absorb(&mut ws.tel);
+        }
+        return out;
     }
     let next = AtomicUsize::new(0);
     let (tx, rx) = channel::<(usize, Result<Mat>)>();
@@ -202,6 +249,9 @@ pub fn attend_batch_with(items: &[AttendItem], cache: &PlanCache,
                     if tx.send((i, out)).is_err() {
                         break;
                     }
+                }
+                if let Some(t) = tel {
+                    t.absorb(&mut ws.tel);
                 }
             });
         }
@@ -297,7 +347,8 @@ fn attend_one(it: &AttendItem, cache: &PlanCache,
 /// readout, FFT workspace) comes from the worker's reusable
 /// workspace. All substitutions are bitwise equivalent to the
 /// uncached path (tests/proptest_engine.rs); a warmed kernel-kind
-/// item allocates nothing.
+/// item allocates nothing — stage spans record into the workspace's
+/// own shard, which is fixed-size plain counters.
 fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
                    out: &mut Mat) -> Result<()> {
     match it.kind {
@@ -306,7 +357,8 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
                 bail!("softmax rpe item needs a bias vector");
             }
             // Reference path: softmax kinds are served for coverage,
-            // not speed, and keep the allocating oracle code.
+            // not speed, and keep the allocating oracle code. Untimed:
+            // stage spans cover the production kernel pipeline.
             *out = crate::attention::attend(
                 it.kind, it.q, it.k, it.v, None, it.bias, it.causal,
             );
@@ -317,13 +369,17 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
                 Some(w) => w,
                 None => bail!("kernel item needs feature weights"),
             };
+            let t = StageTimer::start();
             kernel_features_into(it.kind, it.q, w, &mut ws.phi_q, &mut ws.dense);
             kernel_features_into(it.kind, it.k, w, &mut ws.phi_k, &mut ws.dense);
+            t.stop(&mut ws.tel, Stage::FeatureMap);
             if !rpe {
+                let t = StageTimer::start();
                 kernel_attention_into(
                     &ws.phi_q, &ws.phi_k, it.v, None, it.causal, out,
                     &mut ws.dense,
                 );
+                t.stop(&mut ws.tel, Stage::Gemm);
                 return Ok(());
             }
             let b = match it.bias {
@@ -345,18 +401,22 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
                 c64.clear();
                 c64.reserve(coeffs.len());
                 c64.extend(coeffs.iter().map(|&x| x as f64));
+                let t = StageTimer::start();
                 let plan = cache.get(&c64, n, it.causal);
+                t.stop(&mut ws.tel, Stage::PlanLookup);
                 ws.dense.coeffs = coeffs;
                 ws.dense.coeffs64 = c64;
-                nprf_rpe_fft_path_into(
+                nprf_rpe_fft_path_traced(
                     &ws.phi_q, &ws.phi_k, it.v, &plan, out, &mut ws.dense,
-                    &mut ws.fft,
+                    &mut ws.fft, &mut ws.tel,
                 );
             } else {
+                let t = StageTimer::start();
                 kernel_attention_into(
                     &ws.phi_q, &ws.phi_k, it.v, Some(&coeffs), it.causal, out,
                     &mut ws.dense,
                 );
+                t.stop(&mut ws.tel, Stage::Gemm);
                 ws.dense.coeffs = coeffs;
             }
             Ok(())
@@ -523,5 +583,50 @@ mod tests {
     fn resolve_workers_defaults_to_cores() {
         assert_eq!(resolve_workers(3), 3);
         assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn engine_telemetry_covers_all_batch_stages() {
+        let _g = crate::telemetry::test_flag_guard();
+        crate::telemetry::set_enabled(true);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let (n, d, m) = (17, 4, 3);
+        let mut rng = Rng::new(11);
+        let w = draw_gaussian_features(m, d, &mut rng);
+        let b = rng.normal_vec(2 * n - 1, 0.5);
+        let q = rand_mat(n, d, 1);
+        let k = rand_mat(n, d, 2);
+        let v = rand_mat(n, d, 3);
+        let items: Vec<AttendItem> = (0..4)
+            .map(|_| AttendItem {
+                kind,
+                q: &q,
+                k: &k,
+                v: &v,
+                features: Some(&w),
+                bias: Some(&b),
+                causal: true,
+            })
+            .collect();
+        let engine = Engine::new(EngineConfig::default());
+        engine.attend_batch(&items).expect("batch");
+        // The channel fan-out absorbed every worker shard: all five
+        // batch-path stages saw all four items.
+        for s in [Stage::PlanLookup, Stage::FeatureMap, Stage::ToeplitzApply,
+                  Stage::Gemm, Stage::Readout] {
+            let sum = engine.telemetry().stage_summary(s);
+            assert_eq!(sum.count, 4, "{}", s.name());
+            assert!(sum.p50 <= sum.p95 && sum.p95 <= sum.p99);
+        }
+        // The into-path absorbs caller workspaces too.
+        let mut outs: Vec<Mat> = (0..4).map(|_| Mat::default()).collect();
+        let mut wss = vec![Workspace::new(), Workspace::new()];
+        engine.attend_batch_into(&items, &mut outs, &mut wss).expect("into");
+        assert_eq!(wss[0].tel.spans(), 0, "shards reset after absorb");
+        assert_eq!(engine.telemetry().stage_summary(Stage::Gemm).count, 8);
+        // Snapshot carries the plan-cache section.
+        let snap = engine.metrics_snapshot();
+        let cache = snap.plan_cache.expect("plan cache section");
+        assert_eq!(cache.hits + cache.misses, 8);
     }
 }

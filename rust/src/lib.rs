@@ -47,7 +47,20 @@
 //!     exactly one, so a warmed steady-state batch allocates nothing
 //!     in either substrate (`benches/dense_substrate.rs` gates both
 //!     the >= 2x blocked-vs-naive win and the zero-allocation
-//!     property; `tests/proptest_dense.rs` is the conformance net).
+//!     property; `tests/proptest_dense.rs` is the conformance net);
+//!   * `telemetry` is the observability layer over all of the serving
+//!     paths: log2-bucket latency histograms (`telemetry::hist`) with
+//!     per-worker `StageShard`s embedded in `engine::Workspace` (plain
+//!     counters on the hot path, relaxed-atomic absorption at fan-out
+//!     boundaries — zero locks, zero steady-state allocation), span
+//!     timers over the six attend-pipeline stages (plan-cache lookup,
+//!     feature maps, Toeplitz/rfft apply, GEMM, readout, streaming
+//!     step), and versioned JSON/Prometheus snapshot export
+//!     (`telemetry::snapshot`, `--metrics-json`/`--metrics-prom` on
+//!     `serve`/`decode`) that folds in `engine::CacheStats` and
+//!     `streaming::session::StoreStats`. `metrics` (evaluation
+//!     quality: BLEU, perplexity, MCC) is a different axis and stays
+//!     separate.
 
 pub mod attention;
 pub mod config;
@@ -59,6 +72,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod streaming;
+pub mod telemetry;
 pub mod tensor;
 pub mod toeplitz;
 pub mod util;

@@ -11,7 +11,9 @@
 //!                                     --streaming, O(1)/token stepping
 //!                                     cross-validated vs re-forward
 //!
-//! Global flags: --artifacts DIR, --verbose / --quiet.
+//! Global flags: --artifacts DIR, --verbose / --quiet; `serve` and
+//! `decode` also accept --metrics-json PATH / --metrics-prom PATH to
+//! dump the versioned telemetry snapshot on exit.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -48,6 +50,21 @@ fn runtime(args: &Args) -> Result<Runtime> {
     Runtime::new(dir)
 }
 
+/// Export a telemetry snapshot per the `--metrics-json PATH` /
+/// `--metrics-prom PATH` flags (shared by `serve` and `decode`).
+fn write_metrics(args: &Args,
+                 snap: &kafft::telemetry::MetricsSnapshot) -> Result<()> {
+    if let Some(path) = args.get("metrics-json") {
+        snap.write_json(path)?;
+        info!("metrics snapshot (json) -> {path}");
+    }
+    if let Some(path) = args.get("metrics-prom") {
+        snap.write_prometheus(path)?;
+        info!("metrics snapshot (prometheus) -> {path}");
+    }
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("smoke") => smoke(args),
@@ -80,7 +97,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  \u{20}                             O(1)/token recurrence and cross-\n\
                  \u{20}                             validates vs re-forward\n\
                  \n\
-                 global: --artifacts DIR --verbose --quiet"
+                 global: --artifacts DIR --verbose --quiet\n\
+                 \u{20}       --metrics-json PATH --metrics-prom PATH\n\
+                 \u{20}       (serve/decode: dump the telemetry snapshot)"
             );
             Ok(())
         }
@@ -257,6 +276,7 @@ fn serve(args: &Args) -> Result<()> {
         "batches={} padded_slots={} batch_hist={:?} exec={:.2}s",
         stats.batches, stats.padded_slots, stats.batch_hist, stats.exec_secs
     );
+    write_metrics(args, &stats.telemetry)?;
     Ok(())
 }
 
@@ -361,6 +381,16 @@ fn streaming_serve(args: &Args) -> Result<()> {
         stats.plan_cache.bytes >> 10,
         stats.batch_requests
     );
+    let tel = &stats.telemetry;
+    println!(
+        "stage p95 (us): {}",
+        tel.stages
+            .iter()
+            .map(|(name, h)| format!("{name}={:.0}", h.p95 as f64 / 1e3))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    write_metrics(args, tel)?;
     Ok(())
 }
 
@@ -368,7 +398,9 @@ fn streaming_serve(args: &Args) -> Result<()> {
 /// re-forwards per token (the paper's decode); --streaming steps the
 /// recurrence and cross-validates against the re-forward tokens.
 fn decode(args: &Args) -> Result<()> {
-    use kafft::coordinator::decode::{greedy_decode_cpu, CpuLm};
+    use kafft::coordinator::decode::{
+        greedy_decode_cpu, greedy_decode_cpu_traced, CpuLm,
+    };
 
     let kind_s = args.get_or("kind", "nprf_rpe_fft");
     let kind = kafft::attention::Kind::parse(&kind_s)
@@ -385,8 +417,9 @@ fn decode(args: &Args) -> Result<()> {
         (0..prompt_len).map(|_| rng.below_usize(vocab) as i32).collect();
 
     let streaming = args.has_flag("streaming");
+    let tel = kafft::telemetry::Telemetry::new();
     let t0 = std::time::Instant::now();
-    let tokens = greedy_decode_cpu(&lm, &prompt, gen, streaming)?;
+    let tokens = greedy_decode_cpu_traced(&lm, &prompt, gen, streaming, &tel)?;
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "{} decode: {gen} tokens in {secs:.3}s ({:.1} tok/s) [kind={kind_s}, \
@@ -410,5 +443,6 @@ fn decode(args: &Args) -> Result<()> {
         }
     }
     println!("tokens: {:?}...", &tokens[..tokens.len().min(24)]);
+    write_metrics(args, &tel.snapshot())?;
     Ok(())
 }

@@ -14,9 +14,10 @@ use anyhow::{bail, Result};
 
 use crate::attention::{
     kernel_features, kernel_features_into, nprf_rpe_fft_path,
-    nprf_rpe_fft_path_into, rpe_correlations, Kind,
+    nprf_rpe_fft_path_into, nprf_rpe_fft_path_traced, rpe_correlations, Kind,
 };
 use crate::engine::{PlanCache, Workspace};
+use crate::telemetry::{Stage, StageShard, StageTimer};
 use crate::tensor::Mat;
 
 use super::state::DecoderState;
@@ -138,7 +139,7 @@ impl StreamingDecoder {
     /// prompt instead of n recurrent steps — while the recurrent state
     /// is loaded row by row for the steps that follow.
     pub fn prefill(&mut self, q: &[Mat], k: &[Mat], v: &[Mat]) -> Result<Vec<Mat>> {
-        self.prefill_impl(q, k, v, None)
+        self.prefill_impl(q, k, v, None, None)
     }
 
     /// `prefill`, drawing the Toeplitz plan from a shared per-model
@@ -147,11 +148,22 @@ impl StreamingDecoder {
     /// cached and uncached paths are bitwise identical.
     pub fn prefill_cached(&mut self, q: &[Mat], k: &[Mat], v: &[Mat],
                           cache: &PlanCache) -> Result<Vec<Mat>> {
-        self.prefill_impl(q, k, v, Some(cache))
+        self.prefill_impl(q, k, v, Some(cache), None)
+    }
+
+    /// [`Self::prefill_cached`] with per-stage span timing recorded
+    /// into a telemetry shard (plan lookup, per-head feature maps, and
+    /// the traced Toeplitz/GEMM/readout pipeline). Identical math to
+    /// the untraced forms.
+    pub fn prefill_traced(&mut self, q: &[Mat], k: &[Mat], v: &[Mat],
+                          cache: &PlanCache,
+                          tel: &mut StageShard) -> Result<Vec<Mat>> {
+        self.prefill_impl(q, k, v, Some(cache), Some(tel))
     }
 
     fn prefill_impl(&mut self, q: &[Mat], k: &[Mat], v: &[Mat],
-                    cache: Option<&PlanCache>) -> Result<Vec<Mat>> {
+                    cache: Option<&PlanCache>,
+                    mut tel: Option<&mut StageShard>) -> Result<Vec<Mat>> {
         if self.pos != 0 {
             bail!("prefill on a non-fresh session (pos={})", self.pos);
         }
@@ -169,9 +181,15 @@ impl StreamingDecoder {
         // dense+FFT workspace: after head 0 sizes it, the remaining
         // heads' feature maps, kv aggregates, and rfft batches all run
         // allocation-free (workspace contents never affect outputs).
+        let on = tel.is_some();
         let plan = cache.map(|pc| {
             let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
-            pc.get(&c64, n, true)
+            let t = StageTimer::start_if(on);
+            let p = pc.get(&c64, n, true);
+            if let Some(sh) = tel.as_deref_mut() {
+                t.stop(sh, Stage::PlanLookup);
+            }
+            p
         });
         let mut ws = Workspace::new();
         let c_tail = self.spec.c_tail();
@@ -184,6 +202,7 @@ impl StreamingDecoder {
                 bail!("prefill head {h}: value dim {} != {}", v[h].cols,
                       self.state.value_dim());
             }
+            let t = StageTimer::start_if(on);
             kernel_features_into(
                 self.spec.kind, &q[h], &self.spec.features, &mut ws.phi_q,
                 &mut ws.dense,
@@ -192,16 +211,25 @@ impl StreamingDecoder {
                 self.spec.kind, &k[h], &self.spec.features, &mut ws.phi_k,
                 &mut ws.dense,
             );
+            if let Some(sh) = tel.as_deref_mut() {
+                t.stop(sh, Stage::FeatureMap);
+            }
             // The effective coefficients already encode the window +
             // tail, so the FFT prefill and the recurrent steps realize
             // the same operator.
             outs.push(match &plan {
                 Some(p) => {
                     let mut out = Mat::default();
-                    nprf_rpe_fft_path_into(
-                        &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
-                        &mut ws.dense, &mut ws.fft,
-                    );
+                    match tel.as_deref_mut() {
+                        Some(sh) => nprf_rpe_fft_path_traced(
+                            &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
+                            &mut ws.dense, &mut ws.fft, sh,
+                        ),
+                        None => nprf_rpe_fft_path_into(
+                            &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
+                            &mut ws.dense, &mut ws.fft,
+                        ),
+                    }
                     out
                 }
                 None => nprf_rpe_fft_path(&ws.phi_q, &ws.phi_k, &v[h], &c, true),
@@ -448,6 +476,48 @@ mod tests {
             .prefill_cached(&[q], &[k], &[v], &cache)
             .expect("prefill_cached 2");
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn prefill_traced_bitwise_matches_and_records_stages() {
+        let _g = crate::telemetry::test_flag_guard();
+        crate::telemetry::set_enabled(true);
+        let (n, d, m) = (21, 4, 5);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let spec = spec_for(kind, n, d, m, n, 37);
+        let q = rand_mat(n, d, 80);
+        let k = rand_mat(n, d, 81);
+        let v = rand_mat(n, d, 82);
+        let cache = PlanCache::default();
+        let mut plain = StreamingDecoder::new(spec.clone(), 2, d);
+        let want = plain
+            .prefill_cached(
+                &[q.clone(), q.clone()],
+                &[k.clone(), k.clone()],
+                &[v.clone(), v.clone()],
+                &cache,
+            )
+            .expect("prefill_cached");
+        let mut shard = StageShard::new();
+        let mut traced = StreamingDecoder::new(spec, 2, d);
+        let got = traced
+            .prefill_traced(
+                &[q.clone(), q.clone()],
+                &[k.clone(), k.clone()],
+                &[v.clone(), v.clone()],
+                &cache,
+                &mut shard,
+            )
+            .expect("prefill_traced");
+        assert_eq!(got[0].data, want[0].data);
+        assert_eq!(got[1].data, want[1].data);
+        // One plan lookup per prefill; the per-head stages fire twice.
+        assert_eq!(shard.stage(Stage::PlanLookup).count, 1);
+        for s in [Stage::FeatureMap, Stage::ToeplitzApply, Stage::Gemm,
+                  Stage::Readout] {
+            assert_eq!(shard.stage(s).count, 2, "{}", s.name());
+        }
+        assert_eq!(shard.stage(Stage::StreamStep).count, 0);
     }
 
     #[test]

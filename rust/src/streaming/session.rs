@@ -18,7 +18,9 @@ use crate::engine::PlanCache;
 
 use super::engine::{StreamSpec, StreamingDecoder};
 
-#[derive(Debug, Default, Clone)]
+/// Exported verbatim as the `session_store` section of telemetry
+/// snapshots.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct StoreStats {
     /// get_or_create found the session live.
     pub hits: usize,

@@ -1,0 +1,393 @@
+//! Fixed-bucket log2 latency histograms.
+//!
+//! Bucket `b` holds values `v` with `2^b <= v < 2^(b+1)` (value 0 lands
+//! in bucket 0), so [`BUCKETS`] = 44 buckets cover one nanosecond up to
+//! ~4.8 hours with a fixed 2x resolution — enough for every span this
+//! crate times, with no configuration and no allocation, ever.
+//!
+//! Two layouts share the bucketing:
+//!
+//!   * [`LocalHist`] — plain `u64` counters, one per worker shard. No
+//!     atomics, no locks, no heap: recording is a branch-free index +
+//!     three adds, safe for the attend hot path.
+//!   * [`Histogram`] — `AtomicU64` counters, the merge target shards
+//!     are absorbed into on snapshot. Absorption is relaxed
+//!     `fetch_add`s, so concurrent workers never contend on a lock.
+//!
+//! Quantiles come out of the merged buckets by exact rank walk
+//! ([`quantile_rank`]): the reported p50/p95/p99 is the *upper edge* of
+//! the bucket holding the rank-`ceil(q*count)` sample, so the true
+//! sorted-sample quantile is bounded within one power of two
+//! (`tests/proptest_telemetry.rs` pins the bound property down).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets: values up to 2^44 ns (~4.8 h) keep exact
+/// 2x resolution; anything larger saturates into the last bucket.
+pub const BUCKETS: usize = 44;
+
+/// Bucket index for a value: floor(log2(v)), clamped to the table.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (63 - v.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive (lo, hi) value bounds of bucket `b`. Bucket 0 is [0, 1]
+/// because 0 and 1 share it; the last bucket's hi saturates at u64::MAX.
+#[inline]
+pub fn bucket_bounds(b: usize) -> (u64, u64) {
+    debug_assert!(b < BUCKETS);
+    if b == 0 {
+        (0, 1)
+    } else if b == BUCKETS - 1 {
+        (1 << b, u64::MAX)
+    } else {
+        (1 << b, (1 << (b + 1)) - 1)
+    }
+}
+
+/// The 1-based rank a quantile resolves to over `count` samples:
+/// `ceil(q * count)`, clamped to [1, count]. Matches the "nearest-rank"
+/// definition, so p100 is the max and p50 of 2 samples is the 1st.
+#[inline]
+pub fn quantile_rank(q: f64, count: u64) -> u64 {
+    ((q * count as f64).ceil() as u64).clamp(1, count.max(1))
+}
+
+/// Shard-local histogram: plain counters, `Copy`, zero-heap. One per
+/// stage per worker shard.
+#[derive(Clone, Copy)]
+pub struct LocalHist {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl LocalHist {
+    pub const fn new() -> LocalHist {
+        LocalHist { counts: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Record one value. Three adds and a compare — no branches on the
+    /// allocator, no atomics.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Merge another local histogram into this one (shard-of-shards
+    /// composition: merging must commute with recording).
+    pub fn merge(&mut self, other: &LocalHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn clear(&mut self) {
+        *self = LocalHist::new();
+    }
+
+    /// Upper edge of the bucket holding the rank-`ceil(q*count)`
+    /// sample; 0 when empty. The exact sample is bounded below by the
+    /// same bucket's lower edge (see [`Self::quantile_bounds`]).
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.quantile_bounds(q).1
+    }
+
+    /// (lo, hi) bounds of the bucket holding the quantile rank.
+    pub fn quantile_bounds(&self, q: f64) -> (u64, u64) {
+        if self.count == 0 {
+            return (0, 0);
+        }
+        let rank = quantile_rank(q, self.count);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let (lo, hi) = bucket_bounds(b);
+                // The true max is a tighter upper bound than the last
+                // occupied bucket's edge.
+                return (lo, hi.min(self.max.max(lo)));
+            }
+        }
+        (self.max, self.max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Condense into the plain summary the snapshot layer exports.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            sum: self.sum,
+            max: self.max,
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+impl Default for LocalHist {
+    fn default() -> LocalHist {
+        LocalHist::new()
+    }
+}
+
+impl std::fmt::Debug for LocalHist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LocalHist")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+/// Shared merge-target histogram: same buckets, atomic counters.
+/// Shards are absorbed with relaxed `fetch_add`s — counters are
+/// statistically consistent (each add lands exactly once) without any
+/// lock on either side.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init idiom
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            counts: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record directly (server-side, off the attend hot path — request
+    /// latencies, queue waits, batch sizes).
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Absorb (and reset) a worker shard's histogram. Allocation-free:
+    /// fixed-size loops over fixed-size arrays.
+    pub fn absorb(&self, local: &mut LocalHist) {
+        if local.count == 0 {
+            return;
+        }
+        for (b, &c) in local.counts.iter().enumerate() {
+            if c > 0 {
+                self.counts[b].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(local.count, Ordering::Relaxed);
+        self.sum.fetch_add(local.sum, Ordering::Relaxed);
+        self.max.fetch_max(local.max, Ordering::Relaxed);
+        local.clear();
+    }
+
+    /// Relaxed-load copy into a local histogram (the snapshot read).
+    pub fn load(&self) -> LocalHist {
+        let mut out = LocalHist::new();
+        for (a, b) in out.counts.iter_mut().zip(&self.counts) {
+            *a = b.load(Ordering::Relaxed);
+        }
+        out.count = self.count.load(Ordering::Relaxed);
+        out.sum = self.sum.load(Ordering::Relaxed);
+        out.max = self.max.load(Ordering::Relaxed);
+        out
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        self.load().summary()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.load().fmt(f)
+    }
+}
+
+/// The exported condensation of one histogram: counts plus the
+/// bucket-resolved p50/p95/p99 upper edges. Units are whatever was
+/// recorded (nanoseconds for spans, plain values for size
+/// distributions).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_is_floor_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_line() {
+        // Every bucket's lo is the previous hi + 1; membership is exact.
+        for b in 1..BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds(b);
+            assert_eq!(lo, bucket_bounds(b - 1).1 + 1, "bucket {b}");
+            assert_eq!(bucket_of(lo), b);
+            assert_eq!(bucket_of(hi), b);
+        }
+        assert_eq!(bucket_bounds(0), (0, 1));
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn quantile_rank_nearest_rank_definition() {
+        assert_eq!(quantile_rank(0.50, 1), 1);
+        assert_eq!(quantile_rank(0.50, 2), 1);
+        assert_eq!(quantile_rank(0.50, 100), 50);
+        assert_eq!(quantile_rank(0.95, 100), 95);
+        assert_eq!(quantile_rank(0.99, 100), 99);
+        assert_eq!(quantile_rank(1.0, 7), 7);
+        assert_eq!(quantile_rank(0.0, 7), 1);
+    }
+
+    #[test]
+    fn empty_histogram_summarizes_to_zero() {
+        let h = LocalHist::new();
+        let s = h.summary();
+        assert_eq!(
+            (s.count, s.sum, s.max, s.p50, s.p95, s.p99),
+            (0, 0, 0, 0, 0, 0)
+        );
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_sample_bounds_are_its_bucket() {
+        let mut h = LocalHist::new();
+        h.record(1000); // bucket 9: [512, 1023]
+        for q in [0.5, 0.95, 0.99, 1.0] {
+            let (lo, hi) = h.quantile_bounds(q);
+            assert!(lo <= 1000 && 1000 <= hi, "q={q}: [{lo}, {hi}]");
+        }
+        // max tightens hi below the raw bucket edge.
+        assert_eq!(h.quantile_bounds(0.5).1, 1000);
+    }
+
+    #[test]
+    fn quantiles_bound_exact_samples_small() {
+        let samples: Vec<u64> = (1..=100).map(|i| i * 37).collect();
+        let mut h = LocalHist::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let exact = sorted[(quantile_rank(q, 100) - 1) as usize];
+            let (lo, hi) = h.quantile_bounds(q);
+            assert!(
+                lo <= exact && exact <= hi,
+                "q={q}: exact {exact} outside [{lo}, {hi}]"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_recording() {
+        let mut all = LocalHist::new();
+        let mut a = LocalHist::new();
+        let mut b = LocalHist::new();
+        for i in 0..1000u64 {
+            let v = (i * 2654435761) % 100_000;
+            all.record(v);
+            if i % 3 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.counts, all.counts);
+        assert_eq!((a.count, a.sum, a.max), (all.count, all.sum, all.max));
+    }
+
+    #[test]
+    fn atomic_absorb_resets_shard_and_accumulates() {
+        let h = Histogram::new();
+        let mut l = LocalHist::new();
+        l.record(5);
+        l.record(500);
+        h.absorb(&mut l);
+        assert_eq!(l.count, 0, "absorb must reset the shard");
+        l.record(50_000);
+        h.absorb(&mut l);
+        let got = h.load();
+        assert_eq!(got.count, 3);
+        assert_eq!(got.sum, 5 + 500 + 50_000);
+        assert_eq!(got.max, 50_000);
+        // Direct records land in the same accumulator.
+        h.record(7);
+        assert_eq!(h.load().count, 4);
+    }
+
+    #[test]
+    fn mean_and_summary_consistency() {
+        let mut h = LocalHist::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 60);
+        assert!((s.mean - 20.0).abs() < 1e-12);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{s:?}");
+    }
+}

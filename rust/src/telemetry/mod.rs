@@ -1,0 +1,401 @@
+//! Zero-allocation telemetry substrate for the serving paths.
+//!
+//! The paper's central empirical claim (Fig. 1a) is a *measured*
+//! crossover curve, and the roadmap's adaptive dispatcher needs per
+//! (n, kind) stage timings to pick direct vs FFT vs streaming — so the
+//! attend pipeline has to be observable without perturbing the very
+//! hot path it measures. Three rules make that safe:
+//!
+//!   1. **Recording is shard-local.** Each worker owns a [`StageShard`]
+//!      (embedded in `engine::Workspace`) of plain-`u64`
+//!      [`hist::LocalHist`]s — no atomics, no locks, no heap on the
+//!      record path. A span is two monotonic clock reads and three
+//!      adds.
+//!   2. **Merging is atomic, not locked.** Shards are absorbed into the
+//!      shared [`Telemetry`] registry with relaxed `fetch_add`s at
+//!      fan-out boundaries (end of a batch, end of a request) — never
+//!      per span.
+//!   3. **Export is versioned.** [`snapshot::MetricsSnapshot`] freezes
+//!      the registry plus the plan-cache and session-store counters
+//!      into a schema-versioned JSON artifact (`--metrics-json` on
+//!      `serve`/`decode`) and a Prometheus-style text dump
+//!      (`--metrics-prom`), so downstream tooling can rely on the keys.
+//!
+//! Spans cover the six attend-pipeline stages ([`Stage`]): plan-cache
+//! lookup, feature maps, the Toeplitz/rfft apply, GEMM (kv aggregation
+//! and score products), readout, and the streaming per-token step.
+//! Telemetry is on by default; [`set_enabled`]`(false)` turns every
+//! span into a no-op (one relaxed load) for overhead measurements —
+//! gated at <= 5% in `benches/batched_attend.rs`.
+
+pub mod hist;
+pub mod snapshot;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+pub use hist::{HistSummary, Histogram, LocalHist, BUCKETS};
+pub use snapshot::{MetricsSnapshot, SCHEMA, SCHEMA_VERSION};
+
+/// The six instrumented stages of the attend pipeline, in pipeline
+/// order. `as usize` indexes shard and registry arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// `PlanCache::get`: fingerprint, lock, (rarely) spectrum build.
+    PlanLookup = 0,
+    /// `kernel_features_into` over q and k (phi projections).
+    FeatureMap = 1,
+    /// `ToeplitzPlan::apply_batched_into` — the rfft fast path.
+    ToeplitzApply = 2,
+    /// Dense products: kv aggregation and (direct path) score GEMMs.
+    Gemm = 3,
+    /// `readout_into`: numerator/denominator contraction.
+    Readout = 4,
+    /// `StreamingDecoder::step` — one decoded token.
+    StreamStep = 5,
+}
+
+pub const NUM_STAGES: usize = 6;
+
+impl Stage {
+    pub const ALL: [Stage; NUM_STAGES] = [
+        Stage::PlanLookup,
+        Stage::FeatureMap,
+        Stage::ToeplitzApply,
+        Stage::Gemm,
+        Stage::Readout,
+        Stage::StreamStep,
+    ];
+
+    /// Stable snake_case key used in the JSON snapshot and the
+    /// Prometheus dump. Changing any of these is a schema bump.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::PlanLookup => "plan_lookup",
+            Stage::FeatureMap => "feature_map",
+            Stage::ToeplitzApply => "toeplitz_apply",
+            Stage::Gemm => "gemm",
+            Stage::Readout => "readout",
+            Stage::StreamStep => "stream_step",
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable span recording. Disabled spans skip the
+/// clock reads entirely; counters already recorded are kept.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Unit tests that toggle [`set_enabled`] or assert exact span counts
+/// share this lock: the flag is process-global, and the test harness
+/// runs threads concurrently.
+#[cfg(test)]
+pub(crate) fn test_flag_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-worker span accumulator: one local histogram per stage. Plain
+/// data — embed one in every `Workspace` / worker loop, record into it
+/// lock-free, then hand it to [`Telemetry::absorb`] at a fan-out
+/// boundary. Contents are telemetry, never state: absorbing or
+/// dropping a shard cannot change any computed output.
+#[derive(Clone, Copy)]
+pub struct StageShard {
+    hists: [LocalHist; NUM_STAGES],
+}
+
+impl StageShard {
+    pub const fn new() -> StageShard {
+        StageShard { hists: [LocalHist::new(); NUM_STAGES] }
+    }
+
+    #[inline]
+    pub fn record(&mut self, stage: Stage, ns: u64) {
+        self.hists[stage as usize].record(ns);
+    }
+
+    pub fn stage(&self, stage: Stage) -> &LocalHist {
+        &self.hists[stage as usize]
+    }
+
+    /// Spans recorded across all stages (cheap occupancy probe).
+    pub fn spans(&self) -> u64 {
+        self.hists.iter().map(|h| h.count).sum()
+    }
+
+    /// Merge another shard into this one (shard-of-shards: a worker
+    /// draining sub-workers, or a test recombining splits).
+    pub fn merge(&mut self, other: &StageShard) {
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for h in &mut self.hists {
+            h.clear();
+        }
+    }
+}
+
+impl Default for StageShard {
+    fn default() -> StageShard {
+        StageShard::new()
+    }
+}
+
+impl std::fmt::Debug for StageShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut d = f.debug_struct("StageShard");
+        for s in Stage::ALL {
+            d.field(s.name(), &self.hists[s as usize].count);
+        }
+        d.finish()
+    }
+}
+
+/// A started span: two clock reads bracket the stage; `stop` records
+/// into a shard. When telemetry is disabled the start is `None` and
+/// `stop` is a no-op — the disabled cost is one relaxed load.
+#[derive(Debug, Clone, Copy)]
+#[must_use = "a span only records when stopped"]
+pub struct StageTimer(Option<Instant>);
+
+impl StageTimer {
+    #[inline]
+    pub fn start() -> StageTimer {
+        StageTimer(if enabled() { Some(Instant::now()) } else { None })
+    }
+
+    /// Start only when `on` (e.g. a shard is actually attached) — the
+    /// off case costs nothing, not even the enabled-flag load.
+    #[inline]
+    pub fn start_if(on: bool) -> StageTimer {
+        if on {
+            StageTimer::start()
+        } else {
+            StageTimer(None)
+        }
+    }
+
+    /// Elapsed nanoseconds, saturating into u64 (585 years).
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        match self.0 {
+            Some(t0) => t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+            None => 0,
+        }
+    }
+
+    #[inline]
+    pub fn stop(self, shard: &mut StageShard, stage: Stage) {
+        if self.0.is_some() {
+            shard.record(stage, self.elapsed_ns());
+        }
+    }
+}
+
+/// The shared registry: merged stage histograms plus the server-side
+/// request metrics. One per `Engine` (and hence per served model);
+/// `&Telemetry` is `Sync` — every mutation is a relaxed atomic — so it
+/// crosses scoped-thread fan-outs without wrappers.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    started: Option<Instant>,
+    stages: [Histogram; NUM_STAGES],
+    /// Whole-prefill wall time, ns (one record per prefilled session).
+    prefill: Histogram,
+    /// Streaming request latency, ns (enqueue -> reply).
+    request_stream: Histogram,
+    /// Stateless batch request latency, ns (enqueue -> reply).
+    request_batch: Histogram,
+    /// Queue wait, ns (enqueue -> worker pickup), both job kinds.
+    queue_wait: Histogram,
+    /// Prompts per batch request (a value distribution, not ns).
+    batch_size: Histogram,
+    tokens: AtomicU64,
+    prefill_tokens: AtomicU64,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { started: Some(Instant::now()), ..Telemetry::default() }
+    }
+
+    /// Absorb (and reset) a worker shard into the merged stage
+    /// histograms. Lock-free; call at fan-out boundaries, not per span.
+    pub fn absorb(&self, shard: &mut StageShard) {
+        for (hist, local) in self.stages.iter().zip(&mut shard.hists) {
+            hist.absorb(local);
+        }
+    }
+
+    pub fn stage_summary(&self, stage: Stage) -> HistSummary {
+        self.stages[stage as usize].summary()
+    }
+
+    pub fn record_prefill_ns(&self, ns: u64) {
+        self.prefill.record(ns);
+    }
+
+    pub fn record_stream_request_ns(&self, ns: u64) {
+        self.request_stream.record(ns);
+    }
+
+    pub fn record_batch_request_ns(&self, ns: u64) {
+        self.request_batch.record(ns);
+    }
+
+    pub fn record_queue_wait_ns(&self, ns: u64) {
+        self.queue_wait.record(ns);
+    }
+
+    pub fn record_batch_size(&self, prompts: u64) {
+        self.batch_size.record(prompts);
+    }
+
+    pub fn add_tokens(&self, n: u64) {
+        self.tokens.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_prefill_tokens(&self, n: u64) {
+        self.prefill_tokens.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.map(|t0| t0.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Freeze everything into the versioned exportable snapshot.
+    /// Plan-cache / session-store sections start empty; the server
+    /// attaches them via the snapshot's `with_*` builders so the
+    /// counters come from their owning layers instead of being
+    /// duplicated here.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let uptime = self.uptime_secs();
+        let tokens = self.tokens.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            uptime_secs: uptime,
+            stages: Stage::ALL.map(|s| (s.name(), self.stage_summary(s))),
+            prefill: self.prefill.summary(),
+            request_stream: self.request_stream.summary(),
+            request_batch: self.request_batch.summary(),
+            queue_wait: self.queue_wait.summary(),
+            batch_size: self.batch_size.summary(),
+            tokens,
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            tokens_per_sec: if uptime > 0.0 {
+                tokens as f64 / uptime
+            } else {
+                0.0
+            },
+            plan_cache: None,
+            session_store: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_stable_snapshot_keys() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "plan_lookup",
+                "feature_map",
+                "toeplitz_apply",
+                "gemm",
+                "readout",
+                "stream_step"
+            ]
+        );
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i, "enum order is the array index");
+        }
+    }
+
+    #[test]
+    fn shard_records_and_absorbs_into_registry() {
+        let tel = Telemetry::new();
+        let mut shard = StageShard::new();
+        shard.record(Stage::Gemm, 1000);
+        shard.record(Stage::Gemm, 2000);
+        shard.record(Stage::Readout, 500);
+        assert_eq!(shard.spans(), 3);
+        tel.absorb(&mut shard);
+        assert_eq!(shard.spans(), 0, "absorb resets the shard");
+        let g = tel.stage_summary(Stage::Gemm);
+        assert_eq!(g.count, 2);
+        assert_eq!(g.sum, 3000);
+        assert_eq!(tel.stage_summary(Stage::Readout).count, 1);
+        assert_eq!(tel.stage_summary(Stage::PlanLookup).count, 0);
+    }
+
+    #[test]
+    fn timer_respects_enabled_flag() {
+        let _g = test_flag_guard();
+        set_enabled(false);
+        let mut shard = StageShard::new();
+        let t = StageTimer::start();
+        t.stop(&mut shard, Stage::StreamStep);
+        assert_eq!(shard.spans(), 0, "disabled spans record nothing");
+        set_enabled(true);
+        let t = StageTimer::start();
+        t.stop(&mut shard, Stage::StreamStep);
+        assert_eq!(shard.stage(Stage::StreamStep).count, 1);
+    }
+
+    #[test]
+    fn shard_merge_equals_single_shard() {
+        let mut all = StageShard::new();
+        let mut a = StageShard::new();
+        let mut b = StageShard::new();
+        for i in 0..100u64 {
+            let stage = Stage::ALL[(i % 6) as usize];
+            let v = i * 977;
+            all.record(stage, v);
+            if i % 2 == 0 {
+                a.record(stage, v);
+            } else {
+                b.record(stage, v);
+            }
+        }
+        a.merge(&b);
+        for s in Stage::ALL {
+            assert_eq!(a.stage(s).counts, all.stage(s).counts, "{}", s.name());
+            assert_eq!(a.stage(s).sum, all.stage(s).sum, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn telemetry_counters_accumulate() {
+        let tel = Telemetry::new();
+        tel.add_tokens(10);
+        tel.add_tokens(5);
+        tel.add_prefill_tokens(8);
+        tel.record_batch_size(4);
+        tel.record_queue_wait_ns(100);
+        let snap = tel.snapshot();
+        assert_eq!(snap.tokens, 15);
+        assert_eq!(snap.prefill_tokens, 8);
+        assert_eq!(snap.batch_size.count, 1);
+        assert_eq!(snap.queue_wait.count, 1);
+        assert!(snap.tokens_per_sec >= 0.0);
+    }
+}

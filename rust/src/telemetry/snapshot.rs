@@ -1,0 +1,324 @@
+//! Versioned metrics snapshot: the frozen, exportable view of a
+//! [`super::Telemetry`] registry plus the plan-cache and session-store
+//! counters owned by other layers.
+//!
+//! Two render targets share one in-memory struct:
+//!   * `to_json()` — a `util::json::Json` tree tagged with
+//!     [`SCHEMA`]/[`SCHEMA_VERSION`], written by `--metrics-json` and
+//!     parsed back by the CI validation step and integration tests;
+//!   * `to_prometheus()` — a Prometheus text-exposition dump
+//!     (`# TYPE` lines, `_count`/`_sum`/quantile series) for scraping
+//!     or eyeballing, written by `--metrics-prom`.
+//!
+//! Schema contract: the `schema`/`schema_version` pair gates parsers.
+//! Any key rename, key removal, or semantic change to an existing
+//! field bumps [`SCHEMA_VERSION`]; purely additive keys do not.
+
+use super::hist::HistSummary;
+use super::NUM_STAGES;
+use crate::engine::cache::CacheStats;
+use crate::streaming::session::StoreStats;
+use crate::util::json::Json;
+
+/// Identifies the artifact kind, independent of the emitting binary.
+pub const SCHEMA: &str = "kafft.metrics";
+/// Bumped on breaking changes to the snapshot layout (see module doc).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A frozen metrics view. Produced by [`super::Telemetry::snapshot`];
+/// the serving layer attaches the cache/store sections it owns via the
+/// `with_*` builders before export.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub uptime_secs: f64,
+    /// Per-stage latency summaries, keyed by `Stage::name()`, in
+    /// pipeline order.
+    pub stages: [(&'static str, HistSummary); NUM_STAGES],
+    /// Whole-prefill wall time (ns) per prefilled session.
+    pub prefill: HistSummary,
+    /// Streaming request latency (ns), enqueue -> reply.
+    pub request_stream: HistSummary,
+    /// Stateless batch request latency (ns), enqueue -> reply.
+    pub request_batch: HistSummary,
+    /// Queue wait (ns), enqueue -> worker pickup.
+    pub queue_wait: HistSummary,
+    /// Prompts per submitted batch (a count distribution, not ns).
+    pub batch_size: HistSummary,
+    /// Decoded tokens since registry start.
+    pub tokens: u64,
+    /// Prompt tokens consumed by prefill since registry start.
+    pub prefill_tokens: u64,
+    /// `tokens / uptime_secs` at snapshot time.
+    pub tokens_per_sec: f64,
+    pub plan_cache: Option<CacheStats>,
+    pub session_store: Option<StoreStats>,
+}
+
+impl MetricsSnapshot {
+    pub fn with_plan_cache(mut self, stats: CacheStats) -> MetricsSnapshot {
+        self.plan_cache = Some(stats);
+        self
+    }
+
+    pub fn with_session_store(mut self, stats: StoreStats) -> MetricsSnapshot {
+        self.session_store = Some(stats);
+        self
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("uptime_secs", Json::Num(self.uptime_secs)),
+            ("stages", {
+                Json::Obj(
+                    self.stages
+                        .iter()
+                        .map(|(name, s)| (name.to_string(), hist_json(s)))
+                        .collect(),
+                )
+            }),
+            ("prefill_ns", hist_json(&self.prefill)),
+            ("request_stream_ns", hist_json(&self.request_stream)),
+            ("request_batch_ns", hist_json(&self.request_batch)),
+            ("queue_wait_ns", hist_json(&self.queue_wait)),
+            ("batch_size", hist_json(&self.batch_size)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("prefill_tokens", Json::Num(self.prefill_tokens as f64)),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
+        ];
+        if let Some(c) = &self.plan_cache {
+            pairs.push((
+                "plan_cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(c.hits as f64)),
+                    ("misses", Json::Num(c.misses as f64)),
+                    ("evictions", Json::Num(c.evictions as f64)),
+                    ("plans", Json::Num(c.plans as f64)),
+                    ("bytes", Json::Num(c.bytes as f64)),
+                    ("budget_bytes", Json::Num(c.budget_bytes as f64)),
+                    ("hit_rate", Json::Num(c.hit_rate())),
+                ]),
+            ));
+        }
+        if let Some(s) = &self.session_store {
+            pairs.push((
+                "session_store",
+                Json::obj(vec![
+                    ("hits", Json::Num(s.hits as f64)),
+                    ("created", Json::Num(s.created as f64)),
+                    ("spills", Json::Num(s.spills as f64)),
+                    ("restores", Json::Num(s.restores as f64)),
+                    ("expired", Json::Num(s.expired as f64)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Pretty JSON with a trailing newline, ready for a file.
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json_string())
+    }
+
+    // ---- Prometheus text exposition --------------------------------------
+
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        prom_gauge(&mut out, "kafft_uptime_seconds", self.uptime_secs);
+        for (name, s) in &self.stages {
+            prom_hist(&mut out, &format!("kafft_stage_{name}_ns"), s);
+        }
+        prom_hist(&mut out, "kafft_prefill_ns", &self.prefill);
+        prom_hist(&mut out, "kafft_request_stream_ns", &self.request_stream);
+        prom_hist(&mut out, "kafft_request_batch_ns", &self.request_batch);
+        prom_hist(&mut out, "kafft_queue_wait_ns", &self.queue_wait);
+        prom_hist(&mut out, "kafft_batch_size", &self.batch_size);
+        prom_counter(&mut out, "kafft_tokens_total", self.tokens as f64);
+        prom_counter(
+            &mut out,
+            "kafft_prefill_tokens_total",
+            self.prefill_tokens as f64,
+        );
+        prom_gauge(&mut out, "kafft_tokens_per_second", self.tokens_per_sec);
+        if let Some(c) = &self.plan_cache {
+            prom_counter(&mut out, "kafft_plan_cache_hits_total", c.hits as f64);
+            prom_counter(
+                &mut out,
+                "kafft_plan_cache_misses_total",
+                c.misses as f64,
+            );
+            prom_counter(
+                &mut out,
+                "kafft_plan_cache_evictions_total",
+                c.evictions as f64,
+            );
+            prom_gauge(&mut out, "kafft_plan_cache_plans", c.plans as f64);
+            prom_gauge(&mut out, "kafft_plan_cache_bytes", c.bytes as f64);
+        }
+        if let Some(s) = &self.session_store {
+            prom_counter(&mut out, "kafft_session_hits_total", s.hits as f64);
+            prom_counter(
+                &mut out,
+                "kafft_session_created_total",
+                s.created as f64,
+            );
+            prom_counter(&mut out, "kafft_session_spills_total", s.spills as f64);
+            prom_counter(
+                &mut out,
+                "kafft_session_restores_total",
+                s.restores as f64,
+            );
+            prom_counter(
+                &mut out,
+                "kafft_session_expired_total",
+                s.expired as f64,
+            );
+        }
+        out
+    }
+
+    pub fn write_prometheus(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_prometheus())
+    }
+}
+
+fn hist_json(s: &HistSummary) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(s.count as f64)),
+        ("sum", Json::Num(s.sum as f64)),
+        ("max", Json::Num(s.max as f64)),
+        ("mean", Json::Num(s.mean)),
+        ("p50", Json::Num(s.p50 as f64)),
+        ("p95", Json::Num(s.p95 as f64)),
+        ("p99", Json::Num(s.p99 as f64)),
+    ])
+}
+
+fn prom_gauge(out: &mut String, name: &str, v: f64) {
+    out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+}
+
+fn prom_counter(out: &mut String, name: &str, v: f64) {
+    out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+}
+
+fn prom_hist(out: &mut String, name: &str, s: &HistSummary) {
+    out.push_str(&format!("# TYPE {name} summary\n"));
+    for (q, v) in [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)] {
+        out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+    }
+    out.push_str(&format!("{name}_sum {}\n", s.sum));
+    out.push_str(&format!("{name}_count {}\n", s.count));
+    out.push_str(&format!("{name}_max {}\n", s.max));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Stage, StageShard, Telemetry};
+
+    fn populated_snapshot() -> MetricsSnapshot {
+        let tel = Telemetry::new();
+        let mut shard = StageShard::new();
+        for s in Stage::ALL {
+            for i in 1..=20u64 {
+                shard.record(s, i * 1000);
+            }
+        }
+        tel.absorb(&mut shard);
+        tel.record_prefill_ns(5_000_000);
+        tel.record_stream_request_ns(7_000_000);
+        tel.record_batch_request_ns(3_000_000);
+        tel.record_queue_wait_ns(40_000);
+        tel.record_batch_size(8);
+        tel.add_tokens(64);
+        tel.add_prefill_tokens(128);
+        tel.snapshot()
+            .with_plan_cache(CacheStats {
+                hits: 10,
+                misses: 2,
+                evictions: 1,
+                plans: 3,
+                bytes: 4096,
+                budget_bytes: 65536,
+            })
+            .with_session_store(StoreStats {
+                hits: 5,
+                created: 2,
+                spills: 1,
+                restores: 1,
+                expired: 0,
+            })
+    }
+
+    #[test]
+    fn json_has_schema_and_all_stage_keys() {
+        let j = populated_snapshot().to_json();
+        assert_eq!(j.req_str("schema").unwrap(), SCHEMA);
+        assert_eq!(
+            j.req_usize("schema_version").unwrap() as u64,
+            SCHEMA_VERSION
+        );
+        let stages = j.get("stages").unwrap();
+        for s in Stage::ALL {
+            let h = stages
+                .get(s.name())
+                .unwrap_or_else(|| panic!("missing stage {}", s.name()));
+            assert_eq!(h.req_usize("count").unwrap(), 20);
+            let p50 = h.req_usize("p50").unwrap();
+            let p95 = h.req_usize("p95").unwrap();
+            let p99 = h.req_usize("p99").unwrap();
+            assert!(p50 <= p95 && p95 <= p99, "{}", s.name());
+        }
+        assert_eq!(j.get("plan_cache").unwrap().req_usize("hits").unwrap(), 10);
+        assert_eq!(
+            j.get("session_store").unwrap().req_usize("created").unwrap(),
+            2
+        );
+        assert_eq!(j.req_usize("tokens").unwrap(), 64);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let snap = populated_snapshot();
+        let text = snap.to_json_string();
+        let parsed = Json::parse(&text).expect("snapshot JSON parses");
+        assert_eq!(parsed, snap.to_json());
+    }
+
+    #[test]
+    fn empty_snapshot_still_exports() {
+        let snap = Telemetry::new().snapshot();
+        let j = snap.to_json();
+        assert_eq!(j.req_str("schema").unwrap(), SCHEMA);
+        assert!(j.get("plan_cache").is_none());
+        assert!(j.get("session_store").is_none());
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("kafft_tokens_total 0"));
+    }
+
+    #[test]
+    fn prometheus_dump_covers_stages_and_sections() {
+        let prom = populated_snapshot().to_prometheus();
+        for s in Stage::ALL {
+            let series = format!("kafft_stage_{}_ns_count 20", s.name());
+            assert!(prom.contains(&series), "missing {series}");
+            assert!(prom.contains(&format!(
+                "kafft_stage_{}_ns{{quantile=\"0.99\"}}",
+                s.name()
+            )));
+        }
+        assert!(prom.contains("kafft_plan_cache_hits_total 10"));
+        assert!(prom.contains("kafft_session_created_total 2"));
+        assert!(prom.contains("# TYPE kafft_queue_wait_ns summary"));
+    }
+}

@@ -1,0 +1,144 @@
+//! End-to-end snapshot exporter check: drive the streaming server
+//! through prefill, decode steps, and a stateless prompt batch, then
+//! validate the exported artifacts exactly the way the CI metrics step
+//! does — parse the JSON back, check the schema tag, and require every
+//! pipeline stage plus the plan-cache / session-store / request-latency
+//! sections to be present and populated.
+
+use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
+use kafft::telemetry::{Stage, SCHEMA, SCHEMA_VERSION};
+use kafft::util::json::Json;
+
+fn drive_server() -> kafft::coordinator::server::StreamStats {
+    let cfg = StreamingServerConfig {
+        vocab: 32,
+        d_model: 8,
+        features: 8,
+        max_len: 24,
+        window: 24,
+        max_live: 2,
+        seed: 5,
+        workers: 1,
+        ..StreamingServerConfig::default()
+    };
+    let server = StreamingServer::start(cfg).expect("server start");
+    // Two sessions: prefill (4 tokens) + 3 decode steps each.
+    for sess in 1..=2u64 {
+        let resp = server
+            .submit(sess, vec![1, 2, 3, 4])
+            .expect("submit")
+            .recv()
+            .expect("recv")
+            .expect("prefill");
+        let mut pos = resp.positions;
+        for t in 0..3 {
+            let resp = server
+                .submit_at(sess, vec![5 + t], pos)
+                .expect("submit")
+                .recv()
+                .expect("recv")
+                .expect("step");
+            pos = resp.positions;
+        }
+    }
+    // One stateless batch through the engine path.
+    let batch = server
+        .submit_prompt_batch(vec![vec![1, 2, 3], vec![4, 5, 6]])
+        .expect("submit batch")
+        .recv()
+        .expect("recv")
+        .expect("batch");
+    assert_eq!(batch.next_logits.len(), 2);
+    server.shutdown()
+}
+
+#[test]
+fn served_snapshot_exports_and_validates() {
+    let stats = drive_server();
+    let snap = &stats.telemetry;
+
+    // Every pipeline stage fired: prefill covers plan_lookup ..
+    // readout, the decode steps cover stream_step.
+    for (name, h) in &snap.stages {
+        assert!(h.count > 0, "stage {name} recorded no spans");
+        assert!(h.p50 <= h.p95 && h.p95 <= h.p99, "stage {name}: {h:?}");
+        assert!(h.p99 <= h.max.max(1), "stage {name}: p99 above max");
+    }
+    let stage_names: Vec<&str> = snap.stages.iter().map(|(n, _)| *n).collect();
+    let expected: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+    assert_eq!(stage_names, expected, "stage key order is the schema");
+
+    // Request-level sections.
+    assert_eq!(snap.queue_wait.count, 9, "8 stream + 1 batch pickups");
+    assert_eq!(snap.request_stream.count, 8);
+    assert_eq!(snap.request_batch.count, 1);
+    assert_eq!(snap.batch_size.count, 1);
+    assert_eq!(snap.prefill.count, 2);
+    assert_eq!(snap.tokens as usize, stats.tokens);
+    assert_eq!(snap.prefill_tokens, 8);
+    assert!(snap.plan_cache.is_some(), "plan-cache section missing");
+    assert!(snap.session_store.is_some(), "session-store section missing");
+    let store = snap.session_store.as_ref().unwrap();
+    assert_eq!(store.created, 2);
+
+    // ---- the --metrics-json artifact, validated like the CI step ----
+    let path = std::env::temp_dir().join(format!(
+        "kafft_metrics_{}.json",
+        std::process::id()
+    ));
+    let path_s = path.to_str().expect("utf8 temp path");
+    snap.write_json(path_s).expect("write json");
+    let text = std::fs::read_to_string(path_s).expect("read back");
+    std::fs::remove_file(path_s).ok();
+    let j = Json::parse(&text).expect("snapshot JSON parses");
+
+    assert_eq!(j.req_str("schema").expect("schema"), SCHEMA);
+    assert_eq!(
+        j.req_usize("schema_version").expect("schema_version") as u64,
+        SCHEMA_VERSION
+    );
+    let stages = j.get("stages").expect("stages object");
+    for s in Stage::ALL {
+        let h = stages
+            .get(s.name())
+            .unwrap_or_else(|| panic!("missing stage key {}", s.name()));
+        assert!(h.req_usize("count").expect("count") > 0, "{}", s.name());
+        for key in ["sum", "max", "mean", "p50", "p95", "p99"] {
+            assert!(h.get(key).is_some(), "stage {} lacks {key}", s.name());
+        }
+    }
+    for key in [
+        "uptime_secs",
+        "prefill_ns",
+        "request_stream_ns",
+        "request_batch_ns",
+        "queue_wait_ns",
+        "batch_size",
+        "tokens",
+        "prefill_tokens",
+        "tokens_per_sec",
+        "plan_cache",
+        "session_store",
+    ] {
+        assert!(j.get(key).is_some(), "snapshot lacks {key}");
+    }
+    assert!(
+        j.get("plan_cache").unwrap().req_usize("hits").expect("hits")
+            + j.get("plan_cache").unwrap().req_usize("misses").expect("m")
+            > 0,
+        "plan cache never consulted"
+    );
+
+    // ---- the --metrics-prom artifact ----
+    let prom = snap.to_prometheus();
+    for s in Stage::ALL {
+        assert!(
+            prom.contains(&format!("kafft_stage_{}_ns_count", s.name())),
+            "prometheus dump lacks stage {}",
+            s.name()
+        );
+    }
+    assert!(prom.contains("kafft_tokens_total"));
+    assert!(prom.contains("kafft_plan_cache_hits_total"));
+    assert!(prom.contains("kafft_session_created_total"));
+}

@@ -1,0 +1,253 @@
+//! Property net for the telemetry substrate.
+//!
+//! Three contracts are pinned down:
+//!
+//!   * **Quantile bounding** — for arbitrary sample multisets, the
+//!     log2-bucketed p50/p95/p99 brackets the exact nearest-rank
+//!     quantile of the sorted samples: `lo <= exact <= hi`, the
+//!     bracket one bucket wide (2x resolution below the saturating
+//!     last bucket, tightened by the recorded max).
+//!   * **Shard composition** — splitting a recording stream across any
+//!     number of shards and merging (LocalHist::merge,
+//!     StageShard::merge, or Telemetry::absorb) is indistinguishable
+//!     from recording into one shard: same bucket counts, count, sum,
+//!     max, and therefore same quantiles.
+//!   * **Zero steady-state allocation** — recording spans, absorbing
+//!     shards, and freezing a `MetricsSnapshot` never touch the heap,
+//!     measured by the same counting `#[global_allocator]` shim as
+//!     `benches/fft_substrate.rs`, not inferred from code reading.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use kafft::rng::Rng;
+use kafft::telemetry::hist::{bucket_bounds, bucket_of, quantile_rank};
+use kafft::telemetry::{
+    LocalHist, Stage, StageShard, StageTimer, Telemetry, BUCKETS,
+};
+use kafft::util::prop::{forall, Gen};
+
+// Unlike the single-threaded bench shims, the test harness runs other
+// tests' threads concurrently — so the counter is thread-local and the
+// gate below counts only its own thread's allocations. Const-init
+// keeps the TLS access itself allocation-free; `try_with` tolerates
+// thread-teardown allocator calls.
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Latency-shaped sample multisets: log-uniform across the bucket
+/// scales (so every power-of-two decade is exercised, not just the
+/// mean of some distribution), with occasional 0 and occasional
+/// huge values that land in the saturating last bucket.
+struct Samples {
+    max_len: usize,
+}
+
+impl Gen for Samples {
+    type Value = Vec<u64>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<u64> {
+        let len = 1 + rng.below_usize(self.max_len);
+        (0..len)
+            .map(|_| match rng.below(16) {
+                0 => 0,
+                1 => u64::MAX - rng.next_u64() % 1024, // saturating bucket
+                _ => {
+                    let e = rng.below_usize(44) as u32;
+                    let lo = 1u64 << e;
+                    lo + rng.next_u64() % lo // uniform within bucket e
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+        }
+        out
+    }
+}
+
+fn record_all(samples: &[u64]) -> LocalHist {
+    let mut h = LocalHist::new();
+    for &s in samples {
+        h.record(s);
+    }
+    h
+}
+
+#[test]
+fn bucketed_quantiles_bound_exact_sorted_quantiles() {
+    forall("quantile_bounds", 300, 0x7e1e, &Samples { max_len: 400 },
+           |samples| {
+        let h = record_all(samples);
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for q in [0.50, 0.95, 0.99, 1.0] {
+            let exact =
+                sorted[(quantile_rank(q, sorted.len() as u64) - 1) as usize];
+            let (lo, hi) = h.quantile_bounds(q);
+            if !(lo <= exact && exact <= hi) {
+                return Err(format!(
+                    "q={q}: exact {exact} outside [{lo}, {hi}]"
+                ));
+            }
+            // Power-of-two resolution: the bracket is one bucket wide.
+            if lo > 0 && bucket_of(lo) != bucket_of(hi) {
+                return Err(format!(
+                    "q={q}: bracket [{lo}, {hi}] spans buckets"
+                ));
+            }
+            if h.quantile(q) != hi {
+                return Err("quantile() is not the upper bound".into());
+            }
+        }
+        // Monotonic percentiles fall out of the rank walk.
+        let s = h.summary();
+        if !(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max.max(1)) {
+            return Err(format!("non-monotone summary {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_of_shards_equals_single_shard() {
+    forall("shard_merge", 200, 0x5eed, &Samples { max_len: 400 }, |samples| {
+        // Deal the same stream across 1..=7 shards round-robin with
+        // rotating stages, then merge; compare against one shard that
+        // saw everything.
+        let mut deal_rng = Rng::new(samples.len() as u64);
+        let ways = 1 + deal_rng.below_usize(7);
+        let mut single = StageShard::new();
+        let mut shards = vec![StageShard::new(); ways];
+        for (i, &v) in samples.iter().enumerate() {
+            let stage = Stage::ALL[i % Stage::ALL.len()];
+            single.record(stage, v);
+            shards[deal_rng.below_usize(ways)].record(stage, v);
+        }
+        let mut merged = StageShard::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        for stage in Stage::ALL {
+            let (a, b) = (merged.stage(stage), single.stage(stage));
+            if a.counts != b.counts || a.count != b.count || a.sum != b.sum
+                || a.max != b.max
+            {
+                return Err(format!("{} diverged after merge", stage.name()));
+            }
+        }
+        // Absorbing the split shards into a registry matches absorbing
+        // the single shard: same summaries out of the snapshot.
+        let via_shards = Telemetry::new();
+        for s in &mut shards {
+            via_shards.absorb(s);
+        }
+        let via_single = Telemetry::new();
+        via_single.absorb(&mut single);
+        for stage in Stage::ALL {
+            if via_shards.stage_summary(stage) != via_single.stage_summary(stage)
+            {
+                return Err(format!("{} snapshot diverged", stage.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bucket_arithmetic_is_total_and_exact() {
+    // Exhaustive over bucket edges: every representable edge maps back
+    // to its own bucket, and the edges tile the u64 line.
+    for b in 0..BUCKETS {
+        let (lo, hi) = bucket_bounds(b);
+        assert_eq!(bucket_of(lo).max(bucket_of(hi)), b, "bucket {b}");
+        if b + 1 < BUCKETS {
+            assert_eq!(bucket_bounds(b + 1).0, hi + 1, "gap after bucket {b}");
+        } else {
+            assert_eq!(hi, u64::MAX);
+        }
+    }
+    // Random values: membership always holds.
+    let mut rng = Rng::new(99);
+    for _ in 0..10_000 {
+        let v = rng.next_u64() >> rng.below(64);
+        let (lo, hi) = bucket_bounds(bucket_of(v));
+        assert!(lo <= v && v <= hi, "{v} outside [{lo}, {hi}]");
+    }
+}
+
+#[test]
+fn span_recording_and_snapshot_are_allocation_free() {
+    kafft::telemetry::set_enabled(true);
+    let tel = Telemetry::new();
+    let mut shard = StageShard::new();
+    // Warm: one full round through every path the steady state uses.
+    for stage in Stage::ALL {
+        let t = StageTimer::start();
+        t.stop(&mut shard, stage);
+    }
+    tel.absorb(&mut shard);
+    tel.record_queue_wait_ns(10);
+    tel.record_batch_size(4);
+    tel.add_tokens(1);
+    let mut snap = tel.snapshot();
+
+    let before = thread_allocs();
+    for _ in 0..1_000 {
+        for stage in Stage::ALL {
+            let t = StageTimer::start();
+            std::hint::black_box(stage);
+            t.stop(&mut shard, stage);
+        }
+        tel.absorb(&mut shard);
+        tel.record_queue_wait_ns(123);
+        tel.record_stream_request_ns(456);
+        tel.record_batch_request_ns(789);
+        tel.record_batch_size(8);
+        tel.add_tokens(2);
+        tel.add_prefill_tokens(1);
+        snap = tel.snapshot();
+        std::hint::black_box(&snap);
+    }
+    let allocs = thread_allocs() - before;
+    assert_eq!(
+        allocs, 0,
+        "span recording / absorb / snapshot touched the allocator"
+    );
+    assert_eq!(snap.tokens, 2001);
+    for (name, h) in &snap.stages {
+        assert_eq!(h.count, 1001, "stage {name}");
+    }
+}
