@@ -12,7 +12,11 @@
 //! per-session (S, z) caches — no PJRT artifacts needed. Reports
 //! throughput, latency percentiles, batching / session-cache stats.
 //! Either mode accepts `--metrics-json PATH` to dump the server's
-//! telemetry snapshot (schema `kafft.metrics`) on shutdown.
+//! telemetry snapshot (schema `kafft.metrics`) on shutdown. The
+//! streaming mode also accepts `--session-dir DIR` to persist sessions
+//! as versioned envelope files across runs, and always finishes with a
+//! mixed-length decode burst through the continuous batcher (the
+//! occupancy figures printed at the end).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -21,10 +25,10 @@ use kafft::coordinator::server::{LmServer, ServerConfig};
 use kafft::rng::Rng;
 use kafft::runtime::Runtime;
 
-/// Pop `--metrics-json PATH` out of the raw arg list so the positional
-/// parsing below stays index-based.
-fn take_metrics_path(args: &mut Vec<String>) -> Option<String> {
-    let i = args.iter().position(|a| a == "--metrics-json")?;
+/// Pop `KEY VALUE` out of the raw arg list so the positional parsing
+/// below stays index-based.
+fn take_opt(args: &mut Vec<String>, key: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == key)?;
     args.remove(i);
     if i < args.len() {
         Some(args.remove(i))
@@ -35,10 +39,11 @@ fn take_metrics_path(args: &mut Vec<String>) -> Option<String> {
 
 fn main() -> anyhow::Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
-    let metrics_path = take_metrics_path(&mut args);
+    let metrics_path = take_opt(&mut args, "--metrics-json");
+    let session_dir = take_opt(&mut args, "--session-dir");
     if let Some(i) = args.iter().position(|a| a == "--streaming") {
         args.remove(i);
-        return streaming_demo(&args, metrics_path);
+        return streaming_demo(&args, metrics_path, session_dir);
     }
     let n_req: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(48);
     let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -133,6 +138,7 @@ fn main() -> anyhow::Result<()> {
 fn streaming_demo(
     args: &[String],
     metrics_path: Option<String>,
+    session_dir: Option<String>,
 ) -> anyhow::Result<()> {
     use kafft::coordinator::decode::argmax;
     use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
@@ -150,6 +156,10 @@ fn streaming_demo(
         max_live: (sessions / 2).max(1), // force some spill/restore traffic
         workers,
         plan_cache_bytes: cache_mb << 20,
+        // With --session-dir DIR, sessions page out to versioned
+        // envelope files and survive the process; rerun against the
+        // same dir to watch disk restores in the printed stats.
+        session_dir: session_dir.map(Into::into),
         ..StreamingServerConfig::default()
     };
     let vocab = cfg.vocab;
@@ -196,6 +206,26 @@ fn streaming_demo(
         lat.extend(h.join().unwrap());
     }
     let wall = t0.elapsed().as_secs_f64();
+
+    // Decode-burst leg through the continuous batcher: mixed
+    // generation lengths, so lanes free at different times and the
+    // occupancy stats printed below are a real measurement.
+    let mut rng = Rng::new(7);
+    let rxs: Vec<_> = (0..sessions)
+        .map(|s| {
+            let gen_s = if s % 2 == 0 { gen } else { gen / 4 + 1 };
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|_| rng.below_usize(vocab) as i32)
+                .collect();
+            server
+                .submit_decode(5000 + s as u64, prompt, gen_s)
+                .expect("submit decode")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("recv").expect("decode");
+    }
+
     let server = Arc::try_unwrap(server).ok().expect("sole owner");
     let stats = server.shutdown();
 
@@ -239,6 +269,26 @@ fn streaming_demo(
         stats.plan_cache.misses,
         stats.plan_cache.bytes >> 10
     );
+    let occ = &stats.telemetry.batch_occupancy;
+    println!(
+        "continuous batching: {} decode requests, admits={} evicts={}, \
+         mean occupancy {:.2} over {} cycles",
+        stats.decode_requests,
+        stats.telemetry.admits,
+        stats.telemetry.evicts,
+        if occ.count > 0 {
+            occ.sum as f64 / occ.count as f64
+        } else {
+            0.0
+        },
+        occ.count
+    );
+    if let Some(ss) = &stats.telemetry.session_store {
+        println!(
+            "disk tier: writes={} reads={} expired={} corrupt={}",
+            ss.disk_writes, ss.disk_reads, ss.disk_expired, ss.disk_corrupt
+        );
+    }
     if let Some(path) = metrics_path {
         stats.telemetry.write_json(&path)?;
         println!("metrics snapshot -> {path}");

@@ -1,0 +1,259 @@
+"""Executable mirror of rust/src/streaming/{disk,session}.rs (no
+toolchain in this container, so the new tier logic is validated here).
+
+Three mirrors, matching the Rust tests byte for byte / step for step:
+
+  * FNV-1a 64 and the 48-byte envelope header (magic, version, id,
+    stamp, payload length, checksum — six little-endian u64s), against
+    the reference vectors pinned in disk.rs::fnv1a64_known_vectors and
+    the validation failures disk.rs rejects (short file, bad magic,
+    wrong version, length mismatch, bit rot);
+  * the disk tier's oldest-stamp budget expiry;
+  * eviction-order parity: the indexed O(log n) `enforce()` (running
+    byte totals + age-ordered set) produces the exact same spill and
+    expiry sequence as the original O(n^2) re-sum-and-rescan loop it
+    replaced, over thousands of randomized access rounds — the same
+    property session.rs::enforce_matches_naive_reference_implementation
+    pins in-process.
+
+Run: python3 python/tests/mirror_session_store.py
+"""
+
+import random
+import struct
+
+MAGIC = 0x4B4146464449534B  # "KAFFDISK" digits, mirrors DISK_MAGIC
+VERSION = 1
+HEADER_BYTES = 48
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h = ((h ^ b) * 0x100000001B3) & MASK64
+    return h
+
+
+def pack_envelope(sid: int, stamp: int, payload: bytes) -> bytes:
+    return struct.pack(
+        "<6Q", MAGIC, VERSION, sid, stamp, len(payload), fnv1a64(payload)
+    ) + payload
+
+
+def validate_envelope(blob: bytes):
+    """Mirror of disk.rs::validate_envelope: (id, stamp) or ValueError."""
+    if len(blob) < HEADER_BYTES:
+        raise ValueError("shorter than header")
+    magic, version, sid, stamp, length, want = struct.unpack(
+        "<6Q", blob[:HEADER_BYTES]
+    )
+    if magic != MAGIC:
+        raise ValueError("bad magic")
+    if version != VERSION:
+        raise ValueError("unsupported version")
+    if len(blob) - HEADER_BYTES != length:
+        raise ValueError("length mismatch (torn write?)")
+    if fnv1a64(blob[HEADER_BYTES:]) != want:
+        raise ValueError("checksum mismatch")
+    return sid, stamp
+
+
+def test_fnv_vectors():
+    assert fnv1a64(b"") == 0xCBF29CE484222325
+    assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_envelope_roundtrip_and_rejections():
+    payload = bytes(range(200)) * 3
+    blob = pack_envelope(42, 7, payload)
+    assert len(blob) == HEADER_BYTES + len(payload)
+    assert validate_envelope(blob) == (42, 7)
+
+    def rejected(mutant, why):
+        try:
+            validate_envelope(mutant)
+        except ValueError as e:
+            assert why in str(e), (why, e)
+        else:
+            raise AssertionError(f"accepted a {why} envelope")
+
+    rejected(blob[:30], "shorter")
+    rejected(blob[:-10], "torn")                      # truncated payload
+    rejected(blob + b"\0", "torn")                    # grown payload
+    rejected(b"\0" + blob[1:], "magic")
+    rejected(blob[:8] + struct.pack("<Q", 2) + blob[16:], "version")
+    flipped = bytearray(blob)
+    flipped[HEADER_BYTES + 5] ^= 0xFF                 # bit rot
+    rejected(bytes(flipped), "checksum")
+
+
+class DiskTierMirror:
+    """disk.rs budget semantics: oldest stamp expires past the budget."""
+
+    def __init__(self, budget):
+        self.budget = budget
+        self.index = {}  # id -> (stamp, bytes)
+
+    def put(self, sid, stamp, nbytes):
+        self.index[sid] = (stamp, HEADER_BYTES + nbytes)
+        expired = 0
+        while sum(b for _, b in self.index.values()) > self.budget:
+            victim = min(self.index, key=lambda i: self.index[i][0])
+            del self.index[victim]
+            expired += 1
+        return expired
+
+
+def test_disk_budget_expires_oldest():
+    # Mirrors disk.rs::budget_expires_oldest_stamp_first (100-byte
+    # envelopes, 250-byte budget).
+    t = DiskTierMirror(250)
+    assert t.put(1, 10, 52) == 0
+    assert t.put(2, 11, 52) == 0
+    assert t.put(3, 12, 52) == 1
+    assert sorted(t.index) == [2, 3]
+    assert t.put(3, 13, 52) == 0  # rewrite replaces, not duplicates
+
+
+class NaiveStore:
+    """The original session.rs::enforce(): full re-sum + linear rescan
+    per victim (the O(n^2) shape the PR replaces), transcribed from the
+    pre-PR source."""
+
+    def __init__(self, budget, max_live, cold_budget):
+        self.budget, self.max_live = budget, max_live
+        self.cold_budget = cold_budget
+        self.live = {}  # id -> [last_used, bytes]
+        self.cold = {}  # id -> (stamp, bytes)
+        self.clock = 0
+        self.spilled = []
+        self.expired = []
+
+    def access(self, sid, nbytes):
+        self.clock += 1
+        if sid in self.live:
+            self.live[sid][0] = self.clock
+            self.live[sid][1] += nbytes
+        else:
+            self.cold.pop(sid, None)  # restore is also an access
+            self.live[sid] = [self.clock, nbytes]
+
+    def enforce(self):
+        while len(self.live) > 1 and (
+            len(self.live) > self.max_live
+            or sum(b for _, b in self.live.values()) > self.budget
+        ):
+            victim = min(self.live, key=lambda i: self.live[i][0])
+            nbytes = self.live.pop(victim)[1]
+            self.clock += 1
+            self.cold[victim] = (self.clock, nbytes)
+            self.spilled.append(victim)
+        while self.cold and (
+            sum(b for _, b in self.cold.values()) > self.cold_budget
+        ):
+            victim = min(self.cold, key=lambda i: self.cold[i][0])
+            del self.cold[victim]
+            self.expired.append(victim)
+
+
+class IndexedStore(NaiveStore):
+    """The PR's enforce(): running byte totals + an age-sorted index,
+    no rescans. Stamps are unique and strictly increasing, so popping
+    the index front must pick the same victims the naive min-scan
+    picks."""
+
+    def __init__(self, budget, max_live, cold_budget):
+        super().__init__(budget, max_live, cold_budget)
+        self.live_order = []  # sorted [(stamp, id)] ~ BTreeSet
+        self.cold_order = []
+        self.live_total = 0
+        self.cold_total = 0
+
+    def _reinsert(self, order, stamp, sid):
+        order[:] = [(s, i) for s, i in order if i != sid]
+        lo, hi = 0, len(order)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if order[mid] < (stamp, sid):
+                lo = mid + 1
+            else:
+                hi = mid
+        order.insert(lo, (stamp, sid))
+
+    def access(self, sid, nbytes):
+        self.clock += 1
+        if sid in self.live:
+            self.live[sid][0] = self.clock
+            self.live[sid][1] += nbytes
+            self.live_total += nbytes
+        else:
+            if sid in self.cold:
+                _, b = self.cold.pop(sid)
+                self.cold_order = [
+                    (s, i) for s, i in self.cold_order if i != sid
+                ]
+                self.cold_total -= b
+            self.live[sid] = [self.clock, nbytes]
+            self.live_total += nbytes
+        self._reinsert(self.live_order, self.clock, sid)
+
+    def enforce(self):
+        while len(self.live) > 1 and (
+            len(self.live) > self.max_live or self.live_total > self.budget
+        ):
+            _, victim = self.live_order.pop(0)
+            nbytes = self.live.pop(victim)[1]
+            self.live_total -= nbytes
+            self.clock += 1
+            self.cold[victim] = (self.clock, nbytes)
+            self._reinsert(self.cold_order, self.clock, victim)
+            self.cold_total += nbytes
+            self.spilled.append(victim)
+        while self.cold and self.cold_total > self.cold_budget:
+            _, victim = self.cold_order.pop(0)
+            _, nbytes = self.cold.pop(victim)
+            self.cold_total -= nbytes
+            self.expired.append(victim)
+
+
+def test_enforce_parity_indexed_vs_naive():
+    rng = random.Random(0xFEED)
+    for trial in range(20):
+        budget = rng.choice([64, 128, 256])
+        max_live = rng.choice([2, 3, 5])
+        cold_budget = rng.choice([0, 128, 512])
+        naive = NaiveStore(budget, max_live, cold_budget)
+        fast = IndexedStore(budget, max_live, cold_budget)
+        for _ in range(400):
+            sid = rng.randrange(12)
+            nbytes = 8 * rng.randrange(1, 5)
+            naive.access(sid, nbytes)
+            fast.access(sid, nbytes)
+            naive.enforce()
+            fast.enforce()
+            assert fast.live_total == sum(
+                b for _, b in fast.live.values()
+            ), "running live total drifted"
+            assert fast.cold_total == sum(
+                b for _, b in fast.cold.values()
+            ), "running cold total drifted"
+            # Exact same victims, in the exact same order.
+            assert fast.spilled == naive.spilled, trial
+            assert fast.expired == naive.expired, trial
+            assert fast.live.keys() == naive.live.keys()
+            assert fast.cold.keys() == naive.cold.keys()
+        assert len(naive.spilled) > 50, "workload never saturated"
+
+
+def main():
+    test_fnv_vectors()
+    test_envelope_roundtrip_and_rejections()
+    test_disk_budget_expires_oldest()
+    test_enforce_parity_indexed_vs_naive()
+    print("mirror_session_store: all mirrors agree")
+
+
+if __name__ == "__main__":
+    main()

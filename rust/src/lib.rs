@@ -12,10 +12,17 @@
 //!     for simulation studies and cross-validation of the artifacts;
 //!   * `streaming` is the serving-side decode subsystem: the (S, z)
 //!     recurrence over kernelized attention with a windowed causal RPE
-//!     (`streaming::state`, `streaming::engine`) plus per-session
-//!     caches with LRU spill/restore (`streaming::session`), wired
-//!     into `coordinator::decode` (streaming greedy decode) and
-//!     `coordinator::server` (the streaming request path);
+//!     (`streaming::state`, `streaming::engine`, with `step_into` +
+//!     `StepScratch` as the allocation-free per-token form), a
+//!     three-tier session hierarchy — live decoders, in-memory cold
+//!     snapshots, and an optional durable disk tier of versioned
+//!     envelope files (`streaming::session`, `streaming::disk`; every
+//!     tier byte-budgeted, O(log n) eviction) — and token-granularity
+//!     continuous batching (`streaming::batch`: lanes vacate and
+//!     admit between step cycles, occupancy/admit/evict counters in
+//!     the telemetry snapshot), wired into `coordinator::decode`
+//!     (streaming greedy decode) and `coordinator::server` (the
+//!     streaming request + `submit_decode` batched-decode paths);
 //!   * `engine` is the batched attention engine shared by the serving
 //!     paths: `engine::PlanCache` amortizes each layer's Toeplitz
 //!     spectrum + twiddle tables across requests (keyed by length,

@@ -7,6 +7,9 @@
 //!   kafft exp all                     everything (long)
 //!   kafft serve [--requests N]        demo the batched LM server
 //!   kafft serve --sessions N --streaming   demo the streaming server
+//!                                     (--slots N --static-batch
+//!                                     --session-dir DIR --disk-budget-mb N
+//!                                     --resume continue persisted sessions)
 //!   kafft decode [--gen N] [--streaming]   CPU greedy decode; with
 //!                                     --streaming, O(1)/token stepping
 //!                                     cross-validated vs re-forward
@@ -91,7 +94,11 @@ fn dispatch(args: &Args) -> Result<()> {
                  \u{20}  serve --sessions N --streaming  streaming decode server demo\n\
                  \u{20}                             (--workers N --cache-mb MB\n\
                  \u{20}                             --batch-requests N share one\n\
-                 \u{20}                             plan cache per model)\n\
+                 \u{20}                             plan cache per model;\n\
+                 \u{20}                             --slots N --static-batch set the\n\
+                 \u{20}                             continuous batcher; --session-dir DIR\n\
+                 \u{20}                             --disk-budget-mb N persist sessions,\n\
+                 \u{20}                             --resume continues them)\n\
                  \u{20}  decode [--streaming]       CPU greedy decode (--prompt-len --gen\n\
                  \u{20}                             --kind --vocab); --streaming uses the\n\
                  \u{20}                             O(1)/token recurrence and cross-\n\
@@ -285,54 +292,104 @@ fn serve(args: &Args) -> Result<()> {
 fn streaming_serve(args: &Args) -> Result<()> {
     use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
 
+    use kafft::streaming::Origin;
+
     let sessions = args.get_usize("sessions", 8);
     let gen = args.get_usize("gen", 32);
     let prompt_len = args.get_usize("prompt-len", 16);
     let batch_requests = args.get_usize("batch-requests", 0);
+    let resume = args.has_flag("resume");
+    // max_len leaves headroom beyond prompt + gen so a --resume run
+    // against a populated --session-dir can keep extending the same
+    // sessions (probe token + another generation burst).
+    let max_len = prompt_len + 2 * gen + 2;
     let cfg = StreamingServerConfig {
-        max_len: prompt_len + gen,
-        window: args.get_usize("window", prompt_len + gen),
+        max_len,
+        window: args.get_usize("window", max_len),
         max_live: args.get_usize("max-live", 4),
         seed: args.get_u64("seed", 0),
         workers: args.get_usize("workers", 0),
         plan_cache_bytes: args.get_usize("cache-mb", 64) << 20,
+        batch_slots: args.get_usize("slots", 4),
+        continuous: !args.has_flag("static-batch"),
+        session_dir: args.get("session-dir").map(Into::into),
+        disk_budget_bytes: args.get_usize("disk-budget-mb", 256) << 20,
         ..StreamingServerConfig::default()
     };
     let vocab = cfg.vocab;
     info!(
         "streaming server: {sessions} sessions x ({prompt_len} prompt + \
-         {gen} gen), window={}, max_live={}, workers={}, plan cache {} MiB",
+         {gen} gen), window={}, max_live={}, workers={}, plan cache {} MiB, \
+         slots={} ({}), session dir: {}",
         cfg.window,
         cfg.max_live,
         if cfg.workers == 0 { "auto".to_string() } else { cfg.workers.to_string() },
-        cfg.plan_cache_bytes >> 20
+        cfg.plan_cache_bytes >> 20,
+        cfg.batch_slots,
+        if cfg.continuous { "continuous" } else { "static" },
+        cfg.session_dir
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| "none".to_string())
     );
     let server = StreamingServer::start(cfg)?;
     let mut rng = Rng::new(11);
     let t0 = std::time::Instant::now();
-    // Interleave the sessions round-robin so LRU spill/restore is
-    // genuinely exercised when --max-live < --sessions.
-    let mut sess: Vec<(Vec<f32>, usize)> = Vec::new();
-    for s in 0..sessions {
-        let prompt: Vec<i32> = (0..prompt_len)
-            .map(|_| rng.below_usize(vocab) as i32)
-            .collect();
-        let resp = server
-            .submit(s as u64 + 1, prompt)?
-            .recv()?
-            .map_err(|e| anyhow::anyhow!(e))?;
-        sess.push((resp.next_logits, resp.positions));
-    }
-    for _ in 0..gen {
+    if !resume {
+        // Interleave the sessions round-robin so LRU spill/restore is
+        // genuinely exercised when --max-live < --sessions.
+        let mut sess: Vec<(Vec<f32>, usize)> = Vec::new();
         for s in 0..sessions {
-            let next =
-                kafft::coordinator::decode::argmax(&sess[s].0) as i32;
+            let prompt: Vec<i32> = (0..prompt_len)
+                .map(|_| rng.below_usize(vocab) as i32)
+                .collect();
             let resp = server
-                .submit_at(s as u64 + 1, vec![next], sess[s].1)?
+                .submit(s as u64 + 1, prompt)?
                 .recv()?
                 .map_err(|e| anyhow::anyhow!(e))?;
-            sess[s] = (resp.next_logits, resp.positions);
+            sess.push((resp.next_logits, resp.positions));
         }
+        for _ in 0..gen {
+            for s in 0..sessions {
+                let next =
+                    kafft::coordinator::decode::argmax(&sess[s].0) as i32;
+                let resp = server
+                    .submit_at(s as u64 + 1, vec![next], sess[s].1)?
+                    .recv()?
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                sess[s] = (resp.next_logits, resp.positions);
+            }
+        }
+    }
+    // Decode burst through the continuous batcher (ids 1001..): mixed
+    // generation lengths, so lanes free at different times and the
+    // occupancy numbers printed below mean something. On --resume the
+    // same ids come back from --session-dir and continue from a probe
+    // token instead of a fresh prompt.
+    let mut rxs = Vec::new();
+    for s in 0..sessions {
+        let id = 1000 + s as u64 + 1;
+        let gen_s = if s % 2 == 0 { gen } else { gen / 4 + 1 };
+        let tokens: Vec<i32> = if resume {
+            vec![rng.below_usize(vocab) as i32]
+        } else {
+            (0..prompt_len)
+                .map(|_| rng.below_usize(vocab) as i32)
+                .collect()
+        };
+        rxs.push(server.submit_decode(id, tokens, gen_s)?);
+    }
+    let mut restored = 0usize;
+    for rx in rxs {
+        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        if resp.origin == Origin::Restored {
+            restored += 1;
+        }
+    }
+    if resume && restored == 0 {
+        anyhow::bail!(
+            "--resume found no restorable sessions in --session-dir"
+        );
     }
     // Decode throughput is measured before the batch leg so the two
     // workloads don't pollute each other's wall clock.
@@ -382,6 +439,26 @@ fn streaming_serve(args: &Args) -> Result<()> {
         stats.batch_requests
     );
     let tel = &stats.telemetry;
+    let occ = &tel.batch_occupancy;
+    println!(
+        "continuous batching: {} decode requests (restored={restored}), \
+         admits={} evicts={}, mean occupancy {:.2} over {} cycles",
+        stats.decode_requests,
+        tel.admits,
+        tel.evicts,
+        if occ.count > 0 {
+            occ.sum as f64 / occ.count as f64
+        } else {
+            0.0
+        },
+        occ.count
+    );
+    if let Some(ss) = &tel.session_store {
+        println!(
+            "disk tier: writes={} reads={} expired={} corrupt={}",
+            ss.disk_writes, ss.disk_reads, ss.disk_expired, ss.disk_corrupt
+        );
+    }
     println!(
         "stage p95 (us): {}",
         tel.stages

@@ -1,0 +1,360 @@
+//! Token-granularity continuous batching.
+//!
+//! The paper's recurrence makes per-session decode state tiny — the
+//! (S, z) tail accumulators plus a W-row ring — so swapping a request
+//! in or out of an in-flight batch between steps costs one snapshot or
+//! restore through the `SessionStore`, not a prefill. `Batcher` tracks
+//! which sessions occupy the batch lanes and swaps finished or
+//! newly-arrived requests at step boundaries:
+//!
+//! - **Continuous** admission fills any free lane the moment a request
+//!   is waiting, so a long request no longer pins the batch to its own
+//!   length while short ones queue outside.
+//! - **Static** admission (the old behavior, kept for comparison and
+//!   as a CLI escape hatch) only admits when the batch is empty, so
+//!   the lane set is fixed for the lifetime of the batch.
+//!
+//! The batcher owns scheduling only. Model math stays behind the two
+//! closures (`admit`'s prefill and `step_cycle`'s step), which keeps
+//! this file free of engine dependencies and lets unit tests drive it
+//! with toy functions. Occupancy and admit/evict counts accumulate in
+//! [`BatchCounters`]; the server exports them through the telemetry
+//! snapshot so the occupancy win is measurable, not anecdotal.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::session::Origin;
+
+/// When a pending request may take a free lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Fill free lanes whenever work is pending (token granularity).
+    Continuous,
+    /// Only admit into an empty batch; lanes stay fixed until every
+    /// member finishes.
+    Static,
+}
+
+/// A decode request waiting for (or occupying) a batch lane. `R` is
+/// the caller's reply handle, threaded through untouched.
+pub struct DecodeJob<R> {
+    pub session: u64,
+    /// Prompt tokens to feed before generation (required non-empty for
+    /// fresh sessions; the server validates).
+    pub tokens: Vec<i32>,
+    /// How many tokens to generate after the prompt.
+    pub gen: usize,
+    pub enqueued: Instant,
+    pub reply: R,
+}
+
+/// An occupied batch lane: the job plus its decode progress.
+pub struct Lane<R> {
+    pub job: DecodeJob<R>,
+    /// Tokens generated so far (greedy argmax over `logits`).
+    pub generated: Vec<i32>,
+    /// Logits after the last consumed token — the seed for the next
+    /// step, and handed back to the caller at finish so a follow-up
+    /// request can continue without re-running the model.
+    pub logits: Vec<f32>,
+    /// Decoder position after the last step.
+    pub positions: usize,
+    /// Where the session came from at admit time.
+    pub origin: Origin,
+}
+
+/// Scheduling counters, exported via the telemetry snapshot.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BatchCounters {
+    /// Requests that took a lane.
+    pub admitted: u64,
+    /// Lanes vacated (finished or failed) — each one is a slot a
+    /// waiting request can take mid-batch under `Continuous`.
+    pub evicted: u64,
+    /// Step cycles run.
+    pub cycles: u64,
+    /// Sum of lane occupancy over cycles; mean occupancy is
+    /// `occupancy_sum / cycles`.
+    pub occupancy_sum: u64,
+}
+
+pub struct Batcher<R> {
+    slots: usize,
+    admission: Admission,
+    lanes: Vec<Lane<R>>,
+    pending: VecDeque<DecodeJob<R>>,
+    pub counters: BatchCounters,
+}
+
+impl<R> Batcher<R> {
+    pub fn new(slots: usize, admission: Admission) -> Batcher<R> {
+        Batcher {
+            slots: slots.max(1),
+            admission,
+            lanes: Vec::new(),
+            pending: VecDeque::new(),
+            counters: BatchCounters::default(),
+        }
+    }
+
+    pub fn enqueue(&mut self, job: DecodeJob<R>) {
+        self.pending.push_back(job);
+    }
+
+    /// Lanes currently occupied.
+    pub fn occupancy(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when there is nothing in flight and nothing waiting — the
+    /// server blocks on its channel instead of spinning.
+    pub fn idle(&self) -> bool {
+        self.lanes.is_empty() && self.pending.is_empty()
+    }
+
+    /// Move pending requests into free lanes. `prefill` feeds a job's
+    /// prompt through the model and returns the post-prompt logits,
+    /// decoder position, and session origin.
+    ///
+    /// Returns lanes that completed *at admit* (gen == 0: the caller
+    /// only wanted the post-prompt logits) and jobs whose prefill
+    /// failed, so the server can reply without waiting for a cycle.
+    pub fn admit<F>(&mut self, mut prefill: F)
+                    -> (Vec<Lane<R>>, Vec<(DecodeJob<R>, String)>)
+    where
+        F: FnMut(&DecodeJob<R>) -> anyhow::Result<(Vec<f32>, usize, Origin)>,
+    {
+        let mut done = Vec::new();
+        let mut failed = Vec::new();
+        if self.admission == Admission::Static && !self.lanes.is_empty() {
+            return (done, failed);
+        }
+        while self.lanes.len() < self.slots {
+            let Some(job) = self.pending.pop_front() else { break };
+            match prefill(&job) {
+                Ok((logits, positions, origin)) => {
+                    self.counters.admitted += 1;
+                    let lane = Lane {
+                        job,
+                        generated: Vec::new(),
+                        logits,
+                        positions,
+                        origin,
+                    };
+                    if lane.job.gen == 0 {
+                        self.counters.evicted += 1;
+                        done.push(lane);
+                    } else {
+                        self.lanes.push(lane);
+                    }
+                }
+                Err(e) => failed.push((job, format!("{e:#}"))),
+            }
+        }
+        (done, failed)
+    }
+
+    /// Run one decode step across every occupied lane: greedy-pick the
+    /// next token from each lane's logits, feed it through `step`
+    /// (which writes the new logits back into the lane's buffer and
+    /// returns the decoder position), and vacate lanes that finished
+    /// or failed.
+    ///
+    /// Returns the vacated lanes paired with `None` (finished) or
+    /// `Some(error)`. Freed slots are refillable by the next `admit` —
+    /// that mid-batch handoff is the whole point of continuous mode.
+    pub fn step_cycle<F>(&mut self, mut step: F) -> Vec<(Lane<R>, Option<String>)>
+    where
+        F: FnMut(u64, i32, &mut Vec<f32>) -> anyhow::Result<usize>,
+    {
+        if self.lanes.is_empty() {
+            return Vec::new();
+        }
+        self.counters.cycles += 1;
+        self.counters.occupancy_sum += self.lanes.len() as u64;
+        let mut vacated = Vec::new();
+        let mut i = 0;
+        while i < self.lanes.len() {
+            let lane = &mut self.lanes[i];
+            let token = argmax(&lane.logits) as i32;
+            match step(lane.job.session, token, &mut lane.logits) {
+                Ok(positions) => {
+                    lane.generated.push(token);
+                    lane.positions = positions;
+                    if lane.generated.len() >= lane.job.gen {
+                        self.counters.evicted += 1;
+                        vacated.push((self.lanes.swap_remove(i), None));
+                    } else {
+                        i += 1;
+                    }
+                }
+                Err(e) => {
+                    self.counters.evicted += 1;
+                    let msg = format!("{e:#}");
+                    vacated.push((self.lanes.swap_remove(i), Some(msg)));
+                }
+            }
+        }
+        vacated
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut val = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > val {
+            val = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(session: u64, gen: usize) -> DecodeJob<()> {
+        DecodeJob {
+            session,
+            tokens: vec![1],
+            gen,
+            enqueued: Instant::now(),
+            reply: (),
+        }
+    }
+
+    /// Prefill stub: logits favor token = session id (mod 4).
+    fn fake_prefill(j: &DecodeJob<()>)
+                    -> anyhow::Result<(Vec<f32>, usize, Origin)> {
+        let mut logits = vec![0.0f32; 4];
+        logits[(j.session % 4) as usize] = 1.0;
+        Ok((logits, j.tokens.len(), Origin::Created))
+    }
+
+    #[test]
+    fn continuous_backfills_freed_lanes_mid_batch() {
+        let mut b: Batcher<()> = Batcher::new(2, Admission::Continuous);
+        b.enqueue(job(0, 1)); // finishes after 1 cycle
+        b.enqueue(job(1, 3)); // runs 3 cycles
+        b.enqueue(job(2, 1)); // waits, then takes 0's lane
+        let (done, failed) = b.admit(fake_prefill);
+        assert!(done.is_empty() && failed.is_empty());
+        assert_eq!(b.occupancy(), 2);
+        assert_eq!(b.pending_len(), 1);
+
+        let fin = b.step_cycle(|_, tok, logits| {
+            // Keep preferring the same token; position just grows.
+            logits.iter_mut().for_each(|x| *x = 0.0);
+            logits[tok as usize % 4] = 1.0;
+            Ok(1)
+        });
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].0.job.session, 0);
+        assert_eq!(fin[0].0.generated, vec![0]);
+
+        // The freed lane backfills immediately — session 1 still has
+        // two cycles left, so the batch stays full.
+        let _ = b.admit(fake_prefill);
+        assert_eq!(b.occupancy(), 2);
+        assert_eq!(b.pending_len(), 0);
+
+        let mut finished = Vec::new();
+        while !b.idle() {
+            for (lane, err) in b.step_cycle(|_, tok, logits| {
+                logits.iter_mut().for_each(|x| *x = 0.0);
+                logits[tok as usize % 4] = 1.0;
+                Ok(1)
+            }) {
+                assert!(err.is_none());
+                finished.push(lane.job.session);
+            }
+        }
+        finished.sort_unstable();
+        assert_eq!(finished, vec![1, 2]);
+        assert_eq!(b.counters.admitted, 3);
+        assert_eq!(b.counters.evicted, 3);
+        // Cycles 1-3 all ran with both lanes occupied.
+        assert_eq!(b.counters.cycles, 3);
+        assert_eq!(b.counters.occupancy_sum, 6);
+    }
+
+    #[test]
+    fn static_admission_waits_for_an_empty_batch() {
+        let mut b: Batcher<()> = Batcher::new(2, Admission::Static);
+        b.enqueue(job(0, 1));
+        b.enqueue(job(1, 2));
+        b.enqueue(job(2, 1));
+        b.admit(fake_prefill);
+        assert_eq!(b.occupancy(), 2);
+        b.step_cycle(|_, _, _| Ok(1)); // session 0 finishes
+        assert_eq!(b.occupancy(), 1);
+        // A lane is free but the batch is not empty: static refuses.
+        b.admit(fake_prefill);
+        assert_eq!(b.occupancy(), 1);
+        assert_eq!(b.pending_len(), 1);
+        b.step_cycle(|_, _, _| Ok(1)); // session 1 finishes, batch empty
+        b.admit(fake_prefill);
+        assert_eq!(b.occupancy(), 1);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn gen_zero_completes_at_admit() {
+        let mut b: Batcher<()> = Batcher::new(2, Admission::Continuous);
+        b.enqueue(job(7, 0));
+        let (done, failed) = b.admit(fake_prefill);
+        assert_eq!(done.len(), 1);
+        assert!(failed.is_empty());
+        assert_eq!(done[0].job.session, 7);
+        assert!(done[0].generated.is_empty());
+        assert_eq!(done[0].logits[3], 1.0); // 7 % 4
+        assert!(b.idle());
+        assert_eq!(b.counters.admitted, 1);
+        assert_eq!(b.counters.evicted, 1);
+    }
+
+    #[test]
+    fn prefill_failure_reports_without_occupying_a_lane() {
+        let mut b: Batcher<()> = Batcher::new(2, Admission::Continuous);
+        b.enqueue(job(1, 2));
+        b.enqueue(job(2, 2));
+        let (done, failed) = b.admit(|j| {
+            if j.session == 1 {
+                anyhow::bail!("prompt too long")
+            }
+            fake_prefill(j)
+        });
+        assert!(done.is_empty());
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].0.session, 1);
+        assert!(failed[0].1.contains("prompt too long"));
+        assert_eq!(b.occupancy(), 1);
+        assert_eq!(b.counters.admitted, 1);
+    }
+
+    #[test]
+    fn step_error_vacates_the_lane() {
+        let mut b: Batcher<()> = Batcher::new(2, Admission::Continuous);
+        b.enqueue(job(1, 5));
+        b.enqueue(job(2, 5));
+        b.admit(fake_prefill);
+        let fin = b.step_cycle(|session, _, _| {
+            if session == 1 {
+                anyhow::bail!("poisoned state")
+            }
+            Ok(1)
+        });
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].0.job.session, 1);
+        assert!(fin[0].1.as_deref().unwrap().contains("poisoned state"));
+        assert_eq!(b.occupancy(), 1);
+        assert_eq!(b.counters.evicted, 1);
+    }
+}

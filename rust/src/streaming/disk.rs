@@ -1,0 +1,386 @@
+//! Durable on-disk session tier: one versioned envelope file per
+//! session below the in-memory cold map.
+//!
+//! Cold snapshots page out here under the cold byte budget and survive
+//! a process restart — the serving property the (S, z) recurrence makes
+//! cheap, since a whole session is a few KB of accumulator + ring-buffer
+//! state rather than a full KV cache. Design choices:
+//!
+//!   * **Single file per session** (not a shared log or partial
+//!     updates): a session snapshot is small and rewritten whole, so
+//!     the single-file trade-off — simple atomicity, no compaction — is
+//!     the right side of the ledger here.
+//!   * **Versioned envelope**: a fixed header (magic, schema version,
+//!     session id, age stamp, payload length, checksum) in front of the
+//!     opaque `StreamingDecoder::snapshot` payload, so a reader can
+//!     reject foreign files, torn writes, and future schema revisions
+//!     without parsing the payload. The layout is recorded in
+//!     `engine/README.md` next to the `kafft.metrics` schema notes.
+//!   * **Temp file + atomic rename**: a crashed write leaves a `.tmp`
+//!     straggler (removed at the next `open`), never a truncated
+//!     envelope under the live name. `fsync` is deliberately omitted:
+//!     the tier targets process-restart durability, not power-loss
+//!     durability.
+//!
+//! A `DiskTier` is single-owner (the store that holds it); two stores
+//! must not share one directory.
+
+use std::collections::{BTreeSet, HashMap};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Envelope magic: "KAFFDISK" as a little-endian u64.
+pub const DISK_MAGIC: u64 = 0x4b41_4646_4449_534b;
+/// Bumped on any envelope layout change.
+pub const DISK_VERSION: u64 = 1;
+/// Fixed header: magic, version, session id, stamp, payload len,
+/// FNV-1a checksum — six little-endian u64s.
+pub const HEADER_BYTES: usize = 48;
+
+/// FNV-1a 64-bit over the payload. Not cryptographic — it detects torn
+/// writes and bit rot, which is all the envelope promises.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct DiskMeta {
+    stamp: u64,
+    bytes: usize,
+}
+
+/// The on-disk session tier: an index over one envelope file per
+/// session, with oldest-stamp expiry beyond `budget_bytes`. The index
+/// is rebuilt by scanning the directory at `open`, so the tier needs no
+/// separate manifest file to recover after a restart.
+pub struct DiskTier {
+    dir: PathBuf,
+    budget_bytes: usize,
+    index: HashMap<u64, DiskMeta>,
+    /// Age order over `index`: (stamp, id). Stamps come from the
+    /// store's logical clock, which is strictly increasing, so the
+    /// first element is always the unique oldest session.
+    order: BTreeSet<(u64, u64)>,
+    total_bytes: usize,
+    /// Files discarded during `open` because their envelope was torn,
+    /// foreign, or mismatched its filename.
+    pub scan_rejected: usize,
+}
+
+fn session_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("sess-{id:016x}.kafft"))
+}
+
+fn parse_session_name(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("sess-")?.strip_suffix(".kafft")?;
+    if hex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+/// Validate a whole envelope file; returns the header's (id, stamp).
+fn validate_envelope(bytes: &[u8]) -> Result<(u64, u64)> {
+    if bytes.len() < HEADER_BYTES {
+        bail!("envelope: {} bytes, shorter than the header", bytes.len());
+    }
+    let word = |i: usize| {
+        u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap())
+    };
+    if word(0) != DISK_MAGIC {
+        bail!("envelope: bad magic {:#018x}", word(0));
+    }
+    if word(1) != DISK_VERSION {
+        bail!("envelope: unsupported version {}", word(1));
+    }
+    let (id, stamp, len, sum) = (word(2), word(3), word(4), word(5));
+    if bytes.len() - HEADER_BYTES != len as usize {
+        bail!(
+            "envelope: payload length {} != header claim {len} (torn write?)",
+            bytes.len() - HEADER_BYTES
+        );
+    }
+    if fnv1a64(&bytes[HEADER_BYTES..]) != sum {
+        bail!("envelope: checksum mismatch (corrupt payload)");
+    }
+    Ok((id, stamp))
+}
+
+impl DiskTier {
+    /// Open (creating if needed) a session directory and rebuild the
+    /// index by scanning it. Leftover `.tmp` stragglers from a crashed
+    /// write are removed; envelopes that fail validation are removed
+    /// and counted in `scan_rejected` — a corrupt file must not wedge
+    /// the tier forever.
+    pub fn open(dir: impl Into<PathBuf>, budget_bytes: usize) -> Result<DiskTier> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("session dir {}", dir.display()))?;
+        let mut tier = DiskTier {
+            dir,
+            budget_bytes,
+            index: HashMap::new(),
+            order: BTreeSet::new(),
+            total_bytes: 0,
+            scan_rejected: 0,
+        };
+        for entry in fs::read_dir(&tier.dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if name.ends_with(".tmp") {
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            let Some(file_id) = parse_session_name(name) else {
+                continue; // not ours; leave it alone
+            };
+            let ok = fs::read(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|bytes| {
+                    let (id, stamp) = validate_envelope(&bytes)?;
+                    Ok((id, stamp, bytes.len()))
+                })
+                .ok()
+                .filter(|&(id, _, _)| id == file_id);
+            match ok {
+                Some((id, stamp, bytes)) => {
+                    tier.order.insert((stamp, id));
+                    tier.index.insert(id, DiskMeta { stamp, bytes });
+                    tier.total_bytes += bytes;
+                }
+                None => {
+                    let _ = fs::remove_file(&path);
+                    tier.scan_rejected += 1;
+                }
+            }
+        }
+        Ok(tier)
+    }
+
+    pub fn count(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Newest stamp on disk (0 when empty) — the store folds this into
+    /// its logical clock at attach time so stamps stay unique across
+    /// restarts.
+    pub fn max_stamp(&self) -> u64 {
+        self.order.iter().next_back().map(|&(s, _)| s).unwrap_or(0)
+    }
+
+    /// Write a session envelope via temp file + atomic rename, then
+    /// expire oldest-stamped sessions beyond the byte budget. Returns
+    /// how many sessions the budget expired (possibly including the
+    /// one just written, matching the cold map's budget-zero
+    /// semantics).
+    pub fn put(&mut self, id: u64, stamp: u64, payload: &[u8]) -> Result<usize> {
+        let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+        for word in [
+            DISK_MAGIC,
+            DISK_VERSION,
+            id,
+            stamp,
+            payload.len() as u64,
+            fnv1a64(payload),
+        ] {
+            buf.extend(word.to_le_bytes());
+        }
+        buf.extend(payload);
+        let path = session_path(&self.dir, id);
+        let tmp = path.with_extension("kafft.tmp");
+        fs::write(&tmp, &buf)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        if let Some(old) = self.index.remove(&id) {
+            self.order.remove(&(old.stamp, id));
+            self.total_bytes -= old.bytes;
+        }
+        self.order.insert((stamp, id));
+        self.index.insert(id, DiskMeta { stamp, bytes: buf.len() });
+        self.total_bytes += buf.len();
+        let mut expired = 0;
+        while self.total_bytes > self.budget_bytes {
+            let Some(&(s, victim)) = self.order.iter().next() else { break };
+            self.remove_entry(victim, s);
+            expired += 1;
+        }
+        Ok(expired)
+    }
+
+    /// Read and fully validate a session envelope, leaving the file in
+    /// place (the caller removes it after a successful decoder
+    /// restore). `Ok(None)` when the session is not on disk; a corrupt
+    /// envelope is deleted from the tier and reported as `Err` so the
+    /// caller can fall back to a fresh session.
+    pub fn load(&mut self, id: u64) -> Result<Option<Vec<u8>>> {
+        let Some(meta) = self.index.get(&id) else {
+            return Ok(None);
+        };
+        let stamp = meta.stamp;
+        let path = session_path(&self.dir, id);
+        let outcome = fs::read(&path)
+            .map_err(anyhow::Error::from)
+            .and_then(|bytes| {
+                let (env_id, _) = validate_envelope(&bytes)?;
+                if env_id != id {
+                    bail!("envelope: holds session {env_id}, expected {id}");
+                }
+                Ok(bytes[HEADER_BYTES..].to_vec())
+            });
+        match outcome {
+            Ok(payload) => Ok(Some(payload)),
+            Err(e) => {
+                self.remove_entry(id, stamp);
+                Err(e.context(format!("session {id} disk envelope")))
+            }
+        }
+    }
+
+    /// Drop a session's envelope (no-op when absent).
+    pub fn remove(&mut self, id: u64) {
+        if let Some(meta) = self.index.get(&id) {
+            let stamp = meta.stamp;
+            self.remove_entry(id, stamp);
+        }
+    }
+
+    fn remove_entry(&mut self, id: u64, stamp: u64) {
+        if let Some(meta) = self.index.remove(&id) {
+            self.order.remove(&(stamp, id));
+            self.total_bytes -= meta.bytes;
+            let _ = fs::remove_file(session_path(&self.dir, id));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("kafft-disk-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Reference values for the standard FNV-1a 64 parameters —
+        // mirrored byte for byte by python/tests/mirror_session_store.py.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn put_load_roundtrip_and_reopen() {
+        let dir = tmpdir("roundtrip");
+        let payload = vec![7u8; 100];
+        {
+            let mut t = DiskTier::open(&dir, 1 << 20).unwrap();
+            assert_eq!(t.put(42, 5, &payload).unwrap(), 0);
+            assert!(t.contains(42));
+            assert_eq!(t.bytes(), HEADER_BYTES + payload.len());
+            assert_eq!(t.load(42).unwrap().unwrap(), payload);
+            // load leaves the file in place
+            assert!(t.contains(42));
+        }
+        // A fresh open rebuilds the index from the directory alone.
+        let mut t = DiskTier::open(&dir, 1 << 20).unwrap();
+        assert_eq!(t.count(), 1);
+        assert_eq!(t.max_stamp(), 5);
+        assert_eq!(t.load(42).unwrap().unwrap(), payload);
+        t.remove(42);
+        assert_eq!(t.count(), 0);
+        assert_eq!(t.bytes(), 0);
+        assert!(t.load(42).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_expires_oldest_stamp_first() {
+        let dir = tmpdir("budget");
+        let payload = vec![1u8; 52]; // 100-byte envelope
+        let mut t = DiskTier::open(&dir, 250).unwrap();
+        assert_eq!(t.put(1, 10, &payload).unwrap(), 0);
+        assert_eq!(t.put(2, 11, &payload).unwrap(), 0);
+        // Third write exceeds 250: the oldest (id 1) expires.
+        assert_eq!(t.put(3, 12, &payload).unwrap(), 1);
+        assert!(!t.contains(1) && t.contains(2) && t.contains(3));
+        assert_eq!(t.bytes(), 200);
+        // Rewriting an existing id replaces, not duplicates.
+        assert_eq!(t.put(3, 13, &payload).unwrap(), 0);
+        assert_eq!(t.count(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_scan_rejects_torn_and_foreign_files() {
+        let dir = tmpdir("scan");
+        {
+            let mut t = DiskTier::open(&dir, 1 << 20).unwrap();
+            t.put(1, 1, &[9u8; 64]).unwrap();
+            t.put(2, 2, &[9u8; 64]).unwrap();
+            t.put(3, 3, &[9u8; 64]).unwrap();
+        }
+        // Torn write: truncate one envelope mid-payload.
+        let p1 = session_path(&dir, 1);
+        let bytes = fs::read(&p1).unwrap();
+        fs::write(&p1, &bytes[..bytes.len() - 10]).unwrap();
+        // Bit rot: flip a payload byte of another.
+        let p2 = session_path(&dir, 2);
+        let mut bytes = fs::read(&p2).unwrap();
+        bytes[HEADER_BYTES + 5] ^= 0xff;
+        fs::write(&p2, &bytes).unwrap();
+        // Crashed-write straggler and an unrelated file.
+        fs::write(dir.join("sess-00000000000000ff.kafft.tmp"), b"junk").unwrap();
+        fs::write(dir.join("notes.txt"), b"unrelated").unwrap();
+
+        let mut t = DiskTier::open(&dir, 1 << 20).unwrap();
+        assert_eq!(t.scan_rejected, 2, "torn + corrupt removed");
+        assert_eq!(t.count(), 1);
+        assert!(t.load(3).unwrap().is_some());
+        assert!(!p1.exists() && !p2.exists(), "rejects deleted on scan");
+        assert!(!dir.join("sess-00000000000000ff.kafft.tmp").exists());
+        assert!(dir.join("notes.txt").exists(), "foreign files untouched");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_reports_and_drops_corruption_found_late() {
+        let dir = tmpdir("late");
+        let mut t = DiskTier::open(&dir, 1 << 20).unwrap();
+        t.put(9, 1, &[3u8; 80]).unwrap();
+        // Corrupt behind the live index's back (simulates rot between
+        // open and access).
+        let p = session_path(&dir, 9);
+        let mut bytes = fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        fs::write(&p, &bytes).unwrap();
+        assert!(t.load(9).is_err());
+        // The bad envelope is gone: the next access is a clean miss.
+        assert!(!t.contains(9));
+        assert!(t.load(9).unwrap().is_none());
+        assert!(!p.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -13,12 +13,12 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_features, kernel_features_into, nprf_rpe_fft_path,
-    nprf_rpe_fft_path_into, nprf_rpe_fft_path_traced, rpe_correlations, Kind,
+    kernel_features_into, nprf_rpe_fft_path, nprf_rpe_fft_path_into,
+    nprf_rpe_fft_path_traced, rpe_correlations, Kind,
 };
 use crate::engine::{PlanCache, Workspace};
 use crate::telemetry::{Stage, StageShard, StageTimer};
-use crate::tensor::Mat;
+use crate::tensor::{Arena, Mat};
 
 use super::state::DecoderState;
 
@@ -89,6 +89,24 @@ impl StreamSpec {
         }
         c
     }
+}
+
+/// Reusable buffers for the allocation-free [`StreamingDecoder::step_into`]
+/// hot path: per-head q/k staging rows, feature-map outputs, the dense
+/// arena behind them, and the f64 numerator scratch. One `StepScratch`
+/// per worker loop, shared across every session it steps — contents are
+/// scratch, never state, so sharing cannot change any output. All
+/// buffers are grow-only: after the first step at a given shape the
+/// step path never touches the allocator (gated in
+/// tests/soak_sessions.rs).
+#[derive(Debug, Default)]
+pub struct StepScratch {
+    row_q: Mat,
+    row_k: Mat,
+    phi_q: Mat,
+    phi_k: Mat,
+    dense: Arena,
+    num: Vec<f64>,
 }
 
 /// One decoding session: spec + recurrent state + position counter.
@@ -247,30 +265,47 @@ impl StreamingDecoder {
     /// `Kind`-aware incremental mirror of `attention::attend` for the
     /// last causal position.
     pub fn step(&mut self, q: &Mat, k: &Mat, v: &Mat) -> Result<Mat> {
+        let mut out = Mat::default();
+        let mut ws = StepScratch::default();
+        self.step_into(q, k, v, &mut out, &mut ws)?;
+        Ok(out)
+    }
+
+    /// [`Self::step`] into caller buffers. Same accumulation order as
+    /// `step` (which delegates here), so the two forms are bitwise
+    /// identical; with a warmed `StepScratch` and a saturated ring this
+    /// path performs zero heap allocations per token — the property the
+    /// continuous-batching worker relies on at thousands of sessions.
+    pub fn step_into(&mut self, q: &Mat, k: &Mat, v: &Mat, out: &mut Mat,
+                     ws: &mut StepScratch) -> Result<()> {
         let heads = self.state.num_heads();
         if q.rows != heads || k.rows != heads || v.rows != heads {
             bail!("step expects one row per head ({heads})");
         }
         let c_tail = self.spec.c_tail();
         let d = self.state.value_dim();
-        let mut out = Mat::zeros(heads, d);
+        out.resize_uninit(heads, d);
         for h in 0..heads {
-            let phi_k = kernel_features(
-                self.spec.kind,
-                &Mat::from_vec(1, k.cols, k.row(h).to_vec()),
-                &self.spec.features,
+            ws.row_k.resize_uninit(1, k.cols);
+            ws.row_k.row_mut(0).copy_from_slice(k.row(h));
+            kernel_features_into(
+                self.spec.kind, &ws.row_k, &self.spec.features, &mut ws.phi_k,
+                &mut ws.dense,
             );
-            self.state.push(h, phi_k.row(0), v.row(h), c_tail);
-            let phi_q = kernel_features(
-                self.spec.kind,
-                &Mat::from_vec(1, q.cols, q.row(h).to_vec()),
-                &self.spec.features,
+            self.state.push(h, ws.phi_k.row(0), v.row(h), c_tail);
+            ws.row_q.resize_uninit(1, q.cols);
+            ws.row_q.row_mut(0).copy_from_slice(q.row(h));
+            kernel_features_into(
+                self.spec.kind, &ws.row_q, &self.spec.features, &mut ws.phi_q,
+                &mut ws.dense,
             );
-            let y = self.state.query(h, phi_q.row(0), &self.spec.coeffs);
-            out.row_mut(h).copy_from_slice(&y);
+            self.state.query_into(
+                h, ws.phi_q.row(0), &self.spec.coeffs, &mut ws.num,
+                out.row_mut(h),
+            );
         }
         self.pos += 1;
-        Ok(out)
+        Ok(())
     }
 
     // -- snapshot / restore ------------------------------------------------
@@ -339,7 +374,7 @@ impl StreamingDecoder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::{attend, draw_gaussian_features};
+    use crate::attention::{attend, draw_gaussian_features, kernel_features};
     use crate::rng::Rng;
 
     fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
@@ -549,6 +584,37 @@ mod tests {
             }
         }
         assert!(!dec.exact());
+    }
+
+    #[test]
+    fn step_into_bitwise_matches_step_with_shared_scratch() {
+        // One StepScratch shared across two interleaved sessions (the
+        // continuous-batching worker's usage) must equal per-call
+        // step() exactly — scratch contents never leak across lanes.
+        let (n, d, m) = (14, 4, 5);
+        let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+        let spec = spec_for(kind, n, d, m, n, 31);
+        let mut plain_a = StreamingDecoder::new(spec.clone(), 1, d);
+        let mut plain_b = StreamingDecoder::new(spec.clone(), 1, d);
+        let mut into_a = StreamingDecoder::new(spec.clone(), 1, d);
+        let mut into_b = StreamingDecoder::new(spec, 1, d);
+        let mut ws = StepScratch::default();
+        let mut out = Mat::default();
+        for i in 0..n {
+            let qa = rand_mat(1, d, 100 + i as u64);
+            let ka = rand_mat(1, d, 200 + i as u64);
+            let va = rand_mat(1, d, 300 + i as u64);
+            let qb = rand_mat(1, d, 400 + i as u64);
+            let kb = rand_mat(1, d, 500 + i as u64);
+            let vb = rand_mat(1, d, 600 + i as u64);
+            let wa = plain_a.step(&qa, &ka, &va).expect("step a");
+            into_a.step_into(&qa, &ka, &va, &mut out, &mut ws).expect("into a");
+            assert_eq!(out.data, wa.data, "lane a, i={i}");
+            let wb = plain_b.step(&qb, &kb, &vb).expect("step b");
+            into_b.step_into(&qb, &kb, &vb, &mut out, &mut ws).expect("into b");
+            assert_eq!(out.data, wb.data, "lane b, i={i}");
+        }
+        assert_eq!(into_a.positions(), n);
     }
 
     #[test]

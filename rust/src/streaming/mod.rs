@@ -15,12 +15,23 @@
 //!   * `engine`  — `StreamSpec` / `StreamingDecoder`: FFT prefill via
 //!                 the `ToeplitzPlan` path, then recurrent stepping;
 //!   * `session` — `SessionStore`: LRU + byte-budget session cache
-//!                 with snapshot spill/restore for server rebatching.
+//!                 with snapshot spill/restore for server rebatching
+//!                 and an optional durable tier below the cold map;
+//!   * `disk`    — `DiskTier`: versioned single-file-per-session
+//!                 envelopes (temp-file + atomic rename) so cold
+//!                 sessions page out and survive process restart;
+//!   * `batch`   — `Batcher`: token-granularity continuous batching —
+//!                 finished/arriving requests swap into lanes between
+//!                 steps via SessionStore snapshot/restore.
 
+pub mod batch;
+pub mod disk;
 pub mod engine;
 pub mod session;
 pub mod state;
 
-pub use engine::{StreamSpec, StreamingDecoder};
+pub use batch::{Admission, BatchCounters, Batcher, DecodeJob, Lane};
+pub use disk::DiskTier;
+pub use engine::{StepScratch, StreamSpec, StreamingDecoder};
 pub use session::{Origin, SessionStore, StoreStats};
 pub use state::DecoderState;

@@ -6,16 +6,30 @@
 //! restored on next access, so a session survives server rebatching
 //! (and the same snapshot bytes could migrate across workers). The
 //! cold map has its own byte budget (`cold_budget_bytes`, default 8x
-//! the live budget); beyond it the oldest snapshots expire for good so
-//! abandoned sessions cannot grow the process without bound.
+//! the live budget); beyond it the oldest snapshots either page out to
+//! the optional on-disk tier ([`super::disk::DiskTier`], attached with
+//! [`SessionStore::with_disk_tier`]) or expire for good, so abandoned
+//! sessions cannot grow the process without bound. With a disk tier
+//! attached, sessions survive a process restart: `flush_to_disk` pages
+//! everything out at shutdown and `get_or_create` falls through
+//! live -> cold -> disk on the next run.
+//!
+//! Eviction is O(log n) per victim, not O(n): the store keeps running
+//! live/cold byte totals and `BTreeSet` age indexes ordered by the
+//! logical clock (stamps are unique, so the first element is exactly
+//! the `min_by_key` victim the original scan picked — pinned by a
+//! behavior-parity test below), and only sessions handed out mutably
+//! since the last `enforce` get their byte accounting refreshed.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::engine::PlanCache;
 
+use super::disk::DiskTier;
 use super::engine::{StreamSpec, StreamingDecoder};
 
 /// Exported verbatim as the `session_store` section of telemetry
@@ -28,10 +42,20 @@ pub struct StoreStats {
     pub created: usize,
     /// Live sessions evicted to the cold map (snapshots).
     pub spills: usize,
-    /// Cold sessions brought back live.
+    /// Cold or on-disk sessions brought back live.
     pub restores: usize,
-    /// Cold snapshots dropped for good under the cold byte budget.
+    /// Cold snapshots dropped for good under the cold byte budget
+    /// (no disk tier, or the page-out write failed).
     pub expired: usize,
+    /// Cold snapshots paged out to the disk tier.
+    pub disk_writes: usize,
+    /// Sessions restored from a disk envelope.
+    pub disk_reads: usize,
+    /// Disk envelopes dropped for good under the disk byte budget.
+    pub disk_expired: usize,
+    /// Corrupt/torn disk envelopes rejected (session fell back to
+    /// `Created`).
+    pub disk_corrupt: usize,
 }
 
 struct LiveEntry {
@@ -58,17 +82,34 @@ pub struct SessionStore {
     heads: usize,
     d: usize,
     budget_bytes: usize,
-    /// Budget for spilled snapshots; oldest expire beyond it.
+    /// Budget for spilled snapshots; oldest page to disk (or expire)
+    /// beyond it.
     pub cold_budget_bytes: usize,
     max_live: usize,
     live: HashMap<u64, LiveEntry>,
     cold: HashMap<u64, ColdEntry>,
+    /// LRU index over `live`: (last_used, id). The clock is strictly
+    /// increasing, so stamps are unique and the first element is the
+    /// least recently used session.
+    live_order: BTreeSet<(u64, u64)>,
+    /// Age index over `cold`: (stamp, id).
+    cold_order: BTreeSet<(u64, u64)>,
+    /// Running totals kept in lock-step with the maps, so `enforce`
+    /// never re-sums the whole store.
+    live_bytes_total: usize,
+    cold_bytes_total: usize,
+    /// Sessions handed out mutably since the last `enforce` — the only
+    /// ones whose byte accounting can be stale. May hold duplicates;
+    /// refreshing twice is harmless.
+    dirty: Vec<u64>,
     clock: u64,
     pub stats: StoreStats,
     /// Shared Toeplitz plan cache for session prefills. Defaults to a
     /// store-private cache; servers inject the per-model cache with
     /// `with_plan_cache` so batch + streaming paths amortize together.
     plan_cache: Arc<PlanCache>,
+    /// Durable tier below the cold map (None = cold overflow expires).
+    disk: Option<DiskTier>,
 }
 
 impl SessionStore {
@@ -83,9 +124,15 @@ impl SessionStore {
             max_live: max_live.max(1),
             live: HashMap::new(),
             cold: HashMap::new(),
+            live_order: BTreeSet::new(),
+            cold_order: BTreeSet::new(),
+            live_bytes_total: 0,
+            cold_bytes_total: 0,
+            dirty: Vec::new(),
             clock: 0,
             stats: StoreStats::default(),
             plan_cache: Arc::new(PlanCache::default()),
+            disk: None,
         }
     }
 
@@ -93,6 +140,20 @@ impl SessionStore {
     pub fn with_plan_cache(mut self, cache: Arc<PlanCache>) -> SessionStore {
         self.plan_cache = cache;
         self
+    }
+
+    /// Attach the durable on-disk tier rooted at `dir` with its own
+    /// byte budget. Scans the directory (so envelopes from a previous
+    /// process become reachable again) and folds the newest on-disk
+    /// stamp into the logical clock, keeping stamps unique across
+    /// restarts.
+    pub fn with_disk_tier(mut self, dir: impl Into<PathBuf>,
+                          budget_bytes: usize) -> Result<SessionStore> {
+        let tier = DiskTier::open(dir, budget_bytes)?;
+        self.stats.disk_corrupt += tier.scan_rejected;
+        self.clock = self.clock.max(tier.max_stamp());
+        self.disk = Some(tier);
+        Ok(self)
     }
 
     /// The plan cache prefills should draw from. Cloned out (`Arc`) so
@@ -109,24 +170,51 @@ impl SessionStore {
         self.cold.len()
     }
 
-    /// Byte accounting over live sessions (refreshed by `enforce`).
+    /// Sessions currently paged out to the disk tier.
+    pub fn disk_count(&self) -> usize {
+        self.disk.as_ref().map(|t| t.count()).unwrap_or(0)
+    }
+
+    /// Envelope bytes held by the disk tier.
+    pub fn disk_bytes(&self) -> usize {
+        self.disk.as_ref().map(|t| t.bytes()).unwrap_or(0)
+    }
+
+    /// Byte accounting over live sessions: a running total, refreshed
+    /// for sessions touched since the last `enforce`.
     pub fn live_bytes(&self) -> usize {
-        self.live.values().map(|e| e.bytes).sum()
+        self.live_bytes_total
+    }
+
+    /// Bytes held by spilled snapshots (running total).
+    pub fn cold_bytes(&self) -> usize {
+        self.cold_bytes_total
     }
 
     pub fn contains(&self, id: u64) -> bool {
-        self.live.contains_key(&id) || self.cold.contains_key(&id)
+        self.live.contains_key(&id)
+            || self.cold.contains_key(&id)
+            || self.disk.as_ref().is_some_and(|t| t.contains(id))
     }
 
-    /// Fetch a session, restoring it from a spilled snapshot or
-    /// creating it fresh. The returned `Origin` says which happened.
+    /// Fetch a session, restoring it from a spilled snapshot (cold map
+    /// or disk envelope) or creating it fresh. The returned `Origin`
+    /// says which happened. A torn/corrupt disk envelope is dropped
+    /// and the session falls back to `Created` — never a panic, never
+    /// a wedged id.
     pub fn get_or_create(&mut self, id: u64)
                          -> Result<(&mut StreamingDecoder, Origin)> {
         self.clock += 1;
-        let origin = if self.live.contains_key(&id) {
+        let origin = if let Some(entry) = self.live.get_mut(&id) {
             self.stats.hits += 1;
+            self.live_order.remove(&(entry.last_used, id));
+            entry.last_used = self.clock;
+            self.live_order.insert((self.clock, id));
+            self.dirty.push(id);
             Origin::Live
         } else if let Some(entry) = self.cold.remove(&id) {
+            self.cold_order.remove(&(entry.stamp, id));
+            self.cold_bytes_total -= entry.snap.len();
             match StreamingDecoder::restore(
                 self.spec.clone(), self.heads, self.d, &entry.snap,
             ) {
@@ -138,9 +226,29 @@ impl SessionStore {
                 Err(e) => {
                     // Keep the snapshot: a bad spec pairing must not
                     // silently destroy the session.
+                    self.cold_order.insert((entry.stamp, id));
+                    self.cold_bytes_total += entry.snap.len();
                     self.cold.insert(id, entry);
                     return Err(e);
                 }
+            }
+        } else if let Some(snap) = self.load_from_disk(id) {
+            match StreamingDecoder::restore(
+                self.spec.clone(), self.heads, self.d, &snap,
+            ) {
+                Ok(dec) => {
+                    // Only now is the envelope consumed; a spec
+                    // mismatch below leaves it on disk, like the cold
+                    // path keeps its snapshot.
+                    if let Some(t) = self.disk.as_mut() {
+                        t.remove(id);
+                    }
+                    self.stats.restores += 1;
+                    self.stats.disk_reads += 1;
+                    self.insert_live(id, dec);
+                    Origin::Restored
+                }
+                Err(e) => return Err(e),
             }
         } else {
             let dec = StreamingDecoder::new(self.spec.clone(), self.heads, self.d);
@@ -149,30 +257,49 @@ impl SessionStore {
             Origin::Created
         };
         let entry = self.live.get_mut(&id).expect("just ensured live");
-        entry.last_used = self.clock;
         Ok((&mut entry.dec, origin))
+    }
+
+    /// Non-destructive disk read; a corrupt envelope is counted,
+    /// logged, dropped by the tier, and reported as a miss so the
+    /// caller creates a fresh session.
+    fn load_from_disk(&mut self, id: u64) -> Option<Vec<u8>> {
+        match self.disk.as_mut()?.load(id) {
+            Ok(snap) => snap,
+            Err(e) => {
+                self.stats.disk_corrupt += 1;
+                crate::error!("session {id}: dropping corrupt envelope: {e:#}");
+                None
+            }
+        }
     }
 
     fn insert_live(&mut self, id: u64, dec: StreamingDecoder) {
         let bytes = dec.bytes();
-        self.live.insert(
-            id,
-            LiveEntry { dec, last_used: self.clock, bytes },
-        );
+        self.live_bytes_total += bytes;
+        self.live_order.insert((self.clock, id));
+        self.dirty.push(id);
+        self.live.insert(id, LiveEntry { dec, last_used: self.clock, bytes });
     }
 
-    /// Finish a session for good: drop both hot and cold copies.
+    /// Finish a session for good: drop hot, cold, and disk copies.
     pub fn remove(&mut self, id: u64) {
-        self.live.remove(&id);
-        self.cold.remove(&id);
-    }
-
-    /// Bytes held by spilled snapshots.
-    pub fn cold_bytes(&self) -> usize {
-        self.cold.values().map(|e| e.snap.len()).sum()
+        if let Some(e) = self.live.remove(&id) {
+            self.live_order.remove(&(e.last_used, id));
+            self.live_bytes_total -= e.bytes;
+        }
+        if let Some(e) = self.cold.remove(&id) {
+            self.cold_order.remove(&(e.stamp, id));
+            self.cold_bytes_total -= e.snap.len();
+        }
+        if let Some(t) = self.disk.as_mut() {
+            t.remove(id);
+        }
     }
 
     /// Explicit snapshot (live sessions are serialized on the spot).
+    /// Covers the in-memory tiers; disk-resident sessions come back
+    /// through `get_or_create`.
     pub fn snapshot(&self, id: u64) -> Option<Vec<u8>> {
         if let Some(e) = self.live.get(&id) {
             return Some(e.dec.snapshot());
@@ -181,55 +308,139 @@ impl SessionStore {
     }
 
     /// Install a snapshot taken elsewhere (e.g. after a rebatch or a
-    /// worker handoff) as the session's cold copy.
+    /// worker handoff) as the session's cold copy. The cold budget is
+    /// enforced on insert — repeated handoff installs page out or
+    /// expire instead of growing the process unboundedly until the
+    /// next `enforce`.
     pub fn restore(&mut self, id: u64, snapshot: Vec<u8>) {
         self.clock += 1;
-        self.live.remove(&id);
-        self.cold
-            .insert(id, ColdEntry { stamp: self.clock, snap: snapshot });
+        if let Some(e) = self.live.remove(&id) {
+            self.live_order.remove(&(e.last_used, id));
+            self.live_bytes_total -= e.bytes;
+        }
+        if let Some(old) = self.cold.remove(&id) {
+            self.cold_order.remove(&(old.stamp, id));
+            self.cold_bytes_total -= old.snap.len();
+        }
+        self.cold_bytes_total += snapshot.len();
+        self.cold_order.insert((self.clock, id));
+        self.cold.insert(id, ColdEntry { stamp: self.clock, snap: snapshot });
+        self.enforce_cold();
     }
 
     /// Refresh byte accounting and evict least-recently-used sessions
     /// until the store is within budget and max_live. The most recently
     /// used session always stays live so the request being served never
-    /// evicts itself. Beyond the cold budget the oldest snapshots are
-    /// dropped for good. Returns how many sessions were spilled.
+    /// evicts itself. Beyond the cold budget the oldest snapshots page
+    /// out to the disk tier (or expire without one). Returns how many
+    /// sessions were spilled.
     pub fn enforce(&mut self) -> usize {
-        for e in self.live.values_mut() {
-            e.bytes = e.dec.bytes();
+        // Only sessions handed out mutably since the last enforce can
+        // have grown — refresh exactly those instead of re-summing the
+        // whole map (the old O(n^2) stall at thousands of sessions).
+        while let Some(id) = self.dirty.pop() {
+            if let Some(e) = self.live.get_mut(&id) {
+                let nb = e.dec.bytes();
+                self.live_bytes_total -= e.bytes;
+                self.live_bytes_total += nb;
+                e.bytes = nb;
+            }
         }
         let mut spilled = 0;
         while self.live.len() > 1
             && (self.live.len() > self.max_live
-                || self.live_bytes() > self.budget_bytes)
+                || self.live_bytes_total > self.budget_bytes)
         {
-            let victim = self
-                .live
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(&id, _)| id)
-                .expect("live nonempty");
-            let entry = self.live.remove(&victim).expect("victim live");
+            let &(stamp, victim) =
+                self.live_order.iter().next().expect("live order nonempty");
+            self.live_order.remove(&(stamp, victim));
+            let entry = self.live.remove(&victim).expect("live index in sync");
+            self.live_bytes_total -= entry.bytes;
             self.clock += 1;
-            self.cold.insert(
-                victim,
-                ColdEntry { stamp: self.clock, snap: entry.dec.snapshot() },
-            );
+            let snap = entry.dec.snapshot();
+            self.cold_bytes_total += snap.len();
+            self.cold_order.insert((self.clock, victim));
+            self.cold.insert(victim, ColdEntry { stamp: self.clock, snap });
             self.stats.spills += 1;
             spilled += 1;
         }
-        while !self.cold.is_empty() && self.cold_bytes() > self.cold_budget_bytes
-        {
-            let victim = self
-                .cold
-                .iter()
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(&id, _)| id)
-                .expect("cold nonempty");
-            self.cold.remove(&victim);
-            self.stats.expired += 1;
-        }
+        self.enforce_cold();
         spilled
+    }
+
+    /// Shrink the cold map to its budget: oldest snapshots page out to
+    /// the disk tier, or expire for good without one (also the fate of
+    /// a failed page-out write — dropping beats unbounded growth).
+    fn enforce_cold(&mut self) {
+        while self.cold_bytes_total > self.cold_budget_bytes {
+            let Some(&(stamp, victim)) = self.cold_order.iter().next() else {
+                break;
+            };
+            self.cold_order.remove(&(stamp, victim));
+            let entry = self.cold.remove(&victim).expect("cold index in sync");
+            self.cold_bytes_total -= entry.snap.len();
+            match self.disk.as_mut() {
+                Some(tier) => match tier.put(victim, stamp, &entry.snap) {
+                    Ok(expired) => {
+                        self.stats.disk_writes += 1;
+                        self.stats.disk_expired += expired;
+                    }
+                    Err(e) => {
+                        self.stats.expired += 1;
+                        crate::error!(
+                            "session {victim}: page-out failed, dropping: {e:#}"
+                        );
+                    }
+                },
+                None => self.stats.expired += 1,
+            }
+        }
+    }
+
+    /// Page every in-memory session (live and cold) out to the disk
+    /// tier — the graceful-shutdown path that makes sessions survive a
+    /// process restart. No-op without a disk tier. Returns how many
+    /// envelopes were written.
+    pub fn flush_to_disk(&mut self) -> usize {
+        if self.disk.is_none() {
+            return 0;
+        }
+        let mut written = 0;
+        // Cold snapshots keep their age stamps; live sessions get fresh
+        // ones — so if the disk budget can't hold everything, the
+        // oldest cold stragglers are what the tier expires.
+        while let Some(&(stamp, id)) = self.cold_order.iter().next() {
+            self.cold_order.remove(&(stamp, id));
+            let entry = self.cold.remove(&id).expect("cold index in sync");
+            self.cold_bytes_total -= entry.snap.len();
+            written += self.page_out(id, stamp, &entry.snap);
+        }
+        while let Some(&(last_used, id)) = self.live_order.iter().next() {
+            self.live_order.remove(&(last_used, id));
+            let entry = self.live.remove(&id).expect("live index in sync");
+            self.live_bytes_total -= entry.bytes;
+            self.clock += 1;
+            let stamp = self.clock;
+            written += self.page_out(id, stamp, &entry.dec.snapshot());
+        }
+        self.dirty.clear();
+        written
+    }
+
+    fn page_out(&mut self, id: u64, stamp: u64, snap: &[u8]) -> usize {
+        let tier = self.disk.as_mut().expect("disk tier attached");
+        match tier.put(id, stamp, snap) {
+            Ok(expired) => {
+                self.stats.disk_writes += 1;
+                self.stats.disk_expired += expired;
+                1
+            }
+            Err(e) => {
+                self.stats.expired += 1;
+                crate::error!("session {id}: flush failed, dropping: {e:#}");
+                0
+            }
+        }
     }
 }
 
@@ -259,6 +470,13 @@ mod tests {
             let v = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
             dec.step(&q, &k, &v).unwrap();
         }
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("kafft-sess-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -326,6 +544,25 @@ mod tests {
         let q = Mat::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.4]);
         let after = dec.step(&q, &q, &q).unwrap();
         assert_eq!(direct.data, after.data);
+
+        // Second leg: spill -> disk envelope -> fresh store (simulated
+        // process restart) must continue bitwise-identically too.
+        let dir = tmpdir("exact");
+        let mut s = store(1 << 20, 4).with_disk_tier(&dir, 1 << 20).unwrap();
+        feed(&mut s, 5, 6, 30);
+        assert_eq!(s.flush_to_disk(), 1);
+        assert_eq!(s.live_count() + s.cold_count(), 0);
+        drop(s); // everything in-memory is gone
+        let mut s2 = store(1 << 20, 4).with_disk_tier(&dir, 1 << 20).unwrap();
+        assert!(s2.contains(5));
+        let (dec, origin) = s2.get_or_create(5).unwrap();
+        assert_eq!(origin, Origin::Restored);
+        assert_eq!(dec.positions(), 6);
+        let after_disk = dec.step(&q, &q, &q).unwrap();
+        assert_eq!(direct.data, after_disk.data, "disk round-trip diverged");
+        assert_eq!(s2.stats.disk_reads, 1);
+        assert_eq!(s2.disk_count(), 0, "restored envelope consumed");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -352,5 +589,274 @@ mod tests {
         let (dec, origin) = s.get_or_create(9).unwrap();
         assert_eq!(origin, Origin::Created);
         assert_eq!(dec.positions(), 0);
+    }
+
+    #[test]
+    fn restore_install_enforces_cold_budget() {
+        // Regression for the unbounded-growth bug: repeated handoff
+        // installs via restore() must respect cold_budget_bytes at
+        // insert time, not at some later enforce().
+        let mut s = store(1 << 20, 4);
+        feed(&mut s, 1, 4, 60);
+        let snap = s.snapshot(1).unwrap();
+        s.remove(1);
+        s.cold_budget_bytes = snap.len() * 2 + 1; // room for two snapshots
+        for id in 0..20u64 {
+            s.restore(id, snap.clone());
+            assert!(
+                s.cold_bytes() <= s.cold_budget_bytes,
+                "cold map over budget after install {id}: {} > {}",
+                s.cold_bytes(),
+                s.cold_budget_bytes
+            );
+        }
+        assert_eq!(s.cold_count(), 2);
+        assert_eq!(s.stats.expired, 18, "oldest installs expired on insert");
+        // The newest installs are the survivors.
+        assert!(s.contains(19) && s.contains(18) && !s.contains(17));
+    }
+
+    #[test]
+    fn enforce_matches_naive_reference_implementation() {
+        // Behavior parity for the O(n) enforce: replay a mixed workload
+        // against a shadow model that implements the original
+        // re-sum-and-rescan algorithm verbatim, and require identical
+        // membership, byte totals, and eviction/expiry counts at every
+        // enforce.
+        struct ShadowLive {
+            dec: StreamingDecoder,
+            last_used: u64,
+            bytes: usize,
+        }
+        struct Shadow {
+            live: HashMap<u64, ShadowLive>,
+            cold: HashMap<u64, (u64, Vec<u8>)>,
+            clock: u64,
+            spills: usize,
+            expired: usize,
+            budget: usize,
+            cold_budget: usize,
+            max_live: usize,
+        }
+        impl Shadow {
+            fn live_bytes(&self) -> usize {
+                self.live.values().map(|e| e.bytes).sum()
+            }
+            fn cold_bytes(&self) -> usize {
+                self.cold.values().map(|(_, s)| s.len()).sum()
+            }
+            // The original enforce(), verbatim modulo field names.
+            fn enforce(&mut self) {
+                for e in self.live.values_mut() {
+                    e.bytes = e.dec.bytes();
+                }
+                while self.live.len() > 1
+                    && (self.live.len() > self.max_live
+                        || self.live_bytes() > self.budget)
+                {
+                    let victim = self
+                        .live
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(&id, _)| id)
+                        .expect("live nonempty");
+                    let entry = self.live.remove(&victim).unwrap();
+                    self.clock += 1;
+                    self.cold
+                        .insert(victim, (self.clock, entry.dec.snapshot()));
+                    self.spills += 1;
+                }
+                while !self.cold.is_empty()
+                    && self.cold_bytes() > self.cold_budget
+                {
+                    let victim = self
+                        .cold
+                        .iter()
+                        .min_by_key(|(_, (stamp, _))| *stamp)
+                        .map(|(&id, _)| id)
+                        .expect("cold nonempty");
+                    self.cold.remove(&victim);
+                    self.expired += 1;
+                }
+            }
+        }
+
+        let mut s = store(1, 3); // 1-byte budget: every enforce evicts
+        let mut sh = Shadow {
+            live: HashMap::new(),
+            cold: HashMap::new(),
+            clock: 0,
+            spills: 0,
+            expired: 0,
+            budget: 1,
+            cold_budget: s.cold_budget_bytes,
+            max_live: 3,
+        };
+        let spec = {
+            // Same spec construction as store(): decoders step
+            // identically on both sides.
+            let d = 4;
+            let mut rng = Rng::new(1);
+            let w = draw_gaussian_features(4, d, &mut rng);
+            let b: Vec<f32> = (0..15).map(|_| rng.normal_f32() * 0.5).collect();
+            let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+            Arc::new(StreamSpec::new(kind, w, Some(&b), 8).unwrap())
+        };
+        let mut wrng = Rng::new(0xfeed);
+        for round in 0..200 {
+            let id = u64::from(wrng.below(12));
+            let tokens = 1 + wrng.below_usize(4);
+            // Drive the real store.
+            feed(&mut s, id, tokens, 1000 + round);
+            // Mirror on the shadow: same clock discipline (+1 per
+            // access), same decoder arithmetic.
+            sh.clock += 1;
+            let clock = sh.clock;
+            let e = sh.live.entry(id).or_insert_with(|| {
+                let dec = match sh.cold.remove(&id) {
+                    Some((_, snap)) => StreamingDecoder::restore(
+                        spec.clone(), 1, 4, &snap,
+                    )
+                    .unwrap(),
+                    None => StreamingDecoder::new(spec.clone(), 1, 4),
+                };
+                let bytes = dec.bytes();
+                ShadowLive { dec, last_used: clock, bytes }
+            });
+            e.last_used = clock;
+            let mut rng = Rng::new(1000 + round);
+            for _ in 0..tokens {
+                let q = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
+                let k = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
+                let v = Mat::from_vec(1, 4, rng.normal_vec(4, 0.5));
+                e.dec.step(&q, &k, &v).unwrap();
+            }
+            s.enforce();
+            sh.enforce();
+            assert_eq!(s.live_count(), sh.live.len(), "round {round}");
+            assert_eq!(s.cold_count(), sh.cold.len(), "round {round}");
+            assert_eq!(s.live_bytes(), sh.live_bytes(), "round {round}");
+            assert_eq!(s.cold_bytes(), sh.cold_bytes(), "round {round}");
+            assert_eq!(s.stats.spills, sh.spills, "round {round}");
+            assert_eq!(s.stats.expired, sh.expired, "round {round}");
+            for &lid in sh.live.keys() {
+                assert!(s.live.contains_key(&lid), "round {round}: live {lid}");
+            }
+            for &cid in sh.cold.keys() {
+                assert!(s.cold.contains_key(&cid), "round {round}: cold {cid}");
+            }
+        }
+        assert!(s.stats.spills > 50, "workload exercised eviction");
+    }
+
+    #[test]
+    fn cold_overflow_pages_to_disk_and_comes_back() {
+        let dir = tmpdir("pageout");
+        let mut s = store(1 << 20, 1).with_disk_tier(&dir, 1 << 20).unwrap();
+        s.cold_budget_bytes = 0; // cold overflow goes straight to disk
+        feed(&mut s, 1, 4, 70);
+        feed(&mut s, 2, 4, 71); // evicts 1: live -> cold -> disk
+        s.enforce();
+        assert_eq!(s.cold_count(), 0);
+        assert_eq!(s.disk_count(), 1);
+        assert_eq!(s.stats.disk_writes, 1);
+        assert_eq!(s.stats.expired, 0, "paged out, not dropped");
+        assert!(s.contains(1));
+        let (dec, origin) = s.get_or_create(1).unwrap();
+        assert_eq!(origin, Origin::Restored);
+        assert_eq!(dec.positions(), 4);
+        assert_eq!(s.stats.disk_reads, 1);
+        assert_eq!(s.disk_count(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_disk_envelope_falls_back_to_created() {
+        let dir = tmpdir("torn");
+        let mut s = store(1 << 20, 4).with_disk_tier(&dir, 1 << 20).unwrap();
+        feed(&mut s, 3, 5, 80);
+        feed(&mut s, 4, 5, 81);
+        assert_eq!(s.flush_to_disk(), 2);
+        drop(s);
+        // Tear one envelope, corrupt the other's payload.
+        let p3 = dir.join(format!("sess-{:016x}.kafft", 3));
+        let bytes = std::fs::read(&p3).unwrap();
+        std::fs::write(&p3, &bytes[..30]).unwrap(); // shorter than header
+        let p4 = dir.join(format!("sess-{:016x}.kafft", 4));
+        let mut bytes = std::fs::read(&p4).unwrap();
+        bytes[60] ^= 0x55;
+        std::fs::write(&p4, &bytes).unwrap();
+        // Reopen: the scan rejects both; accesses fall back to Created
+        // without panicking, and the ids are immediately usable.
+        let mut s = store(1 << 20, 4).with_disk_tier(&dir, 1 << 20).unwrap();
+        assert_eq!(s.stats.disk_corrupt, 2);
+        for id in [3u64, 4] {
+            let (dec, origin) = s.get_or_create(id).unwrap();
+            assert_eq!(origin, Origin::Created, "session {id}");
+            assert_eq!(dec.positions(), 0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_corruption_after_open_also_falls_back() {
+        // Corruption that appears *after* the scan (rot between open
+        // and access) goes through load_from_disk's error path.
+        let dir = tmpdir("rot");
+        let mut s = store(1 << 20, 4).with_disk_tier(&dir, 1 << 20).unwrap();
+        feed(&mut s, 6, 3, 90);
+        s.flush_to_disk();
+        let p = dir.join(format!("sess-{:016x}.kafft", 6));
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let (dec, origin) = s.get_or_create(6).unwrap();
+        assert_eq!(origin, Origin::Created);
+        assert_eq!(dec.positions(), 0);
+        assert_eq!(s.stats.disk_corrupt, 1);
+        assert!(!p.exists(), "corrupt envelope removed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_budget_expires_oldest_sessions() {
+        let dir = tmpdir("diskbudget");
+        // Flush three sessions into a tier that can hold only two.
+        let mut s = store(1 << 20, 8).with_disk_tier(&dir, 1).unwrap();
+        feed(&mut s, 1, 2, 100);
+        let one_envelope =
+            s.snapshot(1).unwrap().len() + super::super::disk::HEADER_BYTES;
+        drop(s);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = store(1 << 20, 8)
+            .with_disk_tier(&dir, 2 * one_envelope)
+            .unwrap();
+        feed(&mut s, 1, 2, 100);
+        feed(&mut s, 2, 2, 101);
+        feed(&mut s, 3, 2, 102);
+        s.flush_to_disk();
+        assert_eq!(s.disk_count(), 2);
+        assert_eq!(s.stats.disk_expired, 1);
+        // Flush order pages least-recent first, so the freshest two
+        // sessions survive.
+        assert!(!s.contains(1) && s.contains(2) && s.contains(3));
+        assert!(s.disk_bytes() <= 2 * one_envelope);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn remove_reaches_the_disk_tier() {
+        let dir = tmpdir("remove");
+        let mut s = store(1 << 20, 4).with_disk_tier(&dir, 1 << 20).unwrap();
+        feed(&mut s, 8, 3, 110);
+        s.flush_to_disk();
+        assert!(s.contains(8));
+        s.remove(8);
+        assert!(!s.contains(8));
+        assert_eq!(s.disk_count(), 0);
+        let (_, origin) = s.get_or_create(8).unwrap();
+        assert_eq!(origin, Origin::Created);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

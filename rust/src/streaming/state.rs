@@ -76,14 +76,18 @@ impl DecoderState {
 
     /// Absorb one new (key-feature, value) row for `head`. If the ring
     /// is full the oldest row ages out: it is folded into the tail
-    /// accumulator with the boundary coefficient `c_tail`.
+    /// accumulator with the boundary coefficient `c_tail`, and its two
+    /// buffers are recycled for the incoming row — a saturated ring
+    /// never touches the allocator, which is what keeps the decode
+    /// steady state allocation-free (gated in tests/soak_sessions.rs).
     pub fn push(&mut self, head: usize, phi_k: &[f32], v: &[f32], c_tail: f64) {
         assert_eq!(phi_k.len(), self.m);
         assert_eq!(v.len(), self.d);
         let d = self.d;
         let hs = &mut self.heads[head];
         if hs.ring.len() == self.window {
-            let (old_phi, old_v) = hs.ring.pop_front().expect("ring nonempty");
+            let (mut old_phi, mut old_v) =
+                hs.ring.pop_front().expect("ring nonempty");
             for (mi, &pk) in old_phi.iter().enumerate() {
                 let base = mi * (d + 1);
                 let w = c_tail * pk;
@@ -92,22 +96,44 @@ impl DecoderState {
                 }
                 hs.tail[base + d] += w;
             }
+            for (dst, &src) in old_phi.iter_mut().zip(phi_k) {
+                *dst = src as f64;
+            }
+            for (dst, &src) in old_v.iter_mut().zip(v) {
+                *dst = src as f64;
+            }
+            hs.ring.push_back((old_phi, old_v));
+        } else {
+            hs.ring.push_back((
+                phi_k.iter().map(|&x| x as f64).collect(),
+                v.iter().map(|&x| x as f64).collect(),
+            ));
         }
-        hs.ring.push_back((
-            phi_k.iter().map(|&x| x as f64).collect(),
-            v.iter().map(|&x| x as f64).collect(),
-        ));
     }
 
     /// Attention output row for `head` against the current state.
     /// `coeffs[t]` is the correlation at offset -t (newest ring row is
     /// offset 0); `coeffs.len()` must equal the window.
     pub fn query(&self, head: usize, phi_q: &[f32], coeffs: &[f64]) -> Vec<f32> {
+        let mut num = Vec::new();
+        let mut out = vec![0.0f32; self.d];
+        self.query_into(head, phi_q, coeffs, &mut num, &mut out);
+        out
+    }
+
+    /// [`Self::query`] into caller buffers: `num` is f64 numerator
+    /// scratch (grow-only), `out` receives the d-dim output row.
+    /// Identical accumulation order to `query`, so the two forms are
+    /// bitwise equal; with warmed buffers this path never allocates.
+    pub fn query_into(&self, head: usize, phi_q: &[f32], coeffs: &[f64],
+                      num: &mut Vec<f64>, out: &mut [f32]) {
         assert_eq!(phi_q.len(), self.m);
         assert_eq!(coeffs.len(), self.window);
+        assert_eq!(out.len(), self.d);
         let d = self.d;
         let hs = &self.heads[head];
-        let mut num = vec![0.0f64; d];
+        num.clear();
+        num.resize(d, 0.0);
         let mut den = 0.0f64;
         // Tail: num += phi_q^T S, den += phi_q^T z.
         for (mi, &pq) in phi_q.iter().enumerate() {
@@ -134,7 +160,9 @@ impl DecoderState {
             den += s;
         }
         let inv = 1.0 / (den + EPS as f64);
-        num.iter().map(|&x| (x * inv) as f32).collect()
+        for (o, &x) in out.iter_mut().zip(num.iter()) {
+            *o = (x * inv) as f32;
+        }
     }
 
     /// Approximate live heap footprint, for the session byte budget.
@@ -336,6 +364,26 @@ mod tests {
         bytes.push(0);
         bytes.push(0);
         assert!(DecoderState::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn query_into_is_bitwise_query() {
+        let mut st = DecoderState::new(2, 4, 3, 3);
+        for i in 0..9 {
+            let phi: Vec<f32> = (0..4).map(|j| (i * 3 + j) as f32 * 0.07).collect();
+            let v: Vec<f32> = (0..3).map(|j| (i + 2 * j) as f32 * 0.11 - 0.9).collect();
+            st.push(0, &phi, &v, 0.6);
+            st.push(1, &phi, &v, 0.6);
+        }
+        let coeffs = [1.0, 0.8, 0.5];
+        let phi_q = [0.2f32, -0.4, 0.1, 0.7];
+        let mut num = Vec::new();
+        let mut out = vec![0.0f32; 3];
+        for head in 0..2 {
+            let want = st.query(head, &phi_q, &coeffs);
+            st.query_into(head, &phi_q, &coeffs, &mut num, &mut out);
+            assert_eq!(out, want, "head {head}");
+        }
     }
 
     #[test]

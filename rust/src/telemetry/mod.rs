@@ -221,8 +221,16 @@ pub struct Telemetry {
     queue_wait: Histogram,
     /// Prompts per batch request (a value distribution, not ns).
     batch_size: Histogram,
+    /// Occupied lanes per continuous-batching step cycle (a value
+    /// distribution, not ns) — mean = occupancy_sum / cycles.
+    batch_occupancy: Histogram,
     tokens: AtomicU64,
     prefill_tokens: AtomicU64,
+    /// Decode requests admitted into a batch lane.
+    admits: AtomicU64,
+    /// Lanes vacated (finished/failed) — continuous mode refills these
+    /// mid-batch.
+    evicts: AtomicU64,
 }
 
 impl Telemetry {
@@ -262,6 +270,18 @@ impl Telemetry {
         self.batch_size.record(prompts);
     }
 
+    pub fn record_batch_occupancy(&self, lanes: u64) {
+        self.batch_occupancy.record(lanes);
+    }
+
+    pub fn add_admits(&self, n: u64) {
+        self.admits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_evicts(&self, n: u64) {
+        self.evicts.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn add_tokens(&self, n: u64) {
         self.tokens.fetch_add(n, Ordering::Relaxed);
     }
@@ -294,6 +314,9 @@ impl Telemetry {
             request_batch: self.request_batch.summary(),
             queue_wait: self.queue_wait.summary(),
             batch_size: self.batch_size.summary(),
+            batch_occupancy: self.batch_occupancy.summary(),
+            admits: self.admits.load(Ordering::Relaxed),
+            evicts: self.evicts.load(Ordering::Relaxed),
             tokens,
             prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
             tokens_per_sec: if uptime > 0.0 {

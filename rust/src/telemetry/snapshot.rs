@@ -44,6 +44,13 @@ pub struct MetricsSnapshot {
     pub queue_wait: HistSummary,
     /// Prompts per submitted batch (a count distribution, not ns).
     pub batch_size: HistSummary,
+    /// Occupied lanes per continuous-batching step cycle (a count
+    /// distribution, not ns); `mean` is the measured batch occupancy.
+    pub batch_occupancy: HistSummary,
+    /// Decode requests admitted into a batch lane.
+    pub admits: u64,
+    /// Batch lanes vacated (request finished or failed).
+    pub evicts: u64,
     /// Decoded tokens since registry start.
     pub tokens: u64,
     /// Prompt tokens consumed by prefill since registry start.
@@ -85,6 +92,10 @@ impl MetricsSnapshot {
             ("request_batch_ns", hist_json(&self.request_batch)),
             ("queue_wait_ns", hist_json(&self.queue_wait)),
             ("batch_size", hist_json(&self.batch_size)),
+            // Additive keys (continuous batching) — no version bump.
+            ("batch_occupancy", hist_json(&self.batch_occupancy)),
+            ("admits", Json::Num(self.admits as f64)),
+            ("evicts", Json::Num(self.evicts as f64)),
             ("tokens", Json::Num(self.tokens as f64)),
             ("prefill_tokens", Json::Num(self.prefill_tokens as f64)),
             ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
@@ -112,6 +123,11 @@ impl MetricsSnapshot {
                     ("spills", Json::Num(s.spills as f64)),
                     ("restores", Json::Num(s.restores as f64)),
                     ("expired", Json::Num(s.expired as f64)),
+                    // Additive keys (durable disk tier).
+                    ("disk_writes", Json::Num(s.disk_writes as f64)),
+                    ("disk_reads", Json::Num(s.disk_reads as f64)),
+                    ("disk_expired", Json::Num(s.disk_expired as f64)),
+                    ("disk_corrupt", Json::Num(s.disk_corrupt as f64)),
                 ]),
             ));
         }
@@ -142,6 +158,9 @@ impl MetricsSnapshot {
         prom_hist(&mut out, "kafft_request_batch_ns", &self.request_batch);
         prom_hist(&mut out, "kafft_queue_wait_ns", &self.queue_wait);
         prom_hist(&mut out, "kafft_batch_size", &self.batch_size);
+        prom_hist(&mut out, "kafft_batch_occupancy", &self.batch_occupancy);
+        prom_counter(&mut out, "kafft_batch_admits_total", self.admits as f64);
+        prom_counter(&mut out, "kafft_batch_evicts_total", self.evicts as f64);
         prom_counter(&mut out, "kafft_tokens_total", self.tokens as f64);
         prom_counter(
             &mut out,
@@ -181,6 +200,26 @@ impl MetricsSnapshot {
                 &mut out,
                 "kafft_session_expired_total",
                 s.expired as f64,
+            );
+            prom_counter(
+                &mut out,
+                "kafft_session_disk_writes_total",
+                s.disk_writes as f64,
+            );
+            prom_counter(
+                &mut out,
+                "kafft_session_disk_reads_total",
+                s.disk_reads as f64,
+            );
+            prom_counter(
+                &mut out,
+                "kafft_session_disk_expired_total",
+                s.disk_expired as f64,
+            );
+            prom_counter(
+                &mut out,
+                "kafft_session_disk_corrupt_total",
+                s.disk_corrupt as f64,
             );
         }
         out
@@ -257,6 +296,9 @@ mod tests {
                 spills: 1,
                 restores: 1,
                 expired: 0,
+                disk_writes: 3,
+                disk_reads: 1,
+                ..StoreStats::default()
             })
     }
 
@@ -280,11 +322,13 @@ mod tests {
             assert!(p50 <= p95 && p95 <= p99, "{}", s.name());
         }
         assert_eq!(j.get("plan_cache").unwrap().req_usize("hits").unwrap(), 10);
-        assert_eq!(
-            j.get("session_store").unwrap().req_usize("created").unwrap(),
-            2
-        );
+        let ss = j.get("session_store").unwrap();
+        assert_eq!(ss.req_usize("created").unwrap(), 2);
+        assert_eq!(ss.req_usize("disk_writes").unwrap(), 3);
+        assert_eq!(ss.req_usize("disk_corrupt").unwrap(), 0);
         assert_eq!(j.req_usize("tokens").unwrap(), 64);
+        assert_eq!(j.req_usize("admits").unwrap(), 0);
+        assert!(j.get("batch_occupancy").is_some());
     }
 
     #[test]
@@ -319,6 +363,9 @@ mod tests {
         }
         assert!(prom.contains("kafft_plan_cache_hits_total 10"));
         assert!(prom.contains("kafft_session_created_total 2"));
+        assert!(prom.contains("kafft_session_disk_writes_total 3"));
+        assert!(prom.contains("kafft_batch_admits_total 0"));
+        assert!(prom.contains("# TYPE kafft_batch_occupancy summary"));
         assert!(prom.contains("# TYPE kafft_queue_wait_ns summary"));
     }
 }

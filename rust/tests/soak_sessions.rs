@@ -1,0 +1,222 @@
+//! Saturation soak for the session tiers + the zero-allocation gate on
+//! the streaming step hot path.
+//!
+//! Three contracts, measured rather than inferred:
+//!
+//!   * **Budget enforcement at scale** — thousands of sessions churn
+//!     through live -> cold -> disk and every byte budget holds after
+//!     every single `enforce()`, not just at the end. The eviction
+//!     path is O(log n) per victim now; this soak is also the
+//!     regression guard that keeps it from quietly re-growing a scan.
+//!   * **Zero steady-state allocation** — once buffers are warm and
+//!     the RPE ring is saturated, a decode step (qkv_into ->
+//!     step_into -> logits_into) never touches the heap, counted by a
+//!     thread-local `#[global_allocator]` shim (same discipline as
+//!     `proptest_telemetry.rs`). Store bookkeeping (order-set nodes,
+//!     spill snapshots) is deliberately outside the gate: it is not on
+//!     the per-token path.
+//!   * **Server admit/evict soak** — hundreds of decode requests with
+//!     mixed lengths through the continuous batcher on a store small
+//!     enough to force constant spill/restore; every reply must still
+//!     be produced and the admit/evict accounting must balance.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use kafft::attention::{draw_gaussian_features, Kind};
+use kafft::coordinator::decode::CpuLm;
+use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
+use kafft::rng::Rng;
+use kafft::streaming::{SessionStore, StepScratch, StreamSpec};
+use kafft::tensor::Mat;
+
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const D: usize = 4;
+const WINDOW: usize = 8;
+
+fn spec() -> Arc<StreamSpec> {
+    let mut rng = Rng::new(1);
+    let w = draw_gaussian_features(4, D, &mut rng);
+    let b: Vec<f32> = (0..15).map(|_| rng.normal_f32() * 0.5).collect();
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+    Arc::new(StreamSpec::new(kind, w, Some(&b), WINDOW).unwrap())
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("kafft-soak-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn saturation_soak_all_byte_budgets_hold() {
+    let dir = tmpdir("budgets");
+    const LIVE_BUDGET: usize = 16 << 10;
+    const COLD_BUDGET: usize = 32 << 10;
+    const DISK_BUDGET: usize = 64 << 10;
+    const MAX_LIVE: usize = 8;
+    const SESSIONS: u64 = 2500;
+    let mut s = SessionStore::new(spec(), 1, D, LIVE_BUDGET, MAX_LIVE)
+        .with_disk_tier(&dir, DISK_BUDGET)
+        .unwrap();
+    s.cold_budget_bytes = COLD_BUDGET;
+    let mut rng = Rng::new(0xdead);
+    for id in 0..SESSIONS {
+        {
+            let (dec, _) = s.get_or_create(id).unwrap();
+            for _ in 0..(1 + (id % 3) as usize) {
+                let q = Mat::from_vec(1, D, rng.normal_vec(D, 0.5));
+                let k = Mat::from_vec(1, D, rng.normal_vec(D, 0.5));
+                let v = Mat::from_vec(1, D, rng.normal_vec(D, 0.5));
+                dec.step(&q, &k, &v).unwrap();
+            }
+        }
+        s.enforce();
+        // Every budget holds after every enforce — the whole point of
+        // the store. The live budget has the documented one-session
+        // guard (the session being served never evicts itself).
+        assert!(s.live_count() <= MAX_LIVE, "id {id}");
+        assert!(
+            s.live_bytes() <= LIVE_BUDGET || s.live_count() == 1,
+            "id {id}: live {} over budget",
+            s.live_bytes()
+        );
+        assert!(
+            s.cold_bytes() <= COLD_BUDGET,
+            "id {id}: cold {} over budget",
+            s.cold_bytes()
+        );
+        assert!(
+            s.disk_bytes() <= DISK_BUDGET,
+            "id {id}: disk {} over budget",
+            s.disk_bytes()
+        );
+    }
+    // The tiers saturated: sessions actually flowed through every
+    // stage, and old ones were expired for good off the disk tier.
+    assert!(s.stats.spills > 1000, "spills={}", s.stats.spills);
+    assert!(s.stats.disk_writes > 500, "disk_writes={}", s.stats.disk_writes);
+    assert!(s.stats.disk_expired > 100, "disk_expired={}", s.stats.disk_expired);
+    assert_eq!(s.stats.created as u64, SESSIONS);
+    assert_eq!(s.stats.disk_corrupt, 0);
+    // Fresh ids keep working at saturation; the newest sessions are
+    // still reachable (live, cold, or disk), the oldest are gone.
+    assert!(s.contains(SESSIONS - 1));
+    assert!(!s.contains(0), "oldest session should have expired");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn step_hot_path_is_allocation_free_when_warm() {
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+    let lm = CpuLm::new(kind, 32, 8, 8, 64, 3).unwrap();
+    let mut dec = lm.session(16).unwrap();
+    let mut ws = StepScratch::default();
+    let (mut x, mut q, mut k, mut v, mut y) = (
+        Mat::default(),
+        Mat::default(),
+        Mat::default(),
+        Mat::default(),
+        Mat::default(),
+    );
+    let mut logits: Vec<f32> = Vec::new();
+    // Warm-up: saturate the RPE ring (after `window` pushes the ring
+    // recycles its oldest row buffers in place) and grow every scratch
+    // buffer to its steady-state size.
+    for t in 0..32i32 {
+        lm.qkv_into(&[t % 32], &mut x, &mut q, &mut k, &mut v);
+        dec.step_into(&q, &k, &v, &mut y, &mut ws).unwrap();
+        lm.logits_into(y.row(0), &mut logits);
+    }
+    let before = thread_allocs();
+    for t in 0..200i32 {
+        lm.qkv_into(&[t % 32], &mut x, &mut q, &mut k, &mut v);
+        dec.step_into(&q, &k, &v, &mut y, &mut ws).unwrap();
+        lm.logits_into(y.row(0), &mut logits);
+    }
+    let allocs = thread_allocs() - before;
+    assert_eq!(
+        allocs, 0,
+        "step hot path allocated {allocs} times over 200 warm steps"
+    );
+}
+
+#[test]
+fn server_soak_mixed_decodes_under_pressure() {
+    let dir = tmpdir("server");
+    let cfg = StreamingServerConfig {
+        vocab: 24,
+        d_model: 6,
+        features: 6,
+        max_len: 24,
+        window: 24,
+        budget_bytes: 8 << 10, // tight: constant spill/restore
+        max_live: 4,
+        batch_slots: 4,
+        seed: 31,
+        session_dir: Some(dir.clone()),
+        disk_budget_bytes: 1 << 20,
+        ..StreamingServerConfig::default()
+    };
+    let server = StreamingServer::start(cfg).unwrap();
+    const REQUESTS: usize = 400;
+    let mut rng = Rng::new(0xbeef);
+    let rxs: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let plen = 1 + rng.below_usize(6);
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(24) as i32).collect();
+            let gen = 1 + rng.below_usize(4);
+            server
+                .submit_decode(i as u64, prompt, gen)
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap_or_else(|e| {
+            panic!("request {i} failed under saturation: {e}")
+        });
+        assert!(!resp.generated.is_empty(), "request {i} generated nothing");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.decode_requests, REQUESTS);
+    assert_eq!(stats.telemetry.admits as usize, REQUESTS);
+    assert_eq!(stats.telemetry.evicts as usize, REQUESTS);
+    assert!(stats.spills > 0, "budget pressure never spilled");
+    let ss = stats.telemetry.session_store.as_ref().unwrap();
+    assert_eq!(ss.disk_corrupt, 0);
+    // Shutdown flushed the surviving sessions durably.
+    assert!(ss.disk_writes > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
