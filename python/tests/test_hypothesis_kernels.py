@@ -6,7 +6,10 @@ jnp oracles for every draw."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile import kernels as K
 from compile.kernels import ref

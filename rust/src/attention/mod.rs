@@ -158,10 +158,47 @@ pub fn kernel_scores_into(phi_q: &Mat, phi_k: &Mat, c: Option<&[f32]>,
     }
     for i in 0..n_q {
         let row = out.row_mut(i);
-        let sum: f32 = row.iter().sum::<f32>() + EPS;
+        let sum = guard_den_f32(row.iter().sum::<f32>() + EPS);
         for x in row.iter_mut() {
             *x /= sum;
         }
+    }
+}
+
+/// Degradation ladder stage 1 — the denominator floor (f64 readout
+/// form). Healthy kernelized normalizers are nonnegative (positive
+/// features, positive `exp(b - max b)` coefficients), so the caller's
+/// `den + EPS` is already `>= EPS` and this returns it
+/// bitwise-unchanged; NaN or sub-floor values (adversarial-magnitude
+/// inputs, or the injected `numeric.den_zero` failpoint) clamp to
+/// `EPS` and are counted via [`crate::faults::guard::note_clamp`].
+/// The `>=` comparison is deliberate: NaN fails it and lands on the
+/// clamp branch instead of propagating.
+#[inline]
+pub fn guard_den(mut den_plus_eps: f64) -> f64 {
+    if crate::faults::armed() && crate::faults::should_fire("numeric.den_zero") {
+        den_plus_eps = 0.0;
+    }
+    let min = EPS as f64;
+    if den_plus_eps >= min {
+        den_plus_eps
+    } else {
+        crate::faults::guard::note_clamp();
+        min
+    }
+}
+
+/// f32 analog of [`guard_den`] for the dense score-row normalizer.
+#[inline]
+pub fn guard_den_f32(mut den_plus_eps: f32) -> f32 {
+    if crate::faults::armed() && crate::faults::should_fire("numeric.den_zero") {
+        den_plus_eps = 0.0;
+    }
+    if den_plus_eps >= EPS {
+        den_plus_eps
+    } else {
+        crate::faults::guard::note_clamp();
+        EPS
     }
 }
 
@@ -508,7 +545,7 @@ pub fn readout_into(phi_q: &Mat, dmat: &[f64], d: usize, out: &mut Mat,
             }
             den += pqm as f64 * dmat[base + d];
         }
-        let inv = 1.0 / (den + EPS as f64);
+        let inv = 1.0 / guard_den(den + EPS as f64);
         let row = out.row_mut(i);
         for (o, &nn) in row.iter_mut().zip(num.iter()) {
             *o = (nn * inv) as f32;
@@ -791,5 +828,36 @@ mod tests {
         );
         assert!(z.data.iter().all(|x| x.is_finite()));
         assert!(z.data.iter().all(|x| x.abs() < 10.0));
+    }
+
+    #[test]
+    fn guard_den_passes_healthy_values_bitwise_and_floors_bad_ones() {
+        let _g = crate::faults::test_guard();
+        crate::faults::disarm();
+        crate::faults::guard::take_clamps();
+        // Healthy normalizers come back bitwise-unchanged, no clamp.
+        for v in [EPS as f64, 1e-6, 0.5, 1.0, 1e12] {
+            assert_eq!(guard_den(v).to_bits(), v.to_bits());
+        }
+        assert_eq!(crate::faults::guard::take_clamps(), 0);
+        // NaN, zero, negative, and sub-floor values clamp to the floor.
+        for v in [f64::NAN, 0.0, -1.0, 1e-12, f64::NEG_INFINITY] {
+            assert_eq!(guard_den(v), EPS as f64);
+        }
+        assert_eq!(crate::faults::guard::take_clamps(), 5);
+        assert_eq!(guard_den_f32(0.5), 0.5);
+        assert_eq!(guard_den_f32(f32::NAN), EPS);
+        assert_eq!(crate::faults::guard::take_clamps(), 1);
+    }
+
+    #[test]
+    fn den_zero_failpoint_forces_the_clamp() {
+        let _g = crate::faults::test_guard();
+        crate::faults::arm("seed=0,numeric.den_zero=1").unwrap();
+        crate::faults::guard::take_clamps();
+        assert_eq!(guard_den(1.0), EPS as f64, "injected zero engages floor");
+        assert_eq!(crate::faults::guard::take_clamps(), 1);
+        crate::faults::disarm();
+        assert_eq!(guard_den(1.0), 1.0);
     }
 }

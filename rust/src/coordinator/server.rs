@@ -18,6 +18,7 @@
 //! transparently.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -30,6 +31,7 @@ use crate::engine::{AttendItem, CacheStats, Engine, EngineConfig, PlanCache};
 use crate::runtime::{HostTensor, Runtime};
 use crate::streaming::{
     Admission, Batcher, DecodeJob, Lane, Origin, SessionStore, StepScratch,
+    PANIC_PREFIX,
 };
 use crate::telemetry::{
     MetricsSnapshot, Stage, StageShard, StageTimer, Telemetry,
@@ -41,6 +43,66 @@ use crate::tensor::Mat;
 /// consumers treat `Duration::ZERO` as "never measured".
 fn nonzero(d: Duration) -> Duration {
     d.max(Duration::from_nanos(1))
+}
+
+/// Typed failure for the streaming request path. Every streaming reply
+/// channel carries `Result<_, ServeError>`, so a client can tell load
+/// shedding (retryable later) from deadline expiry (the request was
+/// dropped unexecuted), a panicked lane (the session was discarded
+/// server-side — a retry starts from scratch) and plain rejection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded queue was at capacity at submit; the request never
+    /// reached the worker.
+    Shed,
+    /// The per-request deadline expired while the request was still
+    /// queued; it was dropped instead of executing late.
+    DeadlineExpired,
+    /// The request's batch lane panicked mid-step. The server caught
+    /// the panic, kept serving the other lanes, and discarded the
+    /// mid-step session state.
+    LanePanic(String),
+    /// Validation or execution failure (bad request, session position
+    /// mismatch, numeric degradation past the dense fallback, ...).
+    Rejected(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed => {
+                write!(f, "request shed: server queue at capacity")
+            }
+            ServeError::DeadlineExpired => {
+                write!(f, "request deadline expired before execution")
+            }
+            ServeError::LanePanic(m) | ServeError::Rejected(m) => {
+                write!(f, "{m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Classify a vacated-lane error string from the batcher: a caught
+/// panic (tagged with [`PANIC_PREFIX`]) becomes `LanePanic`, anything
+/// else a plain rejection.
+fn classify_lane_error(msg: String) -> ServeError {
+    if msg.starts_with(PANIC_PREFIX) {
+        ServeError::LanePanic(msg)
+    } else {
+        ServeError::Rejected(msg)
+    }
+}
+
+/// True when a queued request has outlived its deadline — or the
+/// `server.deadline` failpoint forces expiry. Checked at pickup so an
+/// expired request is answered with `DeadlineExpired` instead of
+/// executing late and wasting a batch slot.
+fn deadline_expired(enqueued: Instant, deadline: Option<Duration>) -> bool {
+    crate::faults::should_fire("server.deadline")
+        || deadline.map_or(false, |d| enqueued.elapsed() > d)
 }
 
 #[derive(Debug, Clone)]
@@ -224,7 +286,16 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
         stats.exec_secs += t0.elapsed().as_secs_f64();
         stats.batches += 1;
         *hist.entry(bsz).or_default() += 1;
-        let logits = out[0].as_f32().unwrap();
+        // A non-f32 output tensor is a runtime/artifact bug; fail the
+        // group (receivers observe the dropped reply channels) and keep
+        // the worker loop alive rather than aborting the server.
+        let logits = match out[0].as_f32() {
+            Ok(l) => l,
+            Err(e) => {
+                crate::error!("server exec returned non-f32 logits: {e}");
+                continue;
+            }
+        };
         for (i, p) in group.iter().enumerate() {
             let pos = p.req.tokens.len().clamp(1, seq_len) - 1;
             let base = (i * seq_len + pos) * vocab;
@@ -307,7 +378,7 @@ pub struct StreamResponse {
 struct StreamPending {
     req: StreamRequest,
     enqueued: Instant,
-    reply: Sender<Result<StreamResponse, String>>,
+    reply: Sender<Result<StreamResponse, ServeError>>,
 }
 
 /// A stateless batched request: next-token logits for each prompt,
@@ -316,7 +387,7 @@ struct StreamPending {
 struct BatchPending {
     prompts: Vec<Vec<i32>>,
     enqueued: Instant,
-    reply: Sender<Result<BatchResponse, String>>,
+    reply: Sender<Result<BatchResponse, ServeError>>,
 }
 
 #[derive(Debug, Clone)]
@@ -345,7 +416,7 @@ pub struct DecodeResponse {
     pub latency: Duration,
 }
 
-type DecodeReply = Sender<Result<DecodeResponse, String>>;
+type DecodeReply = Sender<Result<DecodeResponse, ServeError>>;
 
 enum StreamJob {
     Stream(StreamPending),
@@ -409,6 +480,14 @@ pub struct StreamingServerConfig {
     pub session_dir: Option<PathBuf>,
     /// Byte budget for the on-disk session tier.
     pub disk_budget_bytes: usize,
+    /// Queued-job cap. Submissions past it are answered immediately
+    /// with `ServeError::Shed` instead of growing the queue without
+    /// bound (explicit load shedding). 0 = unbounded.
+    pub queue_limit: usize,
+    /// Per-request deadline measured from submit. A request still
+    /// queued when it expires is dropped with
+    /// `ServeError::DeadlineExpired` instead of executing late.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for StreamingServerConfig {
@@ -429,6 +508,8 @@ impl Default for StreamingServerConfig {
             continuous: true,
             session_dir: None,
             disk_budget_bytes: 256 << 20,
+            queue_limit: 0,
+            deadline: None,
         }
     }
 }
@@ -438,6 +519,13 @@ impl Default for StreamingServerConfig {
 pub struct StreamingServer {
     tx: Sender<StreamJob>,
     handle: Option<std::thread::JoinHandle<StreamStats>>,
+    /// Jobs submitted but not yet picked up by the worker — the
+    /// admission-control signal for the bounded queue.
+    depth: Arc<AtomicUsize>,
+    queue_limit: usize,
+    /// Shared with the worker's engine, so submit-side sheds land in
+    /// the same snapshot as the worker-side counters.
+    tel: Arc<Telemetry>,
 }
 
 impl StreamingServer {
@@ -469,16 +557,43 @@ impl StreamingServer {
             Admission::Static
         };
         let slots = cfg.batch_slots;
+        let tel = engine.telemetry().clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth_w = depth.clone();
+        let deadline = cfg.deadline;
         let (tx, rx): (Sender<StreamJob>, Receiver<StreamJob>) = channel();
         let handle = std::thread::spawn(move || {
-            stream_worker(lm, store, engine, rx, slots, admission)
+            stream_worker(lm, store, engine, rx, slots, admission, depth_w,
+                          deadline)
         });
-        Ok(StreamingServer { tx, handle: Some(handle) })
+        Ok(StreamingServer {
+            tx,
+            handle: Some(handle),
+            depth,
+            queue_limit: cfg.queue_limit,
+            tel,
+        })
+    }
+
+    /// Admission control at submit time: with the bounded queue at
+    /// capacity (or the `server.queue.full` failpoint firing), the
+    /// request is shed — counted, never enqueued — and the caller's
+    /// reply channel resolves to `Err(ServeError::Shed)` immediately.
+    /// Otherwise the queue-depth gauge takes the slot.
+    fn try_admit(&self) -> bool {
+        let full = self.queue_limit > 0
+            && self.depth.load(Ordering::Relaxed) >= self.queue_limit;
+        if full || crate::faults::should_fire("server.queue.full") {
+            self.tel.add_shed_requests(1);
+            return false;
+        }
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        true
     }
 
     /// Open or blindly extend a session (no position check).
     pub fn submit(&self, session: u64, tokens: Vec<i32>)
-                  -> Result<Receiver<Result<StreamResponse, String>>> {
+                  -> Result<Receiver<Result<StreamResponse, ServeError>>> {
         self.send(StreamRequest { session, tokens, expect_pos: None })
     }
 
@@ -486,7 +601,7 @@ impl StreamingServer {
     /// absorbed tokens; rejected if the server-side state disagrees.
     pub fn submit_at(&self, session: u64, tokens: Vec<i32>,
                      expect_pos: usize)
-                     -> Result<Receiver<Result<StreamResponse, String>>> {
+                     -> Result<Receiver<Result<StreamResponse, ServeError>>> {
         self.send(StreamRequest {
             session,
             tokens,
@@ -499,8 +614,12 @@ impl StreamingServer {
     /// per-model cache (one budget and twiddle-table pool shared with
     /// the streaming prefills).
     pub fn submit_prompt_batch(&self, prompts: Vec<Vec<i32>>)
-                               -> Result<Receiver<Result<BatchResponse, String>>> {
+                               -> Result<Receiver<Result<BatchResponse, ServeError>>> {
         let (reply_tx, reply_rx) = channel();
+        if !self.try_admit() {
+            let _ = reply_tx.send(Err(ServeError::Shed));
+            return Ok(reply_rx);
+        }
         self.tx
             .send(StreamJob::Batch(BatchPending {
                 prompts,
@@ -516,8 +635,12 @@ impl StreamingServer {
     /// continuous batcher, so it shares lanes with every other decode
     /// in flight instead of waiting for a full batch to drain.
     pub fn submit_decode(&self, session: u64, tokens: Vec<i32>, gen: usize)
-                         -> Result<Receiver<Result<DecodeResponse, String>>> {
+                         -> Result<Receiver<Result<DecodeResponse, ServeError>>> {
         let (reply_tx, reply_rx) = channel();
+        if !self.try_admit() {
+            let _ = reply_tx.send(Err(ServeError::Shed));
+            return Ok(reply_rx);
+        }
         self.tx
             .send(StreamJob::Decode(DecodeJob {
                 session,
@@ -531,8 +654,12 @@ impl StreamingServer {
     }
 
     fn send(&self, req: StreamRequest)
-            -> Result<Receiver<Result<StreamResponse, String>>> {
+            -> Result<Receiver<Result<StreamResponse, ServeError>>> {
         let (reply_tx, reply_rx) = channel();
+        if !self.try_admit() {
+            let _ = reply_tx.send(Err(ServeError::Shed));
+            return Ok(reply_rx);
+        }
         self.tx
             .send(StreamJob::Stream(StreamPending {
                 req,
@@ -552,9 +679,11 @@ impl StreamingServer {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                  rx: Receiver<StreamJob>, slots: usize,
-                 admission: Admission) -> StreamStats {
+                 admission: Admission, depth: Arc<AtomicUsize>,
+                 deadline: Option<Duration>) -> StreamStats {
     let mut stats = StreamStats::default();
     // The worker's telemetry shard: prefill/step stage spans land here
     // lock-free and are absorbed into the engine registry per request.
@@ -572,20 +701,37 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
     while !(disconnected && batcher.idle()) {
         if batcher.idle() && !disconnected {
             match rx.recv() {
-                Ok(job) => incoming.push(job),
+                Ok(job) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    incoming.push(job);
+                }
                 Err(_) => disconnected = true,
             }
         }
         while !disconnected {
             match rx.try_recv() {
-                Ok(job) => incoming.push(job),
+                Ok(job) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    incoming.push(job);
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => disconnected = true,
             }
         }
+        // Injected slow consumer: stall the worker so queued requests
+        // age toward their deadlines and the bounded queue backs up —
+        // the campaign's way of forcing sheds and expiries on demand.
+        if crate::faults::should_fire("server.slow") {
+            std::thread::sleep(Duration::from_millis(1));
+        }
         for job in incoming.drain(..) {
             match job {
             StreamJob::Decode(job) => {
+                if deadline_expired(job.enqueued, deadline) {
+                    tel.add_deadline_expired(1);
+                    let _ = job.reply.send(Err(ServeError::DeadlineExpired));
+                    continue;
+                }
                 tel.record_queue_wait_ns(
                     job.enqueued.elapsed().as_nanos() as u64,
                 );
@@ -593,6 +739,11 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                 batcher.enqueue(job);
             }
             StreamJob::Stream(p) => {
+                if deadline_expired(p.enqueued, deadline) {
+                    tel.add_deadline_expired(1);
+                    let _ = p.reply.send(Err(ServeError::DeadlineExpired));
+                    continue;
+                }
                 tel.record_queue_wait_ns(
                     p.enqueued.elapsed().as_nanos() as u64,
                 );
@@ -615,12 +766,20 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                 }
                 store.enforce();
                 tel.absorb(&mut shard);
+                tel.drain_guard_counters();
                 tel.record_stream_request_ns(
                     nonzero(p.enqueued.elapsed()).as_nanos() as u64,
                 );
-                let _ = p.reply.send(out.map_err(|e| format!("{e:#}")));
+                let _ = p.reply.send(
+                    out.map_err(|e| ServeError::Rejected(format!("{e:#}"))),
+                );
             }
             StreamJob::Batch(p) => {
+                if deadline_expired(p.enqueued, deadline) {
+                    tel.add_deadline_expired(1);
+                    let _ = p.reply.send(Err(ServeError::DeadlineExpired));
+                    continue;
+                }
                 tel.record_queue_wait_ns(
                     p.enqueued.elapsed().as_nanos() as u64,
                 );
@@ -635,12 +794,13 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                 }
                 let latency = nonzero(p.enqueued.elapsed());
                 tel.record_batch_request_ns(latency.as_nanos() as u64);
+                tel.drain_guard_counters();
                 let _ = p.reply.send(
                     out.map(|next_logits| BatchResponse {
                         next_logits,
                         latency,
                     })
-                    .map_err(|e| format!("{e:#}")),
+                    .map_err(|e| ServeError::Rejected(format!("{e:#}"))),
                 );
             }
             }
@@ -656,7 +816,7 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
         });
         for (job, msg) in failed {
             crate::error!("decode admit failed: {msg}");
-            let _ = job.reply.send(Err(msg));
+            let _ = job.reply.send(Err(ServeError::Rejected(msg)));
         }
         for lane in done {
             finish_decode(lane, None, &tel, &mut stats);
@@ -671,6 +831,15 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                 )
             });
             for (lane, err) in finished {
+                if err.as_deref().map_or(false, |m| {
+                    m.starts_with(PANIC_PREFIX)
+                }) {
+                    // The panic interrupted a step: the session's
+                    // recurrent state is mid-update and untrustworthy.
+                    // Discard it so a retry starts from scratch instead
+                    // of silently decoding from corrupt state.
+                    store.remove(lane.job.session);
+                }
                 finish_decode(lane, err, &tel, &mut stats);
             }
         }
@@ -679,14 +848,22 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
             stats.exec_secs += t0.elapsed().as_secs_f64();
             tel.add_admits(after.admitted - before.admitted);
             tel.add_evicts(after.evicted - before.evicted);
+            tel.add_lane_panics(after.panics - before.panics);
             store.enforce();
             tel.absorb(&mut shard);
+            tel.drain_guard_counters();
         }
     }
     // Graceful shutdown: page every in-memory session out to the
     // durable tier (no-op without a session dir) so a restarted server
     // on the same directory picks the sessions back up.
     store.flush_to_disk();
+    // Disk-tier IO failures (real or injected) fold in after the flush
+    // so shutdown-path errors are counted too; a final guard drain
+    // catches clamps/fallbacks noted by a request that failed before
+    // reaching a per-request drain point.
+    tel.add_disk_io_errors(store.disk_io_errors() as u64);
+    tel.drain_guard_counters();
     // Session-cache counters come straight from the store so the two
     // accountings cannot drift; same for the shared plan cache and the
     // telemetry snapshot (its sections are drawn from the same owners).
@@ -800,7 +977,7 @@ fn finish_decode(lane: Lane<DecodeReply>, err: Option<String>,
     match err {
         Some(msg) => {
             crate::error!("decode request failed: {msg}");
-            let _ = lane.job.reply.send(Err(msg));
+            let _ = lane.job.reply.send(Err(classify_lane_error(msg)));
         }
         None => {
             let toks = lane.job.tokens.len() + lane.generated.len();
@@ -1527,5 +1704,96 @@ mod tests {
             .expect("continuation");
         assert_eq!(r.positions, 3);
         server.shutdown();
+    }
+
+    fn tiny_cfg(seed: u64) -> StreamingServerConfig {
+        StreamingServerConfig {
+            vocab: 16,
+            d_model: 4,
+            features: 4,
+            max_len: 16,
+            window: 16,
+            seed,
+            ..StreamingServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn queue_full_failpoint_sheds_with_typed_error() {
+        let _g = crate::faults::test_guard();
+        let server = StreamingServer::start(tiny_cfg(3)).unwrap();
+        // Disarmed: the request executes normally.
+        let r = server.submit(1, vec![1, 2]).unwrap().recv().unwrap();
+        assert!(r.is_ok());
+        // Armed at probability 1: every submission is shed before it
+        // reaches the worker, with the typed retryable error.
+        crate::faults::arm("seed=1,server.queue.full=1").unwrap();
+        let r = server.submit(1, vec![3]).unwrap().recv().unwrap();
+        assert_eq!(r.unwrap_err(), ServeError::Shed);
+        let r = server
+            .submit_decode(2, vec![1], 2)
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(r.unwrap_err(), ServeError::Shed);
+        crate::faults::disarm();
+        // Disarmed again: the server still serves (shed is per-request,
+        // not a mode latch), and the session kept its position.
+        let r = server.submit_at(1, vec![3], 2).unwrap().recv().unwrap();
+        assert_eq!(r.expect("post-shed continuation").positions, 3);
+        let stats = server.shutdown();
+        assert_eq!(stats.telemetry.shed_requests, 2);
+        assert_eq!(stats.requests, 2, "shed requests never executed");
+    }
+
+    #[test]
+    fn deadline_failpoint_expires_queued_requests() {
+        let _g = crate::faults::test_guard();
+        let server = StreamingServer::start(tiny_cfg(4)).unwrap();
+        let r = server.submit(1, vec![1, 2]).unwrap().recv().unwrap();
+        assert!(r.is_ok());
+        crate::faults::arm("seed=2,server.deadline=1").unwrap();
+        let r = server.submit(1, vec![3]).unwrap().recv().unwrap();
+        assert_eq!(r.unwrap_err(), ServeError::DeadlineExpired);
+        let r = server
+            .submit_prompt_batch(vec![vec![1, 2]])
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(r.unwrap_err(), ServeError::DeadlineExpired);
+        crate::faults::disarm();
+        let stats = server.shutdown();
+        assert_eq!(stats.telemetry.deadline_expired, 2);
+    }
+
+    #[test]
+    fn lane_panic_errors_one_request_and_discards_the_session() {
+        let _g = crate::faults::test_guard();
+        let server = StreamingServer::start(tiny_cfg(5)).unwrap();
+        crate::faults::arm("seed=3,batch.lane.panic=1").unwrap();
+        let r = server
+            .submit_decode(7, vec![1, 2, 3], 4)
+            .unwrap()
+            .recv()
+            .unwrap();
+        crate::faults::disarm();
+        match r {
+            Err(ServeError::LanePanic(msg)) => {
+                assert!(msg.contains("injected fault"), "{msg}");
+            }
+            other => panic!("expected LanePanic, got {other:?}"),
+        }
+        // The mid-step session was discarded: the id admits fresh, and
+        // with the failpoint disarmed the decode completes.
+        let r = server
+            .submit_decode(7, vec![1, 2, 3], 4)
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("decode after discarded session");
+        assert_eq!(r.origin, Origin::Created);
+        assert_eq!(r.positions, 7);
+        let stats = server.shutdown();
+        assert_eq!(stats.telemetry.lane_panics, 1);
     }
 }

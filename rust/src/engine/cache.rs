@@ -107,6 +107,16 @@ pub struct PlanCache {
 impl PlanCache {
     pub const DEFAULT_BUDGET_BYTES: usize = 64 << 20;
 
+    /// Poison-tolerant lock. A panic on one engine worker (a model bug
+    /// or the injected `batch.lane.panic` fault) poisons this shared
+    /// mutex for every other request; the cache's invariants hold
+    /// across any partial critical section here (worst case a stale
+    /// LRU stamp or a double-built plan), so serving continues instead
+    /// of the whole server aborting on a lock it can never take again.
+    fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn new(budget_bytes: usize) -> PlanCache {
         PlanCache {
             budget_bytes,
@@ -132,7 +142,7 @@ impl PlanCache {
         let len = next_pow2(2 * n);
         // Fast path + FFT-table fetch under one short critical section.
         let fft = {
-            let mut g = self.inner.lock().expect("plan cache poisoned");
+            let mut g = self.guard();
             g.clock += 1;
             let now = g.clock;
             if let Some(e) = g.plans.get_mut(&key) {
@@ -171,7 +181,7 @@ impl PlanCache {
         };
         let plan = Arc::new(ToeplitzPlan::with_rfft_plan(cc, n, fft));
         let bytes = plan.bytes();
-        let mut g = self.inner.lock().expect("plan cache poisoned");
+        let mut g = self.guard();
         g.clock += 1;
         let now = g.clock;
         if let Some(e) = g.plans.get_mut(&key) {
@@ -205,15 +215,11 @@ impl PlanCache {
     /// LRU stamps or counters (a pure probe, used by tests).
     pub fn contains(&self, c: &[f64], n: usize, causal: bool) -> bool {
         let key = PlanKey { n, causal, fingerprint: coeff_fingerprint(c) };
-        self.inner
-            .lock()
-            .expect("plan cache poisoned")
-            .plans
-            .contains_key(&key)
+        self.guard().plans.contains_key(&key)
     }
 
     pub fn stats(&self) -> CacheStats {
-        let g = self.inner.lock().expect("plan cache poisoned");
+        let g = self.guard();
         CacheStats {
             hits: g.hits,
             misses: g.misses,
@@ -226,7 +232,7 @@ impl PlanCache {
 
     /// Drop every resident plan and FFT table (counters survive).
     pub fn clear(&self) {
-        let mut g = self.inner.lock().expect("plan cache poisoned");
+        let mut g = self.guard();
         g.plans.clear();
         g.ffts.clear();
         g.bytes = 0;

@@ -32,7 +32,7 @@
 
 pub mod cache;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 
 use anyhow::{bail, Result};
@@ -177,6 +177,7 @@ impl Engine {
         for ws in workspaces.iter_mut() {
             self.telemetry.absorb(&mut ws.tel);
         }
+        self.telemetry.drain_guard_counters();
         r
     }
 }
@@ -223,6 +224,7 @@ pub fn attend_batch_traced(items: &[AttendItem], cache: &PlanCache,
             .collect();
         if let Some(t) = tel {
             t.absorb(&mut ws.tel);
+            t.drain_guard_counters();
         }
         return out;
     }
@@ -252,6 +254,7 @@ pub fn attend_batch_traced(items: &[AttendItem], cache: &PlanCache,
                 }
                 if let Some(t) = tel {
                     t.absorb(&mut ws.tel);
+                    t.drain_guard_counters();
                 }
             });
         }
@@ -307,18 +310,36 @@ pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
         return Ok(());
     }
     let chunk = items.len().div_ceil(workers);
-    std::thread::scope(|s| -> Result<()> {
+    // Guardrail events note into thread-locals that die with the
+    // scoped workers; relay them through shared atomics and re-note on
+    // the caller's thread so its next drain still sees them.
+    let clamps = AtomicU64::new(0);
+    let fallbacks = AtomicU64::new(0);
+    let r = std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::with_capacity(workers);
         for ((ichunk, ochunk), ws) in items
             .chunks(chunk)
             .zip(outs.chunks_mut(chunk))
             .zip(workspaces.iter_mut())
         {
+            let clamps = &clamps;
+            let fallbacks = &fallbacks;
             handles.push(s.spawn(move || -> Result<()> {
-                for (it, out) in ichunk.iter().zip(ochunk.iter_mut()) {
-                    attend_one_into(it, cache, ws, out)?;
-                }
-                Ok(())
+                let r = (|| -> Result<()> {
+                    for (it, out) in ichunk.iter().zip(ochunk.iter_mut()) {
+                        attend_one_into(it, cache, ws, out)?;
+                    }
+                    Ok(())
+                })();
+                clamps.fetch_add(
+                    crate::faults::guard::take_clamps(),
+                    Ordering::Relaxed,
+                );
+                fallbacks.fetch_add(
+                    crate::faults::guard::take_fallback_dense(),
+                    Ordering::Relaxed,
+                );
+                r
             }));
         }
         for h in handles {
@@ -328,7 +349,10 @@ pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
             }
         }
         Ok(())
-    })
+    });
+    crate::faults::guard::note_clamps(clamps.load(Ordering::Relaxed));
+    crate::faults::guard::note_fallbacks_dense(fallbacks.load(Ordering::Relaxed));
+    r
 }
 
 /// `attend_one_into` with an allocated output — the form the
@@ -410,6 +434,28 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
                     &ws.phi_q, &ws.phi_k, it.v, &plan, out, &mut ws.dense,
                     &mut ws.fft, &mut ws.tel,
                 );
+                if crate::faults::should_fire("numeric.readout_nan") {
+                    out.data.fill(f32::NAN);
+                }
+                if !out.data.iter().all(|x| x.is_finite()) {
+                    // Degradation ladder stage 2: a non-finite fast-path
+                    // readout is recomputed on the quadratic dense
+                    // oracle (bitwise-deterministic, no FFT). Stage 3:
+                    // still bad -> typed error for this one item.
+                    crate::faults::guard::note_fallback_dense();
+                    let coeffs = std::mem::take(&mut ws.dense.coeffs);
+                    kernel_attention_into(
+                        &ws.phi_q, &ws.phi_k, it.v, Some(&coeffs), it.causal,
+                        out, &mut ws.dense,
+                    );
+                    ws.dense.coeffs = coeffs;
+                    if !out.data.iter().all(|x| x.is_finite()) {
+                        bail!(
+                            "attend: non-finite readout survived the dense \
+                             fallback (n={n})"
+                        );
+                    }
+                }
             } else {
                 let t = StageTimer::start();
                 kernel_attention_into(

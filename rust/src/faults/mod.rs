@@ -1,0 +1,411 @@
+//! Deterministic fault injection and guardrail accounting for the
+//! serving stack.
+//!
+//! The paper's title promises *stable*; stability claims are only
+//! testable if the failure modes can be provoked on demand. This
+//! module gives every layer of the serving stack named **failpoints**
+//! — `faults::should_fire("disk.put.io")` — that are:
+//!
+//!   * **zero-cost when off**: disarmed, `should_fire` is one relaxed
+//!     atomic load and an immediate `false` (the same pattern as
+//!     `telemetry::enabled`), so instrumented hot paths stay
+//!     allocation-free and bitwise-identical to their uninstrumented
+//!     form;
+//!   * **deterministic when armed**: each site draws from its own
+//!     PCG stream, seeded as `Rng::new(seed).fold_in(fnv(site))`, so
+//!     a fixed `seed=` spec reproduces the exact same fault schedule
+//!     run after run — the fault campaign in
+//!     `tests/fault_campaign.rs` asserts counter equality against the
+//!     injected counts, which only works because of this;
+//!   * **armed from outside the code under test**: the
+//!     `KAFFT_FAULTS` env var or the `--faults` CLI flag carries a
+//!     spec like `seed=7,disk.put.io=0.2,batch.lane.panic=0.05`.
+//!
+//! ## Registered sites
+//!
+//! | site                 | layer               | effect when fired            |
+//! |----------------------|---------------------|------------------------------|
+//! | `disk.put.io`        | `streaming/disk.rs` | synthetic write IO error     |
+//! | `disk.put.torn`      | `streaming/disk.rs` | truncated (torn) envelope    |
+//! | `disk.load.io`       | `streaming/disk.rs` | synthetic read IO error      |
+//! | `disk.load.short`    | `streaming/disk.rs` | short read (truncated bytes) |
+//! | `batch.lane.panic`   | `streaming/batch.rs`| panic inside one lane's step |
+//! | `server.queue.full`  | `coordinator/server`| force a load-shed response   |
+//! | `server.deadline`    | `coordinator/server`| force deadline expiry        |
+//! | `server.slow`        | `coordinator/server`| slow-consumer stall (1 ms)   |
+//! | `numeric.den_zero`   | `attention`/`state` | force the denominator floor  |
+//! | `numeric.readout_nan`| `engine`/`streaming`| poison a readout to NaN      |
+//!
+//! Unlisted site names are legal (they simply never fire unless the
+//! spec names them), so layers can add failpoints without touching
+//! this table — but keep the doc current; `streaming/README.md` and
+//! `engine/README.md` describe the degradation ladder each site
+//! exercises.
+//!
+//! ## Guardrail counters ([`guard`])
+//!
+//! The numerical guardrails (denominator floor, finite checks, dense
+//! fallback) run on allocation-free hot paths that don't carry a
+//! `&Telemetry`. They note degradation events into thread-local
+//! `Cell<u64>`s here; the serving layers drain them
+//! (`guard::take_clamps` / `guard::take_fallback_dense`) into the
+//! shared `Telemetry` registry at the same fan-out boundaries where
+//! stage shards are absorbed. Healthy inputs never touch the cells,
+//! so the steady-state cost is one predictable branch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::rng::Rng;
+
+/// One failpoint's arming state: fire probability and a private,
+/// site-keyed PCG stream. Draw order within a site is the sole source
+/// of randomness, so single-threaded callers see a reproducible
+/// schedule.
+#[derive(Debug)]
+struct SiteState {
+    prob: f64,
+    rng: Rng,
+    fired: u64,
+    evaluated: u64,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    sites: HashMap<String, SiteState>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn registry() -> MutexGuard<'static, Option<Registry>> {
+    // A panic injected *by* a failpoint can poison this lock; the
+    // registry is counters-only, so continuing with the inner value
+    // is always safe.
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// FNV-1a 64 over the site name: stable site→stream derivation that
+/// does not depend on arming order or HashMap iteration order.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Is any fault spec armed? One relaxed load.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Should the failpoint `site` fire now? Disarmed: `false` after one
+/// relaxed load — safe on any hot path. Armed: draws the site's next
+/// uniform and compares against its probability (sites absent from
+/// the spec never fire).
+#[inline]
+pub fn should_fire(site: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_fire_armed(site)
+}
+
+#[cold]
+fn should_fire_armed(site: &str) -> bool {
+    let mut reg = registry();
+    let Some(reg) = reg.as_mut() else { return false };
+    let Some(state) = reg.sites.get_mut(site) else {
+        return false;
+    };
+    state.evaluated += 1;
+    let fire = state.rng.uniform() < state.prob;
+    if fire {
+        state.fired += 1;
+    }
+    fire
+}
+
+/// Panic with a recognizable message when `site` fires. The message
+/// prefix is part of the contract: lane-isolation code surfaces it in
+/// the per-request error.
+#[inline]
+pub fn maybe_panic(site: &str) {
+    if should_fire(site) {
+        panic!("injected fault: {site}");
+    }
+}
+
+/// Arm from a spec string: comma-separated `site=prob` entries plus
+/// an optional `seed=N` (default 0). Probabilities are clamped-free —
+/// they must parse into `[0, 1]` or the whole spec is rejected, so a
+/// typo can't silently arm nothing.
+///
+/// ```text
+/// KAFFT_FAULTS="seed=7,disk.put.io=0.2,batch.lane.panic=0.05"
+/// ```
+///
+/// Re-arming replaces the previous registry (counters reset).
+pub fn arm(spec: &str) -> Result<(), String> {
+    let mut seed: u64 = 0;
+    let mut probs: Vec<(String, f64)> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, value) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fault spec entry `{part}` is not key=value"))?;
+        let (key, value) = (key.trim(), value.trim());
+        if key == "seed" {
+            seed = value
+                .parse::<u64>()
+                .map_err(|_| format!("fault seed `{value}` is not a u64"))?;
+        } else {
+            let p = value
+                .parse::<f64>()
+                .map_err(|_| format!("fault prob `{value}` for `{key}` is not a number"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("fault prob {p} for `{key}` outside [0, 1]"));
+            }
+            probs.push((key.to_string(), p));
+        }
+    }
+    if probs.is_empty() {
+        return Err(format!("fault spec `{spec}` names no sites"));
+    }
+    let mut sites = HashMap::new();
+    for (name, prob) in probs {
+        let rng = Rng::new(seed).fold_in(fnv1a64(name.as_bytes()));
+        sites.insert(name, SiteState { prob, rng, fired: 0, evaluated: 0 });
+    }
+    *registry() = Some(Registry { sites });
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Arm from the `KAFFT_FAULTS` env var if it is set and non-empty.
+/// Returns whether arming happened; a malformed spec is an error (a
+/// campaign that thinks it armed but didn't proves nothing).
+pub fn arm_from_env() -> Result<bool, String> {
+    match std::env::var("KAFFT_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => arm(&spec).map(|()| true),
+        _ => Ok(false),
+    }
+}
+
+/// Disarm and drop the registry. `should_fire` returns to the
+/// one-load fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    *registry() = None;
+}
+
+/// Times `site` actually fired since arming (0 when disarmed or
+/// unknown).
+pub fn fired(site: &str) -> u64 {
+    registry()
+        .as_ref()
+        .and_then(|r| r.sites.get(site))
+        .map(|s| s.fired)
+        .unwrap_or(0)
+}
+
+/// Times `site` was evaluated (reached while armed) since arming.
+pub fn evaluated(site: &str) -> u64 {
+    registry()
+        .as_ref()
+        .and_then(|r| r.sites.get(site))
+        .map(|s| s.evaluated)
+        .unwrap_or(0)
+}
+
+/// Total fires across all sites since arming.
+pub fn total_fired() -> u64 {
+    registry()
+        .as_ref()
+        .map(|r| r.sites.values().map(|s| s.fired).sum())
+        .unwrap_or(0)
+}
+
+/// Snapshot of `(site, fired)` for every armed site, sorted by name —
+/// the fault campaign reconciles these against telemetry counters.
+pub fn fired_counts() -> Vec<(String, u64)> {
+    let mut out: Vec<(String, u64)> = registry()
+        .as_ref()
+        .map(|r| r.sites.iter().map(|(k, v)| (k.clone(), v.fired)).collect())
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+/// Arming is process-global; tests that arm/disarm (unit or
+/// integration) serialize through this lock, mirroring
+/// `telemetry::test_flag_guard`.
+#[doc(hidden)]
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+pub mod guard {
+    //! Thread-local degradation counters for the allocation-free hot
+    //! paths (see module doc). `note_*` on the degraded branch only;
+    //! `take_*` drains and resets, called where stage shards are
+    //! absorbed.
+
+    use std::cell::Cell;
+
+    thread_local! {
+        static CLAMPS: Cell<u64> = Cell::new(0);
+        static FALLBACK_DENSE: Cell<u64> = Cell::new(0);
+    }
+
+    /// The denominator floor engaged (ladder stage 1).
+    #[inline]
+    pub fn note_clamp() {
+        CLAMPS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// A non-finite readout was recomputed on the dense quadratic
+    /// path (ladder stage 2).
+    #[inline]
+    pub fn note_fallback_dense() {
+        FALLBACK_DENSE.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Bulk re-note: scoped worker threads drain their own cells
+    /// before exiting (thread-locals die with the thread) and the
+    /// fan-out caller re-notes the sum on its own thread.
+    pub fn note_clamps(n: u64) {
+        if n > 0 {
+            CLAMPS.with(|c| c.set(c.get() + n));
+        }
+    }
+
+    /// Bulk form of [`note_fallback_dense`]; see [`note_clamps`].
+    pub fn note_fallbacks_dense(n: u64) {
+        if n > 0 {
+            FALLBACK_DENSE.with(|c| c.set(c.get() + n));
+        }
+    }
+
+    pub fn take_clamps() -> u64 {
+        CLAMPS.with(|c| c.replace(0))
+    }
+
+    pub fn take_fallback_dense() -> u64 {
+        FALLBACK_DENSE.with(|c| c.replace(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_never_fires_and_costs_one_load() {
+        let _g = test_guard();
+        disarm();
+        assert!(!armed());
+        for _ in 0..1000 {
+            assert!(!should_fire("disk.put.io"));
+        }
+        assert_eq!(total_fired(), 0);
+    }
+
+    #[test]
+    fn armed_schedule_is_deterministic_per_seed() {
+        let _g = test_guard();
+        let run = || -> Vec<bool> {
+            arm("seed=42,disk.put.io=0.3").unwrap();
+            let fires: Vec<bool> =
+                (0..200).map(|_| should_fire("disk.put.io")).collect();
+            disarm();
+            fires
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "fixed seed reproduces the fault schedule");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!(
+            fired > 30 && fired < 90,
+            "p=0.3 over 200 draws fired {fired} times"
+        );
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let _g = test_guard();
+        arm("seed=1,a.site=0.5,b.site=0.5").unwrap();
+        let a: Vec<bool> = (0..64).map(|_| should_fire("a.site")).collect();
+        let b: Vec<bool> = (0..64).map(|_| should_fire("b.site")).collect();
+        disarm();
+        assert_ne!(a, b, "per-site fold_in decorrelates the streams");
+    }
+
+    #[test]
+    fn unlisted_sites_never_fire_and_probability_bounds_hold() {
+        let _g = test_guard();
+        arm("seed=9,always=1,never=0").unwrap();
+        for _ in 0..50 {
+            assert!(should_fire("always"));
+            assert!(!should_fire("never"));
+            assert!(!should_fire("not.in.spec"));
+        }
+        assert_eq!(fired("always"), 50);
+        assert_eq!(evaluated("always"), 50);
+        assert_eq!(fired("never"), 0);
+        assert_eq!(evaluated("never"), 50);
+        assert_eq!(fired("not.in.spec"), 0);
+        assert_eq!(total_fired(), 50);
+        assert_eq!(
+            fired_counts(),
+            vec![("always".to_string(), 50), ("never".to_string(), 0)]
+        );
+        disarm();
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        let _g = test_guard();
+        disarm();
+        assert!(arm("").is_err());
+        assert!(arm("seed=3").is_err(), "no sites named");
+        assert!(arm("a.site").is_err(), "missing =prob");
+        assert!(arm("a.site=nope").is_err());
+        assert!(arm("a.site=1.5").is_err(), "prob outside [0,1]");
+        assert!(arm("seed=abc,a.site=1").is_err());
+        assert!(!armed(), "rejected specs must not arm");
+    }
+
+    #[test]
+    fn maybe_panic_fires_and_is_catchable() {
+        let _g = test_guard();
+        arm("seed=0,boom=1").unwrap();
+        let caught = std::panic::catch_unwind(|| maybe_panic("boom"));
+        disarm();
+        let msg = *caught
+            .expect_err("site at p=1 must panic")
+            .downcast::<String>()
+            .expect("panic payload is the format string");
+        assert_eq!(msg, "injected fault: boom");
+    }
+
+    #[test]
+    fn guard_counters_note_and_drain() {
+        assert_eq!(guard::take_clamps(), 0);
+        guard::note_clamp();
+        guard::note_clamp();
+        guard::note_fallback_dense();
+        assert_eq!(guard::take_clamps(), 2);
+        assert_eq!(guard::take_clamps(), 0, "take resets");
+        assert_eq!(guard::take_fallback_dense(), 1);
+        assert_eq!(guard::take_fallback_dense(), 0);
+    }
+}

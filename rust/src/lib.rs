@@ -67,13 +67,22 @@
 //!     `serve`/`decode`) that folds in `engine::CacheStats` and
 //!     `streaming::session::StoreStats`. `metrics` (evaluation
 //!     quality: BLEU, perplexity, MCC) is a different axis and stays
-//!     separate.
+//!     separate;
+//!   * `faults` is the fault-tolerance substrate: deterministic
+//!     PCG-seeded failpoints (`KAFFT_FAULTS=...`, zero-cost when
+//!     disarmed) threaded through the disk tier, the batch lanes, and
+//!     the server queue, plus the thread-local guardrail counters
+//!     (`faults::guard`) that the numerical degradation ladder —
+//!     denominator floor, dense-path retry, typed error — drains into
+//!     the telemetry snapshot (guardrail_clamps, fallback_dense,
+//!     lane_panics, shed_requests, deadline_expired, disk_io_errors).
 
 pub mod attention;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod fft;
 pub mod metrics;
 pub mod rng;

@@ -39,9 +39,29 @@ fn main() {
     } else if args.has_flag("quiet") {
         set_level(Level::Warn);
     }
+    // Deterministic fault injection: `--faults SPEC` or KAFFT_FAULTS,
+    // e.g. "seed=7,disk.put.io=0.2,batch.lane.panic=0.05". A malformed
+    // spec is a configuration error, not something to serve through.
+    let armed = match args.get("faults") {
+        Some(spec) => kafft::faults::arm(&spec).map(|()| true),
+        None => kafft::faults::arm_from_env(),
+    };
+    match armed {
+        Ok(true) => info!("fault injection armed"),
+        Ok(false) => {}
+        Err(e) => {
+            eprintln!("error: bad fault spec: {e}");
+            std::process::exit(2);
+        }
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+    if kafft::faults::armed() {
+        for (site, n) in kafft::faults::fired_counts() {
+            info!("fault site {site}: fired {n}");
+        }
     }
 }
 
@@ -106,7 +126,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  \n\
                  global: --artifacts DIR --verbose --quiet\n\
                  \u{20}       --metrics-json PATH --metrics-prom PATH\n\
-                 \u{20}       (serve/decode: dump the telemetry snapshot)"
+                 \u{20}       (serve/decode: dump the telemetry snapshot)\n\
+                 \u{20}       --faults SPEC (or KAFFT_FAULTS) arm deterministic\n\
+                 \u{20}       fault injection, e.g. \"seed=7,disk.put.io=0.2\";\n\
+                 \u{20}       streaming serve: --queue-limit N --deadline-ms MS"
             );
             Ok(())
         }
@@ -314,8 +337,19 @@ fn streaming_serve(args: &Args) -> Result<()> {
         continuous: !args.has_flag("static-batch"),
         session_dir: args.get("session-dir").map(Into::into),
         disk_budget_bytes: args.get_usize("disk-budget-mb", 256) << 20,
+        queue_limit: args.get_usize("queue-limit", 0),
+        deadline: match args.get_u64("deadline-ms", 0) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
         ..StreamingServerConfig::default()
     };
+    // With fault injection armed, per-request failures (sheds, expired
+    // deadlines, caught lane panics, degraded numerics) are the point
+    // of the exercise: count them and keep driving instead of aborting
+    // the demo on the first one.
+    let tolerate = kafft::faults::armed();
+    let mut errored = 0usize;
     let vocab = cfg.vocab;
     info!(
         "streaming server: {sessions} sessions x ({prompt_len} prompt + \
@@ -337,27 +371,44 @@ fn streaming_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     if !resume {
         // Interleave the sessions round-robin so LRU spill/restore is
-        // genuinely exercised when --max-live < --sessions.
-        let mut sess: Vec<(Vec<f32>, usize)> = Vec::new();
+        // genuinely exercised when --max-live < --sessions. A session
+        // whose request fails under injected faults is retired (None)
+        // and the rest keep going.
+        let mut sess: Vec<Option<(Vec<f32>, usize)>> = Vec::new();
         for s in 0..sessions {
             let prompt: Vec<i32> = (0..prompt_len)
                 .map(|_| rng.below_usize(vocab) as i32)
                 .collect();
-            let resp = server
-                .submit(s as u64 + 1, prompt)?
-                .recv()?
-                .map_err(|e| anyhow::anyhow!(e))?;
-            sess.push((resp.next_logits, resp.positions));
+            match server.submit(s as u64 + 1, prompt)?.recv()? {
+                Ok(resp) => {
+                    sess.push(Some((resp.next_logits, resp.positions)));
+                }
+                Err(e) if tolerate => {
+                    kafft::error!("session {}: {e}", s + 1);
+                    errored += 1;
+                    sess.push(None);
+                }
+                Err(e) => return Err(anyhow::anyhow!(e)),
+            }
         }
         for _ in 0..gen {
             for s in 0..sessions {
-                let next =
-                    kafft::coordinator::decode::argmax(&sess[s].0) as i32;
-                let resp = server
-                    .submit_at(s as u64 + 1, vec![next], sess[s].1)?
+                let Some((logits, pos)) = &sess[s] else { continue };
+                let next = kafft::coordinator::decode::argmax(logits) as i32;
+                match server
+                    .submit_at(s as u64 + 1, vec![next], *pos)?
                     .recv()?
-                    .map_err(|e| anyhow::anyhow!(e))?;
-                sess[s] = (resp.next_logits, resp.positions);
+                {
+                    Ok(resp) => {
+                        sess[s] = Some((resp.next_logits, resp.positions));
+                    }
+                    Err(e) if tolerate => {
+                        kafft::error!("session {}: {e}", s + 1);
+                        errored += 1;
+                        sess[s] = None;
+                    }
+                    Err(e) => return Err(anyhow::anyhow!(e)),
+                }
             }
         }
     }
@@ -381,9 +432,17 @@ fn streaming_serve(args: &Args) -> Result<()> {
     }
     let mut restored = 0usize;
     for rx in rxs {
-        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
-        if resp.origin == Origin::Restored {
-            restored += 1;
+        match rx.recv()? {
+            Ok(resp) => {
+                if resp.origin == Origin::Restored {
+                    restored += 1;
+                }
+            }
+            Err(e) if tolerate => {
+                kafft::error!("decode request: {e}");
+                errored += 1;
+            }
+            Err(e) => return Err(anyhow::anyhow!(e)),
         }
     }
     if resume && restored == 0 {
@@ -405,11 +464,14 @@ fn streaming_serve(args: &Args) -> Result<()> {
                     .collect()
             })
             .collect();
-        let resp = server
-            .submit_prompt_batch(prompts)?
-            .recv()?
-            .map_err(|e| anyhow::anyhow!(e))?;
-        debug_assert_eq!(resp.next_logits.len(), 4);
+        match server.submit_prompt_batch(prompts)?.recv()? {
+            Ok(resp) => debug_assert_eq!(resp.next_logits.len(), 4),
+            Err(e) if tolerate => {
+                kafft::error!("batch request: {e}");
+                errored += 1;
+            }
+            Err(e) => return Err(anyhow::anyhow!(e)),
+        }
     }
     let stats = server.shutdown();
     // Decode rate excludes prefill: those tokens went through one
@@ -457,6 +519,18 @@ fn streaming_serve(args: &Args) -> Result<()> {
         println!(
             "disk tier: writes={} reads={} expired={} corrupt={}",
             ss.disk_writes, ss.disk_reads, ss.disk_expired, ss.disk_corrupt
+        );
+    }
+    if tolerate {
+        println!(
+            "degradation: errored={errored} clamps={} dense_fallbacks={} \
+             lane_panics={} shed={} deadline_expired={} disk_io_errors={}",
+            tel.guardrail_clamps,
+            tel.fallback_dense,
+            tel.lane_panics,
+            tel.shed_requests,
+            tel.deadline_expired,
+            tel.disk_io_errors
         );
     }
     println!(

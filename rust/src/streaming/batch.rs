@@ -77,6 +77,9 @@ pub struct BatchCounters {
     /// Sum of lane occupancy over cycles; mean occupancy is
     /// `occupancy_sum / cycles`.
     pub occupancy_sum: u64,
+    /// Lanes vacated by a caught panic (a subset of `evicted`): the
+    /// one request errored, the rest of the batch kept serving.
+    pub panics: u64,
 }
 
 pub struct Batcher<R> {
@@ -182,8 +185,21 @@ impl<R> Batcher<R> {
         while i < self.lanes.len() {
             let lane = &mut self.lanes[i];
             let token = argmax(&lane.logits) as i32;
-            match step(lane.job.session, token, &mut lane.logits) {
-                Ok(positions) => {
+            let session = lane.job.session;
+            // Panic isolation: a panicking step (a model bug, a
+            // poisoned session, or the injected `batch.lane.panic`
+            // failpoint) vacates this one lane with an error while the
+            // other lanes keep serving. AssertUnwindSafe is sound here
+            // because a panicked lane's state (its logits buffer, the
+            // step closure's decoder scratch) is never read again: the
+            // lane is vacated and the server discards the session.
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::faults::maybe_panic("batch.lane.panic");
+                    step(session, token, &mut lane.logits)
+                }));
+            match outcome {
+                Ok(Ok(positions)) => {
                     lane.generated.push(token);
                     lane.positions = positions;
                     if lane.generated.len() >= lane.job.gen {
@@ -193,14 +209,41 @@ impl<R> Batcher<R> {
                         i += 1;
                     }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     self.counters.evicted += 1;
                     let msg = format!("{e:#}");
+                    vacated.push((self.lanes.swap_remove(i), Some(msg)));
+                }
+                Err(payload) => {
+                    self.counters.panics += 1;
+                    self.counters.evicted += 1;
+                    let msg = format!(
+                        "{PANIC_PREFIX}: {}",
+                        panic_message(&payload)
+                    );
                     vacated.push((self.lanes.swap_remove(i), Some(msg)));
                 }
             }
         }
         vacated
+    }
+}
+
+/// Error-message prefix for lanes vacated by a caught panic. The
+/// server keys on it to classify the failure as `ServeError::LanePanic`
+/// (and to discard the mid-step session) without the batcher having to
+/// know the server's error type.
+pub const PANIC_PREFIX: &str = "lane panicked";
+
+/// Best-effort text of a caught panic payload (`&str` / `String`
+/// payloads cover `panic!` and the injected failpoints).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -356,5 +399,56 @@ mod tests {
         assert!(fin[0].1.as_deref().unwrap().contains("poisoned state"));
         assert_eq!(b.occupancy(), 1);
         assert_eq!(b.counters.evicted, 1);
+    }
+
+    #[test]
+    fn step_panic_vacates_one_lane_and_the_batch_keeps_serving() {
+        let mut b: Batcher<()> = Batcher::new(3, Admission::Continuous);
+        b.enqueue(job(1, 2));
+        b.enqueue(job(2, 2));
+        b.enqueue(job(3, 2));
+        b.admit(fake_prefill);
+        let fin = b.step_cycle(|session, _, _| {
+            if session == 2 {
+                panic!("lane bug for session {session}");
+            }
+            Ok(1)
+        });
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].0.job.session, 2);
+        let msg = fin[0].1.as_deref().unwrap();
+        assert!(msg.contains("lane panicked"), "{msg}");
+        assert!(msg.contains("lane bug for session 2"), "{msg}");
+        assert_eq!(b.occupancy(), 2, "surviving lanes stay in flight");
+        assert_eq!(b.counters.panics, 1);
+        assert_eq!(b.counters.evicted, 1);
+        // The survivors finish normally on later cycles.
+        let mut finished = Vec::new();
+        while !b.idle() {
+            for (lane, err) in b.step_cycle(|_, _, _| Ok(1)) {
+                assert!(err.is_none());
+                finished.push(lane.job.session);
+            }
+        }
+        finished.sort_unstable();
+        assert_eq!(finished, vec![1, 3]);
+        assert_eq!(b.counters.panics, 1, "only the injected panic counted");
+    }
+
+    #[test]
+    fn injected_lane_panic_failpoint_is_caught_and_counted() {
+        let _g = crate::faults::test_guard();
+        crate::faults::arm("seed=0,batch.lane.panic=1").unwrap();
+        let mut b: Batcher<()> = Batcher::new(2, Admission::Continuous);
+        b.enqueue(job(1, 3));
+        b.admit(fake_prefill);
+        let fin = b.step_cycle(|_, _, _| Ok(1));
+        assert_eq!(crate::faults::fired("batch.lane.panic"), 1);
+        crate::faults::disarm();
+        assert_eq!(fin.len(), 1);
+        let msg = fin[0].1.as_deref().unwrap();
+        assert!(msg.contains("injected fault: batch.lane.panic"), "{msg}");
+        assert_eq!(b.counters.panics, 1);
+        assert!(b.idle());
     }
 }

@@ -71,6 +71,12 @@ pub struct DiskTier {
     /// Files discarded during `open` because their envelope was torn,
     /// foreign, or mismatched its filename.
     pub scan_rejected: usize,
+    /// IO failures on `put`/`load` — real filesystem errors plus the
+    /// injected `disk.put.io` / `disk.put.torn` / `disk.load.io` /
+    /// `disk.load.short` failpoints. Every one degraded a session to a
+    /// lower tier (`Origin::Created` at worst), never a crash; surfaced
+    /// as `disk_io_errors` in the metrics snapshot.
+    pub io_errors: usize,
 }
 
 fn session_path(dir: &Path, id: u64) -> PathBuf {
@@ -129,6 +135,7 @@ impl DiskTier {
             order: BTreeSet::new(),
             total_bytes: 0,
             scan_rejected: 0,
+            io_errors: 0,
         };
         for entry in fs::read_dir(&tier.dir)? {
             let path = entry?.path();
@@ -203,11 +210,31 @@ impl DiskTier {
         }
         buf.extend(payload);
         let path = session_path(&self.dir, id);
+        if crate::faults::should_fire("disk.put.io") {
+            self.io_errors += 1;
+            bail!("injected disk IO error writing {}", path.display());
+        }
+        if crate::faults::should_fire("disk.put.torn") {
+            // A torn write lands half the envelope under the *live*
+            // name — the crash the temp-file + rename discipline
+            // defends against, forced anyway. The index keeps no
+            // record of the fragment; the next `load` or `open` scan
+            // rejects and deletes it (degrade, never wedge).
+            let _ = fs::write(&path, &buf[..HEADER_BYTES + payload.len() / 2]);
+            self.io_errors += 1;
+            bail!("injected torn write for session {id}");
+        }
         let tmp = path.with_extension("kafft.tmp");
-        fs::write(&tmp, &buf)
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        fs::rename(&tmp, &path)
-            .with_context(|| format!("renaming into {}", path.display()))?;
+        let io = fs::write(&tmp, &buf)
+            .with_context(|| format!("writing {}", tmp.display()))
+            .and_then(|()| {
+                fs::rename(&tmp, &path)
+                    .with_context(|| format!("renaming into {}", path.display()))
+            });
+        if let Err(e) = io {
+            self.io_errors += 1;
+            return Err(e);
+        }
         if let Some(old) = self.index.remove(&id) {
             self.order.remove(&(old.stamp, id));
             self.total_bytes -= old.bytes;
@@ -235,15 +262,31 @@ impl DiskTier {
         };
         let stamp = meta.stamp;
         let path = session_path(&self.dir, id);
-        let outcome = fs::read(&path)
-            .map_err(anyhow::Error::from)
-            .and_then(|bytes| {
-                let (env_id, _) = validate_envelope(&bytes)?;
-                if env_id != id {
-                    bail!("envelope: holds session {env_id}, expected {id}");
+        if crate::faults::should_fire("disk.load.io") {
+            self.io_errors += 1;
+            self.remove_entry(id, stamp);
+            bail!("session {id} disk envelope: injected read IO error");
+        }
+        let outcome = match fs::read(&path) {
+            Err(e) => {
+                self.io_errors += 1;
+                Err(anyhow::Error::from(e))
+            }
+            Ok(mut bytes) => {
+                if crate::faults::should_fire("disk.load.short") {
+                    // A short read: half the envelope arrives, so the
+                    // length/checksum validation below must reject it.
+                    self.io_errors += 1;
+                    bytes.truncate(bytes.len() / 2);
                 }
-                Ok(bytes[HEADER_BYTES..].to_vec())
-            });
+                validate_envelope(&bytes).and_then(|(env_id, _)| {
+                    if env_id != id {
+                        bail!("envelope: holds session {env_id}, expected {id}");
+                    }
+                    Ok(bytes[HEADER_BYTES..].to_vec())
+                })
+            }
+        };
         match outcome {
             Ok(payload) => Ok(Some(payload)),
             Err(e) => {
@@ -381,6 +424,49 @@ mod tests {
         assert!(!t.contains(9));
         assert!(t.load(9).unwrap().is_none());
         assert!(!p.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_disk_faults_degrade_and_count() {
+        let _g = crate::faults::test_guard();
+        let dir = tmpdir("faults");
+        let payload = vec![5u8; 120];
+        let mut t = DiskTier::open(&dir, 1 << 20).unwrap();
+        t.put(1, 1, &payload).unwrap();
+
+        // put.io: synthetic write failure, nothing lands on disk.
+        crate::faults::arm("seed=0,disk.put.io=1").unwrap();
+        assert!(t.put(2, 2, &payload).is_err());
+        assert!(!t.contains(2));
+        assert!(!session_path(&dir, 2).exists());
+        assert_eq!(t.io_errors, 1);
+
+        // put.torn: a fragment lands under the live name; the index
+        // keeps no record and the next open scan deletes it.
+        crate::faults::arm("seed=0,disk.put.torn=1").unwrap();
+        assert!(t.put(3, 3, &payload).is_err());
+        assert!(!t.contains(3));
+        assert!(session_path(&dir, 3).exists(), "torn fragment written");
+        assert_eq!(t.io_errors, 2);
+
+        // load.io / load.short: the envelope is dropped, the caller
+        // sees Err once, then a clean miss — never a wedged id.
+        crate::faults::arm("seed=0,disk.load.io=1").unwrap();
+        assert!(t.load(1).is_err());
+        assert!(t.load(1).unwrap().is_none(), "clean miss after drop");
+        assert_eq!(t.io_errors, 3);
+        t.put(4, 4, &payload).unwrap();
+        crate::faults::arm("seed=0,disk.load.short=1").unwrap();
+        assert!(t.load(4).is_err());
+        assert!(t.load(4).unwrap().is_none());
+        assert_eq!(t.io_errors, 4);
+        crate::faults::disarm();
+
+        // The torn fragment from put.torn is rejected at open.
+        let t = DiskTier::open(&dir, 1 << 20).unwrap();
+        assert_eq!(t.scan_rejected, 1);
+        assert!(!session_path(&dir, 3).exists());
         let _ = fs::remove_dir_all(&dir);
     }
 }

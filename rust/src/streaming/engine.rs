@@ -13,8 +13,8 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    kernel_features_into, nprf_rpe_fft_path, nprf_rpe_fft_path_into,
-    nprf_rpe_fft_path_traced, rpe_correlations, Kind,
+    kernel_attention_into, kernel_features_into, nprf_rpe_fft_path,
+    nprf_rpe_fft_path_into, nprf_rpe_fft_path_traced, rpe_correlations, Kind,
 };
 use crate::engine::{PlanCache, Workspace};
 use crate::telemetry::{Stage, StageShard, StageTimer};
@@ -235,7 +235,7 @@ impl StreamingDecoder {
             // The effective coefficients already encode the window +
             // tail, so the FFT prefill and the recurrent steps realize
             // the same operator.
-            outs.push(match &plan {
+            let mut out = match &plan {
                 Some(p) => {
                     let mut out = Mat::default();
                     match tel.as_deref_mut() {
@@ -251,7 +251,27 @@ impl StreamingDecoder {
                     out
                 }
                 None => nprf_rpe_fft_path(&ws.phi_q, &ws.phi_k, &v[h], &c, true),
-            });
+            };
+            if crate::faults::should_fire("numeric.readout_nan") {
+                out.data.fill(f32::NAN);
+            }
+            if !out.data.iter().all(|x| x.is_finite()) {
+                // Degradation ladder stage 2: recompute this head on
+                // the quadratic dense path (same effective coefficient
+                // vector, bitwise-deterministic); stage 3: typed error.
+                crate::faults::guard::note_fallback_dense();
+                kernel_attention_into(
+                    &ws.phi_q, &ws.phi_k, &v[h], Some(&c), true, &mut out,
+                    &mut ws.dense,
+                );
+                if !out.data.iter().all(|x| x.is_finite()) {
+                    bail!(
+                        "prefill head {h}: non-finite output survived the \
+                         dense fallback"
+                    );
+                }
+            }
+            outs.push(out);
             for j in 0..n {
                 self.state.push(h, ws.phi_k.row(j), v[h].row(j), c_tail);
             }
@@ -303,6 +323,17 @@ impl StreamingDecoder {
                 h, ws.phi_q.row(0), &self.spec.coeffs, &mut ws.num,
                 out.row_mut(h),
             );
+            // Mid-stream there is no dense retry (the recurrent state
+            // is the only operand): a non-finite row past the
+            // denominator floor is a typed error, and the caller must
+            // discard the session — this step's (k, v) were already
+            // absorbed.
+            if !out.row(h).iter().all(|x| x.is_finite()) {
+                bail!(
+                    "step head {h} at pos {}: non-finite streaming output",
+                    self.pos
+                );
+            }
         }
         self.pos += 1;
         Ok(())

@@ -23,6 +23,13 @@
 //!   * `batch`   — `Batcher`: token-granularity continuous batching —
 //!                 finished/arriving requests swap into lanes between
 //!                 steps via SessionStore snapshot/restore.
+//!
+//! Fault tolerance: the layer carries deterministic failpoints from
+//! `crate::faults` — `disk.put.io` / `disk.put.torn` / `disk.load.io` /
+//! `disk.load.short` in the durable tier and `batch.lane.panic` in the
+//! batcher (caught per lane; the rest of the batch keeps serving).
+//! Numerical guardrails on the (S, z) recurrence live in `state` /
+//! `engine`; see the "Failure domains" section of README.md.
 
 pub mod batch;
 pub mod disk;
@@ -30,7 +37,9 @@ pub mod engine;
 pub mod session;
 pub mod state;
 
-pub use batch::{Admission, BatchCounters, Batcher, DecodeJob, Lane};
+pub use batch::{
+    Admission, BatchCounters, Batcher, DecodeJob, Lane, PANIC_PREFIX,
+};
 pub use disk::DiskTier;
 pub use engine::{StepScratch, StreamSpec, StreamingDecoder};
 pub use session::{Origin, SessionStore, StoreStats};

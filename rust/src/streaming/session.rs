@@ -180,6 +180,13 @@ impl SessionStore {
         self.disk.as_ref().map(|t| t.bytes()).unwrap_or(0)
     }
 
+    /// IO failures (real or injected) recorded by the disk tier; 0
+    /// without one. Every failure degraded a session to a lower tier
+    /// — the server folds this into the `disk_io_errors` metric.
+    pub fn disk_io_errors(&self) -> usize {
+        self.disk.as_ref().map(|t| t.io_errors).unwrap_or(0)
+    }
+
     /// Byte accounting over live sessions: a running total, refreshed
     /// for sessions touched since the last `enforce`.
     pub fn live_bytes(&self) -> usize {

@@ -159,7 +159,7 @@ impl DecoderState {
             }
             den += s;
         }
-        let inv = 1.0 / (den + EPS as f64);
+        let inv = 1.0 / crate::attention::guard_den(den + EPS as f64);
         for (o, &x) in out.iter_mut().zip(num.iter()) {
             *o = (x * inv) as f32;
         }

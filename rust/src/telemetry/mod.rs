@@ -231,6 +231,23 @@ pub struct Telemetry {
     /// Lanes vacated (finished/failed) — continuous mode refills these
     /// mid-batch.
     evicts: AtomicU64,
+    /// Degradation ladder stage 1: the denominator floor engaged on a
+    /// kernelized readout (clamped instead of propagating NaN/Inf).
+    guardrail_clamps: AtomicU64,
+    /// Degradation ladder stage 2: a non-finite fast-path output was
+    /// recomputed on the quadratic dense oracle path.
+    fallback_dense: AtomicU64,
+    /// A batch lane panicked and was vacated; the batch kept serving.
+    lane_panics: AtomicU64,
+    /// Requests refused at submit with an explicit load-shed response
+    /// (bounded queue full).
+    shed_requests: AtomicU64,
+    /// Requests refused because their deadline expired before work
+    /// started.
+    deadline_expired: AtomicU64,
+    /// Disk-tier IO errors (real or injected); the session degraded
+    /// to a lower tier instead of corrupting.
+    disk_io_errors: AtomicU64,
 }
 
 impl Telemetry {
@@ -282,6 +299,45 @@ impl Telemetry {
         self.evicts.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_guardrail_clamps(&self, n: u64) {
+        self.guardrail_clamps.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_fallback_dense(&self, n: u64) {
+        self.fallback_dense.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_lane_panics(&self, n: u64) {
+        self.lane_panics.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_shed_requests(&self, n: u64) {
+        self.shed_requests.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_deadline_expired(&self, n: u64) {
+        self.deadline_expired.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_disk_io_errors(&self, n: u64) {
+        self.disk_io_errors.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Drain the thread-local guardrail counters
+    /// ([`crate::faults::guard`]) into the registry. Call at the same
+    /// fan-out boundaries where shards are absorbed, from the thread
+    /// that ran the guarded work.
+    pub fn drain_guard_counters(&self) {
+        let clamps = crate::faults::guard::take_clamps();
+        if clamps > 0 {
+            self.add_guardrail_clamps(clamps);
+        }
+        let dense = crate::faults::guard::take_fallback_dense();
+        if dense > 0 {
+            self.add_fallback_dense(dense);
+        }
+    }
+
     pub fn add_tokens(&self, n: u64) {
         self.tokens.fetch_add(n, Ordering::Relaxed);
     }
@@ -317,6 +373,12 @@ impl Telemetry {
             batch_occupancy: self.batch_occupancy.summary(),
             admits: self.admits.load(Ordering::Relaxed),
             evicts: self.evicts.load(Ordering::Relaxed),
+            guardrail_clamps: self.guardrail_clamps.load(Ordering::Relaxed),
+            fallback_dense: self.fallback_dense.load(Ordering::Relaxed),
+            lane_panics: self.lane_panics.load(Ordering::Relaxed),
+            shed_requests: self.shed_requests.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            disk_io_errors: self.disk_io_errors.load(Ordering::Relaxed),
             tokens,
             prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
             tokens_per_sec: if uptime > 0.0 {
@@ -420,5 +482,26 @@ mod tests {
         assert_eq!(snap.batch_size.count, 1);
         assert_eq!(snap.queue_wait.count, 1);
         assert!(snap.tokens_per_sec >= 0.0);
+    }
+
+    #[test]
+    fn degradation_counters_accumulate_and_drain_from_guard() {
+        let tel = Telemetry::new();
+        tel.add_lane_panics(2);
+        tel.add_shed_requests(3);
+        tel.add_deadline_expired(1);
+        tel.add_disk_io_errors(4);
+        crate::faults::guard::note_clamp();
+        crate::faults::guard::note_clamp();
+        crate::faults::guard::note_fallback_dense();
+        tel.drain_guard_counters();
+        tel.drain_guard_counters(); // drained cells add nothing twice
+        let snap = tel.snapshot();
+        assert_eq!(snap.lane_panics, 2);
+        assert_eq!(snap.shed_requests, 3);
+        assert_eq!(snap.deadline_expired, 1);
+        assert_eq!(snap.disk_io_errors, 4);
+        assert_eq!(snap.guardrail_clamps, 2);
+        assert_eq!(snap.fallback_dense, 1);
     }
 }

@@ -51,6 +51,23 @@ pub struct MetricsSnapshot {
     pub admits: u64,
     /// Batch lanes vacated (request finished or failed).
     pub evicts: u64,
+    /// Denominator-floor clamps on the kernelized readout
+    /// (degradation ladder stage 1).
+    pub guardrail_clamps: u64,
+    /// Non-finite fast-path outputs recomputed on the quadratic dense
+    /// oracle (degradation ladder stage 2).
+    pub fallback_dense: u64,
+    /// Batch lanes vacated by a caught panic (one request errored,
+    /// batch kept serving).
+    pub lane_panics: u64,
+    /// Requests refused at submit with an explicit load-shed response.
+    pub shed_requests: u64,
+    /// Requests refused because their deadline expired before work
+    /// started.
+    pub deadline_expired: u64,
+    /// Disk-tier IO errors (real or injected) absorbed as tier
+    /// degradation.
+    pub disk_io_errors: u64,
     /// Decoded tokens since registry start.
     pub tokens: u64,
     /// Prompt tokens consumed by prefill since registry start.
@@ -96,6 +113,13 @@ impl MetricsSnapshot {
             ("batch_occupancy", hist_json(&self.batch_occupancy)),
             ("admits", Json::Num(self.admits as f64)),
             ("evicts", Json::Num(self.evicts as f64)),
+            // Additive keys (fault tolerance) — no version bump.
+            ("guardrail_clamps", Json::Num(self.guardrail_clamps as f64)),
+            ("fallback_dense", Json::Num(self.fallback_dense as f64)),
+            ("lane_panics", Json::Num(self.lane_panics as f64)),
+            ("shed_requests", Json::Num(self.shed_requests as f64)),
+            ("deadline_expired", Json::Num(self.deadline_expired as f64)),
+            ("disk_io_errors", Json::Num(self.disk_io_errors as f64)),
             ("tokens", Json::Num(self.tokens as f64)),
             ("prefill_tokens", Json::Num(self.prefill_tokens as f64)),
             ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
@@ -161,6 +185,36 @@ impl MetricsSnapshot {
         prom_hist(&mut out, "kafft_batch_occupancy", &self.batch_occupancy);
         prom_counter(&mut out, "kafft_batch_admits_total", self.admits as f64);
         prom_counter(&mut out, "kafft_batch_evicts_total", self.evicts as f64);
+        prom_counter(
+            &mut out,
+            "kafft_guardrail_clamps_total",
+            self.guardrail_clamps as f64,
+        );
+        prom_counter(
+            &mut out,
+            "kafft_fallback_dense_total",
+            self.fallback_dense as f64,
+        );
+        prom_counter(
+            &mut out,
+            "kafft_lane_panics_total",
+            self.lane_panics as f64,
+        );
+        prom_counter(
+            &mut out,
+            "kafft_shed_requests_total",
+            self.shed_requests as f64,
+        );
+        prom_counter(
+            &mut out,
+            "kafft_deadline_expired_total",
+            self.deadline_expired as f64,
+        );
+        prom_counter(
+            &mut out,
+            "kafft_disk_io_errors_total",
+            self.disk_io_errors as f64,
+        );
         prom_counter(&mut out, "kafft_tokens_total", self.tokens as f64);
         prom_counter(
             &mut out,
@@ -281,6 +335,12 @@ mod tests {
         tel.record_batch_size(8);
         tel.add_tokens(64);
         tel.add_prefill_tokens(128);
+        tel.add_guardrail_clamps(4);
+        tel.add_fallback_dense(2);
+        tel.add_lane_panics(1);
+        tel.add_shed_requests(6);
+        tel.add_deadline_expired(3);
+        tel.add_disk_io_errors(5);
         tel.snapshot()
             .with_plan_cache(CacheStats {
                 hits: 10,
@@ -329,6 +389,12 @@ mod tests {
         assert_eq!(j.req_usize("tokens").unwrap(), 64);
         assert_eq!(j.req_usize("admits").unwrap(), 0);
         assert!(j.get("batch_occupancy").is_some());
+        assert_eq!(j.req_usize("guardrail_clamps").unwrap(), 4);
+        assert_eq!(j.req_usize("fallback_dense").unwrap(), 2);
+        assert_eq!(j.req_usize("lane_panics").unwrap(), 1);
+        assert_eq!(j.req_usize("shed_requests").unwrap(), 6);
+        assert_eq!(j.req_usize("deadline_expired").unwrap(), 3);
+        assert_eq!(j.req_usize("disk_io_errors").unwrap(), 5);
     }
 
     #[test]
@@ -367,5 +433,11 @@ mod tests {
         assert!(prom.contains("kafft_batch_admits_total 0"));
         assert!(prom.contains("# TYPE kafft_batch_occupancy summary"));
         assert!(prom.contains("# TYPE kafft_queue_wait_ns summary"));
+        assert!(prom.contains("kafft_guardrail_clamps_total 4"));
+        assert!(prom.contains("kafft_fallback_dense_total 2"));
+        assert!(prom.contains("kafft_lane_panics_total 1"));
+        assert!(prom.contains("kafft_shed_requests_total 6"));
+        assert!(prom.contains("kafft_deadline_expired_total 3"));
+        assert!(prom.contains("kafft_disk_io_errors_total 5"));
     }
 }

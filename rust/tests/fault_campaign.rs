@@ -1,0 +1,291 @@
+//! Scripted fault campaign (the tentpole's acceptance driver): a
+//! `StreamingServer` bombarded with every failpoint at once must not
+//! crash, must answer (or explicitly shed) every request, and its six
+//! degradation counters must reconcile exactly against the harness's
+//! per-site fired counts. A second, disk-only campaign proves restored
+//! sessions are bitwise identical to an uninterrupted control — fault
+//! tolerance never buys silent session corruption.
+
+use kafft::coordinator::decode::argmax;
+use kafft::coordinator::server::{
+    ServeError, StreamingServer, StreamingServerConfig,
+};
+use kafft::streaming::Origin;
+
+fn tiny_cfg(seed: u64, dir: Option<std::path::PathBuf>)
+            -> StreamingServerConfig {
+    StreamingServerConfig {
+        vocab: 16,
+        d_model: 4,
+        features: 4,
+        max_len: 16,
+        window: 16,
+        max_live: 4, // force spill/restore churn through the cold map
+        batch_slots: 2,
+        seed,
+        session_dir: dir,
+        // queue_limit 0 = unbounded, so the only source of sheds is
+        // the server.queue.full failpoint: shed_requests must equal
+        // its fired count exactly. Same for deadline: None and the
+        // server.deadline failpoint.
+        queue_limit: 0,
+        deadline: None,
+        ..StreamingServerConfig::default()
+    }
+}
+
+/// Request accounting for the "every request answered or explicitly
+/// shed" invariant: the four buckets must sum to submissions.
+#[derive(Default)]
+struct Tally {
+    submitted: u64,
+    served: u64,
+    shed: u64,
+    deadline: u64,
+    errored: u64,
+}
+
+impl Tally {
+    fn absorb<T>(&mut self, reply: Result<T, ServeError>) -> Option<T> {
+        self.submitted += 1;
+        match reply {
+            Ok(t) => {
+                self.served += 1;
+                Some(t)
+            }
+            Err(ServeError::Shed) => {
+                self.shed += 1;
+                None
+            }
+            Err(ServeError::DeadlineExpired) => {
+                self.deadline += 1;
+                None
+            }
+            Err(ServeError::LanePanic(_)) | Err(ServeError::Rejected(_)) => {
+                self.errored += 1;
+                None
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_campaign_soaks_without_crashing_and_reconciles_counters() {
+    let _g = kafft::faults::test_guard();
+    let dir = std::env::temp_dir().join(format!(
+        "kafft-fault-campaign-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Every site armed at once, fixed seed. Probabilities are sized to
+    // the number of draws each site sees in this workload so that each
+    // degradation class fires at least once (the draw sequence is
+    // deterministic per site, so this is stable, not flaky).
+    kafft::faults::arm(
+        "seed=1337,server.queue.full=0.2,server.deadline=0.2,\
+         batch.lane.panic=0.1,numeric.den_zero=0.02,\
+         numeric.readout_nan=0.35,disk.put.io=0.3,disk.put.torn=0.25,\
+         disk.load.io=0.3,disk.load.short=0.3,server.slow=0.05",
+    )
+    .unwrap();
+
+    let mut tally = Tally::default();
+
+    // Phase 1: mixed workload — stream prefills + continuations,
+    // batcher-scheduled greedy decodes, stateless prompt batches.
+    // recv() must ALWAYS yield a reply: a request the server dropped
+    // on the floor shows up here as a RecvError panic.
+    let a = StreamingServer::start(tiny_cfg(11, Some(dir.clone()))).unwrap();
+    for s in 0..16u64 {
+        let prompt = vec![(s % 16) as i32, 3, 1, 4];
+        let r = a
+            .submit(100 + s, prompt)
+            .unwrap()
+            .recv()
+            .expect("stream prefill dropped without a reply");
+        tally.absorb(r);
+        for c in 0..3u64 {
+            let r = a
+                .submit(100 + s, vec![((s + c) % 16) as i32, 2])
+                .unwrap()
+                .recv()
+                .expect("stream continuation dropped without a reply");
+            tally.absorb(r);
+        }
+    }
+    for s in 0..16u64 {
+        let r = a
+            .submit_decode(200 + s, vec![(s % 16) as i32, 5, 9], 6)
+            .unwrap()
+            .recv()
+            .expect("decode dropped without a reply");
+        tally.absorb(r);
+    }
+    for b in 0..3i32 {
+        let prompts: Vec<Vec<i32>> =
+            (0..4).map(|p| vec![(b + p) % 16, 1, 2]).collect();
+        let r = a
+            .submit_prompt_batch(prompts)
+            .unwrap()
+            .recv()
+            .expect("prompt batch dropped without a reply");
+        tally.absorb(r);
+    }
+    let snap_a = a.shutdown().telemetry;
+
+    // Phase 2: a restarted server on the same directory, same armed
+    // registry — restores now run the disk.load.* gauntlet; sessions
+    // whose flush was eaten by disk.put.* must come back fresh, never
+    // half-restored.
+    let b = StreamingServer::start(tiny_cfg(11, Some(dir.clone()))).unwrap();
+    for s in 0..16u64 {
+        let r = b
+            .submit(100 + s, vec![7, (s % 16) as i32])
+            .unwrap()
+            .recv()
+            .expect("post-restart stream dropped without a reply");
+        tally.absorb(r);
+    }
+    for s in 0..8u64 {
+        let r = b
+            .submit_decode(200 + s, vec![1], 2)
+            .unwrap()
+            .recv()
+            .expect("post-restart decode dropped without a reply");
+        tally.absorb(r);
+    }
+    let snap_b = b.shutdown().telemetry;
+
+    // Reconcile BEFORE disarm (disarm drops the fired counters).
+    let fired = kafft::faults::fired;
+    let disk_fired = fired("disk.put.io")
+        + fired("disk.put.torn")
+        + fired("disk.load.io")
+        + fired("disk.load.short");
+    let shed = snap_a.shed_requests + snap_b.shed_requests;
+    let deadline = snap_a.deadline_expired + snap_b.deadline_expired;
+    let panics = snap_a.lane_panics + snap_b.lane_panics;
+    let clamps = snap_a.guardrail_clamps + snap_b.guardrail_clamps;
+    let fallbacks = snap_a.fallback_dense + snap_b.fallback_dense;
+    let disk_errs = snap_a.disk_io_errors + snap_b.disk_io_errors;
+    assert_eq!(shed, fired("server.queue.full"), "shed_requests");
+    assert_eq!(deadline, fired("server.deadline"), "deadline_expired");
+    assert_eq!(panics, fired("batch.lane.panic"), "lane_panics");
+    assert_eq!(clamps, fired("numeric.den_zero"), "guardrail_clamps");
+    assert_eq!(fallbacks, fired("numeric.readout_nan"), "fallback_dense");
+    assert_eq!(disk_errs, disk_fired, "disk_io_errors");
+    kafft::faults::disarm();
+
+    // Every degradation class must actually have been exercised.
+    for (name, n) in [
+        ("shed_requests", shed),
+        ("deadline_expired", deadline),
+        ("lane_panics", panics),
+        ("guardrail_clamps", clamps),
+        ("fallback_dense", fallbacks),
+        ("disk_io_errors", disk_errs),
+    ] {
+        assert!(n > 0, "degradation class {name} never fired");
+    }
+
+    // Conservation: nothing vanished, nothing double-counted.
+    assert_eq!(tally.submitted, 16 * 4 + 16 + 3 + 16 + 8);
+    assert_eq!(
+        tally.served + tally.shed + tally.deadline + tally.errored,
+        tally.submitted,
+        "every request must be served, shed, expired, or errored"
+    );
+    assert_eq!(tally.shed, shed, "client-side and server-side shed agree");
+    assert_eq!(tally.deadline, deadline);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restored_sessions_bitwise_match_control_under_disk_faults() {
+    let _g = kafft::faults::test_guard();
+    let dir = std::env::temp_dir().join(format!(
+        "kafft-fault-parity-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let prompts: Vec<Vec<i32>> =
+        (0..8i32).map(|s| vec![s, (s + 3) % 16, 5]).collect();
+
+    // Leg A: decode under an armed disk.put.io — the shutdown flush
+    // writes one envelope per session and some of those writes fail.
+    kafft::faults::arm("seed=40,disk.put.io=0.45").unwrap();
+    let a = StreamingServer::start(tiny_cfg(29, Some(dir.clone()))).unwrap();
+    let mut leg_a = Vec::new();
+    for (s, p) in prompts.iter().enumerate() {
+        let r = a
+            .submit_decode(s as u64, p.clone(), 3)
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("leg A decode");
+        leg_a.push(r);
+    }
+    let snap_a = a.shutdown().telemetry;
+    let put_failures = kafft::faults::fired("disk.put.io");
+    kafft::faults::disarm();
+    assert_eq!(
+        snap_a.disk_io_errors, put_failures,
+        "every injected put failure and nothing else counts as disk IO"
+    );
+
+    // Leg B, disarmed, same directory: a failed put dropped exactly
+    // that session (typed degradation at flush time, logged and
+    // counted); every other one must restore.
+    let b = StreamingServer::start(tiny_cfg(29, Some(dir.clone()))).unwrap();
+    let mut leg_b = Vec::new();
+    for (s, ra) in leg_a.iter().enumerate() {
+        let next = argmax(&ra.next_logits) as i32;
+        let r = b
+            .submit_decode(s as u64, vec![next], 3)
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("leg B decode");
+        leg_b.push((next, r));
+    }
+    b.shutdown();
+    let restored =
+        leg_b.iter().filter(|(_, r)| r.origin == Origin::Restored).count();
+    assert_eq!(
+        restored as u64,
+        8 - put_failures,
+        "a put failure drops exactly one session; the rest restore"
+    );
+
+    // Control: an uninterrupted, fault-free server generating the
+    // combined length in one request. Token streams and final logits
+    // of every restored session must match it bitwise.
+    let c = StreamingServer::start(tiny_cfg(29, None)).unwrap();
+    for (s, (next, rb)) in leg_b.iter().enumerate() {
+        if rb.origin != Origin::Restored {
+            continue;
+        }
+        let rc = c
+            .submit_decode(s as u64, prompts[s].clone(), 7)
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("control decode");
+        let mut interrupted = leg_a[s].generated.clone();
+        interrupted.push(*next);
+        interrupted.extend(&rb.generated);
+        assert_eq!(
+            rc.generated, interrupted,
+            "session {s}: token stream diverged across the faulty restart"
+        );
+        assert_eq!(
+            rc.next_logits, rb.next_logits,
+            "session {s}: restored logits diverged bitwise from control"
+        );
+        assert_eq!(rc.positions, rb.positions, "session {s}: positions");
+    }
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
