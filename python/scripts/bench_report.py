@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Aggregate the benches' BENCH_*.json artifacts into one trajectory
+report.
+
+Each Rust bench (``cargo bench --bench <name>``) writes a
+machine-readable ``BENCH_<name>.json`` next to the repo root. This
+script collects every such file, re-evaluates the benches' own
+acceptance gates from the recorded numbers, prints a
+``bench | metric | value | gate | pass`` table, and writes a combined
+``BENCH_SUMMARY.json`` for CI archiving and run-over-run trajectory
+comparison.
+
+Gates mirror the asserts baked into the benches themselves (see
+rust/benches/*.rs); re-deriving them here means an old artifact can be
+re-judged without re-running the bench:
+
+  * fft_substrate      — rfft roundtrip speedup >= 1.6x, zero
+                         steady-state allocations;
+  * dense_substrate    — blocked matmul_t speedup >= its recorded
+                         ``gate_speedup_min`` (0 = waived), zero
+                         steady-state allocations on both hot paths;
+  * batched_attend     — engine speedup >= 3x with >= 3 workers (1.2x
+                         below), plan-cache hit rate >= 0.9, telemetry
+                         and tracing overhead <= 5% each, zero
+                         steady-state allocations with spans on and
+                         with tracing attached.
+
+Usage:
+  python3 python/scripts/bench_report.py [paths...] [--out FILE]
+
+``paths`` are BENCH_*.json files or directories to scan (default: the
+current directory). Exits nonzero when any gate fails, so CI can use
+it as a check step.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)
+
+
+def gate_rows(name, data):
+    """Yield (metric, value, gate_text, passed_or_None) for one bench.
+
+    ``passed`` is None for report-only metrics that carry no gate.
+    """
+    rows = []
+
+    def gated(metric, gate_text, passed):
+        rows.append((metric, data.get(metric), gate_text, passed))
+
+    def info(metric):
+        if metric in data:
+            rows.append((metric, data[metric], "-", None))
+
+    if name == "fft_substrate":
+        gated("speedup", ">= 1.6",
+              data.get("speedup", 0) >= 1.6)
+        gated("steady_state_allocs", "== 0",
+              data.get("steady_state_allocs") == 0)
+        gated("toeplitz_real_allocs", "== 0",
+              data.get("toeplitz_real_allocs") == 0)
+        for m in ("complex_roundtrip_ms", "rfft_roundtrip_ms",
+                  "toeplitz_real_ms", "toeplitz_complex_ms",
+                  "plan_bytes_half_spectrum", "plan_bytes_full_spectrum"):
+            info(m)
+    elif name == "dense_substrate":
+        gate = data.get("gate_speedup_min", 2.0)
+        if gate > 0:
+            gated("matmul_t_speedup", f">= {gate:g}",
+                  data.get("matmul_t_speedup", 0) >= gate)
+        else:
+            info("matmul_t_speedup")
+        gated("matmul_t_steady_allocs", "== 0",
+              data.get("matmul_t_steady_allocs") == 0)
+        gated("attend_batch_into_steady_allocs", "== 0",
+              data.get("attend_batch_into_steady_allocs") == 0)
+        for m in ("matmul_t_naive_ms", "matmul_t_blocked_ms",
+                  "attend_batch_into_ms", "plan_cache_hit_rate"):
+            info(m)
+    elif name == "batched_attend":
+        workers = data.get("workers", 1)
+        target = 3.0 if workers >= 3 else 1.2
+        gated("speedup", f">= {target:g} ({workers} workers)",
+              data.get("speedup", 0) >= target)
+        gated("cache_hit_rate", ">= 0.9",
+              data.get("cache_hit_rate", 0) >= 0.9)
+        gated("tel_overhead_frac", "<= 0.05",
+              data.get("tel_overhead_frac", 1) <= 0.05)
+        gated("tel_steady_state_allocs", "== 0",
+              data.get("tel_steady_state_allocs") == 0)
+        # Tracing keys are additive (older artifacts lack them).
+        if "trace_overhead_frac" in data:
+            gated("trace_overhead_frac", "<= 0.05",
+                  data.get("trace_overhead_frac", 1) <= 0.05)
+            gated("trace_steady_state_allocs", "== 0",
+                  data.get("trace_steady_state_allocs") == 0)
+        for m in ("base_ms_per_item", "engine_ms_per_item",
+                  "tel_off_ms_per_batch", "tel_on_ms_per_batch",
+                  "trace_on_ms_per_batch"):
+            info(m)
+    else:
+        # Unknown bench: report every numeric key, gate nothing.
+        for k, v in sorted(data.items()):
+            if isinstance(v, (int, float)) and k != "bench":
+                rows.append((k, v, "-", None))
+    return rows
+
+
+def collect(paths):
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(glob.glob(os.path.join(p, "BENCH_*.json"))))
+        else:
+            files.append(p)
+    # BENCH_SUMMARY.json is this script's own output, never an input.
+    return [f for f in files
+            if os.path.basename(f) != "BENCH_SUMMARY.json"]
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Aggregate BENCH_*.json into a gate table "
+                    "and BENCH_SUMMARY.json")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="BENCH_*.json files or directories (default: .)")
+    ap.add_argument("--out", default="BENCH_SUMMARY.json",
+                    help="summary output path (default: %(default)s)")
+    args = ap.parse_args()
+
+    files = collect(args.paths or ["."])
+    if not files:
+        print("no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+
+    table = []   # (bench, metric, value, gate, pass)
+    benches = {}
+    for path in files:
+        with open(path) as fh:
+            data = json.load(fh)
+        name = data.get("bench", os.path.basename(path))
+        benches[name] = data
+        for metric, value, gate, passed in gate_rows(name, data):
+            table.append((name, metric, value, gate, passed))
+
+    widths = [
+        max(len("bench"), *(len(r[0]) for r in table)),
+        max(len("metric"), *(len(r[1]) for r in table)),
+        max(len("value"), *(len(fmt(r[2])) for r in table)),
+        max(len("gate"), *(len(r[3]) for r in table)),
+    ]
+    header = (f"{'bench':<{widths[0]}}  {'metric':<{widths[1]}}  "
+              f"{'value':>{widths[2]}}  {'gate':<{widths[3]}}  pass")
+    print(header)
+    print("-" * len(header))
+    failed = []
+    for bench, metric, value, gate, passed in table:
+        mark = "-" if passed is None else ("PASS" if passed else "FAIL")
+        print(f"{bench:<{widths[0]}}  {metric:<{widths[1]}}  "
+              f"{fmt(value):>{widths[2]}}  {gate:<{widths[3]}}  {mark}")
+        if passed is False:
+            failed.append(f"{bench}.{metric}")
+
+    summary = {
+        "schema": "kafft.bench_summary",
+        "version": 1,
+        "sources": [os.path.basename(f) for f in files],
+        "benches": benches,
+        "gates": [
+            {"bench": b, "metric": m, "value": v, "gate": g,
+             "pass": p}
+            for b, m, v, g, p in table if p is not None
+        ],
+        "all_pass": not failed,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(summary, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"\nwrote {args.out} ({len(benches)} benches, "
+          f"{len(summary['gates'])} gates)")
+    if failed:
+        print("FAILED gates: " + ", ".join(failed), file=sys.stderr)
+        return 1
+    print("all gates PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

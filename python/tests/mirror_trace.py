@@ -1,0 +1,307 @@
+"""Executable mirror of the request-tracing core (PR 9): the
+span-tree containment builder in rust/src/trace/export.rs, the
+tail-sampling eviction policy in rust/src/trace/sample.rs, the
+exemplar derivation, and the TraceRing overwrite/merge discipline in
+rust/src/trace/ring.rs (no toolchain in this container, so the
+algorithms are validated here, not just read).
+
+Mirrors the exact Rust operations:
+
+  * ``span_tree`` — sort records by (t0 asc, dur desc), one stack
+    pass, child iff its interval lies within the parent's; checked by
+    generating random containment forests (several interleaved trace
+    ids, nested spans, zero-duration events), shuffling the flattened
+    records, and requiring exact reconstruction — the same property
+    tests/proptest_trace.rs pins in-process;
+  * ``offer`` — pinned traces evict the oldest unpinned (or, if all
+    pinned, the oldest pinned); unpinned traces replace the fastest
+    unpinned iff slower (slowest-k); replayed against the Rust unit
+    tests' expected retained sets;
+  * ``exemplars`` — slowest retained trace per (histogram, log2
+    bucket), top 3 buckets per histogram, ordered hist asc / bucket
+    desc; bucket arithmetic reuses the mirror of telemetry's
+    ``bucket_of``;
+  * ``TraceRing`` — grow-to-cap then overwrite-oldest, oldest-first
+    iteration, merge == replay.
+
+Run: python3 python/tests/mirror_trace.py
+"""
+
+import random
+
+BUCKETS = 44
+
+
+def bucket_of(v):
+    if v == 0:
+        return 0
+    return min(v.bit_length() - 1, BUCKETS - 1)
+
+
+# ---------------------------------------------------------------------------
+# span_tree mirror (rust/src/trace/export.rs)
+# ---------------------------------------------------------------------------
+
+class Node:
+    def __init__(self, record):
+        self.record = record  # (trace, kind, t0, dur)
+        self.children = []
+
+    def end(self):
+        return self.record[2] + self.record[3]
+
+    def size(self):
+        return 1 + sum(c.size() for c in self.children)
+
+    def shape(self):
+        """Canonical tuple for equality checks."""
+        return (self.record, tuple(c.shape() for c in self.children))
+
+
+def span_tree(records):
+    ordered = sorted(records, key=lambda r: (r[2], -r[3]))
+    roots, stack = [], []
+    for r in ordered:
+        node = Node(r)
+        while stack:
+            top = stack[-1]
+            if r[2] >= top.record[2] and r[2] + r[3] <= top.end():
+                break
+            done = stack.pop()
+            (stack[-1].children if stack else roots).append(done)
+        stack.append(node)
+    while stack:
+        done = stack.pop()
+        (stack[-1].children if stack else roots).append(done)
+    return roots
+
+
+REQUEST_KINDS = ("request_stream", "request_batch", "request_decode")
+INNER_KINDS = ("admit", "prefill", "gemm", "readout", "stream_step",
+               "page_out")
+
+
+def gen_children(rng, parent, depth):
+    """Mirror of the proptest generator: up to three disjoint children
+    strictly inside the parent, gaps between siblings, events dur 0."""
+    if depth == 0:
+        return
+    trace, _, lo, dur = parent.record
+    hi = lo + dur
+    cursor = lo
+    while len(parent.children) < 3:
+        gap = 1 + rng.randrange(8)
+        start = cursor + gap
+        if start + 2 >= hi:
+            break
+        if rng.randrange(4) == 0:
+            kind, cdur = "guard_clamp", 0
+        else:
+            kind = INNER_KINDS[rng.randrange(len(INNER_KINDS))]
+            cdur = 1 + rng.randrange(hi - start)
+        child = Node((trace, kind, start, cdur))
+        if cdur > 0:
+            gen_children(rng, child, depth - 1)
+        cursor = start + cdur + 1
+        parent.children.append(child)
+
+
+def flatten(node, out):
+    out.append(node.record)
+    for c in node.children:
+        flatten(c, out)
+
+
+def check_span_tree(cases=500):
+    rng = random.Random(0x17EE)
+    for _ in range(cases):
+        roots, records = [], []
+        for tid in range(1, 1 + rng.randrange(1, 4)):
+            root = Node((tid, REQUEST_KINDS[rng.randrange(3)],
+                         rng.randrange(1000), 64 + rng.randrange(1000)))
+            gen_children(rng, root, 3)
+            roots.append(root)
+            flatten(root, records)
+        rng.shuffle(records)
+        assert sum(r.size() for r in roots) == len(records)
+        for want in roots:
+            tid = want.record[0]
+            mine = [r for r in records if r[0] == tid]
+            got = span_tree(mine)
+            assert len(got) == 1, (tid, len(got))
+            assert got[0].record[1] in REQUEST_KINDS
+            assert got[0].shape() == want.shape(), tid
+    print(f"span_tree: {cases} shuffled forests reconstruct exactly")
+
+
+# ---------------------------------------------------------------------------
+# tail-sampling mirror (rust/src/trace/sample.rs)
+# ---------------------------------------------------------------------------
+
+def offer(buf, keep, meta):
+    """meta = dict(id, dur, pinned). Mirrors sample::offer."""
+    if keep == 0:
+        return
+    if len(buf) < keep:
+        buf.append(meta)
+        return
+    if meta["pinned"]:
+        victim = next((i for i, t in enumerate(buf)
+                       if not t["pinned"]), 0 if buf else None)
+    else:
+        unpinned = [(i, t) for i, t in enumerate(buf)
+                    if not t["pinned"]]
+        victim = None
+        if unpinned:
+            i, t = min(unpinned, key=lambda it: it[1]["dur"])
+            if meta["dur"] > t["dur"]:
+                victim = i
+    if victim is not None:
+        buf.pop(victim)
+        buf.append(meta)
+
+
+def check_sampler():
+    def m(i, dur, pinned):
+        return {"id": i, "dur": dur, "pinned": pinned,
+                "hist": "request_stream_ns"}
+
+    # Rust test: pinned_evicts_oldest_unpinned_first
+    buf = []
+    for meta in [m(1, 100, False), m(2, 200, False), m(3, 10, True)]:
+        offer(buf, 2, meta)
+    assert [t["id"] for t in buf] == [2, 3], buf
+
+    # Rust test: unpinned_keeps_slowest_k
+    buf = []
+    for i, dur in [(1, 50), (2, 300), (3, 100), (4, 20)]:
+        offer(buf, 2, m(i, dur, False))
+    assert sorted(t["id"] for t in buf) == [2, 3], buf
+
+    # Rust test: all_pinned_buffer_evicts_oldest_pinned
+    buf = []
+    for i in (1, 2, 3):
+        offer(buf, 2, m(i, 10, True))
+    assert [t["id"] for t in buf] == [2, 3], buf
+
+    # Property: every pinned offer is retained while capacity allows,
+    # and the unpinned survivors are always the slowest of their kind.
+    rng = random.Random(7)
+    for _ in range(300):
+        keep = 1 + rng.randrange(8)
+        buf, offered = [], []
+        for i in range(40):
+            meta = m(i, rng.randrange(10_000), rng.randrange(4) == 0)
+            offered.append(meta)
+            offer(buf, keep, meta)
+        assert len(buf) <= keep
+        pinned_in = [t for t in buf if t["pinned"]]
+        pinned_all = [t for t in offered if t["pinned"]]
+        # Pinned traces survive to capacity, newest-biased.
+        assert len(pinned_in) == min(len(pinned_all), keep)
+        if pinned_in:
+            tail = pinned_all[-len(pinned_in):]
+            assert [t["id"] for t in pinned_in] == [t["id"] for t in tail]
+    print("tail sampler: eviction policy matches on 300 random schedules")
+
+
+def exemplars(buf, per_hist=3):
+    best = {}
+    for t in buf:
+        key = (t["hist"], bucket_of(t["dur"]))
+        if key not in best or t["dur"] > best[key]["dur"]:
+            best[key] = t
+    out = sorted(best.items(),
+                 key=lambda kv: (kv[0][0], -kv[0][1]))
+    result, run, last = [], 0, None
+    for (hist, bucket), t in out:
+        run = run + 1 if hist == last else 0
+        last = hist
+        if run < per_hist:
+            result.append((hist, bucket, t["dur"], t["id"]))
+    return result
+
+
+def check_exemplars():
+    def m(i, dur):
+        return {"id": i, "dur": dur, "pinned": True,
+                "hist": "request_stream_ns"}
+
+    # Rust test: exemplars_link_top_buckets_to_slowest_trace —
+    # 1100 and 1500 share log2 bucket 10, the slower one wins.
+    buf = [m(1, 1100), m(2, 1500), m(3, 40_000)]
+    ex = exemplars(buf)
+    assert len(ex) == 2, ex
+    assert ex[0][3] == 3 and ex[1][3] == 2, ex
+    assert ex[1][2] == 1500, ex
+
+    # Top-3 truncation: five distinct buckets keep the highest three.
+    buf = [m(i, 1 << (4 + i)) for i in range(5)]
+    ex = exemplars(buf)
+    assert len(ex) == 3, ex
+    assert [e[1] for e in ex] == sorted((e[1] for e in ex),
+                                        reverse=True)
+    assert ex[0][3] == 4, ex
+    print("exemplars: slowest-per-bucket, top-3, descending order")
+
+
+# ---------------------------------------------------------------------------
+# TraceRing mirror (rust/src/trace/ring.rs)
+# ---------------------------------------------------------------------------
+
+class Ring:
+    def __init__(self, cap):
+        self.cap = max(cap, 1)
+        self.buf = []
+        self.next = 0
+        self.total = 0
+
+    def push(self, r):
+        if len(self.buf) < self.cap:
+            self.buf.append(r)
+        else:
+            self.buf[self.next] = r
+            self.next = (self.next + 1) % self.cap
+        self.total += 1
+
+    def items(self):
+        split = 0 if len(self.buf) < self.cap else self.next
+        return self.buf[split:] + self.buf[:split]
+
+    def merge(self, other):
+        for r in other.items():
+            self.push(r)
+
+
+def check_ring(cases=300):
+    rng = random.Random(0x7ACE)
+    for _ in range(cases):
+        n, cap = rng.randrange(600), 1 + rng.randrange(64)
+        ring = Ring(cap)
+        for i in range(n):
+            ring.push(i)
+        assert ring.total == n
+        assert ring.items() == list(range(max(0, n - cap), n))
+        # Merge law: contiguous split == single ring, even when the
+        # merge target overflows.
+        ways = 1 + rng.randrange(6)
+        parts = [Ring(max(n, 1)) for _ in range(ways)]
+        for i in range(n):
+            parts[i * ways // max(n, 1)].push(i)
+        for target_cap in (max(n, 1), n // 3 + 1):
+            single, merged = Ring(target_cap), Ring(target_cap)
+            for i in range(n):
+                single.push(i)
+            for p in parts:
+                merged.merge(p)
+            assert merged.items() == single.items(), (n, cap, ways)
+            assert merged.total == single.total
+    print(f"trace ring: overwrite + merge law hold on {cases} schedules")
+
+
+if __name__ == "__main__":
+    check_span_tree()
+    check_sampler()
+    check_exemplars()
+    check_ring()
+    print("mirror_trace: all checks passed")

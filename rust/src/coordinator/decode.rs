@@ -303,7 +303,9 @@ fn greedy_decode_cpu_impl(lm: &CpuLm, prompt: &[i32], gen: usize,
         Some(t) => {
             let cache = PlanCache::default();
             let timer = StageTimer::start();
+            let span = crate::trace::SpanTimer::start();
             let pre = dec.prefill_traced(&[q], &[k], &[v], &cache, &mut shard)?;
+            span.stop(crate::trace::SpanKind::Prefill);
             if crate::telemetry::enabled() {
                 t.record_prefill_ns(timer.elapsed_ns());
             }

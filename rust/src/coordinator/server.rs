@@ -37,6 +37,7 @@ use crate::telemetry::{
     MetricsSnapshot, Stage, StageShard, StageTimer, Telemetry,
 };
 use crate::tensor::Mat;
+use crate::trace::{SpanKind, SpanTimer};
 
 /// Clamp a measured latency away from zero: sub-nanosecond readings on
 /// coarse clocks must still register as real time spent, and downstream
@@ -125,7 +126,22 @@ pub struct LmResponse {
 struct Pending {
     req: LmRequest,
     enqueued: Instant,
+    /// Trace id minted at submit (0 = untraced).
+    trace: u64,
     reply: Sender<LmResponse>,
+}
+
+/// Close out a request that never executed (shed at submit, expired in
+/// queue): attribute the worker thread, attach the refusal annotation,
+/// and finish the trace degraded so tail sampling retains it. No-op
+/// for untraced requests.
+fn trace_refusal(trace: u64, kind: SpanKind, t0: Instant, why: SpanKind) {
+    if trace == 0 {
+        return;
+    }
+    crate::trace::set_current(trace);
+    crate::trace::event(why);
+    crate::trace::finish_request(kind, t0, true, false);
 }
 
 /// Server statistics for the perf study.
@@ -212,6 +228,7 @@ impl LmServer {
             .send(Pending {
                 req: LmRequest { id, tokens },
                 enqueued: Instant::now(),
+                trace: crate::trace::maybe_mint(),
                 reply: reply_tx,
             })
             .map_err(|_| anyhow!("server is shut down"))?;
@@ -264,8 +281,12 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
         // Queue wait ends when the group is sealed and execution is
         // about to start.
         for p in &group {
-            tel.record_queue_wait_ns(p.enqueued.elapsed().as_nanos() as u64);
+            let waited = p.enqueued.elapsed().as_nanos() as u64;
+            tel.record_queue_wait_ns(waited);
+            crate::trace::set_current(p.trace);
+            crate::trace::span_at(SpanKind::QueueWait, p.enqueued, waited);
         }
+        crate::trace::set_current(0);
         tel.record_batch_size(group.len() as u64);
         let rows: Vec<&[i32]> =
             group.iter().map(|p| p.req.tokens.as_slice()).collect();
@@ -304,6 +325,10 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
             let latency = nonzero(p.enqueued.elapsed());
             tel.record_batch_request_ns(latency.as_nanos() as u64);
             tel.add_tokens(p.req.tokens.len() as u64);
+            crate::trace::set_current(p.trace);
+            crate::trace::finish_request(
+                SpanKind::RequestBatch, p.enqueued, false, false,
+            );
             let _ = p.reply.send(LmResponse {
                 id: p.req.id,
                 next_logits: next,
@@ -313,7 +338,8 @@ fn worker(rt: Arc<Runtime>, rx: Receiver<Pending>,
         }
     }
     stats.batch_hist = hist.into_iter().collect();
-    stats.telemetry = tel.snapshot();
+    stats.telemetry =
+        tel.snapshot().with_exemplars(crate::trace::exemplars());
     stats
 }
 
@@ -378,6 +404,8 @@ pub struct StreamResponse {
 struct StreamPending {
     req: StreamRequest,
     enqueued: Instant,
+    /// Trace id minted at submit (0 = untraced).
+    trace: u64,
     reply: Sender<Result<StreamResponse, ServeError>>,
 }
 
@@ -387,6 +415,8 @@ struct StreamPending {
 struct BatchPending {
     prompts: Vec<Vec<i32>>,
     enqueued: Instant,
+    /// Trace id minted at submit (0 = untraced).
+    trace: u64,
     reply: Sender<Result<BatchResponse, ServeError>>,
 }
 
@@ -616,7 +646,10 @@ impl StreamingServer {
     pub fn submit_prompt_batch(&self, prompts: Vec<Vec<i32>>)
                                -> Result<Receiver<Result<BatchResponse, ServeError>>> {
         let (reply_tx, reply_rx) = channel();
+        let trace = crate::trace::maybe_mint();
         if !self.try_admit() {
+            trace_refusal(trace, SpanKind::RequestBatch, Instant::now(),
+                          SpanKind::Shed);
             let _ = reply_tx.send(Err(ServeError::Shed));
             return Ok(reply_rx);
         }
@@ -624,6 +657,7 @@ impl StreamingServer {
             .send(StreamJob::Batch(BatchPending {
                 prompts,
                 enqueued: Instant::now(),
+                trace,
                 reply: reply_tx,
             }))
             .map_err(|_| anyhow!("streaming server is shut down"))?;
@@ -637,7 +671,10 @@ impl StreamingServer {
     pub fn submit_decode(&self, session: u64, tokens: Vec<i32>, gen: usize)
                          -> Result<Receiver<Result<DecodeResponse, ServeError>>> {
         let (reply_tx, reply_rx) = channel();
+        let trace = crate::trace::maybe_mint();
         if !self.try_admit() {
+            trace_refusal(trace, SpanKind::RequestDecode, Instant::now(),
+                          SpanKind::Shed);
             let _ = reply_tx.send(Err(ServeError::Shed));
             return Ok(reply_rx);
         }
@@ -647,6 +684,7 @@ impl StreamingServer {
                 tokens,
                 gen,
                 enqueued: Instant::now(),
+                trace,
                 reply: reply_tx,
             }))
             .map_err(|_| anyhow!("streaming server is shut down"))?;
@@ -656,7 +694,10 @@ impl StreamingServer {
     fn send(&self, req: StreamRequest)
             -> Result<Receiver<Result<StreamResponse, ServeError>>> {
         let (reply_tx, reply_rx) = channel();
+        let trace = crate::trace::maybe_mint();
         if !self.try_admit() {
+            trace_refusal(trace, SpanKind::RequestStream, Instant::now(),
+                          SpanKind::Shed);
             let _ = reply_tx.send(Err(ServeError::Shed));
             return Ok(reply_rx);
         }
@@ -664,6 +705,7 @@ impl StreamingServer {
             .send(StreamJob::Stream(StreamPending {
                 req,
                 enqueued: Instant::now(),
+                trace,
                 reply: reply_tx,
             }))
             .map_err(|_| anyhow!("streaming server is shut down"))?;
@@ -729,24 +771,35 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
             StreamJob::Decode(job) => {
                 if deadline_expired(job.enqueued, deadline) {
                     tel.add_deadline_expired(1);
+                    trace_refusal(job.trace, SpanKind::RequestDecode,
+                                  job.enqueued, SpanKind::DeadlineExpired);
                     let _ = job.reply.send(Err(ServeError::DeadlineExpired));
                     continue;
                 }
-                tel.record_queue_wait_ns(
-                    job.enqueued.elapsed().as_nanos() as u64,
-                );
+                let waited = job.enqueued.elapsed().as_nanos() as u64;
+                tel.record_queue_wait_ns(waited);
+                // The queue-wait span lands now; the admit/step spans
+                // re-attribute per lane below, so detach in between.
+                crate::trace::set_current(job.trace);
+                crate::trace::span_at(SpanKind::QueueWait, job.enqueued,
+                                      waited);
+                crate::trace::set_current(0);
                 stats.decode_requests += 1;
                 batcher.enqueue(job);
             }
             StreamJob::Stream(p) => {
                 if deadline_expired(p.enqueued, deadline) {
                     tel.add_deadline_expired(1);
+                    trace_refusal(p.trace, SpanKind::RequestStream,
+                                  p.enqueued, SpanKind::DeadlineExpired);
                     let _ = p.reply.send(Err(ServeError::DeadlineExpired));
                     continue;
                 }
-                tel.record_queue_wait_ns(
-                    p.enqueued.elapsed().as_nanos() as u64,
-                );
+                let waited = p.enqueued.elapsed().as_nanos() as u64;
+                tel.record_queue_wait_ns(waited);
+                crate::trace::set_current(p.trace);
+                crate::trace::span_at(SpanKind::QueueWait, p.enqueued,
+                                      waited);
                 let t0 = Instant::now();
                 let out = serve_stream_request(
                     &lm, &mut store, &p.req, p.enqueued, &tel, &mut shard,
@@ -766,9 +819,19 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                 }
                 store.enforce();
                 tel.absorb(&mut shard);
+                tel.absorb(store.telemetry_shard());
                 tel.drain_guard_counters();
                 tel.record_stream_request_ns(
                     nonzero(p.enqueued.elapsed()).as_nanos() as u64,
+                );
+                // Close the trace after `enforce`, so page-outs this
+                // request caused still attribute to it. Degradation
+                // records (clamps, fallbacks, IO errors) are detected
+                // from the scratch scan; an error reply marks the
+                // trace degraded explicitly.
+                crate::trace::finish_request(
+                    SpanKind::RequestStream, p.enqueued, out.is_err(),
+                    false,
                 );
                 let _ = p.reply.send(
                     out.map_err(|e| ServeError::Rejected(format!("{e:#}"))),
@@ -777,12 +840,16 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
             StreamJob::Batch(p) => {
                 if deadline_expired(p.enqueued, deadline) {
                     tel.add_deadline_expired(1);
+                    trace_refusal(p.trace, SpanKind::RequestBatch,
+                                  p.enqueued, SpanKind::DeadlineExpired);
                     let _ = p.reply.send(Err(ServeError::DeadlineExpired));
                     continue;
                 }
-                tel.record_queue_wait_ns(
-                    p.enqueued.elapsed().as_nanos() as u64,
-                );
+                let waited = p.enqueued.elapsed().as_nanos() as u64;
+                tel.record_queue_wait_ns(waited);
+                crate::trace::set_current(p.trace);
+                crate::trace::span_at(SpanKind::QueueWait, p.enqueued,
+                                      waited);
                 tel.record_batch_size(p.prompts.len() as u64);
                 let t0 = Instant::now();
                 let out = serve_prompt_batch(&lm, &engine, &p.prompts);
@@ -795,6 +862,9 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                 let latency = nonzero(p.enqueued.elapsed());
                 tel.record_batch_request_ns(latency.as_nanos() as u64);
                 tel.drain_guard_counters();
+                crate::trace::finish_request(
+                    SpanKind::RequestBatch, p.enqueued, out.is_err(), false,
+                );
                 let _ = p.reply.send(
                     out.map(|next_logits| BatchResponse {
                         next_logits,
@@ -812,10 +882,23 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
         let before = batcher.counters;
         let t0 = Instant::now();
         let (done, failed) = batcher.admit(|job| {
-            admit_decode(&lm, &mut store, job, &tel, &mut shard, &mut sc)
+            // Attribute the lane's admit (store lookup / restore /
+            // prefill) to the owning request; the span timer wraps the
+            // whole admission including session acquisition.
+            crate::trace::set_current(job.trace);
+            let span = SpanTimer::start();
+            let r = admit_decode(&lm, &mut store, job, &tel, &mut shard,
+                                 &mut sc);
+            span.stop(SpanKind::Admit);
+            crate::trace::set_current(0);
+            r
         });
         for (job, msg) in failed {
             crate::error!("decode admit failed: {msg}");
+            crate::trace::set_current(job.trace);
+            crate::trace::finish_request(
+                SpanKind::RequestDecode, job.enqueued, true, false,
+            );
             let _ = job.reply.send(Err(ServeError::Rejected(msg)));
         }
         for lane in done {
@@ -824,12 +907,16 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
         let occupancy = batcher.occupancy();
         if occupancy > 0 {
             tel.record_batch_occupancy(occupancy as u64);
-            let finished = batcher.step_cycle(|session, token, logits| {
+            let finished = batcher.step_cycle(|job, token, logits| {
+                // Re-attribute the worker thread per lane so each
+                // step's spans land in the owning request's trace.
+                crate::trace::set_current(job.trace);
                 step_decode(
-                    &lm, &mut store, session, token, logits, &mut shard,
+                    &lm, &mut store, job.session, token, logits, &mut shard,
                     &mut sc,
                 )
             });
+            crate::trace::set_current(0);
             for (lane, err) in finished {
                 if err.as_deref().map_or(false, |m| {
                     m.starts_with(PANIC_PREFIX)
@@ -838,6 +925,8 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
                     // recurrent state is mid-update and untrustworthy.
                     // Discard it so a retry starts from scratch instead
                     // of silently decoding from corrupt state.
+                    crate::trace::set_current(lane.job.trace);
+                    crate::trace::event(SpanKind::LanePanic);
                     store.remove(lane.job.session);
                 }
                 finish_decode(lane, err, &tel, &mut stats);
@@ -851,6 +940,7 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
             tel.add_lane_panics(after.panics - before.panics);
             store.enforce();
             tel.absorb(&mut shard);
+            tel.absorb(store.telemetry_shard());
             tel.drain_guard_counters();
         }
     }
@@ -861,8 +951,10 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
     // Disk-tier IO failures (real or injected) fold in after the flush
     // so shutdown-path errors are counted too; a final guard drain
     // catches clamps/fallbacks noted by a request that failed before
-    // reaching a per-request drain point.
+    // reaching a per-request drain point. The store's stage shard gets
+    // a last absorb for the shutdown-flush page-outs.
     tel.add_disk_io_errors(store.disk_io_errors() as u64);
+    tel.absorb(store.telemetry_shard());
     tel.drain_guard_counters();
     // Session-cache counters come straight from the store so the two
     // accountings cannot drift; same for the shared plan cache and the
@@ -871,8 +963,10 @@ fn stream_worker(lm: CpuLm, mut store: SessionStore, engine: Engine,
     stats.restores = store.stats.restores;
     stats.spills = store.stats.spills;
     stats.plan_cache = store.plan_cache().stats();
-    stats.telemetry =
-        engine.metrics_snapshot().with_session_store(store.stats.clone());
+    stats.telemetry = engine
+        .metrics_snapshot()
+        .with_session_store(store.stats.clone())
+        .with_exemplars(crate::trace::exemplars());
     stats
 }
 
@@ -922,8 +1016,10 @@ fn admit_decode(lm: &CpuLm, store: &mut SessionStore,
             if pos == 0 {
                 let (q, k, v) = lm.qkv(&job.tokens);
                 let t = StageTimer::start();
+                let span = SpanTimer::start();
                 let pre =
                     dec.prefill_traced(&[q], &[k], &[v], &plan_cache, shard)?;
+                span.stop(SpanKind::Prefill);
                 if crate::telemetry::enabled() {
                     tel.record_prefill_ns(t.elapsed_ns());
                 }
@@ -974,6 +1070,10 @@ fn finish_decode(lane: Lane<DecodeReply>, err: Option<String>,
                  tel: &Telemetry, stats: &mut StreamStats) {
     let latency = nonzero(lane.job.enqueued.elapsed());
     tel.record_stream_request_ns(latency.as_nanos() as u64);
+    crate::trace::set_current(lane.job.trace);
+    crate::trace::finish_request(
+        SpanKind::RequestDecode, lane.job.enqueued, err.is_some(), false,
+    );
     match err {
         Some(msg) => {
             crate::error!("decode request failed: {msg}");
@@ -1094,8 +1194,10 @@ fn serve_stream_request(lm: &CpuLm, store: &mut SessionStore,
                 // wall time goes to its own histogram.
                 let (q, k, v) = lm.qkv(&req.tokens);
                 let t = StageTimer::start();
+                let span = SpanTimer::start();
                 let pre =
                     dec.prefill_traced(&[q], &[k], &[v], &plan_cache, shard)?;
+                span.stop(SpanKind::Prefill);
                 if crate::telemetry::enabled() {
                     tel.record_prefill_ns(t.elapsed_ns());
                 }
@@ -1350,8 +1452,15 @@ mod tests {
         let stats = server.shutdown();
         let snap = &stats.telemetry;
         // Every pipeline stage saw work: the prefill + batch cover the
-        // five batch stages, the continuation covers stream_step.
+        // five batch stages, the continuation covers stream_step. The
+        // tier-transfer stages stay silent (no disk tier, no guardrail
+        // retry in this workload) but their keys are still exported.
         for (name, s) in &snap.stages {
+            if matches!(*name, "page_out" | "disk_restore"
+                               | "fallback_dense") {
+                assert_eq!(s.count, 0, "stage {name} fired unexpectedly");
+                continue;
+            }
             assert!(s.count > 0, "stage {name} never recorded");
             assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{name}");
         }

@@ -46,6 +46,7 @@ use crate::telemetry::{
     MetricsSnapshot, Stage, StageShard, StageTimer, Telemetry,
 };
 use crate::tensor::{Arena, Mat};
+use crate::trace::TraceRing;
 
 pub use cache::{coeff_fingerprint, CacheStats, PlanCache, PlanKey};
 
@@ -71,6 +72,12 @@ pub struct Workspace {
     /// counters — owning a shard costs no heap and recording into it
     /// allocates nothing.
     pub tel: StageShard,
+    /// Per-worker trace relay: scoped fan-out workers drain their
+    /// thread-local trace scratch here before exiting (thread-locals
+    /// die with the worker), and the spawning thread absorbs it after
+    /// the join — the trace analogue of absorbing `tel`. Empty and
+    /// untouched unless request tracing is armed.
+    pub trace: TraceRing,
 }
 
 impl Workspace {
@@ -229,12 +236,24 @@ pub fn attend_batch_traced(items: &[AttendItem], cache: &PlanCache,
         return out;
     }
     let next = AtomicUsize::new(0);
+    // Request tracing: forward the caller's trace attribution into the
+    // scoped workers and relay their thread-local scratch back (their
+    // thread-locals die at scope exit). tid == 0 whenever tracing is
+    // off or the caller is unattributed — then nothing below touches
+    // the relay.
+    let tid =
+        if crate::trace::enabled() { crate::trace::current() } else { 0 };
+    let relay = std::sync::Mutex::new(TraceRing::new());
     let (tx, rx) = channel::<(usize, Result<Mat>)>();
     std::thread::scope(|s| {
         for _ in 0..workers {
             let tx = tx.clone();
             let next = &next;
+            let relay = &relay;
             s.spawn(move || {
+                if tid != 0 {
+                    crate::trace::set_current(tid);
+                }
                 // Worker-local workspace (dense arena + FFT scratch +
                 // phi staging), reused across every item this worker
                 // claims from the [batch x heads] fan-out. Workspace
@@ -256,10 +275,19 @@ pub fn attend_batch_traced(items: &[AttendItem], cache: &PlanCache,
                     t.absorb(&mut ws.tel);
                     t.drain_guard_counters();
                 }
+                if tid != 0 {
+                    let mut g =
+                        relay.lock().unwrap_or_else(|e| e.into_inner());
+                    crate::trace::drain_scratch_into(&mut g);
+                }
             });
         }
     });
     drop(tx);
+    if tid != 0 {
+        let mut ring = relay.into_inner().unwrap_or_else(|e| e.into_inner());
+        crate::trace::absorb_ring(&mut ring);
+    }
     let mut out: Vec<Option<Mat>> = items.iter().map(|_| None).collect();
     for (i, r) in rx {
         out[i] = Some(r?);
@@ -312,7 +340,11 @@ pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
     let chunk = items.len().div_ceil(workers);
     // Guardrail events note into thread-locals that die with the
     // scoped workers; relay them through shared atomics and re-note on
-    // the caller's thread so its next drain still sees them.
+    // the caller's thread so its next drain still sees them. Trace
+    // records relay the same way, through each worker's own workspace
+    // ring (single-owner, so no shared atomics needed).
+    let tid =
+        if crate::trace::enabled() { crate::trace::current() } else { 0 };
     let clamps = AtomicU64::new(0);
     let fallbacks = AtomicU64::new(0);
     let r = std::thread::scope(|s| -> Result<()> {
@@ -325,6 +357,9 @@ pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
             let clamps = &clamps;
             let fallbacks = &fallbacks;
             handles.push(s.spawn(move || -> Result<()> {
+                if tid != 0 {
+                    crate::trace::set_current(tid);
+                }
                 let r = (|| -> Result<()> {
                     for (it, out) in ichunk.iter().zip(ochunk.iter_mut()) {
                         attend_one_into(it, cache, ws, out)?;
@@ -339,6 +374,9 @@ pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
                     crate::faults::guard::take_fallback_dense(),
                     Ordering::Relaxed,
                 );
+                if tid != 0 {
+                    crate::trace::drain_scratch_into(&mut ws.trace);
+                }
                 r
             }));
         }
@@ -352,6 +390,11 @@ pub fn attend_batch_into(items: &[AttendItem], outs: &mut [Mat],
     });
     crate::faults::guard::note_clamps(clamps.load(Ordering::Relaxed));
     crate::faults::guard::note_fallbacks_dense(fallbacks.load(Ordering::Relaxed));
+    if tid != 0 {
+        for ws in workspaces.iter_mut() {
+            crate::trace::absorb_ring(&mut ws.trace);
+        }
+    }
     r
 }
 
@@ -443,12 +486,14 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
                     // oracle (bitwise-deterministic, no FFT). Stage 3:
                     // still bad -> typed error for this one item.
                     crate::faults::guard::note_fallback_dense();
+                    let t = StageTimer::start();
                     let coeffs = std::mem::take(&mut ws.dense.coeffs);
                     kernel_attention_into(
                         &ws.phi_q, &ws.phi_k, it.v, Some(&coeffs), it.causal,
                         out, &mut ws.dense,
                     );
                     ws.dense.coeffs = coeffs;
+                    t.stop(&mut ws.tel, Stage::FallbackDense);
                     if !out.data.iter().all(|x| x.is_finite()) {
                         bail!(
                             "attend: non-finite readout survived the dense \

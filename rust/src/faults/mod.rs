@@ -266,14 +266,19 @@ pub mod guard {
         static FALLBACK_DENSE: Cell<u64> = Cell::new(0);
     }
 
-    /// The denominator floor engaged (ladder stage 1).
+    /// The denominator floor engaged (ladder stage 1). Also drops a
+    /// `guard_clamp` annotation into the active trace (if any), so the
+    /// tail sampler pins the degraded request.
     #[inline]
     pub fn note_clamp() {
         CLAMPS.with(|c| c.set(c.get() + 1));
+        crate::trace::event(crate::trace::SpanKind::GuardClamp);
     }
 
     /// A non-finite readout was recomputed on the dense quadratic
-    /// path (ladder stage 2).
+    /// path (ladder stage 2). The trace-side marker is the
+    /// `fallback_dense` *span* recorded around the retry itself, so no
+    /// event is emitted here.
     #[inline]
     pub fn note_fallback_dense() {
         FALLBACK_DENSE.with(|c| c.set(c.get() + 1));
@@ -281,7 +286,10 @@ pub mod guard {
 
     /// Bulk re-note: scoped worker threads drain their own cells
     /// before exiting (thread-locals die with the thread) and the
-    /// fan-out caller re-notes the sum on its own thread.
+    /// fan-out caller re-notes the sum on its own thread. No trace
+    /// events here — the workers' own `note_clamp` calls already
+    /// recorded per-clamp annotations, which travel through the trace
+    /// relay rings.
     pub fn note_clamps(n: u64) {
         if n > 0 {
             CLAMPS.with(|c| c.set(c.get() + n));

@@ -75,7 +75,18 @@
 //!     (`faults::guard`) that the numerical degradation ladder —
 //!     denominator floor, dense-path retry, typed error — drains into
 //!     the telemetry snapshot (guardrail_clamps, fallback_dense,
-//!     lane_panics, shed_requests, deadline_expired, disk_io_errors).
+//!     lane_panics, shed_requests, deadline_expired, disk_io_errors);
+//!   * `trace` is per-request observability where `telemetry` is
+//!     aggregate: a `TraceId` minted at server admission rides through
+//!     the coordinator queue, batch lanes, engine fan-out, streaming
+//!     prefill/step, and the disk tier, every `StageTimer` span
+//!     mirroring into per-thread grow-only rings (`trace::ring`, same
+//!     zero-allocation discipline as `StageShard`); tail-based
+//!     sampling (`trace::sample`) retains only slow / degraded /
+//!     explicitly requested span trees, exported as Chrome trace-event
+//!     JSON (`trace::export`, `--trace-out` on `serve`/`decode`) with
+//!     exemplar trace ids linking the snapshot's top latency-histogram
+//!     buckets to concrete retained traces.
 
 pub mod attention;
 pub mod config;
@@ -91,6 +102,7 @@ pub mod streaming;
 pub mod telemetry;
 pub mod tensor;
 pub mod toeplitz;
+pub mod trace;
 pub mod util;
 
 /// Default artifacts directory (overridable via --artifacts or env).

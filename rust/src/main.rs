@@ -88,6 +88,32 @@ fn write_metrics(args: &Args,
     Ok(())
 }
 
+/// Arm request tracing per `--trace-out PATH` (shared by `serve`,
+/// `serve --streaming`, and `decode`). `--trace-threshold-ms MS` pins
+/// requests slower than MS into the retained buffer; `--trace-keep N`
+/// bounds it. Returns whether tracing is on.
+fn trace_setup(args: &Args) -> bool {
+    if args.get("trace-out").is_none() {
+        return false;
+    }
+    let threshold_ms = args.get_u64("trace-threshold-ms", 0);
+    let keep = args.get_usize("trace-keep", kafft::trace::DEFAULT_KEEP);
+    kafft::trace::configure(threshold_ms * 1_000_000, keep);
+    kafft::trace::set_enabled(true);
+    info!("request tracing armed (threshold {threshold_ms} ms, keep {keep})");
+    true
+}
+
+/// Write the retained traces as Chrome trace-event JSON to the
+/// `--trace-out PATH` (loadable in `chrome://tracing` / Perfetto).
+fn trace_export(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        let n = kafft::trace::export_chrome(std::path::Path::new(path))?;
+        info!("chrome trace ({n} retained requests) -> {path}");
+    }
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("smoke") => smoke(args),
@@ -129,7 +155,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  \u{20}       (serve/decode: dump the telemetry snapshot)\n\
                  \u{20}       --faults SPEC (or KAFFT_FAULTS) arm deterministic\n\
                  \u{20}       fault injection, e.g. \"seed=7,disk.put.io=0.2\";\n\
-                 \u{20}       streaming serve: --queue-limit N --deadline-ms MS"
+                 \u{20}       streaming serve: --queue-limit N --deadline-ms MS\n\
+                 \u{20}       --trace-out PATH (serve/decode: Chrome trace of\n\
+                 \u{20}       tail-sampled requests; --trace-threshold-ms MS\n\
+                 \u{20}       pins slow requests, --trace-keep N bounds retention)"
             );
             Ok(())
         }
@@ -260,6 +289,7 @@ fn experiment(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let rt = Arc::new(runtime(args)?);
+    trace_setup(args);
     let model = args.get_or("model", "lm_nprf_rpe_fft");
     let n_req = args.get_usize("requests", 32);
     let max_wait_ms = args.get_u64("max-wait-ms", 5);
@@ -307,6 +337,7 @@ fn serve(args: &Args) -> Result<()> {
         stats.batches, stats.padded_slots, stats.batch_hist, stats.exec_secs
     );
     write_metrics(args, &stats.telemetry)?;
+    trace_export(args)?;
     Ok(())
 }
 
@@ -317,6 +348,7 @@ fn streaming_serve(args: &Args) -> Result<()> {
 
     use kafft::streaming::Origin;
 
+    trace_setup(args);
     let sessions = args.get_usize("sessions", 8);
     let gen = args.get_usize("gen", 32);
     let prompt_len = args.get_usize("prompt-len", 16);
@@ -542,6 +574,7 @@ fn streaming_serve(args: &Args) -> Result<()> {
             .join(" ")
     );
     write_metrics(args, tel)?;
+    trace_export(args)?;
     Ok(())
 }
 
@@ -568,9 +601,18 @@ fn decode(args: &Args) -> Result<()> {
         (0..prompt_len).map(|_| rng.below_usize(vocab) as i32).collect();
 
     let streaming = args.has_flag("streaming");
+    let tracing = trace_setup(args);
     let tel = kafft::telemetry::Telemetry::new();
     let t0 = std::time::Instant::now();
+    if tracing {
+        // A CLI decode is an explicit trace request: the root span is
+        // pinned into the retained buffer regardless of latency.
+        kafft::trace::set_current(kafft::trace::mint());
+    }
     let tokens = greedy_decode_cpu_traced(&lm, &prompt, gen, streaming, &tel)?;
+    kafft::trace::finish_request(
+        kafft::trace::SpanKind::RequestDecode, t0, false, true,
+    );
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "{} decode: {gen} tokens in {secs:.3}s ({:.1} tok/s) [kind={kind_s}, \
@@ -594,6 +636,10 @@ fn decode(args: &Args) -> Result<()> {
         }
     }
     println!("tokens: {:?}...", &tokens[..tokens.len().min(24)]);
-    write_metrics(args, &tel.snapshot())?;
+    write_metrics(
+        args,
+        &tel.snapshot().with_exemplars(kafft::trace::exemplars()),
+    )?;
+    trace_export(args)?;
     Ok(())
 }

@@ -46,6 +46,11 @@ pub struct DecodeJob<R> {
     /// How many tokens to generate after the prompt.
     pub gen: usize,
     pub enqueued: Instant,
+    /// Request trace id ([`crate::trace`]), 0 when tracing is off. The
+    /// batcher carries it untouched; the server re-attributes its
+    /// thread to this id around every prefill and step so the lane's
+    /// spans land in the owning request's trace.
+    pub trace: u64,
     pub reply: R,
 }
 
@@ -168,12 +173,16 @@ impl<R> Batcher<R> {
     /// returns the decoder position), and vacate lanes that finished
     /// or failed.
     ///
+    /// `step` receives the lane's job (session id, trace id, deadline —
+    /// the scheduler-visible request identity), the greedy token, and
+    /// the lane's logits buffer to overwrite.
+    ///
     /// Returns the vacated lanes paired with `None` (finished) or
     /// `Some(error)`. Freed slots are refillable by the next `admit` —
     /// that mid-batch handoff is the whole point of continuous mode.
     pub fn step_cycle<F>(&mut self, mut step: F) -> Vec<(Lane<R>, Option<String>)>
     where
-        F: FnMut(u64, i32, &mut Vec<f32>) -> anyhow::Result<usize>,
+        F: FnMut(&DecodeJob<R>, i32, &mut Vec<f32>) -> anyhow::Result<usize>,
     {
         if self.lanes.is_empty() {
             return Vec::new();
@@ -185,7 +194,10 @@ impl<R> Batcher<R> {
         while i < self.lanes.len() {
             let lane = &mut self.lanes[i];
             let token = argmax(&lane.logits) as i32;
-            let session = lane.job.session;
+            // Field-disjoint borrows: the job is read-only while the
+            // logits buffer is overwritten.
+            let job = &lane.job;
+            let logits = &mut lane.logits;
             // Panic isolation: a panicking step (a model bug, a
             // poisoned session, or the injected `batch.lane.panic`
             // failpoint) vacates this one lane with an error while the
@@ -196,7 +208,7 @@ impl<R> Batcher<R> {
             let outcome =
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     crate::faults::maybe_panic("batch.lane.panic");
-                    step(session, token, &mut lane.logits)
+                    step(job, token, logits)
                 }));
             match outcome {
                 Ok(Ok(positions)) => {
@@ -269,6 +281,7 @@ mod tests {
             tokens: vec![1],
             gen,
             enqueued: Instant::now(),
+            trace: 0,
             reply: (),
         }
     }
@@ -388,8 +401,8 @@ mod tests {
         b.enqueue(job(1, 5));
         b.enqueue(job(2, 5));
         b.admit(fake_prefill);
-        let fin = b.step_cycle(|session, _, _| {
-            if session == 1 {
+        let fin = b.step_cycle(|j, _, _| {
+            if j.session == 1 {
                 anyhow::bail!("poisoned state")
             }
             Ok(1)
@@ -408,9 +421,9 @@ mod tests {
         b.enqueue(job(2, 2));
         b.enqueue(job(3, 2));
         b.admit(fake_prefill);
-        let fin = b.step_cycle(|session, _, _| {
-            if session == 2 {
-                panic!("lane bug for session {session}");
+        let fin = b.step_cycle(|j, _, _| {
+            if j.session == 2 {
+                panic!("lane bug for session {}", j.session);
             }
             Ok(1)
         });

@@ -260,10 +260,14 @@ impl StreamingDecoder {
                 // the quadratic dense path (same effective coefficient
                 // vector, bitwise-deterministic); stage 3: typed error.
                 crate::faults::guard::note_fallback_dense();
+                let t = StageTimer::start_if(on);
                 kernel_attention_into(
                     &ws.phi_q, &ws.phi_k, &v[h], Some(&c), true, &mut out,
                     &mut ws.dense,
                 );
+                if let Some(sh) = tel.as_deref_mut() {
+                    t.stop(sh, Stage::FallbackDense);
+                }
                 if !out.data.iter().all(|x| x.is_finite()) {
                     bail!(
                         "prefill head {h}: non-finite output survived the \

@@ -28,6 +28,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::engine::PlanCache;
+use crate::telemetry::{Stage, StageShard, StageTimer};
 
 use super::disk::DiskTier;
 use super::engine::{StreamSpec, StreamingDecoder};
@@ -104,6 +105,13 @@ pub struct SessionStore {
     dirty: Vec<u64>,
     clock: u64,
     pub stats: StoreStats,
+    /// Stage spans for the tier transfers this store performs —
+    /// `page_out` (snapshot -> envelope write) and `disk_restore`
+    /// (envelope read back). Lock-free local counters; the serving
+    /// layer absorbs this shard into its `Telemetry` registry at the
+    /// same boundaries where engine shards are absorbed
+    /// ([`SessionStore::telemetry_shard`]).
+    pub tel: StageShard,
     /// Shared Toeplitz plan cache for session prefills. Defaults to a
     /// store-private cache; servers inject the per-model cache with
     /// `with_plan_cache` so batch + streaming paths amortize together.
@@ -131,6 +139,7 @@ impl SessionStore {
             dirty: Vec::new(),
             clock: 0,
             stats: StoreStats::default(),
+            tel: StageShard::new(),
             plan_cache: Arc::new(PlanCache::default()),
             disk: None,
         }
@@ -160,6 +169,12 @@ impl SessionStore {
     /// callers can hold it across a mutable `get_or_create` borrow.
     pub fn plan_cache(&self) -> Arc<PlanCache> {
         self.plan_cache.clone()
+    }
+
+    /// The store's tier-transfer span shard (page_out / disk_restore),
+    /// for the serving layer to absorb into its `Telemetry` registry.
+    pub fn telemetry_shard(&mut self) -> &mut StageShard {
+        &mut self.tel
     }
 
     pub fn live_count(&self) -> usize {
@@ -271,10 +286,18 @@ impl SessionStore {
     /// logged, dropped by the tier, and reported as a miss so the
     /// caller creates a fresh session.
     fn load_from_disk(&mut self, id: u64) -> Option<Vec<u8>> {
-        match self.disk.as_mut()?.load(id) {
-            Ok(snap) => snap,
+        self.disk.as_ref()?;
+        let t = StageTimer::start();
+        match self.disk.as_mut().expect("just checked").load(id) {
+            Ok(Some(snap)) => {
+                // Only a hit is a disk_restore span; misses stay free.
+                t.stop(&mut self.tel, Stage::DiskRestore);
+                Some(snap)
+            }
+            Ok(None) => None,
             Err(e) => {
                 self.stats.disk_corrupt += 1;
+                crate::trace::event(crate::trace::SpanKind::DiskIoError);
                 crate::error!("session {id}: dropping corrupt envelope: {e:#}");
                 None
             }
@@ -387,18 +410,26 @@ impl SessionStore {
             let entry = self.cold.remove(&victim).expect("cold index in sync");
             self.cold_bytes_total -= entry.snap.len();
             match self.disk.as_mut() {
-                Some(tier) => match tier.put(victim, stamp, &entry.snap) {
-                    Ok(expired) => {
-                        self.stats.disk_writes += 1;
-                        self.stats.disk_expired += expired;
+                Some(tier) => {
+                    let t = StageTimer::start();
+                    match tier.put(victim, stamp, &entry.snap) {
+                        Ok(expired) => {
+                            t.stop(&mut self.tel, Stage::PageOut);
+                            self.stats.disk_writes += 1;
+                            self.stats.disk_expired += expired;
+                        }
+                        Err(e) => {
+                            self.stats.expired += 1;
+                            crate::trace::event(
+                                crate::trace::SpanKind::DiskIoError,
+                            );
+                            crate::error!(
+                                "session {victim}: page-out failed, \
+                                 dropping: {e:#}"
+                            );
+                        }
                     }
-                    Err(e) => {
-                        self.stats.expired += 1;
-                        crate::error!(
-                            "session {victim}: page-out failed, dropping: {e:#}"
-                        );
-                    }
-                },
+                }
                 None => self.stats.expired += 1,
             }
         }
@@ -436,14 +467,17 @@ impl SessionStore {
 
     fn page_out(&mut self, id: u64, stamp: u64, snap: &[u8]) -> usize {
         let tier = self.disk.as_mut().expect("disk tier attached");
+        let t = StageTimer::start();
         match tier.put(id, stamp, snap) {
             Ok(expired) => {
+                t.stop(&mut self.tel, Stage::PageOut);
                 self.stats.disk_writes += 1;
                 self.stats.disk_expired += expired;
                 1
             }
             Err(e) => {
                 self.stats.expired += 1;
+                crate::trace::event(crate::trace::SpanKind::DiskIoError);
                 crate::error!("session {id}: flush failed, dropping: {e:#}");
                 0
             }
@@ -849,6 +883,29 @@ mod tests {
         // sessions survive.
         assert!(!s.contains(1) && s.contains(2) && s.contains(3));
         assert!(s.disk_bytes() <= 2 * one_envelope);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tier_transfers_record_stage_spans() {
+        let _g = crate::telemetry::test_flag_guard();
+        crate::telemetry::set_enabled(true);
+        let dir = tmpdir("spans");
+        let mut s = store(1 << 20, 1).with_disk_tier(&dir, 1 << 20).unwrap();
+        s.cold_budget_bytes = 0; // cold overflow pages straight to disk
+        feed(&mut s, 1, 4, 200);
+        feed(&mut s, 2, 4, 201);
+        s.enforce(); // 1: live -> cold -> disk
+        assert_eq!(s.tel.stage(Stage::PageOut).count, 1);
+        assert_eq!(s.tel.stage(Stage::DiskRestore).count, 0);
+        let (_, origin) = s.get_or_create(1).unwrap();
+        assert_eq!(origin, Origin::Restored);
+        assert_eq!(s.tel.stage(Stage::DiskRestore).count, 1);
+        // Absorbing the store shard lands the spans in a registry.
+        let tel = crate::telemetry::Telemetry::new();
+        tel.absorb(s.telemetry_shard());
+        assert_eq!(tel.stage_summary(Stage::PageOut).count, 1);
+        assert_eq!(tel.stage_summary(Stage::DiskRestore).count, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -21,12 +21,18 @@
 //!      `serve`/`decode`) and a Prometheus-style text dump
 //!      (`--metrics-prom`), so downstream tooling can rely on the keys.
 //!
-//! Spans cover the six attend-pipeline stages ([`Stage`]): plan-cache
+//! Spans cover the instrumented pipeline stages ([`Stage`]): plan-cache
 //! lookup, feature maps, the Toeplitz/rfft apply, GEMM (kv aggregation
-//! and score products), readout, and the streaming per-token step.
-//! Telemetry is on by default; [`set_enabled`]`(false)` turns every
-//! span into a no-op (one relaxed load) for overhead measurements —
-//! gated at <= 5% in `benches/batched_attend.rs`.
+//! and score products), readout, the streaming per-token step, the
+//! disk-tier page-out/restore transfers, and the guardrail dense
+//! fallback retry. Telemetry is on by default; [`set_enabled`]`(false)`
+//! turns every span into a no-op (one relaxed load) for overhead
+//! measurements — gated at <= 5% in `benches/batched_attend.rs`.
+//!
+//! When request tracing ([`crate::trace`]) is armed, every
+//! [`StageTimer::stop`] additionally mirrors its span into the current
+//! request's trace — same clock reads, one extra relaxed load when
+//! tracing is off.
 
 pub mod hist;
 pub mod snapshot;
@@ -37,8 +43,11 @@ use std::time::Instant;
 pub use hist::{HistSummary, Histogram, LocalHist, BUCKETS};
 pub use snapshot::{MetricsSnapshot, SCHEMA, SCHEMA_VERSION};
 
-/// The six instrumented stages of the attend pipeline, in pipeline
-/// order. `as usize` indexes shard and registry arrays.
+/// The instrumented stages of the attend pipeline (in pipeline order)
+/// plus the serving-tier transfers added after the pipeline stages
+/// were frozen. `as usize` indexes shard and registry arrays; adding a
+/// variant extends the snapshot with new keys (additive, no schema
+/// bump) and never reorders the existing ones.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
     /// `PlanCache::get`: fingerprint, lock, (rarely) spectrum build.
@@ -53,9 +62,18 @@ pub enum Stage {
     Readout = 4,
     /// `StreamingDecoder::step` — one decoded token.
     StreamStep = 5,
+    /// Disk-tier page-out: cold snapshot serialized to its envelope
+    /// file (`SessionStore` -> `DiskTier::put`).
+    PageOut = 6,
+    /// Disk-tier restore: envelope file deserialized back into a live
+    /// decoder (`DiskTier::load` -> resume).
+    DiskRestore = 7,
+    /// Guardrail degradation ladder stage 2: the quadratic dense-path
+    /// recompute after a non-finite fast-path output.
+    FallbackDense = 8,
 }
 
-pub const NUM_STAGES: usize = 6;
+pub const NUM_STAGES: usize = 9;
 
 impl Stage {
     pub const ALL: [Stage; NUM_STAGES] = [
@@ -65,6 +83,9 @@ impl Stage {
         Stage::Gemm,
         Stage::Readout,
         Stage::StreamStep,
+        Stage::PageOut,
+        Stage::DiskRestore,
+        Stage::FallbackDense,
     ];
 
     /// Stable snake_case key used in the JSON snapshot and the
@@ -77,6 +98,9 @@ impl Stage {
             Stage::Gemm => "gemm",
             Stage::Readout => "readout",
             Stage::StreamStep => "stream_step",
+            Stage::PageOut => "page_out",
+            Stage::DiskRestore => "disk_restore",
+            Stage::FallbackDense => "fallback_dense",
         }
     }
 }
@@ -197,8 +221,15 @@ impl StageTimer {
 
     #[inline]
     pub fn stop(self, shard: &mut StageShard, stage: Stage) {
-        if self.0.is_some() {
-            shard.record(stage, self.elapsed_ns());
+        if let Some(t0) = self.0 {
+            let ns = self.elapsed_ns();
+            shard.record(stage, ns);
+            // Mirror the span into the current request trace (no-op
+            // after one relaxed load unless tracing is armed AND this
+            // thread is attributed to a request). Sharing the timer's
+            // clock reads means a traced stage costs no extra
+            // `Instant::now`.
+            crate::trace::stage_span(stage, t0, ns);
         }
     }
 }
@@ -388,6 +419,7 @@ impl Telemetry {
             },
             plan_cache: None,
             session_store: None,
+            exemplars: Vec::new(),
         }
     }
 }
@@ -407,7 +439,10 @@ mod tests {
                 "toeplitz_apply",
                 "gemm",
                 "readout",
-                "stream_step"
+                "stream_step",
+                "page_out",
+                "disk_restore",
+                "fallback_dense"
             ]
         );
         for (i, s) in Stage::ALL.iter().enumerate() {
@@ -452,7 +487,7 @@ mod tests {
         let mut a = StageShard::new();
         let mut b = StageShard::new();
         for i in 0..100u64 {
-            let stage = Stage::ALL[(i % 6) as usize];
+            let stage = Stage::ALL[i as usize % Stage::ALL.len()];
             let v = i * 977;
             all.record(stage, v);
             if i % 2 == 0 {

@@ -18,6 +18,7 @@ use super::hist::HistSummary;
 use super::NUM_STAGES;
 use crate::engine::cache::CacheStats;
 use crate::streaming::session::StoreStats;
+use crate::trace::Exemplar;
 use crate::util::json::Json;
 
 /// Identifies the artifact kind, independent of the emitting binary.
@@ -76,6 +77,10 @@ pub struct MetricsSnapshot {
     pub tokens_per_sec: f64,
     pub plan_cache: Option<CacheStats>,
     pub session_store: Option<StoreStats>,
+    /// Exemplar trace ids for the top latency-histogram buckets, from
+    /// the retained tail-sampled traces (`crate::trace`). Empty when
+    /// tracing is off. Additive key — no version bump.
+    pub exemplars: Vec<Exemplar>,
 }
 
 impl MetricsSnapshot {
@@ -86,6 +91,13 @@ impl MetricsSnapshot {
 
     pub fn with_session_store(mut self, stats: StoreStats) -> MetricsSnapshot {
         self.session_store = Some(stats);
+        self
+    }
+
+    /// Attach histogram exemplars (the serving layer passes
+    /// `trace::exemplars()` when tracing is armed).
+    pub fn with_exemplars(mut self, ex: Vec<Exemplar>) -> MetricsSnapshot {
+        self.exemplars = ex;
         self
     }
 
@@ -153,6 +165,28 @@ impl MetricsSnapshot {
                     ("disk_expired", Json::Num(s.disk_expired as f64)),
                     ("disk_corrupt", Json::Num(s.disk_corrupt as f64)),
                 ]),
+            ));
+        }
+        if !self.exemplars.is_empty() {
+            // Additive key (request tracing) — no version bump.
+            pairs.push((
+                "exemplars",
+                Json::Arr(
+                    self.exemplars
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("hist", Json::Str(e.hist.to_string())),
+                                ("bucket", Json::Num(e.bucket as f64)),
+                                (
+                                    "latency_ns",
+                                    Json::Num(e.latency_ns as f64),
+                                ),
+                                ("trace_id", Json::Num(e.trace_id as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ));
         }
         Json::obj(pairs)
@@ -236,6 +270,12 @@ impl MetricsSnapshot {
             );
             prom_gauge(&mut out, "kafft_plan_cache_plans", c.plans as f64);
             prom_gauge(&mut out, "kafft_plan_cache_bytes", c.bytes as f64);
+            prom_gauge(
+                &mut out,
+                "kafft_plan_cache_budget_bytes",
+                c.budget_bytes as f64,
+            );
+            prom_gauge(&mut out, "kafft_plan_cache_hit_rate", c.hit_rate());
         }
         if let Some(s) = &self.session_store {
             prom_counter(&mut out, "kafft_session_hits_total", s.hits as f64);
@@ -275,6 +315,16 @@ impl MetricsSnapshot {
                 "kafft_session_disk_corrupt_total",
                 s.disk_corrupt as f64,
             );
+        }
+        if !self.exemplars.is_empty() {
+            out.push_str("# TYPE kafft_trace_exemplar gauge\n");
+            for e in &self.exemplars {
+                out.push_str(&format!(
+                    "kafft_trace_exemplar{{hist=\"{}\",bucket=\"{}\",\
+                     trace_id=\"{}\"}} {}\n",
+                    e.hist, e.bucket, e.trace_id, e.latency_ns
+                ));
+            }
         }
         out
     }
@@ -428,6 +478,8 @@ mod tests {
             )));
         }
         assert!(prom.contains("kafft_plan_cache_hits_total 10"));
+        assert!(prom.contains("kafft_plan_cache_budget_bytes 65536"));
+        assert!(prom.contains("kafft_plan_cache_hit_rate 0.8333333333333334"));
         assert!(prom.contains("kafft_session_created_total 2"));
         assert!(prom.contains("kafft_session_disk_writes_total 3"));
         assert!(prom.contains("kafft_batch_admits_total 0"));
@@ -439,5 +491,36 @@ mod tests {
         assert!(prom.contains("kafft_shed_requests_total 6"));
         assert!(prom.contains("kafft_deadline_expired_total 3"));
         assert!(prom.contains("kafft_disk_io_errors_total 5"));
+    }
+
+    #[test]
+    fn exemplars_export_in_both_formats_and_stay_additive() {
+        let snap = populated_snapshot().with_exemplars(vec![Exemplar {
+            hist: "request_stream_ns",
+            bucket: 22,
+            latency_ns: 7_000_000,
+            trace_id: 42,
+        }]);
+        let j = snap.to_json();
+        assert_eq!(
+            j.req_usize("schema_version").unwrap() as u64,
+            SCHEMA_VERSION,
+            "exemplars are additive, no version bump"
+        );
+        let ex = j.get("exemplars").unwrap().as_arr().unwrap();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].req_str("hist").unwrap(), "request_stream_ns");
+        assert_eq!(ex[0].req_usize("bucket").unwrap(), 22);
+        assert_eq!(ex[0].req_usize("trace_id").unwrap(), 42);
+        let prom = snap.to_prometheus();
+        assert!(prom.contains(
+            "kafft_trace_exemplar{hist=\"request_stream_ns\",\
+             bucket=\"22\",trace_id=\"42\"} 7000000"
+        ));
+        // Without exemplars the key is absent entirely.
+        assert!(populated_snapshot().to_json().get("exemplars").is_none());
+        assert!(!populated_snapshot()
+            .to_prometheus()
+            .contains("kafft_trace_exemplar"));
     }
 }

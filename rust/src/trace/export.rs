@@ -1,0 +1,258 @@
+//! Exporters for retained traces: Chrome trace-event JSON and a
+//! containment span-tree builder.
+//!
+//! The JSON shape is the Chrome trace-event "JSON object format":
+//! `{"traceEvents": [...], "displayTimeUnit": "ms", ...}`, loadable in
+//! `chrome://tracing` and Perfetto. Mapping:
+//!
+//! * one *track* per retained request — `pid` is always 1, `tid` is
+//!   the trace id, and a `ph:"M"` thread_name metadata event labels
+//!   the track with the root kind and degradation verdict;
+//! * span records render as `ph:"X"` complete events (`ts`/`dur` in
+//!   microseconds, converted from the ns records — viewers nest them
+//!   by containment, which is exactly the causal structure);
+//! * instant annotations ([`SpanKind::is_event`]) render as `ph:"i"`
+//!   thread-scoped (`s:"t"`) instant events.
+//!
+//! [`span_tree`] builds the same containment nesting in-process so
+//! tests and the CI validator can assert tree shape without a trace
+//! viewer.
+
+use std::io;
+use std::path::Path;
+
+use super::sample::{retained, RetainedTrace};
+use super::{Record, SpanKind};
+use crate::util::json::Json;
+
+/// Schema tag in the exported file's `otherData`.
+pub const TRACE_SCHEMA: &str = "kafft.trace";
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+fn ns_to_us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+fn record_event(r: &Record) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(r.kind.name().to_string())),
+        ("cat", Json::Str("kafft".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(r.trace as f64)),
+        ("ts", Json::Num(ns_to_us(r.t0_ns))),
+    ];
+    if r.kind.is_event() {
+        pairs.push(("ph", Json::Str("i".to_string())));
+        pairs.push(("s", Json::Str("t".to_string())));
+    } else {
+        pairs.push(("ph", Json::Str("X".to_string())));
+        pairs.push(("dur", Json::Num(ns_to_us(r.dur_ns))));
+    }
+    Json::obj(pairs)
+}
+
+fn track_label(t: &RetainedTrace) -> Json {
+    let verdict = if t.meta.degraded {
+        " [degraded]"
+    } else if t.meta.pinned {
+        " [pinned]"
+    } else {
+        ""
+    };
+    Json::obj(vec![
+        ("name", Json::Str("thread_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(t.meta.id as f64)),
+        (
+            "args",
+            Json::obj(vec![(
+                "name",
+                Json::Str(format!(
+                    "trace {} {}{}",
+                    t.meta.id,
+                    t.meta.kind.name(),
+                    verdict
+                )),
+            )]),
+        ),
+    ])
+}
+
+/// Render a set of retained traces as Chrome trace-event JSON.
+pub fn chrome_trace_of(traces: &[RetainedTrace]) -> Json {
+    let mut events = Vec::new();
+    for t in traces {
+        events.push(track_label(t));
+        for r in &t.records {
+            events.push(record_event(r));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema", Json::Str(TRACE_SCHEMA.to_string())),
+                ("version", Json::Num(TRACE_SCHEMA_VERSION as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Chrome trace-event JSON for everything currently retained.
+pub fn chrome_trace_json() -> String {
+    chrome_trace_of(&retained()).to_string_pretty()
+}
+
+/// Write the retained traces to `path` as Chrome trace-event JSON.
+/// Returns the number of traces exported.
+pub fn export_chrome(path: &Path) -> io::Result<usize> {
+    let traces = retained();
+    let json = chrome_trace_of(&traces).to_string_pretty();
+    std::fs::write(path, json)?;
+    Ok(traces.len())
+}
+
+/// One node of a containment span tree: a span and the spans/events
+/// that start and end inside it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanNode {
+    pub record: Record,
+    pub children: Vec<SpanNode>,
+}
+
+impl SpanNode {
+    fn end_ns(&self) -> u64 {
+        self.record.t0_ns.saturating_add(self.record.dur_ns)
+    }
+
+    /// Total nodes in this subtree, including `self`.
+    pub fn size(&self) -> usize {
+        1 + self.children.iter().map(SpanNode::size).sum::<usize>()
+    }
+
+    /// Depth-first search for the first node of `kind`.
+    pub fn find(&self, kind: SpanKind) -> Option<&SpanNode> {
+        if self.record.kind == kind {
+            return Some(self);
+        }
+        self.children.iter().find_map(|c| c.find(kind))
+    }
+}
+
+/// Build the containment forest for one trace's records: span B is a
+/// child of span A iff B's interval lies within A's (the trace-viewer
+/// nesting rule). Records from different traces must not be mixed.
+/// Ties (identical start) nest the shorter span inside the longer —
+/// sorting by start asc, duration desc makes parents precede children,
+/// so a single stack pass suffices. Returns the root spans in start
+/// order; a well-formed request trace yields exactly one root of a
+/// `is_request` kind.
+pub fn span_tree(records: &[Record]) -> Vec<SpanNode> {
+    let mut sorted: Vec<&Record> = records.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.t0_ns.cmp(&b.t0_ns).then(b.dur_ns.cmp(&a.dur_ns))
+    });
+    let mut roots: Vec<SpanNode> = Vec::new();
+    // Stack of (node, end_ns) for the currently open ancestor chain.
+    let mut stack: Vec<SpanNode> = Vec::new();
+    for r in sorted {
+        let node = SpanNode { record: *r, children: Vec::new() };
+        while let Some(top) = stack.last() {
+            let fits = r.t0_ns >= top.record.t0_ns
+                && r.t0_ns.saturating_add(r.dur_ns) <= top.end_ns();
+            if fits {
+                break;
+            }
+            let done = stack.pop().unwrap();
+            match stack.last_mut() {
+                Some(parent) => parent.children.push(done),
+                None => roots.push(done),
+            }
+        }
+        stack.push(node);
+    }
+    while let Some(done) = stack.pop() {
+        match stack.last_mut() {
+            Some(parent) => parent.children.push(done),
+            None => roots.push(done),
+        }
+    }
+    roots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceMeta;
+
+    fn span(kind: SpanKind, t0: u64, dur: u64) -> Record {
+        Record { trace: 7, kind, t0_ns: t0, dur_ns: dur }
+    }
+
+    #[test]
+    fn span_tree_nests_by_containment() {
+        let recs = vec![
+            // Push order is causal (children complete before parents),
+            // but the builder must not depend on it.
+            span(SpanKind::PlanLookup, 110, 10),
+            span(SpanKind::Gemm, 130, 40),
+            span(SpanKind::Prefill, 100, 100),
+            span(SpanKind::StreamStep, 210, 20),
+            span(SpanKind::GuardClamp, 215, 0),
+            span(SpanKind::RequestStream, 100, 200),
+        ];
+        let roots = span_tree(&recs);
+        assert_eq!(roots.len(), 1, "single rooted tree");
+        let root = &roots[0];
+        assert_eq!(root.record.kind, SpanKind::RequestStream);
+        assert_eq!(root.size(), 6);
+        let prefill = root.find(SpanKind::Prefill).unwrap();
+        assert_eq!(prefill.children.len(), 2);
+        let step = root.find(SpanKind::StreamStep).unwrap();
+        assert_eq!(step.children.len(), 1, "clamp event inside step");
+        assert_eq!(step.children[0].record.kind, SpanKind::GuardClamp);
+    }
+
+    #[test]
+    fn chrome_json_parses_and_maps_phases() {
+        let meta = TraceMeta {
+            id: 7,
+            kind: SpanKind::RequestStream,
+            t0_ns: 100,
+            dur_ns: 200,
+            degraded: true,
+            pinned: true,
+        };
+        let t = RetainedTrace {
+            meta,
+            records: vec![
+                span(SpanKind::RequestStream, 100, 200),
+                span(SpanKind::GuardClamp, 215, 0),
+            ],
+        };
+        let j = chrome_trace_of(std::slice::from_ref(&t));
+        let parsed =
+            Json::parse(&j.to_string_pretty()).expect("loadable JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3, "metadata + span + instant");
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.req_str("ph").unwrap())
+            .collect();
+        assert_eq!(phases, vec!["M", "X", "i"]);
+        // µs conversion: 100 ns -> 0.1 µs.
+        assert_eq!(events[1].get("ts").unwrap().as_f64().unwrap(), 0.1);
+        assert_eq!(events[1].get("dur").unwrap().as_f64().unwrap(), 0.2);
+        assert!(parsed
+            .get("otherData")
+            .unwrap()
+            .req_str("schema")
+            .unwrap()
+            .eq(TRACE_SCHEMA));
+        let label = events[0].get("args").unwrap().req_str("name").unwrap();
+        assert!(label.contains("degraded"), "track label: {label}");
+    }
+}

@@ -1,0 +1,512 @@
+//! End-to-end request tracing: per-request span trees over the serving
+//! tiers, with tail-based sampling and Chrome-trace export.
+//!
+//! The telemetry layer (PR 6) answers "what does stage X cost in
+//! aggregate"; this layer answers "where did *this* request's time go".
+//! A [`TraceId`] is minted at server admission and carried through the
+//! coordinator queue, the continuous-batching lanes, the engine
+//! fan-out, the streaming prefill/step paths, and the disk tier, so a
+//! promoted trace is one causally ordered span tree:
+//!
+//! ```text
+//! request_stream
+//! ├── queue_wait
+//! ├── admit
+//! ├── prefill
+//! │   ├── plan_lookup
+//! │   ├── feature_map            (per head)
+//! │   ├── toeplitz_apply / gemm / readout
+//! │   └── fallback_dense         (only when the guardrail retried)
+//! ├── stream_step × N
+//! └── page_out / disk_restore / disk_io_error / ... annotations
+//! ```
+//!
+//! **Hot-path discipline** (same rules as `telemetry::StageShard` and
+//! `faults`): records are fixed-size `Copy` structs written into
+//! per-thread grow-only rings ([`ring::TraceRing`]) — no locks, zero
+//! steady-state allocation, and when tracing is disabled every
+//! instrumented site costs exactly one relaxed atomic load. Scoped
+//! engine workers cannot keep thread-locals alive, so they drain into
+//! the `engine::Workspace` ring before exiting and the caller absorbs
+//! those rings after the join — mirroring how telemetry shards are
+//! absorbed at fan-out boundaries.
+//!
+//! **Tail-based sampling** ([`sample`]): every traced request records
+//! into the bounded thread-local scratch ring, but only *interesting*
+//! finishes are promoted to the bounded retained buffer — requests that
+//! degraded (clamp / dense fallback / lane panic / shed / expired
+//! deadline / disk error), exceeded the configured latency threshold,
+//! were explicitly requested, or land in the slowest-k ring. Everything
+//! else is dropped for free (the scratch ring simply overwrites).
+//!
+//! **Export** ([`export`]): the retained set renders as Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto) behind
+//! `--trace-out` / `--trace-threshold-ms` / `--trace-keep` on `serve`,
+//! `serve --streaming`, and `decode`; exemplar trace ids for the top
+//! latency buckets ride in the `kafft.metrics` snapshot (additive
+//! keys). See README.md in this directory for the record layout and
+//! flag reference.
+
+pub mod export;
+pub mod ring;
+pub mod sample;
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::telemetry::Stage;
+
+pub use export::{chrome_trace_json, export_chrome, span_tree, SpanNode};
+pub use ring::TraceRing;
+pub use sample::{
+    exemplars, retained, retained_ids, retained_len, Exemplar, RetainedTrace,
+    TraceMeta,
+};
+
+/// Default retained-buffer bound (`--trace-keep`).
+pub const DEFAULT_KEEP: usize = 64;
+
+/// Everything a trace span or event can name. Span kinds carry a
+/// duration; event kinds ([`SpanKind::is_event`]) are instants.
+/// `name()` strings are the Chrome-trace event names — stable, like
+/// `telemetry::Stage::name`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Root span of a streaming request (enqueue -> reply).
+    RequestStream = 0,
+    /// Root span of a stateless prompt-batch request.
+    RequestBatch = 1,
+    /// Root span of a batched decode request (`submit_decode`) or a
+    /// CLI `decode` run.
+    RequestDecode = 2,
+    /// Enqueue -> worker pickup.
+    QueueWait = 3,
+    /// Session admission: store lookup / cold restore / creation.
+    Admit = 4,
+    /// Whole prompt prefill (encloses the per-stage spans below).
+    Prefill = 5,
+    // Attend-pipeline stages, mirrored from `telemetry::Stage` by the
+    // `StageTimer` hook — one record per stage span, same clock reads.
+    PlanLookup = 6,
+    FeatureMap = 7,
+    ToeplitzApply = 8,
+    Gemm = 9,
+    Readout = 10,
+    StreamStep = 11,
+    /// Disk-tier session page-out (cold snapshot -> envelope file).
+    PageOut = 12,
+    /// Disk-tier session restore (envelope file -> live decoder).
+    DiskRestore = 13,
+    /// Guardrail dense-path retry after a non-finite fast-path output.
+    FallbackDense = 14,
+    // Degradation annotations (instant events).
+    /// Denominator-floor clamp engaged on a kernelized readout.
+    GuardClamp = 15,
+    /// A batch lane panicked and was vacated.
+    LanePanic = 16,
+    /// Request refused at submit (bounded queue full).
+    Shed = 17,
+    /// Request expired in queue before work started.
+    DeadlineExpired = 18,
+    /// A disk-tier IO error was absorbed as tier degradation.
+    DiskIoError = 19,
+}
+
+pub const NUM_KINDS: usize = 20;
+
+impl SpanKind {
+    pub const ALL: [SpanKind; NUM_KINDS] = [
+        SpanKind::RequestStream,
+        SpanKind::RequestBatch,
+        SpanKind::RequestDecode,
+        SpanKind::QueueWait,
+        SpanKind::Admit,
+        SpanKind::Prefill,
+        SpanKind::PlanLookup,
+        SpanKind::FeatureMap,
+        SpanKind::ToeplitzApply,
+        SpanKind::Gemm,
+        SpanKind::Readout,
+        SpanKind::StreamStep,
+        SpanKind::PageOut,
+        SpanKind::DiskRestore,
+        SpanKind::FallbackDense,
+        SpanKind::GuardClamp,
+        SpanKind::LanePanic,
+        SpanKind::Shed,
+        SpanKind::DeadlineExpired,
+        SpanKind::DiskIoError,
+    ];
+
+    /// Stable Chrome-trace event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::RequestStream => "request_stream",
+            SpanKind::RequestBatch => "request_batch",
+            SpanKind::RequestDecode => "request_decode",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Admit => "admit",
+            SpanKind::Prefill => "prefill",
+            SpanKind::PlanLookup => "plan_lookup",
+            SpanKind::FeatureMap => "feature_map",
+            SpanKind::ToeplitzApply => "toeplitz_apply",
+            SpanKind::Gemm => "gemm",
+            SpanKind::Readout => "readout",
+            SpanKind::StreamStep => "stream_step",
+            SpanKind::PageOut => "page_out",
+            SpanKind::DiskRestore => "disk_restore",
+            SpanKind::FallbackDense => "fallback_dense",
+            SpanKind::GuardClamp => "guard_clamp",
+            SpanKind::LanePanic => "lane_panic",
+            SpanKind::Shed => "shed",
+            SpanKind::DeadlineExpired => "deadline_expired",
+            SpanKind::DiskIoError => "disk_io_error",
+        }
+    }
+
+    /// Root request kinds — exactly one per well-formed trace.
+    pub fn is_request(self) -> bool {
+        matches!(
+            self,
+            SpanKind::RequestStream
+                | SpanKind::RequestBatch
+                | SpanKind::RequestDecode
+        )
+    }
+
+    /// Instant annotations (rendered as Chrome `ph:"i"` events; a
+    /// record of this kind has `dur_ns == 0`).
+    pub fn is_event(self) -> bool {
+        matches!(
+            self,
+            SpanKind::GuardClamp
+                | SpanKind::LanePanic
+                | SpanKind::Shed
+                | SpanKind::DeadlineExpired
+                | SpanKind::DiskIoError
+        )
+    }
+
+    /// Kinds whose presence marks the enclosing request as degraded —
+    /// the tail sampler pins such traces into the retained buffer.
+    pub fn is_degradation(self) -> bool {
+        self.is_event() || self == SpanKind::FallbackDense
+    }
+}
+
+/// Map an attend-pipeline telemetry stage onto its trace span kind.
+/// Called by the `StageTimer` hook so every existing stage span site
+/// doubles as a trace span site with no signature changes.
+pub(crate) fn kind_of_stage(stage: Stage) -> SpanKind {
+    match stage {
+        Stage::PlanLookup => SpanKind::PlanLookup,
+        Stage::FeatureMap => SpanKind::FeatureMap,
+        Stage::ToeplitzApply => SpanKind::ToeplitzApply,
+        Stage::Gemm => SpanKind::Gemm,
+        Stage::Readout => SpanKind::Readout,
+        Stage::StreamStep => SpanKind::StreamStep,
+        Stage::PageOut => SpanKind::PageOut,
+        Stage::DiskRestore => SpanKind::DiskRestore,
+        Stage::FallbackDense => SpanKind::FallbackDense,
+    }
+}
+
+/// One fixed-size trace record: a completed span (`dur_ns > 0` or a
+/// zero-length span) or an instant event (`is_event` kinds, `dur_ns ==
+/// 0`). Timestamps are nanoseconds since the process trace epoch.
+/// Plain `Copy` data, 32 bytes — written whole into a single-owner
+/// ring, so records are never torn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record {
+    /// Owning request (never 0 in a recorded span).
+    pub trace: u64,
+    pub kind: SpanKind,
+    /// Span start, ns since [`epoch`].
+    pub t0_ns: u64,
+    /// Span duration in ns (0 for instant events).
+    pub dur_ns: u64,
+}
+
+// ---- global switches ------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+/// Latency promotion threshold, ns; 0 means "no threshold" (slowest-k
+/// only).
+static THRESHOLD_NS: AtomicU64 = AtomicU64::new(0);
+static KEEP: AtomicUsize = AtomicUsize::new(DEFAULT_KEEP);
+
+/// Process trace epoch: all record timestamps are relative to this
+/// instant, fixed on first use ([`configure`]/[`set_enabled`] touch it
+/// so serving always starts after it).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn ns_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch())
+        .as_nanos()
+        .min(u64::MAX as u128) as u64
+}
+
+/// Nanoseconds since the trace epoch, now.
+pub fn now_ns() -> u64 {
+    ns_since_epoch(Instant::now())
+}
+
+/// Globally enable/disable trace recording. Disabled, every
+/// instrumented site is a no-op after one relaxed load — the
+/// thread-local scratch is not even touched. Off by default (tracing
+/// is opt-in via `--trace-out`).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set the tail-sampling policy: requests slower than `threshold_ns`
+/// (0 = no threshold) are pinned into the retained buffer, which holds
+/// at most `keep` traces.
+pub fn configure(threshold_ns: u64, keep: usize) {
+    let _ = epoch();
+    THRESHOLD_NS.store(threshold_ns, Ordering::Relaxed);
+    KEEP.store(keep, Ordering::Relaxed);
+}
+
+pub(crate) fn threshold_ns() -> u64 {
+    THRESHOLD_NS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn keep_limit() -> usize {
+    KEEP.load(Ordering::Relaxed)
+}
+
+/// Mint a fresh nonzero trace id (server admission).
+pub fn mint() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// [`mint`] when tracing is enabled, 0 (untraced) otherwise — the
+/// disabled cost is the one relaxed load.
+#[inline]
+pub fn maybe_mint() -> u64 {
+    if enabled() {
+        mint()
+    } else {
+        0
+    }
+}
+
+// ---- per-thread recording state -------------------------------------------
+
+thread_local! {
+    /// The trace id the current thread is working for (0 = none).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// Bounded scratch ring every traced request records into. The
+    /// backing buffer grows to `TraceRing::DEFAULT_CAP` on first use
+    /// and is reused forever.
+    static SCRATCH: RefCell<TraceRing> = const { RefCell::new(TraceRing::new()) };
+}
+
+/// Attribute subsequent spans/events on this thread to `id` (0 to
+/// detach). Workers set this at request pickup; the engine fan-out
+/// forwards it into scoped workers.
+#[inline]
+pub fn set_current(id: u64) {
+    CURRENT.with(|c| c.set(id));
+}
+
+#[inline]
+pub fn current() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+/// True when recording would actually store something: tracing is on
+/// and this thread is attributed to a request.
+#[inline]
+pub fn active() -> bool {
+    enabled() && current() != 0
+}
+
+#[inline]
+fn push(r: Record) {
+    SCRATCH.with(|s| s.borrow_mut().push(r));
+}
+
+/// Record a completed span for the current trace. No-op (one relaxed
+/// load) when tracing is disabled or the thread is unattributed.
+#[inline]
+pub fn span_at(kind: SpanKind, t0: Instant, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let id = current();
+    if id == 0 {
+        return;
+    }
+    push(Record { trace: id, kind, t0_ns: ns_since_epoch(t0), dur_ns });
+}
+
+/// Record an instant annotation for the current trace.
+#[inline]
+pub fn event(kind: SpanKind) {
+    if !enabled() {
+        return;
+    }
+    let id = current();
+    if id == 0 {
+        return;
+    }
+    push(Record { trace: id, kind, t0_ns: now_ns(), dur_ns: 0 });
+}
+
+/// Hook for `telemetry::StageTimer::stop`: mirror a stage span into
+/// the trace. Shares the timer's clock reads — a traced stage costs no
+/// extra `Instant::now`.
+#[inline]
+pub(crate) fn stage_span(stage: Stage, t0: Instant, dur_ns: u64) {
+    span_at(kind_of_stage(stage), t0, dur_ns);
+}
+
+/// A started trace-only span (admit, prefill envelope): `start` reads
+/// the clock only when the thread is actively traced, so the disabled
+/// cost is one relaxed load — the `StageTimer` contract.
+#[derive(Debug, Clone, Copy)]
+#[must_use = "a span only records when stopped"]
+pub struct SpanTimer(Option<Instant>);
+
+impl SpanTimer {
+    #[inline]
+    pub fn start() -> SpanTimer {
+        SpanTimer(if active() { Some(Instant::now()) } else { None })
+    }
+
+    #[inline]
+    pub fn stop(self, kind: SpanKind) {
+        if let Some(t0) = self.0 {
+            let dur = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            span_at(kind, t0, dur);
+        }
+    }
+}
+
+// ---- engine fan-out relay ---------------------------------------------------
+
+/// Move every record in this thread's scratch into `ring`, clearing
+/// the scratch. Scoped engine workers call this before exiting (their
+/// thread-locals die with them); the spawning thread replays the rings
+/// back with [`absorb_ring`] — the same absorb-at-fan-out-boundary
+/// discipline telemetry shards use.
+pub fn drain_scratch_into(ring: &mut TraceRing) {
+    if !enabled() {
+        return;
+    }
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.is_empty() {
+            return;
+        }
+        ring.merge(&s);
+        s.clear();
+    });
+}
+
+/// Replay a relay ring into this thread's scratch and clear it.
+pub fn absorb_ring(ring: &mut TraceRing) {
+    if !enabled() || ring.is_empty() {
+        return;
+    }
+    SCRATCH.with(|s| s.borrow_mut().merge(ring));
+    ring.clear();
+}
+
+/// Records currently in this thread's scratch ring (tests/debug).
+pub fn scratch_len() -> usize {
+    SCRATCH.with(|s| s.borrow().len())
+}
+
+// ---- request lifecycle ------------------------------------------------------
+
+/// Close out the current request: synthesize its root span, decide
+/// promotion (tail sampling), and detach the thread. `degraded` marks
+/// an error outcome the records alone cannot show (shed, rejection);
+/// degradation *records* (fallbacks, clamps, IO errors) are detected
+/// by scanning the scratch. `explicit` pins the trace unconditionally
+/// (CLI `decode --trace-out` uses it).
+///
+/// Allocation-free unless the trace is actually promoted: the
+/// promote-or-drop decision runs on counters gathered by one in-place
+/// scan of the scratch ring.
+pub fn finish_request(kind: SpanKind, t0: Instant, degraded: bool,
+                      explicit: bool) {
+    let id = current();
+    set_current(0);
+    if !enabled() || id == 0 {
+        return;
+    }
+    let dur_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    let t0_ns = ns_since_epoch(t0);
+    // One in-place scan: how many records belong to this trace, and did
+    // any of them mark degradation?
+    let (matches, saw_degraded) = SCRATCH.with(|s| {
+        let s = s.borrow();
+        let mut n = 0usize;
+        let mut deg = false;
+        for r in s.iter() {
+            if r.trace == id {
+                n += 1;
+                deg = deg || r.kind.is_degradation();
+            }
+        }
+        (n, deg)
+    });
+    let degraded = degraded || saw_degraded;
+    let thr = threshold_ns();
+    let pinned = degraded || explicit || (thr > 0 && dur_ns >= thr);
+    let meta =
+        TraceMeta { id, kind, t0_ns, dur_ns, degraded, pinned };
+    sample::offer(meta, || {
+        SCRATCH.with(|s| {
+            let s = s.borrow();
+            let mut v = Vec::with_capacity(matches + 1);
+            // Root first; children keep scratch (push) order.
+            v.push(Record { trace: id, kind, t0_ns, dur_ns });
+            for r in s.iter() {
+                if r.trace == id {
+                    v.push(*r);
+                }
+            }
+            v
+        })
+    });
+}
+
+/// Serialize tests that toggle the process-global trace flag, policy,
+/// or retained buffer (mirrors `telemetry::test_flag_guard`, but pub
+/// so integration tests can share it).
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Reset recording state for tests: disable, restore default policy,
+/// clear the retained buffer, and detach + clear this thread's
+/// scratch. (Other threads' scratch rings are untouched — they only
+/// matter while their owner is mid-request.)
+pub fn reset() {
+    set_enabled(false);
+    configure(0, DEFAULT_KEEP);
+    sample::clear_retained();
+    set_current(0);
+    SCRATCH.with(|s| s.borrow_mut().clear());
+}

@@ -1,0 +1,183 @@
+//! Grow-only ring buffer of fixed-size trace records.
+//!
+//! The recording discipline mirrors `telemetry::StageShard`: a ring is
+//! owned by exactly one thread (a worker loop, a workspace, or the
+//! thread-local scratch in [`super`]) and is therefore lock-free by
+//! construction. Storage grows monotonically to the fixed capacity on
+//! first use and is then reused forever — a saturated ring never
+//! touches the allocator again; new records overwrite the oldest
+//! (newest-wins). Records are plain `Copy` structs written whole, so a
+//! reader of the same ring (always the owning thread) can never see a
+//! torn record.
+
+use super::Record;
+
+/// Bounded, grow-only record ring. `push` is O(1) and allocation-free
+/// once the ring has reached capacity.
+#[derive(Debug, Clone, Default)]
+pub struct TraceRing {
+    buf: Vec<Record>,
+    cap: usize,
+    /// Overwrite cursor — index of the *oldest* record once full.
+    next: usize,
+    /// Records ever pushed (monotone; `total - len` were overwritten).
+    total: u64,
+}
+
+impl TraceRing {
+    /// Default per-thread scratch capacity: generous enough for a long
+    /// streaming request (queue_wait + admit + prefill stages + one
+    /// span per decoded token) at 32 bytes per record.
+    pub const DEFAULT_CAP: usize = 4096;
+
+    /// An empty ring. Does **not** allocate — the buffer grows lazily
+    /// to `DEFAULT_CAP` as records arrive. `const` so the per-thread
+    /// scratch in [`super`] can be const-initialized (no lazy-init
+    /// branch on the hot path).
+    pub const fn new() -> TraceRing {
+        TraceRing::with_capacity(TraceRing::DEFAULT_CAP)
+    }
+
+    /// An empty ring bounded at `cap` records (allocation still lazy).
+    pub const fn with_capacity(cap: usize) -> TraceRing {
+        let cap = if cap == 0 { 1 } else { cap };
+        TraceRing { buf: Vec::new(), cap, next: 0, total: 0 }
+    }
+
+    /// Append one record, overwriting the oldest at capacity.
+    #[inline]
+    pub fn push(&mut self, r: Record) {
+        if self.buf.len() < self.cap {
+            self.buf.push(r);
+        } else {
+            self.buf[self.next] = r;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Records currently held (`min(total, cap)`).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Records ever pushed, including overwritten ones.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Records lost to overwrite.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.len() as u64
+    }
+
+    /// Iterate oldest-first.
+    pub fn iter(&self) -> impl Iterator<Item = &Record> {
+        let split = if self.buf.len() < self.cap { 0 } else { self.next };
+        self.buf[split..].iter().chain(self.buf[..split].iter())
+    }
+
+    /// Drop every record. Capacity (and the backing allocation) is
+    /// kept, so a cleared ring refills allocation-free.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.total = 0;
+    }
+
+    /// Replay another ring's surviving records into this one,
+    /// oldest-first. Merging two rings that split one push sequence
+    /// (without overflowing either part) is identical to pushing the
+    /// whole sequence into a single ring — the shard-merge law
+    /// (`tests/proptest_trace.rs`).
+    pub fn merge(&mut self, other: &TraceRing) {
+        for r in other.iter() {
+            self.push(*r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SpanKind;
+    use super::*;
+
+    fn rec(i: u64) -> Record {
+        Record {
+            trace: i,
+            kind: SpanKind::StreamStep,
+            t0_ns: i * 10,
+            dur_ns: i + 1,
+        }
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut r = TraceRing::with_capacity(4);
+        for i in 0..4 {
+            r.push(rec(i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 0);
+        r.push(rec(4));
+        r.push(rec(5));
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total(), 6);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> = r.iter().map(|x| x.trace).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5], "newest-wins, oldest-first order");
+    }
+
+    #[test]
+    fn records_survive_overwrite_intact() {
+        let mut r = TraceRing::with_capacity(3);
+        for i in 0..100 {
+            r.push(rec(i));
+        }
+        for x in r.iter() {
+            assert_eq!(x.t0_ns, x.trace * 10, "field pair written whole");
+            assert_eq!(x.dur_ns, x.trace + 1);
+        }
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_resets_counters() {
+        let mut r = TraceRing::with_capacity(2);
+        r.push(rec(0));
+        r.push(rec(1));
+        r.push(rec(2));
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.total(), 0);
+        r.push(rec(7));
+        assert_eq!(r.iter().next().unwrap().trace, 7);
+    }
+
+    #[test]
+    fn merge_replays_oldest_first() {
+        let mut a = TraceRing::with_capacity(8);
+        let mut b = TraceRing::with_capacity(8);
+        let mut one = TraceRing::with_capacity(8);
+        for i in 0..3 {
+            a.push(rec(i));
+            one.push(rec(i));
+        }
+        for i in 3..6 {
+            b.push(rec(i));
+            one.push(rec(i));
+        }
+        a.merge(&b);
+        let merged: Vec<u64> = a.iter().map(|x| x.trace).collect();
+        let single: Vec<u64> = one.iter().map(|x| x.trace).collect();
+        assert_eq!(merged, single);
+        assert_eq!(a.total(), one.total());
+    }
+}

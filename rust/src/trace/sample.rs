@@ -1,0 +1,300 @@
+//! Tail-based sampling: decide *after* a request finishes whether its
+//! trace is interesting enough to retain.
+//!
+//! Every traced request records into the bounded thread-local scratch
+//! ring for free; at [`super::finish_request`] the collector is
+//! offered the finished trace with a [`TraceMeta`] verdict. Retention
+//! policy over the bounded buffer (`--trace-keep`, default
+//! [`super::DEFAULT_KEEP`]):
+//!
+//! * **pinned** traces — degraded (clamp / dense fallback / lane panic
+//!   / shed / expired deadline / disk IO error), explicitly requested,
+//!   or over the `--trace-threshold-ms` latency threshold — always
+//!   enter the buffer, evicting the oldest *unpinned* trace first and
+//!   the oldest pinned one only when everything is pinned;
+//! * **unpinned** traces compete for leftover slots as a slowest-k
+//!   ring: a faster retained unpinned trace is replaced by a slower
+//!   newcomer, so with no threshold configured the buffer converges on
+//!   the latency tail plus every degraded request.
+//!
+//! The collector is a single mutex around a `Vec` — it is touched once
+//! per *finished request* (never per span) and only allocates when a
+//! trace is actually promoted, so the hot-path discipline of the
+//! recording side is untouched.
+
+use std::sync::Mutex;
+
+use super::{Record, SpanKind};
+use crate::telemetry::hist::bucket_of;
+
+/// Verdict summary for one finished request trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceMeta {
+    /// The request's trace id (nonzero).
+    pub id: u64,
+    /// Root span kind (one of the `is_request` kinds).
+    pub kind: SpanKind,
+    /// Root span start, ns since the trace epoch.
+    pub t0_ns: u64,
+    /// End-to-end request latency, ns.
+    pub dur_ns: u64,
+    /// Any degradation event/span observed (or reported by the caller).
+    pub degraded: bool,
+    /// Unconditionally retained: degraded, explicit, or over threshold.
+    pub pinned: bool,
+}
+
+impl TraceMeta {
+    /// Which latency histogram this request's duration feeds — the
+    /// exemplar attachment key in the metrics snapshot.
+    pub fn hist_key(&self) -> &'static str {
+        match self.kind {
+            SpanKind::RequestBatch => "request_batch_ns",
+            _ => "request_stream_ns",
+        }
+    }
+}
+
+/// One promoted trace: verdict plus its span/event records (root
+/// first, then children in causal push order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetainedTrace {
+    pub meta: TraceMeta,
+    pub records: Vec<Record>,
+}
+
+/// Exemplar: a concrete retained trace id attached to a latency
+/// histogram bucket, so a p99 bucket in the metrics snapshot links to
+/// an inspectable span tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Exemplar {
+    /// Snapshot histogram key (`request_stream_ns` / `request_batch_ns`).
+    pub hist: &'static str,
+    /// log2 bucket index (`telemetry::hist::bucket_of`).
+    pub bucket: usize,
+    /// The exemplar request's latency, ns.
+    pub latency_ns: u64,
+    /// Resolves to a trace in [`retained`].
+    pub trace_id: u64,
+}
+
+static RETAINED: Mutex<Vec<RetainedTrace>> = Mutex::new(Vec::new());
+
+fn lock() -> std::sync::MutexGuard<'static, Vec<RetainedTrace>> {
+    RETAINED.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Offer a finished trace to the collector. `build` materializes the
+/// record vector and is invoked only if the trace is actually
+/// promoted — a dropped trace costs one mutex lock and no allocation.
+pub(crate) fn offer<F>(meta: TraceMeta, build: F)
+where
+    F: FnOnce() -> Vec<Record>,
+{
+    let keep = super::keep_limit();
+    if keep == 0 {
+        return;
+    }
+    let mut buf = lock();
+    if buf.len() < keep {
+        let records = build();
+        buf.push(RetainedTrace { meta, records });
+        return;
+    }
+    // Full. Insertion order is finish order, so "first matching" below
+    // means "oldest matching".
+    let victim = if meta.pinned {
+        buf.iter()
+            .position(|t| !t.meta.pinned)
+            .or_else(|| if buf.is_empty() { None } else { Some(0) })
+    } else {
+        // Slowest-k among the unpinned: replace the fastest unpinned
+        // trace iff the newcomer is slower.
+        buf.iter()
+            .enumerate()
+            .filter(|(_, t)| !t.meta.pinned)
+            .min_by_key(|(_, t)| t.meta.dur_ns)
+            .and_then(|(i, t)| {
+                if meta.dur_ns > t.meta.dur_ns {
+                    Some(i)
+                } else {
+                    None
+                }
+            })
+    };
+    if let Some(i) = victim {
+        buf.remove(i);
+        let records = build();
+        buf.push(RetainedTrace { meta, records });
+    }
+}
+
+/// Snapshot of every retained trace, oldest finish first.
+pub fn retained() -> Vec<RetainedTrace> {
+    lock().clone()
+}
+
+pub fn retained_len() -> usize {
+    lock().len()
+}
+
+/// Trace ids currently retained (exemplar resolution checks).
+pub fn retained_ids() -> Vec<u64> {
+    lock().iter().map(|t| t.meta.id).collect()
+}
+
+pub(crate) fn clear_retained() {
+    lock().clear();
+}
+
+/// Exemplars per latency histogram the retained set can attest to.
+const EXEMPLARS_PER_HIST: usize = 3;
+
+/// Derive histogram exemplars from the retained traces: within each
+/// latency histogram, the slowest retained trace per log2 bucket, for
+/// the top [`EXEMPLARS_PER_HIST`] buckets — so the snapshot's tail
+/// buckets each link to a concrete span tree. Sorted by histogram key
+/// then descending bucket (deterministic output for the exporters).
+pub fn exemplars() -> Vec<Exemplar> {
+    let buf = lock();
+    // (hist, bucket) -> slowest trace in that bucket.
+    let mut best: Vec<Exemplar> = Vec::new();
+    for t in buf.iter() {
+        let e = Exemplar {
+            hist: t.meta.hist_key(),
+            bucket: bucket_of(t.meta.dur_ns),
+            latency_ns: t.meta.dur_ns,
+            trace_id: t.meta.id,
+        };
+        match best
+            .iter_mut()
+            .find(|b| b.hist == e.hist && b.bucket == e.bucket)
+        {
+            Some(b) => {
+                if e.latency_ns > b.latency_ns {
+                    *b = e;
+                }
+            }
+            None => best.push(e),
+        }
+    }
+    drop(buf);
+    // Highest buckets first within each histogram, then truncate each
+    // histogram to its top buckets.
+    best.sort_by(|a, b| {
+        a.hist.cmp(b.hist).then(b.bucket.cmp(&a.bucket))
+    });
+    let mut out: Vec<Exemplar> = Vec::new();
+    let mut run = 0usize;
+    for e in best {
+        if out.last().map(|p| p.hist) == Some(e.hist) {
+            run += 1;
+        } else {
+            run = 0;
+        }
+        if run < EXEMPLARS_PER_HIST {
+            out.push(e);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, dur: u64, pinned: bool, degraded: bool) -> TraceMeta {
+        TraceMeta {
+            id,
+            kind: SpanKind::RequestStream,
+            t0_ns: id * 1000,
+            dur_ns: dur,
+            degraded,
+            pinned,
+        }
+    }
+
+    fn root(m: &TraceMeta) -> Vec<Record> {
+        vec![Record {
+            trace: m.id,
+            kind: m.kind,
+            t0_ns: m.t0_ns,
+            dur_ns: m.dur_ns,
+        }]
+    }
+
+    fn with_keep<R>(keep: usize, f: impl FnOnce() -> R) -> R {
+        let _g = super::super::test_guard();
+        super::super::configure(0, keep);
+        clear_retained();
+        let r = f();
+        clear_retained();
+        super::super::configure(0, super::super::DEFAULT_KEEP);
+        r
+    }
+
+    #[test]
+    fn pinned_evicts_oldest_unpinned_first() {
+        with_keep(2, || {
+            let a = meta(1, 100, false, false);
+            let b = meta(2, 200, false, false);
+            offer(a, || root(&a));
+            offer(b, || root(&b));
+            let c = meta(3, 10, true, true);
+            offer(c, || root(&c));
+            let ids = retained_ids();
+            assert_eq!(ids, vec![2, 3], "oldest unpinned (1) evicted");
+        });
+    }
+
+    #[test]
+    fn unpinned_keeps_slowest_k() {
+        with_keep(2, || {
+            for (id, dur) in [(1, 50u64), (2, 300), (3, 100), (4, 20)] {
+                let m = meta(id, dur, false, false);
+                offer(m, || root(&m));
+            }
+            let mut ids = retained_ids();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![2, 3], "two slowest survive");
+        });
+    }
+
+    #[test]
+    fn all_pinned_buffer_evicts_oldest_pinned() {
+        with_keep(2, || {
+            for id in 1..=3u64 {
+                let m = meta(id, 10, true, true);
+                offer(m, || root(&m));
+            }
+            assert_eq!(retained_ids(), vec![2, 3]);
+        });
+    }
+
+    #[test]
+    fn exemplars_link_top_buckets_to_slowest_trace() {
+        with_keep(8, || {
+            // 1100 and 1500 share log2 bucket 10: slower one wins.
+            for (id, dur) in [(1u64, 1100u64), (2, 1500), (3, 40_000)] {
+                let m = meta(id, dur, true, false);
+                offer(m, || root(&m));
+            }
+            let ex = exemplars();
+            assert_eq!(ex.len(), 2, "two distinct buckets");
+            assert_eq!(ex[0].hist, "request_stream_ns");
+            // Buckets descend; the shared bucket's exemplar is id 2.
+            assert_eq!(ex[0].trace_id, 3);
+            assert_eq!(ex[1].trace_id, 2);
+            assert_eq!(ex[1].latency_ns, 1500);
+        });
+    }
+
+    #[test]
+    fn keep_zero_retains_nothing() {
+        with_keep(0, || {
+            let m = meta(1, 10, true, true);
+            offer(m, || root(&m));
+            assert_eq!(retained_len(), 0);
+        });
+    }
+}

@@ -58,8 +58,14 @@ fn served_snapshot_exports_and_validates() {
     let snap = &stats.telemetry;
 
     // Every pipeline stage fired: prefill covers plan_lookup ..
-    // readout, the decode steps cover stream_step.
+    // readout, the decode steps cover stream_step. The disk tier and
+    // guardrail retry stages (page_out, disk_restore, fallback_dense)
+    // stay at zero — this workload has no disk budget and no faults.
     for (name, h) in &snap.stages {
+        if matches!(*name, "page_out" | "disk_restore" | "fallback_dense") {
+            assert_eq!(h.count, 0, "stage {name} fired unexpectedly");
+            continue;
+        }
         assert!(h.count > 0, "stage {name} recorded no spans");
         assert!(h.p50 <= h.p95 && h.p95 <= h.p99, "stage {name}: {h:?}");
         assert!(h.p99 <= h.max.max(1), "stage {name}: p99 above max");
@@ -102,7 +108,13 @@ fn served_snapshot_exports_and_validates() {
         let h = stages
             .get(s.name())
             .unwrap_or_else(|| panic!("missing stage key {}", s.name()));
-        assert!(h.req_usize("count").expect("count") > 0, "{}", s.name());
+        let silent = matches!(
+            s.name(),
+            "page_out" | "disk_restore" | "fallback_dense"
+        );
+        if !silent {
+            assert!(h.req_usize("count").expect("count") > 0, "{}", s.name());
+        }
         for key in ["sum", "max", "mean", "p50", "p95", "p99"] {
             assert!(h.get(key).is_some(), "stage {} lacks {key}", s.name());
         }
@@ -141,4 +153,115 @@ fn served_snapshot_exports_and_validates() {
     assert!(prom.contains("kafft_tokens_total"));
     assert!(prom.contains("kafft_plan_cache_hits_total"));
     assert!(prom.contains("kafft_session_created_total"));
+}
+
+/// Exporter parity (PR 9): the JSON and Prometheus exporters must
+/// expose the same facts. The table below pins every JSON top-level
+/// key to the Prometheus family carrying the same value, so a key
+/// added to one exporter without the other fails here rather than in
+/// a dashboard.
+#[test]
+fn json_and_prometheus_exporters_stay_in_lockstep() {
+    let stats = drive_server();
+    // Attach a synthetic exemplar so the one tracing-gated section is
+    // exercised too (the parity contract includes it).
+    let snap = stats.telemetry.clone().with_exemplars(vec![
+        kafft::trace::Exemplar {
+            hist: "request_stream_ns",
+            bucket: 20,
+            latency_ns: 1_000_000,
+            trace_id: 7,
+        },
+    ]);
+
+    // (json top-level key, prometheus family carrying the same fact);
+    // "" marks the schema tag pair, which is JSON-only by design.
+    const PARITY: &[(&str, &str)] = &[
+        ("admits", "kafft_batch_admits_total"),
+        ("batch_occupancy", "kafft_batch_occupancy"),
+        ("batch_size", "kafft_batch_size"),
+        ("deadline_expired", "kafft_deadline_expired_total"),
+        ("disk_io_errors", "kafft_disk_io_errors_total"),
+        ("evicts", "kafft_batch_evicts_total"),
+        ("exemplars", "kafft_trace_exemplar"),
+        ("fallback_dense", "kafft_fallback_dense_total"),
+        ("guardrail_clamps", "kafft_guardrail_clamps_total"),
+        ("lane_panics", "kafft_lane_panics_total"),
+        ("plan_cache", "kafft_plan_cache_"),
+        ("prefill_ns", "kafft_prefill_ns"),
+        ("prefill_tokens", "kafft_prefill_tokens_total"),
+        ("queue_wait_ns", "kafft_queue_wait_ns"),
+        ("request_batch_ns", "kafft_request_batch_ns"),
+        ("request_stream_ns", "kafft_request_stream_ns"),
+        ("schema", ""),
+        ("schema_version", ""),
+        ("session_store", "kafft_session_"),
+        ("shed_requests", "kafft_shed_requests_total"),
+        ("stages", "kafft_stage_"),
+        ("tokens", "kafft_tokens_total"),
+        ("tokens_per_sec", "kafft_tokens_per_second"),
+        ("uptime_secs", "kafft_uptime_seconds"),
+    ];
+
+    let j = snap.to_json();
+    let obj = j.as_obj().expect("snapshot root is an object");
+    let json_keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+    let pinned: Vec<&str> = PARITY.iter().map(|(k, _)| *k).collect();
+    assert_eq!(
+        json_keys, pinned,
+        "JSON top-level key set changed — update the parity table AND \
+         the Prometheus exporter together"
+    );
+
+    // Forward direction: every JSON key has its Prometheus family.
+    let prom = snap.to_prometheus();
+    for (key, family) in PARITY {
+        if !family.is_empty() {
+            assert!(
+                prom.contains(family),
+                "JSON key {key} lacks Prometheus family {family}"
+            );
+        }
+    }
+    // Nested sections expand one sub-key per series family.
+    for s in Stage::ALL {
+        assert!(
+            prom.contains(&format!("# TYPE kafft_stage_{}_ns summary", s.name())),
+            "stage {} missing from Prometheus",
+            s.name()
+        );
+    }
+    for sub in j.get("plan_cache").unwrap().as_obj().unwrap().keys() {
+        assert!(
+            prom.contains(&format!("kafft_plan_cache_{sub}")),
+            "plan_cache sub-key {sub} lacks a Prometheus series"
+        );
+    }
+    for sub in j.get("session_store").unwrap().as_obj().unwrap().keys() {
+        assert!(
+            prom.contains(&format!("kafft_session_{sub}_total")),
+            "session_store sub-key {sub} lacks a Prometheus series"
+        );
+    }
+
+    // Reverse direction: every declared Prometheus family maps back to
+    // a pinned JSON key ("# TYPE <name> <kind>" lines are the family
+    // registry).
+    for line in prom.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let name = line.split_whitespace().nth(2).expect("family name");
+        let covered = PARITY
+            .iter()
+            .any(|(_, fam)| !fam.is_empty() && name.starts_with(fam));
+        assert!(
+            covered,
+            "Prometheus family {name} has no JSON counterpart in the \
+             parity table"
+        );
+    }
+
+    // The exemplar series resolves: the synthetic trace id round-trips
+    // through both exporters.
+    let ex = j.get("exemplars").unwrap().as_arr().unwrap();
+    assert_eq!(ex[0].req_usize("trace_id").unwrap(), 7);
+    assert!(prom.contains("trace_id=\"7\""));
 }

@@ -1,0 +1,363 @@
+//! Property net for the request-tracing core.
+//!
+//! Four contracts are pinned down:
+//!
+//!   * **Ring overwrite** — for arbitrary push counts and capacities,
+//!     the ring keeps exactly the newest `min(n, cap)` records in
+//!     oldest-first order, every surviving record bit-identical to what
+//!     was pushed (never torn), with `total`/`dropped` accounting exact.
+//!   * **Merge law** — splitting one push sequence into contiguous
+//!     chunks across several rings and merging them is
+//!     indistinguishable from pushing the whole sequence into a single
+//!     ring, including when the merge target overflows.
+//!   * **Span nesting** — a randomly generated containment forest
+//!     (several interleaved trace ids, nested spans, instant events),
+//!     flattened and shuffled, reconstructs *exactly* per trace id via
+//!     [`kafft::trace::span_tree`]: one root of a request kind, every
+//!     parent/child edge recovered.
+//!   * **Disabled tracing is inert** — with the global flag off, every
+//!     instrumented entry point records nothing, retains nothing, and
+//!     never touches the allocator (counted by the same thread-local
+//!     `#[global_allocator]` shim as `tests/proptest_telemetry.rs`);
+//!     once warm, *enabled* scratch recording is allocation-free too.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::Instant;
+
+use kafft::rng::Rng;
+use kafft::trace::{
+    self, span_tree, Record, SpanKind, SpanNode, TraceRing, NUM_KINDS,
+};
+use kafft::util::prop::{forall, Gen, Pair, UsizeRange};
+
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// The `i`-th record of a reference push sequence: every field derived
+/// from `i`, so a surviving record can be checked for tearing by
+/// recomputation.
+fn rec(i: u64) -> Record {
+    Record {
+        trace: 1 + i % 5,
+        kind: SpanKind::ALL[(i as usize) % NUM_KINDS],
+        t0_ns: i.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        dur_ns: i.wrapping_mul(31).wrapping_add(7),
+    }
+}
+
+#[test]
+fn ring_overwrite_keeps_newest_and_never_tears() {
+    forall(
+        "ring_overwrite",
+        300,
+        0x7ace,
+        &Pair(UsizeRange(0, 600), UsizeRange(1, 64)),
+        |&(n, cap)| {
+            let mut ring = TraceRing::with_capacity(cap);
+            for i in 0..n as u64 {
+                ring.push(rec(i));
+            }
+            if ring.total() != n as u64 {
+                return Err(format!("total {} != {n}", ring.total()));
+            }
+            if ring.len() != n.min(cap) {
+                return Err(format!(
+                    "len {} != min({n}, {cap})",
+                    ring.len()
+                ));
+            }
+            if ring.dropped() != n.saturating_sub(cap) as u64 {
+                return Err(format!("dropped {} wrong", ring.dropped()));
+            }
+            // Survivors are exactly the newest min(n, cap) pushes, in
+            // push order, bit-identical.
+            let first = n.saturating_sub(cap) as u64;
+            for (k, r) in ring.iter().enumerate() {
+                let want = rec(first + k as u64);
+                if *r != want {
+                    return Err(format!(
+                        "slot {k}: got {r:?}, want {want:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn merge_of_split_rings_equals_single_ring() {
+    forall(
+        "ring_merge",
+        300,
+        0x5eed,
+        &Pair(UsizeRange(0, 300), UsizeRange(1, 6)),
+        |&(n, ways)| {
+            // Deal the sequence into `ways` contiguous chunks, none of
+            // which overflows (cap >= n), as the fan-out relay does.
+            let cap = n.max(1);
+            let mut parts: Vec<TraceRing> =
+                (0..ways).map(|_| TraceRing::with_capacity(cap)).collect();
+            for i in 0..n {
+                parts[i * ways / cap].push(rec(i as u64));
+            }
+            // Against a full-size target and an overflowing one.
+            for target_cap in [cap, n / 3 + 1] {
+                let mut single = TraceRing::with_capacity(target_cap);
+                let mut merged = TraceRing::with_capacity(target_cap);
+                for i in 0..n as u64 {
+                    single.push(rec(i));
+                }
+                for p in &parts {
+                    merged.merge(p);
+                }
+                if merged.total() != single.total() {
+                    return Err(format!(
+                        "cap {target_cap}: totals {} != {}",
+                        merged.total(),
+                        single.total()
+                    ));
+                }
+                let a: Vec<Record> = merged.iter().copied().collect();
+                let b: Vec<Record> = single.iter().copied().collect();
+                if a != b {
+                    return Err(format!(
+                        "cap {target_cap}: merged order diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- span-tree reconstruction ---------------------------------------------
+
+const INNER_KINDS: [SpanKind; 6] = [
+    SpanKind::Admit,
+    SpanKind::Prefill,
+    SpanKind::Gemm,
+    SpanKind::Readout,
+    SpanKind::StreamStep,
+    SpanKind::PageOut,
+];
+
+/// Populate `parent` with up to three disjoint child spans (or instant
+/// events), each strictly inside the parent interval, recursing into
+/// span children. Sibling intervals are separated by gaps, so the
+/// containment forest has exactly one reconstruction.
+fn gen_children(rng: &mut Rng, parent: &mut SpanNode, depth: usize) {
+    if depth == 0 {
+        return;
+    }
+    let lo = parent.record.t0_ns;
+    let hi = lo + parent.record.dur_ns;
+    let mut cursor = lo;
+    while parent.children.len() < 3 {
+        let gap = 1 + rng.next_u64() % 8;
+        let start = cursor.saturating_add(gap);
+        if start + 2 >= hi {
+            break;
+        }
+        let (kind, dur) = if rng.below(4) == 0 {
+            (SpanKind::GuardClamp, 0)
+        } else {
+            let kind = INNER_KINDS[rng.below_usize(INNER_KINDS.len())];
+            (kind, 1 + rng.next_u64() % (hi - start))
+        };
+        let mut child = SpanNode {
+            record: Record {
+                trace: parent.record.trace,
+                kind,
+                t0_ns: start,
+                dur_ns: dur,
+            },
+            children: Vec::new(),
+        };
+        if dur > 0 {
+            gen_children(rng, &mut child, depth - 1);
+        }
+        cursor = start + dur + 1;
+        parent.children.push(child);
+    }
+}
+
+fn flatten(node: &SpanNode, out: &mut Vec<Record>) {
+    out.push(node.record);
+    for c in &node.children {
+        flatten(c, out);
+    }
+}
+
+/// A forest of 1..=3 interleaved request traces: the expected tree per
+/// trace id, plus every record of every trace in one shuffled pile.
+struct Forest;
+
+impl Gen for Forest {
+    type Value = (Vec<Record>, Vec<SpanNode>);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let traces = 1 + rng.below_usize(3);
+        let mut records = Vec::new();
+        let mut roots = Vec::new();
+        for id in 1..=traces as u64 {
+            let kinds = [
+                SpanKind::RequestStream,
+                SpanKind::RequestBatch,
+                SpanKind::RequestDecode,
+            ];
+            let mut root = SpanNode {
+                record: Record {
+                    trace: id,
+                    kind: kinds[rng.below_usize(3)],
+                    t0_ns: rng.next_u64() % 1_000,
+                    dur_ns: 64 + rng.next_u64() % 1_000,
+                },
+                children: Vec::new(),
+            };
+            gen_children(rng, &mut root, 3);
+            flatten(&root, &mut records);
+            roots.push(root);
+        }
+        // Fisher-Yates: the builder must not depend on push order.
+        for i in (1..records.len()).rev() {
+            records.swap(i, rng.below_usize(i + 1));
+        }
+        (records, roots)
+    }
+}
+
+#[test]
+fn shuffled_span_records_rebuild_one_tree_per_trace() {
+    forall("span_tree_rebuild", 300, 0x17ee, &Forest, |(records, roots)| {
+        let total: usize = roots.iter().map(SpanNode::size).sum();
+        if total != records.len() {
+            return Err("record pile does not partition".into());
+        }
+        for want in roots {
+            let id = want.record.trace;
+            let mine: Vec<Record> = records
+                .iter()
+                .filter(|r| r.trace == id)
+                .copied()
+                .collect();
+            let got = span_tree(&mine);
+            if got.len() != 1 {
+                return Err(format!(
+                    "trace {id}: {} roots, want one",
+                    got.len()
+                ));
+            }
+            if !got[0].record.kind.is_request() {
+                return Err(format!(
+                    "trace {id} rooted at {:?}",
+                    got[0].record.kind
+                ));
+            }
+            if &got[0] != want {
+                return Err(format!(
+                    "trace {id} tree mismatch:\n got  {:?}\n want {want:?}",
+                    got[0]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- disabled / steady-state allocation gates -------------------------------
+
+/// One pass over every instrumented entry point, as serving code calls
+/// them when tracing is off.
+fn disabled_round(t0: Instant, relay: &mut TraceRing) {
+    assert_eq!(trace::maybe_mint(), 0, "disabled mint must stay 0");
+    trace::set_current(7); // even a stray attribution records nothing
+    trace::span_at(SpanKind::Prefill, t0, 10);
+    trace::event(SpanKind::GuardClamp);
+    let span = trace::SpanTimer::start();
+    span.stop(SpanKind::Admit);
+    trace::drain_scratch_into(relay);
+    trace::absorb_ring(relay);
+    trace::finish_request(SpanKind::RequestStream, t0, false, false);
+    trace::set_current(0);
+}
+
+#[test]
+fn disabled_tracing_is_inert_and_allocation_free() {
+    let _g = trace::test_guard();
+    trace::reset();
+    assert!(!trace::enabled(), "tracing is opt-in");
+    let t0 = Instant::now();
+    let mut relay = TraceRing::with_capacity(8);
+    // Warm TLS, the collector mutex, and the clock once.
+    disabled_round(t0, &mut relay);
+    let before = thread_allocs();
+    for _ in 0..1_000 {
+        disabled_round(t0, &mut relay);
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "disabled tracing touched the allocator"
+    );
+    assert_eq!(trace::scratch_len(), 0, "disabled tracing recorded");
+    assert_eq!(trace::retained_len(), 0, "disabled tracing retained");
+    assert!(trace::exemplars().is_empty());
+    trace::reset();
+}
+
+#[test]
+fn warm_enabled_recording_is_allocation_free() {
+    let _g = trace::test_guard();
+    trace::reset();
+    trace::set_enabled(true);
+    trace::set_current(1);
+    let t0 = Instant::now();
+    // Warm: saturate the scratch ring so every later push overwrites
+    // in place instead of growing the backing buffer.
+    for _ in 0..TraceRing::DEFAULT_CAP + 8 {
+        trace::span_at(SpanKind::StreamStep, t0, 5);
+    }
+    let before = thread_allocs();
+    for _ in 0..10_000 {
+        trace::span_at(SpanKind::Gemm, t0, 5);
+        trace::event(SpanKind::GuardClamp);
+        let span = trace::SpanTimer::start();
+        span.stop(SpanKind::Admit);
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "warm scratch recording touched the allocator"
+    );
+    assert_eq!(trace::scratch_len(), TraceRing::DEFAULT_CAP);
+    trace::reset();
+}

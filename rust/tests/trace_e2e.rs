@@ -1,0 +1,219 @@
+//! End-to-end request tracing: drive the streaming server with tracing
+//! armed through mixed stream / batch / decode traffic plus an injected
+//! load-shed, then validate the whole observability chain the way the
+//! CI trace step does — every retained trace is a single rooted span
+//! tree, the degraded request is tail-sampled, histogram exemplars
+//! resolve against the retained set, and the Chrome export parses with
+//! the right event phases.
+//!
+//! This lives in its own integration binary on purpose: the trace
+//! collector is process-global, and unit tests elsewhere spin up
+//! servers whose requests would mint and promote traces into the same
+//! retained buffer, breaking the exact counts below.
+
+use kafft::coordinator::server::{StreamingServer, StreamingServerConfig};
+use kafft::trace::{self, SpanKind};
+use kafft::util::json::Json;
+
+fn cfg(seed: u64) -> StreamingServerConfig {
+    StreamingServerConfig {
+        vocab: 32,
+        d_model: 8,
+        features: 8,
+        max_len: 24,
+        window: 24,
+        max_live: 2,
+        seed,
+        workers: 1,
+        ..StreamingServerConfig::default()
+    }
+}
+
+#[test]
+fn traced_server_yields_rooted_trees_exemplars_and_chrome_export() {
+    let _t = trace::test_guard();
+    let _f = kafft::faults::test_guard();
+    trace::reset();
+    trace::set_enabled(true);
+    trace::configure(0, 16);
+
+    let server = StreamingServer::start(cfg(11)).expect("server start");
+
+    // Session 1: prefill + two decode steps (three stream requests).
+    let resp = server
+        .submit(1, vec![1, 2, 3, 4])
+        .expect("submit")
+        .recv()
+        .expect("recv")
+        .expect("prefill");
+    let mut pos = resp.positions;
+    for t in 0..2 {
+        let resp = server
+            .submit_at(1, vec![5 + t], pos)
+            .expect("submit")
+            .recv()
+            .expect("recv")
+            .expect("step");
+        pos = resp.positions;
+    }
+    // One stateless prompt batch through the engine path.
+    server
+        .submit_prompt_batch(vec![vec![1, 2, 3], vec![4, 5, 6]])
+        .expect("submit batch")
+        .recv()
+        .expect("recv")
+        .expect("batch");
+    // One batched decode through the continuous batcher.
+    server
+        .submit_decode(9, vec![1, 2, 3], 3)
+        .expect("submit decode")
+        .recv()
+        .expect("recv")
+        .expect("decode");
+    // One degraded request: the queue-full failpoint sheds at submit.
+    kafft::faults::arm("seed=1,server.queue.full=1").unwrap();
+    let shed = server.submit(1, vec![7]).expect("submit").recv().expect("recv");
+    assert!(shed.is_err(), "failpoint should shed");
+    kafft::faults::disarm();
+
+    let stats = server.shutdown();
+
+    // ---- tail sampling: everything fits under --trace-keep 16 ----
+    let retained = trace::retained();
+    assert_eq!(
+        retained.len(),
+        6,
+        "3 stream + 1 batch + 1 decode + 1 shed all retained"
+    );
+    let degraded: Vec<_> =
+        retained.iter().filter(|t| t.meta.degraded).collect();
+    assert_eq!(degraded.len(), 1, "exactly the shed request degraded");
+    assert!(degraded[0].meta.pinned, "degraded traces are pinned");
+    assert!(
+        degraded[0]
+            .records
+            .iter()
+            .any(|r| r.kind == SpanKind::Shed),
+        "shed annotation recorded"
+    );
+
+    // ---- every retained trace is one rooted, well-formed span tree ----
+    for t in &retained {
+        assert!(
+            t.records.iter().all(|r| r.trace == t.meta.id),
+            "trace {} holds foreign records",
+            t.meta.id
+        );
+        let roots = trace::span_tree(&t.records);
+        assert_eq!(
+            roots.len(),
+            1,
+            "trace {} is a single rooted tree",
+            t.meta.id
+        );
+        let root = &roots[0];
+        assert!(
+            root.record.kind.is_request(),
+            "trace {} rooted at {:?}",
+            t.meta.id,
+            root.record.kind
+        );
+        assert_eq!(root.record.dur_ns, t.meta.dur_ns);
+        assert_eq!(root.size(), t.records.len());
+        // Served requests waited in the queue; the shed one never did.
+        if !t.meta.degraded {
+            assert!(
+                root.find(SpanKind::QueueWait).is_some(),
+                "trace {} lacks a queue_wait span",
+                t.meta.id
+            );
+        }
+        // Prefill encloses the attend pipeline, and its stage children
+        // sum to no more than the envelope (they are sequential).
+        if let Some(prefill) = root.find(SpanKind::Prefill) {
+            assert!(
+                prefill.find(SpanKind::Readout).is_some(),
+                "trace {} prefill has no pipeline stages",
+                t.meta.id
+            );
+            let child_sum: u64 =
+                prefill.children.iter().map(|c| c.record.dur_ns).sum();
+            assert!(
+                child_sum <= prefill.record.dur_ns,
+                "trace {}: stage spans ({child_sum} ns) exceed their \
+                 prefill envelope ({} ns)",
+                t.meta.id,
+                prefill.record.dur_ns
+            );
+        }
+    }
+    // The decode request went through lane admission and the streaming
+    // recurrence.
+    let decode = retained
+        .iter()
+        .find(|t| t.meta.kind == SpanKind::RequestDecode)
+        .expect("decode trace retained");
+    for kind in [SpanKind::Admit, SpanKind::StreamStep] {
+        assert!(
+            decode.records.iter().any(|r| r.kind == kind),
+            "decode trace lacks {kind:?}"
+        );
+    }
+
+    // ---- exemplars resolve against the retained set ----
+    let ids = trace::retained_ids();
+    let exemplars = trace::exemplars();
+    assert!(!exemplars.is_empty(), "retained traces yield exemplars");
+    for e in &exemplars {
+        assert!(
+            ids.contains(&e.trace_id),
+            "exemplar {e:?} does not resolve"
+        );
+    }
+    // The shutdown snapshot carried the same exemplars.
+    assert_eq!(stats.telemetry.exemplars, exemplars);
+
+    // ---- Chrome export parses and maps phases ----
+    let parsed =
+        Json::parse(&trace::chrome_trace_json()).expect("chrome JSON parses");
+    let other = parsed.get("otherData").expect("otherData");
+    assert_eq!(other.req_str("schema").unwrap(), "kafft.trace");
+    let events = parsed
+        .get("traceEvents")
+        .expect("traceEvents")
+        .as_arr()
+        .expect("array");
+    let phase = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| e.req_str("ph").unwrap() == ph)
+            .count()
+    };
+    assert_eq!(phase("M"), retained.len(), "one track label per trace");
+    assert!(phase("X") >= retained.len(), "complete spans present");
+    assert!(phase("i") >= 1, "the shed instant is exported");
+
+    trace::reset();
+}
+
+/// With tracing disabled (the default), the serving path neither mints
+/// ids nor retains anything — the PR 8 behaviour.
+#[test]
+fn disabled_tracing_retains_nothing() {
+    let _t = trace::test_guard();
+    trace::reset();
+
+    let server = StreamingServer::start(cfg(12)).expect("server start");
+    server
+        .submit(1, vec![1, 2, 3])
+        .expect("submit")
+        .recv()
+        .expect("recv")
+        .expect("prefill");
+    let stats = server.shutdown();
+
+    assert_eq!(trace::retained_len(), 0);
+    assert!(trace::exemplars().is_empty());
+    assert!(stats.telemetry.exemplars.is_empty());
+    assert_eq!(trace::scratch_len(), 0, "nothing recorded on this thread");
+}
