@@ -8,15 +8,25 @@
 //! request) on a batched workload. The PJRT sweep itself is skipped
 //! with a note when no compiled artifacts are present, so this bench
 //! stays runnable on artifact-less checkouts.
+//!
+//! A dispatcher sweep then measures the fig1a crossover curve on this
+//! machine — per-n direct/FFT/stream timings through
+//! `engine::dispatch::calibrate_with` — and emits the measured
+//! crossover points into `BENCH_fig1a_crossover.json` (override via
+//! KAFFT_FIG1A_JSON). This is the empirical counterpart of the paper's
+//! "FFT wins past a length threshold" claim: the file records where
+//! that threshold actually sits for the active SIMD ISA.
 
 use std::time::Instant;
 
 use kafft::attention::{attend, draw_gaussian_features, Kind};
 use kafft::coordinator::experiments::{self as exp, ExpOpts};
-use kafft::engine::{attend_batch_with, resolve_workers, AttendItem, PlanCache};
+use kafft::engine::{
+    attend_batch_with, dispatch, resolve_workers, AttendItem, PlanCache,
+};
 use kafft::rng::Rng;
 use kafft::runtime::Runtime;
-use kafft::tensor::Mat;
+use kafft::tensor::{simd, Mat};
 
 fn opts() -> ExpOpts {
     let mut o = ExpOpts::default();
@@ -94,8 +104,69 @@ fn cpu_engine_gate() {
     );
 }
 
+/// Sweep n across the three serving paths via the dispatcher's own
+/// calibration and emit the measured crossover points.
+fn dispatcher_sweep() {
+    let grid: &[usize] = &[32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024];
+    let reps = std::env::var("KAFFT_DISPATCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let table = dispatch::calibrate_with(grid, reps);
+    println!(
+        "dispatcher sweep (isa={}): {:>5} {:>11} {:>11} {:>11}  pick",
+        simd::active().name(),
+        "n", "direct_us", "fft_us", "stream_us"
+    );
+    let mut rows = String::new();
+    for c in &table.cells {
+        let pick = table.decide_attend(c.n);
+        println!(
+            "{:>29} {:>5} {:>11.1} {:>11.1} {:>11.1}  {}",
+            "", c.n, c.direct_ns / 1e3, c.fft_ns / 1e3, c.stream_ns / 1e3,
+            pick.name()
+        );
+        rows.push_str(&format!(
+            "    {{\"n\": {}, \"direct_ns\": {:.0}, \"fft_ns\": {:.0}, \
+             \"stream_ns\": {:.0}, \"pick\": \"{}\"}},\n",
+            c.n, c.direct_ns, c.fft_ns, c.stream_ns, pick.name()
+        ));
+    }
+    rows.pop();
+    rows.pop(); // trailing ",\n"
+    // Crossover points: first calibrated n where each O(n log n)-ish
+    // path overtakes the quadratic one.
+    let fft_x = table.cells.iter().find(|c| c.fft_ns < c.direct_ns).map(|c| c.n);
+    let stream_x =
+        table.cells.iter().find(|c| c.stream_ns < c.direct_ns).map(|c| c.n);
+    let fmt = |x: Option<usize>| {
+        x.map(|v| v.to_string()).unwrap_or_else(|| "null".to_string())
+    };
+    println!(
+        "measured crossovers: direct->fft at n <= {}, direct->stream at \
+         n <= {}\n",
+        fmt(fft_x).replace("null", "beyond grid"),
+        fmt(stream_x).replace("null", "beyond grid")
+    );
+    let json_path = std::env::var("KAFFT_FIG1A_JSON")
+        .unwrap_or_else(|_| "BENCH_fig1a_crossover.json".to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"fig1a_crossover\",\n  \"isa\": \"{}\",\n  \
+         \"reps\": {reps},\n  \"crossover_fft_n\": {},\n  \
+         \"crossover_stream_n\": {},\n  \"cells\": [\n{rows}\n  ]\n}}\n",
+        simd::active().name(),
+        fmt(fft_x),
+        fmt(stream_x),
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("wrote {json_path}\n"),
+        Err(e) => println!("WARN: could not write {json_path}: {e}\n"),
+    }
+}
+
 fn main() {
     cpu_engine_gate();
+    dispatcher_sweep();
     match Runtime::new(kafft::artifacts_dir()) {
         Ok(rt) => exp::fig1a::run(&rt, &opts()).expect("fig1a"),
         Err(e) => println!(

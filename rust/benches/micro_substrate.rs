@@ -4,28 +4,53 @@
 //! JSON parser. These are the L3-side perf counters for EXPERIMENTS.md
 //! §Perf.
 
-use kafft::attention::{self, draw_gaussian_features, phi_prf};
+use kafft::attention::{self, draw_gaussian_features, phi_prf, phi_prf_into};
 use kafft::fft::{fft, Complex, FftPlan, RfftPlan, Scratch};
 use kafft::rng::Rng;
-use kafft::tensor::{matmul_t_into, matmul_t_naive, Mat};
+use kafft::tensor::{
+    matmul_t_into, matmul_t_naive, matmul_t_slices_blocked, simd, Mat,
+};
 use kafft::toeplitz::{toeplitz_mul_naive, ToeplitzPlan};
 use kafft::util::bench::{bench_for, print_result};
 
 fn main() {
     let mut rng = Rng::new(1);
 
-    println!("-- dense matmul_t (k=64): blocked vs naive --");
+    println!(
+        "-- dense matmul_t (k=64): simd ({}) vs blocked vs naive --",
+        simd::active().name()
+    );
     for n in [128usize, 512, 1024] {
         let a = Mat::from_vec(n, 64, rng.normal_vec(n * 64, 0.125));
         let b = Mat::from_vec(128, 64, rng.normal_vec(128 * 64, 0.125));
         let mut c = Mat::default();
-        let r = bench_for(&format!("matmul_t blocked n={n}"), 2, 0.3, 10, || {
+        // `matmul_t_into` runs the runtime-dispatched SIMD microkernel
+        // (tensor/simd); the `_blocked` row is its portable fallback.
+        let r = bench_for(&format!("matmul_t simd n={n}"), 2, 0.3, 10, || {
             matmul_t_into(&a, &b, &mut c);
+            std::hint::black_box(&c);
+        });
+        print_result(&r);
+        c.resize_uninit(n, 128);
+        let r = bench_for(&format!("matmul_t blocked n={n}"), 2, 0.3, 10, || {
+            matmul_t_slices_blocked(&a.data, n, 64, &b.data, 128, &mut c.data);
             std::hint::black_box(&c);
         });
         print_result(&r);
         let r = bench_for(&format!("matmul_t naive n={n}"), 2, 0.3, 10, || {
             std::hint::black_box(matmul_t_naive(&a, &b));
+        });
+        print_result(&r);
+    }
+
+    println!("-- phi_prf feature map (m=64): dispatched exp --");
+    for n in [256usize, 1024] {
+        let x = Mat::from_vec(n, 64, rng.normal_vec(n * 64, 0.125));
+        let w = Mat::from_vec(64, 64, rng.normal_vec(64 * 64, 1.0));
+        let mut phi = Mat::default();
+        let r = bench_for(&format!("phi_prf n={n}"), 2, 0.3, 10, || {
+            phi_prf_into(&x, &w, &mut phi);
+            std::hint::black_box(&phi);
         });
         print_result(&r);
     }

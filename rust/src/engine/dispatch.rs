@@ -1,0 +1,709 @@
+//! Length-adaptive attention path selection.
+//!
+//! The paper's Fig. 1a speed claim is a *crossover curve*: the direct
+//! quadratic kernel path wins at short n, the O(n log n) FFT path wins
+//! past a length threshold, and the streaming recurrence wins when the
+//! output is consumed token-by-token anyway. Which side of each
+//! crossover a given (n, machine) lands on is empirical — it moves
+//! with the ISA the SIMD layer dispatched (`tensor::simd`), the cache
+//! hierarchy, and the head shape — so this module measures it instead
+//! of hard-coding it:
+//!
+//!   * [`CrossoverTable`] — per-n measured wall-clock (ns) for the
+//!     direct, FFT, and streaming-prefill paths, auto-calibrated at
+//!     first use on the serving machine and persisted with the same
+//!     versioned-envelope idiom as `streaming/disk.rs` (magic
+//!     `KAFFDISP`, six little-endian u64 header words, FNV-1a 64
+//!     checksum, temp-file + atomic rename);
+//!   * [`PathMode`] — how call sites consult the table. The default is
+//!     `Follow`: serve exactly what the request's attention kind asks
+//!     for, which preserves every bitwise contract the engine had
+//!     before this module existed. `Auto` picks the measured-fastest
+//!     path per length; `Force` pins one path for A/B runs and the
+//!     conformance tests. Resolved once per process from `KAFFT_PATH`
+//!     (`follow` | `auto` | `direct` | `fft` | `stream`), overridable
+//!     by the CLI via [`set_mode`];
+//!   * served-path counters ([`note_served`] / [`served`]), exported
+//!     through `MetricsSnapshot` as additive `kafft.metrics` v1 keys
+//!     alongside the active ISA.
+//!
+//! Override matrix (mode x call site):
+//!
+//! | mode        | one-shot attend (rpe kernel) | streaming prefill |
+//! |-------------|------------------------------|-------------------|
+//! | follow      | the kind's `fft` flag        | FFT               |
+//! | auto        | argmin(direct, fft) at n     | argmin of all 3   |
+//! | force direct| direct                       | direct            |
+//! | force fft   | FFT                          | FFT               |
+//! | force stream| the kind's `fft` flag (*)    | recurrent         |
+//!
+//! (*) a one-shot attend has no session to stream into, so forcing
+//! `stream` only affects prefill; attends follow their kind.
+//!
+//! Calibration policy: the default grid sweeps n in {32 .. 1024} at a
+//! representative head shape (d = 16, m = 16) with the streaming path
+//! measured at window 64 — the crossover *shape* is what matters, and
+//! it is stable across nearby head dims. `KAFFT_DISPATCH_CACHE=path`
+//! persists/reloads the table; `KAFFT_DISPATCH_REPS` overrides the
+//! per-cell repetitions. Decisions interpolate linearly between
+//! calibrated lengths and clamp to the edge cells outside the grid, so
+//! at every calibrated cell the decision is exactly the measured
+//! argmin.
+
+use std::path::Path as FsPath;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::{
+    kernel_attention_into, kernel_features, nprf_rpe_fft_path_into,
+    rpe_correlations, Kind,
+};
+use crate::rng::Rng;
+use crate::streaming::DecoderState;
+use crate::tensor::{Arena, Mat};
+
+use super::PlanCache;
+
+/// One attention serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// Quadratic kernel attention (`kernel_attention_into`).
+    Direct,
+    /// Toeplitz FFT fast path (`nprf_rpe_fft_path_*`).
+    Fft,
+    /// Recurrent (S, z) prefill (`DecoderState` push + query per row).
+    Stream,
+}
+
+impl Path {
+    pub fn name(self) -> &'static str {
+        match self {
+            Path::Direct => "direct",
+            Path::Fft => "fft",
+            Path::Stream => "stream",
+        }
+    }
+}
+
+/// How dispatch consults the crossover table. `Follow` (the default)
+/// changes nothing about what the engine served before this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathMode {
+    Follow,
+    Auto,
+    Force(Path),
+}
+
+impl PathMode {
+    /// Parse a `KAFFT_PATH` / `--path` value; `None` for unknown
+    /// strings (callers keep the default rather than aborting).
+    pub fn parse(s: &str) -> Option<PathMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "follow" => Some(PathMode::Follow),
+            "auto" => Some(PathMode::Auto),
+            "direct" => Some(PathMode::Force(Path::Direct)),
+            "fft" => Some(PathMode::Force(Path::Fft)),
+            "stream" => Some(PathMode::Force(Path::Stream)),
+            _ => None,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            PathMode::Follow => 1,
+            PathMode::Auto => 2,
+            PathMode::Force(Path::Direct) => 3,
+            PathMode::Force(Path::Fft) => 4,
+            PathMode::Force(Path::Stream) => 5,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<PathMode> {
+        match c {
+            1 => Some(PathMode::Follow),
+            2 => Some(PathMode::Auto),
+            3 => Some(PathMode::Force(Path::Direct)),
+            4 => Some(PathMode::Force(Path::Fft)),
+            5 => Some(PathMode::Force(Path::Stream)),
+            _ => None,
+        }
+    }
+}
+
+/// 0 = unresolved; otherwise a `PathMode::code`.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide path mode: `KAFFT_PATH` on first call, `Follow`
+/// when unset or unparseable.
+pub fn mode() -> PathMode {
+    match PathMode::from_code(MODE.load(Ordering::Relaxed)) {
+        Some(m) => m,
+        None => {
+            let m = std::env::var("KAFFT_PATH")
+                .ok()
+                .and_then(|s| PathMode::parse(&s))
+                .unwrap_or(PathMode::Follow);
+            MODE.store(m.code(), Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// Force the path mode. Process-global — CLI startup and the dedicated
+/// dispatch integration tests only (same discipline as `simd::force`).
+pub fn set_mode(m: PathMode) {
+    MODE.store(m.code(), Ordering::Relaxed);
+}
+
+// Served-path counters: relaxed process-global atomics, read by
+// `Telemetry::snapshot` into `MetricsSnapshot`. Tests compare deltas,
+// never absolutes — other tests in the same process also serve.
+static SERVED_DIRECT: AtomicU64 = AtomicU64::new(0);
+static SERVED_FFT: AtomicU64 = AtomicU64::new(0);
+static SERVED_STREAM: AtomicU64 = AtomicU64::new(0);
+
+pub fn note_served(p: Path) {
+    let c = match p {
+        Path::Direct => &SERVED_DIRECT,
+        Path::Fft => &SERVED_FFT,
+        Path::Stream => &SERVED_STREAM,
+    };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// (direct, fft, stream) totals served since process start.
+pub fn served() -> (u64, u64, u64) {
+    (
+        SERVED_DIRECT.load(Ordering::Relaxed),
+        SERVED_FFT.load(Ordering::Relaxed),
+        SERVED_STREAM.load(Ordering::Relaxed),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Crossover table
+// ---------------------------------------------------------------------------
+
+/// Measured wall-clock for one calibrated sequence length.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    pub n: usize,
+    pub direct_ns: f64,
+    pub fft_ns: f64,
+    pub stream_ns: f64,
+}
+
+/// Per-length path timings, sorted ascending by n.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CrossoverTable {
+    pub cells: Vec<Cell>,
+}
+
+/// "KAFFDISP" — same envelope family as `streaming/disk.rs`'s
+/// KAFFDISK, distinct magic so a dispatch table can never be confused
+/// for a session snapshot.
+const MAGIC: u64 = 0x4B41_4646_4449_5350;
+const VERSION: u64 = 1;
+const HEADER_WORDS: usize = 6;
+const MAX_CELLS: usize = 4096;
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01B3);
+    }
+    h
+}
+
+impl CrossoverTable {
+    /// Estimated (direct, fft, stream) ns at length n: linear
+    /// interpolation between the bracketing calibrated cells, clamped
+    /// to the edge cells outside the grid.
+    fn estimate(&self, n: usize) -> Option<(f64, f64, f64)> {
+        let cells = &self.cells;
+        let first = cells.first()?;
+        let last = cells.last()?;
+        if n <= first.n {
+            return Some((first.direct_ns, first.fft_ns, first.stream_ns));
+        }
+        if n >= last.n {
+            return Some((last.direct_ns, last.fft_ns, last.stream_ns));
+        }
+        let hi = cells.partition_point(|c| c.n < n);
+        let (a, b) = (&cells[hi - 1], &cells[hi]);
+        if a.n == n {
+            return Some((a.direct_ns, a.fft_ns, a.stream_ns));
+        }
+        let t = (n - a.n) as f64 / (b.n - a.n) as f64;
+        let lerp = |x: f64, y: f64| x + t * (y - x);
+        Some((
+            lerp(a.direct_ns, b.direct_ns),
+            lerp(a.fft_ns, b.fft_ns),
+            lerp(a.stream_ns, b.stream_ns),
+        ))
+    }
+
+    /// Fastest one-shot attend path at length n (stream is not a
+    /// one-shot option). Empty table: the FFT path's O(n log n) bound
+    /// is the safe default past small n.
+    pub fn decide_attend(&self, n: usize) -> Path {
+        match self.estimate(n) {
+            Some((direct, fft, _)) => {
+                if direct <= fft {
+                    Path::Direct
+                } else {
+                    Path::Fft
+                }
+            }
+            None => {
+                if n <= 128 {
+                    Path::Direct
+                } else {
+                    Path::Fft
+                }
+            }
+        }
+    }
+
+    /// Fastest prefill path at length n (all three compete: the
+    /// recurrent prefill loads the same state the FFT prefill does).
+    pub fn decide_prefill(&self, n: usize) -> Path {
+        match self.estimate(n) {
+            Some((direct, fft, stream)) => {
+                if direct <= fft && direct <= stream {
+                    Path::Direct
+                } else if fft <= stream {
+                    Path::Fft
+                } else {
+                    Path::Stream
+                }
+            }
+            None => {
+                if n <= 128 {
+                    Path::Direct
+                } else {
+                    Path::Fft
+                }
+            }
+        }
+    }
+
+    /// Serialize: six u64 header words (magic, version, id, stamp,
+    /// payload length, FNV-1a 64 of the payload), then the payload —
+    /// cell count + (n, direct_ns, fft_ns, stream_ns) per cell, all
+    /// little-endian.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(8 + 32 * self.cells.len());
+        payload.extend((self.cells.len() as u64).to_le_bytes());
+        for c in &self.cells {
+            payload.extend((c.n as u64).to_le_bytes());
+            payload.extend(c.direct_ns.to_le_bytes());
+            payload.extend(c.fft_ns.to_le_bytes());
+            payload.extend(c.stream_ns.to_le_bytes());
+        }
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut out = Vec::with_capacity(HEADER_WORDS * 8 + payload.len());
+        for w in [
+            MAGIC,
+            VERSION,
+            0u64, // id: single-table envelope
+            stamp,
+            payload.len() as u64,
+            fnv1a64(&payload),
+        ] {
+            out.extend(w.to_le_bytes());
+        }
+        out.extend(payload);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<CrossoverTable> {
+        if bytes.len() < HEADER_WORDS * 8 {
+            bail!("dispatch table: truncated header ({} bytes)", bytes.len());
+        }
+        let word = |i: usize| {
+            u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap())
+        };
+        if word(0) != MAGIC {
+            bail!("dispatch table: bad magic {:#x}", word(0));
+        }
+        if word(1) != VERSION {
+            bail!("dispatch table: unsupported version {}", word(1));
+        }
+        let len = word(4) as usize;
+        let payload = &bytes[HEADER_WORDS * 8..];
+        if payload.len() != len {
+            bail!(
+                "dispatch table: payload length {} != header {}",
+                payload.len(),
+                len
+            );
+        }
+        if fnv1a64(payload) != word(5) {
+            bail!("dispatch table: checksum mismatch");
+        }
+        if payload.len() < 8 {
+            bail!("dispatch table: missing cell count");
+        }
+        let count =
+            u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize;
+        if count > MAX_CELLS {
+            bail!("dispatch table: implausible cell count {count}");
+        }
+        if payload.len() != 8 + 32 * count {
+            bail!("dispatch table: {} cells want {} payload bytes, got {}",
+                  count, 8 + 32 * count, payload.len());
+        }
+        let mut cells = Vec::with_capacity(count);
+        let mut prev_n = 0usize;
+        for i in 0..count {
+            let base = 8 + 32 * i;
+            let f = |off: usize| {
+                f64::from_le_bytes(
+                    payload[base + off..base + off + 8].try_into().unwrap(),
+                )
+            };
+            let n = u64::from_le_bytes(
+                payload[base..base + 8].try_into().unwrap(),
+            ) as usize;
+            let cell = Cell {
+                n,
+                direct_ns: f(8),
+                fft_ns: f(16),
+                stream_ns: f(24),
+            };
+            if cell.n == 0 || cell.n <= prev_n {
+                bail!("dispatch table: cell lengths must ascend from 1");
+            }
+            for t in [cell.direct_ns, cell.fft_ns, cell.stream_ns] {
+                if !t.is_finite() || t <= 0.0 {
+                    bail!("dispatch table: non-positive timing at n={n}");
+                }
+            }
+            prev_n = cell.n;
+            cells.push(cell);
+        }
+        Ok(CrossoverTable { cells })
+    }
+
+    /// Persist via temp-file + atomic rename (the `streaming/disk.rs`
+    /// durability idiom: a reader never observes a torn table).
+    pub fn save(&self, path: &FsPath) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &FsPath) -> Result<CrossoverTable> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        CrossoverTable::from_bytes(&bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calibration
+// ---------------------------------------------------------------------------
+
+/// Default calibration grid. The crossover lives well inside this
+/// range on every machine measured; outside it the edge clamp is the
+/// right answer anyway (short n -> direct, long n -> FFT's asymptotics
+/// only improve).
+pub const DEFAULT_GRID: &[usize] = &[32, 64, 128, 256, 512, 1024];
+
+/// Representative head shape for calibration. The crossover *shape*
+/// (which path wins at which n) is what the table stores; it is stable
+/// across nearby head dims, so one shape suffices.
+const CAL_D: usize = 16;
+const CAL_M: usize = 16;
+/// The streaming path is measured at this window (or n if smaller) —
+/// the same order as the serving default, where the ring dot products
+/// dominate its cost.
+const CAL_WINDOW: usize = 64;
+
+fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let scale = 1.0 / (c.max(1) as f32).sqrt();
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal_f32() * scale).collect())
+}
+
+/// Minimum wall-clock over `reps` runs of `f`, in nanoseconds.
+fn time_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_nanos() as f64);
+    }
+    best.max(1.0)
+}
+
+/// Measure all three paths at each grid length. Deterministic inputs
+/// (fixed seeds), real serving kernels: the direct path times
+/// `kernel_attention_into`, the FFT path times `nprf_rpe_fft_path_into`
+/// against a prebuilt plan (lookup excluded — plans amortize across a
+/// serving batch), the streaming path times a full push+query prefill
+/// over a fresh `DecoderState`.
+pub fn calibrate_with(grid: &[usize], reps: usize) -> CrossoverTable {
+    let kind = Kind::Kernel { norm: true, rpe: true, fft: true };
+    let cache = PlanCache::new(PlanCache::DEFAULT_BUDGET_BYTES);
+    let mut cells = Vec::with_capacity(grid.len());
+    let mut sorted: Vec<usize> = grid.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    for (gi, &n) in sorted.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let seed = 0x9E37 + 13 * gi as u64;
+        let q = rand_mat(n, CAL_D, seed);
+        let k = rand_mat(n, CAL_D, seed + 1);
+        let v = rand_mat(n, CAL_D, seed + 2);
+        let w = rand_mat(CAL_M, CAL_D, seed + 3);
+        let bias: Vec<f32> =
+            (0..2 * n - 1).map(|i| (i as f32 * 0.01).sin() * 0.5).collect();
+        let c = rpe_correlations(&bias);
+        let phi_q = kernel_features(kind, &q, &w);
+        let phi_k = kernel_features(kind, &k, &w);
+
+        let mut arena = Arena::new();
+        let mut out = Mat::default();
+        let direct_ns = time_ns(reps, || {
+            kernel_attention_into(
+                &phi_q, &phi_k, &v, Some(&c), true, &mut out, &mut arena,
+            );
+        });
+
+        let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+        let plan = cache.get(&c64, n, true);
+        let mut scratch = crate::fft::Scratch::new();
+        let fft_ns = time_ns(reps, || {
+            nprf_rpe_fft_path_into(
+                &phi_q, &phi_k, &v, &plan, &mut out, &mut arena, &mut scratch,
+            );
+        });
+
+        // Window coefficients in streaming layout: c_{-t} at index
+        // n - 1 - t of the (2n-1) vector (StreamSpec::new).
+        let window = CAL_WINDOW.min(n);
+        let coeffs: Vec<f64> =
+            (0..window).map(|t| c[n - 1 - t] as f64).collect();
+        let c_tail = *coeffs.last().expect("window >= 1");
+        let mut num: Vec<f64> = Vec::new();
+        let mut srow = vec![0.0f32; CAL_D];
+        let stream_ns = time_ns(reps, || {
+            let mut st = DecoderState::new(1, CAL_M, CAL_D, window);
+            for j in 0..n {
+                st.push(0, phi_k.row(j), v.row(j), c_tail);
+                st.query_into(0, phi_q.row(j), &coeffs, &mut num, &mut srow);
+            }
+        });
+
+        cells.push(Cell { n, direct_ns, fft_ns, stream_ns });
+    }
+    CrossoverTable { cells }
+}
+
+fn default_reps() -> usize {
+    std::env::var("KAFFT_DISPATCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&r| r > 0)
+        .unwrap_or(3)
+}
+
+static TABLE: OnceLock<CrossoverTable> = OnceLock::new();
+
+/// The process-wide crossover table. Only `Auto` mode consults it, so
+/// the default `Follow` mode never pays the calibration cost. First
+/// use: load from `KAFFT_DISPATCH_CACHE` if set and valid, else
+/// calibrate on the spot (and persist to the cache path when given —
+/// failures to persist are non-fatal; the in-memory table still
+/// serves).
+pub fn table() -> &'static CrossoverTable {
+    TABLE.get_or_init(|| {
+        let cache_path = std::env::var("KAFFT_DISPATCH_CACHE").ok();
+        if let Some(p) = &cache_path {
+            if let Ok(t) = CrossoverTable::load(FsPath::new(p)) {
+                return t;
+            }
+        }
+        let t = calibrate_with(DEFAULT_GRID, default_reps());
+        if let Some(p) = &cache_path {
+            let _ = t.save(FsPath::new(p));
+        }
+        t
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Call-site resolvers
+// ---------------------------------------------------------------------------
+
+/// Decide whether a one-shot rpe-kernel attend at length n takes the
+/// FFT path. Returns the decision plus the path label to count.
+/// `Force(Stream)` falls back to the kind's flag — a one-shot attend
+/// has no session to stream into (see the override matrix above).
+pub fn resolve_attend_fft(n: usize, kind_fft: bool) -> (bool, Path) {
+    let use_fft = match mode() {
+        PathMode::Follow => kind_fft,
+        PathMode::Auto => table().decide_attend(n) == Path::Fft,
+        PathMode::Force(Path::Fft) => true,
+        PathMode::Force(Path::Direct) => false,
+        PathMode::Force(Path::Stream) => kind_fft,
+    };
+    (use_fft, if use_fft { Path::Fft } else { Path::Direct })
+}
+
+/// Decide how a streaming prefill at length n loads its state.
+/// `Follow` is the FFT prefill — the engine's historical behavior.
+pub fn resolve_prefill(n: usize) -> Path {
+    match mode() {
+        PathMode::Follow => Path::Fft,
+        PathMode::Auto => table().decide_prefill(n),
+        PathMode::Force(p) => p,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_fixture() -> CrossoverTable {
+        CrossoverTable {
+            cells: vec![
+                Cell { n: 32, direct_ns: 10.0, fft_ns: 40.0, stream_ns: 20.0 },
+                Cell { n: 128, direct_ns: 100.0, fft_ns: 90.0, stream_ns: 95.0 },
+                Cell { n: 512, direct_ns: 1000.0, fft_ns: 300.0, stream_ns: 400.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn decide_is_argmin_at_calibrated_cells() {
+        let t = table_fixture();
+        assert_eq!(t.decide_attend(32), Path::Direct);
+        assert_eq!(t.decide_attend(128), Path::Fft);
+        assert_eq!(t.decide_attend(512), Path::Fft);
+        assert_eq!(t.decide_prefill(32), Path::Direct);
+        assert_eq!(t.decide_prefill(128), Path::Fft);
+        assert_eq!(t.decide_prefill(512), Path::Fft);
+        // At every calibrated cell the decision can never exceed the
+        // measured best by any factor — it IS the measured argmin
+        // (the 1.2x acceptance bound holds with margin 1.0).
+        for c in &t.cells {
+            let best = c.direct_ns.min(c.fft_ns).min(c.stream_ns);
+            let est = t.estimate(c.n).unwrap();
+            let chosen = match t.decide_prefill(c.n) {
+                Path::Direct => est.0,
+                Path::Fft => est.1,
+                Path::Stream => est.2,
+            };
+            assert!(chosen <= 1.2 * best);
+        }
+    }
+
+    #[test]
+    fn decide_clamps_and_interpolates() {
+        let t = table_fixture();
+        // Below/above the grid: edge cells.
+        assert_eq!(t.decide_attend(1), Path::Direct);
+        assert_eq!(t.decide_attend(100_000), Path::Fft);
+        // Interpolation midway 32..128: direct = 55, fft = 65 -> direct.
+        assert_eq!(t.decide_attend(80), Path::Direct);
+        // Empty table heuristic.
+        let e = CrossoverTable::default();
+        assert_eq!(e.decide_attend(8), Path::Direct);
+        assert_eq!(e.decide_prefill(4096), Path::Fft);
+    }
+
+    #[test]
+    fn envelope_roundtrips_bitwise_decisions() {
+        let t = table_fixture();
+        let back = CrossoverTable::from_bytes(&t.to_bytes()).expect("roundtrip");
+        assert_eq!(t, back);
+        for n in [1, 32, 77, 128, 300, 512, 9999] {
+            assert_eq!(t.decide_attend(n), back.decide_attend(n));
+            assert_eq!(t.decide_prefill(n), back.decide_prefill(n));
+        }
+    }
+
+    #[test]
+    fn envelope_rejects_corruption() {
+        let t = table_fixture();
+        let good = t.to_bytes();
+        assert!(CrossoverTable::from_bytes(&[]).is_err());
+        assert!(CrossoverTable::from_bytes(&good[..good.len() - 1]).is_err());
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(CrossoverTable::from_bytes(&bad_magic).is_err());
+        let mut bad_payload = good.clone();
+        let last = bad_payload.len() - 1;
+        bad_payload[last] ^= 0xFF;
+        assert!(
+            CrossoverTable::from_bytes(&bad_payload).is_err(),
+            "checksum must catch payload flips"
+        );
+        let mut bad_version = good.clone();
+        bad_version[8] = 9;
+        assert!(CrossoverTable::from_bytes(&bad_version).is_err());
+    }
+
+    #[test]
+    fn mode_parse_covers_every_name() {
+        assert_eq!(PathMode::parse("follow"), Some(PathMode::Follow));
+        assert_eq!(PathMode::parse("AUTO"), Some(PathMode::Auto));
+        assert_eq!(
+            PathMode::parse("direct"),
+            Some(PathMode::Force(Path::Direct))
+        );
+        assert_eq!(PathMode::parse(" fft "), Some(PathMode::Force(Path::Fft)));
+        assert_eq!(
+            PathMode::parse("stream"),
+            Some(PathMode::Force(Path::Stream))
+        );
+        assert_eq!(PathMode::parse("warp"), None);
+        for m in [
+            PathMode::Follow,
+            PathMode::Auto,
+            PathMode::Force(Path::Direct),
+            PathMode::Force(Path::Fft),
+            PathMode::Force(Path::Stream),
+        ] {
+            assert_eq!(PathMode::from_code(m.code()), Some(m));
+        }
+    }
+
+    // Note: no test here calls set_mode() or table() — both are
+    // process-global (same discipline as simd::force); forced-mode
+    // coverage lives in tests/proptest_simd_dispatch.rs.
+
+    #[test]
+    fn calibration_produces_ascending_positive_cells() {
+        // Tiny grid, 1 rep: this is a smoke test of the measurement
+        // plumbing, not a benchmark (wall-clock is asserted in
+        // benches/simd_dispatch.rs).
+        let t = calibrate_with(&[16, 32], 1);
+        assert_eq!(t.cells.len(), 2);
+        assert!(t.cells[0].n < t.cells[1].n);
+        for c in &t.cells {
+            for v in [c.direct_ns, c.fft_ns, c.stream_ns] {
+                assert!(v.is_finite() && v > 0.0);
+            }
+        }
+        // And the envelope round-trips what calibration measured.
+        let back =
+            CrossoverTable::from_bytes(&t.to_bytes()).expect("roundtrip");
+        assert_eq!(t, back);
+    }
+}

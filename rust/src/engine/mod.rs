@@ -31,6 +31,7 @@
 //! See README.md in this directory for when each lever wins.
 
 pub mod cache;
+pub mod dispatch;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
@@ -441,6 +442,9 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
             kernel_features_into(it.kind, it.k, w, &mut ws.phi_k, &mut ws.dense);
             t.stop(&mut ws.tel, Stage::FeatureMap);
             if !rpe {
+                // No RPE means no Toeplitz structure to accelerate:
+                // the quadratic kernel GEMM is the only path.
+                dispatch::note_served(dispatch::Path::Direct);
                 let t = StageTimer::start();
                 kernel_attention_into(
                     &ws.phi_q, &ws.phi_k, it.v, None, it.causal, out,
@@ -463,7 +467,13 @@ fn attend_one_into(it: &AttendItem, cache: &PlanCache, ws: &mut Workspace,
             }
             let mut coeffs = std::mem::take(&mut ws.dense.coeffs);
             rpe_correlations_into(b, &mut coeffs);
-            if fft {
+            // Length-adaptive selection: in the default Follow mode
+            // this is exactly the kind's own `fft` flag (bitwise
+            // no-op vs the pre-dispatch engine); Auto/Force modes
+            // re-route per measured crossover (engine/dispatch.rs).
+            let (use_fft, path) = dispatch::resolve_attend_fft(n, fft);
+            dispatch::note_served(path);
+            if use_fft {
                 let mut c64 = std::mem::take(&mut ws.dense.coeffs64);
                 c64.clear();
                 c64.reserve(coeffs.len());

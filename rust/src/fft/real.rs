@@ -21,7 +21,15 @@
 //!   * half-spectra: `count` rows of `bins() = n/2 + 1` values in split
 //!     re/im slices; bin 0 is DC, bin n/2 is Nyquist (both real up to
 //!     rounding of the untangle twiddles).
+//!
+//! The butterfly, untangle, and retangle inner loops dispatch to
+//! `tensor::simd` microkernels when the active ISA has them. Those
+//! kernels use only vertical mul/add/sub in the scalar evaluation
+//! order, so their output is **bitwise identical** to the scalar loops
+//! kept here as the portable fallback — the 1e-12 conformance nets and
+//! the scratch-reuse determinism proptests hold on every ISA.
 
+use crate::tensor::simd;
 use std::cell::RefCell;
 
 /// Grow-only length fix-up for scratch vectors: zero-fills to `len`
@@ -214,11 +222,25 @@ impl RfftPlan {
             let i = &zi[s * h..(s + 1) * h];
             let ore = &mut out_re[s * bins..(s + 1) * bins];
             let oim = &mut out_im[s * bins..(s + 1) * bins];
-            for k in 0..bins {
-                let kk = k % h;
-                let mm = (h - k) % h;
-                let (zkr, zki) = (r[kk], i[kk]);
-                let (zmr, zmi) = (r[mm], i[mm]);
+            // Bins 0 and h both read Z[0] only; the middle bins
+            // k in 1..h read Z[k] and the mirrored Z[h-k], which is
+            // what the SIMD kernel vectorizes (reversed-lane loads).
+            for k in [0, h] {
+                let (zkr, zki) = (r[0], i[0]);
+                let er = zkr; // 0.5 * (z + z)
+                let or_ = zki;
+                let (wr, wi) = (self.un_re[k], self.un_im[k]);
+                ore[k] = er + or_ * wr;
+                oim[k] = or_ * wi;
+            }
+            if simd::rfft_untangle_mid(r, i, &self.un_re, &self.un_im,
+                                       ore, oim) {
+                continue;
+            }
+            for k in 1..h {
+                let m = h - k;
+                let (zkr, zki) = (r[k], i[k]);
+                let (zmr, zmi) = (r[m], i[m]);
                 let er = 0.5 * (zkr + zmr);
                 let ei = 0.5 * (zki - zmi);
                 let or_ = 0.5 * (zki + zmi);
@@ -264,6 +286,10 @@ impl RfftPlan {
             // w^k*O[k] = (X[k] - conj(X[h-k]))/2, so
             // Z[k] = E[k] + i*O[k], scattered straight into
             // bit-reversed order for the inverse butterflies.
+            if simd::irfft_retangle(xr, xi, &self.un_re, &self.un_im,
+                                    &self.bitrev, r, i) {
+                continue;
+            }
             for k in 0..h {
                 let m = h - k;
                 let er = 0.5 * (xr[k] + xr[m]);
@@ -333,6 +359,11 @@ impl RfftPlan {
                 let i = &mut im[s * h..(s + 1) * h];
                 let mut base = 0;
                 while base < h {
+                    if simd::fft_butterfly_block(r, i, base, hl, twr, twi,
+                                                 sign) {
+                        base += len;
+                        continue;
+                    }
                     for k in 0..hl {
                         let wr = twr[k];
                         let wi = sign * twi[k];

@@ -55,6 +55,28 @@
 //!     in either substrate (`benches/dense_substrate.rs` gates both
 //!     the >= 2x blocked-vs-naive win and the zero-allocation
 //!     property; `tests/proptest_dense.rs` is the conformance net);
+//!   * below both substrates sits `tensor::simd`: explicit AVX2+FMA
+//!     (and AVX-512/NEON where compilable) microkernels for the GEMM
+//!     tile, the fused `phi` feature maps, the rfft butterfly/untangle
+//!     passes, and the streaming `(S, z)` axpy, selected once at
+//!     startup by `is_x86_feature_detected!` (override with
+//!     `KAFFT_ISA` / `--isa`), with the blocked-scalar loops as the
+//!     always-available fallback and the naive loops as the oracle.
+//!     GEMM and `phi` are tolerance-class vs scalar; the FFT and
+//!     streaming kernels vectorize only vertical ops in scalar element
+//!     order and are bitwise-identical to the fallback
+//!     (`tests/proptest_simd_dispatch.rs`);
+//!   * `engine::dispatch` picks the serving path per call length: a
+//!     crossover table (direct-quadratic vs FFT vs streaming prefill)
+//!     auto-calibrated at first use against the real serving kernels,
+//!     persisted in a versioned `KAFFDISP` envelope
+//!     (`KAFFT_DISPATCH_CACHE`), overridable via `KAFFT_PATH` /
+//!     `--path`, with the chosen ISA and per-path served counters
+//!     exported in the `kafft.metrics` snapshot.
+//!     `benches/simd_dispatch.rs` gates the SIMD speedup, the
+//!     zero-allocation property, and the never-worse-than-1.2x
+//!     dispatch bound; `benches/fig1a_forward_speed.rs` emits the
+//!     measured crossover points;
 //!   * `telemetry` is the observability layer over all of the serving
 //!     paths: log2-bucket latency histograms (`telemetry::hist`) with
 //!     per-worker `StageShard`s embedded in `engine::Workspace` (plain

@@ -39,6 +39,37 @@ fn main() {
     } else if args.has_flag("quiet") {
         set_level(Level::Warn);
     }
+    // SIMD ISA / attention-path overrides, resolved before any kernel
+    // runs. The flags beat the KAFFT_ISA / KAFFT_PATH env vars (a
+    // typo'd env var degrades to native/follow; a typo'd explicit flag
+    // is a configuration error and exits).
+    if let Some(s) = args.get("isa") {
+        match kafft::tensor::simd::Isa::parse(&s) {
+            Some(isa) => {
+                let got = kafft::tensor::simd::force(isa);
+                info!("simd isa: {} (requested {s})", got.name());
+            }
+            None => {
+                eprintln!(
+                    "error: unknown --isa {s:?} \
+                     (scalar|avx2|avx512|neon|native)"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(s) = args.get("path") {
+        match kafft::engine::dispatch::PathMode::parse(&s) {
+            Some(m) => kafft::engine::dispatch::set_mode(m),
+            None => {
+                eprintln!(
+                    "error: unknown --path {s:?} \
+                     (follow|auto|direct|fft|stream)"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
     // Deterministic fault injection: `--faults SPEC` or KAFFT_FAULTS,
     // e.g. "seed=7,disk.put.io=0.2,batch.lane.panic=0.05". A malformed
     // spec is a configuration error, not something to serve through.
@@ -151,6 +182,12 @@ fn dispatch(args: &Args) -> Result<()> {
                  \u{20}                             validates vs re-forward\n\
                  \n\
                  global: --artifacts DIR --verbose --quiet\n\
+                 \u{20}       --isa scalar|avx2|avx512|neon|native (pin the\n\
+                 \u{20}       SIMD microkernel set; default: best the host\n\
+                 \u{20}       supports, or KAFFT_ISA)\n\
+                 \u{20}       --path follow|auto|direct|fft|stream (attention\n\
+                 \u{20}       path selection; auto uses the calibrated\n\
+                 \u{20}       crossover table, or KAFFT_PATH)\n\
                  \u{20}       --metrics-json PATH --metrics-prom PATH\n\
                  \u{20}       (serve/decode: dump the telemetry snapshot)\n\
                  \u{20}       --faults SPEC (or KAFFT_FAULTS) arm deterministic\n\

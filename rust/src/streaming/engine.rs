@@ -16,7 +16,7 @@ use crate::attention::{
     kernel_attention_into, kernel_features_into, nprf_rpe_fft_path,
     nprf_rpe_fft_path_into, nprf_rpe_fft_path_traced, rpe_correlations, Kind,
 };
-use crate::engine::{PlanCache, Workspace};
+use crate::engine::{dispatch, PlanCache, Workspace};
 use crate::telemetry::{Stage, StageShard, StageTimer};
 use crate::tensor::{Arena, Mat};
 
@@ -194,21 +194,34 @@ impl StreamingDecoder {
             return Ok(vec![Mat::zeros(0, self.state.value_dim()); heads]);
         }
         let c = self.spec.effective_coeffs(n);
+        // Length-adaptive prefill: Follow (the default) is the FFT
+        // prefill — the engine's historical behavior, bitwise
+        // unchanged. Auto/Force modes may instead load the state via
+        // the direct quadratic path or the recurrent per-row path
+        // (engine/dispatch.rs); all three realize the same windowed
+        // operator.
+        let path = dispatch::resolve_prefill(n);
+        dispatch::note_served(path);
+        let on = tel.is_some();
         // One plan lookup covers every head: the spec's correlations
         // are shared across the head group. Likewise one combined
         // dense+FFT workspace: after head 0 sizes it, the remaining
         // heads' feature maps, kv aggregates, and rfft batches all run
         // allocation-free (workspace contents never affect outputs).
-        let on = tel.is_some();
-        let plan = cache.map(|pc| {
-            let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
-            let t = StageTimer::start_if(on);
-            let p = pc.get(&c64, n, true);
-            if let Some(sh) = tel.as_deref_mut() {
-                t.stop(sh, Stage::PlanLookup);
-            }
-            p
-        });
+        let plan = if path == dispatch::Path::Fft {
+            cache.map(|pc| {
+                let c64: Vec<f64> = c.iter().map(|&x| x as f64).collect();
+                let t = StageTimer::start_if(on);
+                let p = pc.get(&c64, n, true);
+                if let Some(sh) = tel.as_deref_mut() {
+                    t.stop(sh, Stage::PlanLookup);
+                }
+                p
+            })
+        } else {
+            None
+        };
+        let mut num: Vec<f64> = Vec::new();
         let mut ws = Workspace::new();
         let c_tail = self.spec.c_tail();
         let mut outs = Vec::with_capacity(heads);
@@ -233,24 +246,62 @@ impl StreamingDecoder {
                 t.stop(sh, Stage::FeatureMap);
             }
             // The effective coefficients already encode the window +
-            // tail, so the FFT prefill and the recurrent steps realize
-            // the same operator.
-            let mut out = match &plan {
-                Some(p) => {
+            // tail, so the FFT prefill, the direct quadratic path and
+            // the recurrent per-row path all realize the same operator.
+            let mut out = match path {
+                dispatch::Path::Fft => match &plan {
+                    Some(p) => {
+                        let mut out = Mat::default();
+                        match tel.as_deref_mut() {
+                            Some(sh) => nprf_rpe_fft_path_traced(
+                                &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
+                                &mut ws.dense, &mut ws.fft, sh,
+                            ),
+                            None => nprf_rpe_fft_path_into(
+                                &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
+                                &mut ws.dense, &mut ws.fft,
+                            ),
+                        }
+                        out
+                    }
+                    None => {
+                        nprf_rpe_fft_path(&ws.phi_q, &ws.phi_k, &v[h], &c, true)
+                    }
+                },
+                dispatch::Path::Direct => {
                     let mut out = Mat::default();
-                    match tel.as_deref_mut() {
-                        Some(sh) => nprf_rpe_fft_path_traced(
-                            &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
-                            &mut ws.dense, &mut ws.fft, sh,
-                        ),
-                        None => nprf_rpe_fft_path_into(
-                            &ws.phi_q, &ws.phi_k, &v[h], p, &mut out,
-                            &mut ws.dense, &mut ws.fft,
-                        ),
+                    let t = StageTimer::start_if(on);
+                    kernel_attention_into(
+                        &ws.phi_q, &ws.phi_k, &v[h], Some(&c), true, &mut out,
+                        &mut ws.dense,
+                    );
+                    if let Some(sh) = tel.as_deref_mut() {
+                        t.stop(sh, Stage::Gemm);
                     }
                     out
                 }
-                None => nprf_rpe_fft_path(&ws.phi_q, &ws.phi_k, &v[h], &c, true),
+                dispatch::Path::Stream => {
+                    // Recurrent prefill: interleave state loading with
+                    // per-row queries, exactly the operator a fresh
+                    // session would realize via n step() calls. The
+                    // state pushes here replace the trailing bulk-push
+                    // loop below. Recorded as Gemm: it is this path's
+                    // serving-compute stage.
+                    let mut out = Mat::default();
+                    out.resize_uninit(n, v[h].cols);
+                    let t = StageTimer::start_if(on);
+                    for j in 0..n {
+                        self.state.push(h, ws.phi_k.row(j), v[h].row(j), c_tail);
+                        self.state.query_into(
+                            h, ws.phi_q.row(j), &self.spec.coeffs, &mut num,
+                            out.row_mut(j),
+                        );
+                    }
+                    if let Some(sh) = tel.as_deref_mut() {
+                        t.stop(sh, Stage::Gemm);
+                    }
+                    out
+                }
             };
             if crate::faults::should_fire("numeric.readout_nan") {
                 out.data.fill(f32::NAN);
@@ -276,8 +327,10 @@ impl StreamingDecoder {
                 }
             }
             outs.push(out);
-            for j in 0..n {
-                self.state.push(h, ws.phi_k.row(j), v[h].row(j), c_tail);
+            if path != dispatch::Path::Stream {
+                for j in 0..n {
+                    self.state.push(h, ws.phi_k.row(j), v[h].row(j), c_tail);
+                }
             }
         }
         self.pos = n;

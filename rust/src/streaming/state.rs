@@ -24,6 +24,7 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::attention::EPS;
+use crate::tensor::simd;
 
 /// One attention head's recurrent state.
 #[derive(Debug, Clone)]
@@ -91,8 +92,13 @@ impl DecoderState {
             for (mi, &pk) in old_phi.iter().enumerate() {
                 let base = mi * (d + 1);
                 let w = c_tail * pk;
-                for (di, &vd) in old_v.iter().enumerate() {
-                    hs.tail[base + di] += w * vd;
+                // The SIMD axpy is bitwise identical to the scalar
+                // loop (vertical mul+add in element order), so the
+                // snapshot/restore bitwise contract holds on every ISA.
+                if !simd::axpy_f64(&mut hs.tail[base..base + d], w, &old_v) {
+                    for (di, &vd) in old_v.iter().enumerate() {
+                        hs.tail[base + di] += w * vd;
+                    }
                 }
                 hs.tail[base + d] += w;
             }
@@ -142,8 +148,10 @@ impl DecoderState {
                 continue;
             }
             let base = mi * (d + 1);
-            for (di, nn) in num.iter_mut().enumerate() {
-                *nn += pq * hs.tail[base + di];
+            if !simd::axpy_f64(num, pq, &hs.tail[base..base + d]) {
+                for (di, nn) in num.iter_mut().enumerate() {
+                    *nn += pq * hs.tail[base + di];
+                }
             }
             den += pq * hs.tail[base + d];
         }
@@ -154,8 +162,10 @@ impl DecoderState {
                 dot += *pq as f64 * pk;
             }
             let s = coeffs[t] * dot;
-            for (nn, vd) in num.iter_mut().zip(v) {
-                *nn += s * vd;
+            if !simd::axpy_f64(num, s, v) {
+                for (nn, vd) in num.iter_mut().zip(v) {
+                    *nn += s * vd;
+                }
             }
             den += s;
         }

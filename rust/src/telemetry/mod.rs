@@ -393,6 +393,8 @@ impl Telemetry {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let uptime = self.uptime_secs();
         let tokens = self.tokens.load(Ordering::Relaxed);
+        let (path_direct, path_fft, path_stream) =
+            crate::engine::dispatch::served();
         MetricsSnapshot {
             uptime_secs: uptime,
             stages: Stage::ALL.map(|s| (s.name(), self.stage_summary(s))),
@@ -417,6 +419,13 @@ impl Telemetry {
             } else {
                 0.0
             },
+            // Process-global sections owned by other layers: the
+            // SIMD ISA the tensor layer dispatched and the path
+            // counts from the length-adaptive dispatcher.
+            isa: crate::tensor::simd::active().name().to_string(),
+            path_direct,
+            path_fft,
+            path_stream,
             plan_cache: None,
             session_store: None,
             exemplars: Vec::new(),

@@ -75,6 +75,18 @@ pub struct MetricsSnapshot {
     pub prefill_tokens: u64,
     /// `tokens / uptime_secs` at snapshot time.
     pub tokens_per_sec: f64,
+    /// Active SIMD instruction set chosen by `tensor::simd` runtime
+    /// dispatch ("scalar" | "avx2" | "avx512" | "neon"). Additive key
+    /// — no version bump.
+    pub isa: String,
+    /// Attention serves routed per path by the length-adaptive
+    /// dispatcher (`engine::dispatch`): quadratic kernel GEMM.
+    /// Additive keys — no version bump.
+    pub path_direct: u64,
+    /// Serves routed to the Toeplitz FFT fast path.
+    pub path_fft: u64,
+    /// Prefills routed to the recurrent per-row path.
+    pub path_stream: u64,
     pub plan_cache: Option<CacheStats>,
     pub session_store: Option<StoreStats>,
     /// Exemplar trace ids for the top latency-histogram buckets, from
@@ -135,6 +147,11 @@ impl MetricsSnapshot {
             ("tokens", Json::Num(self.tokens as f64)),
             ("prefill_tokens", Json::Num(self.prefill_tokens as f64)),
             ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
+            // Additive keys (SIMD dispatch) — no version bump.
+            ("isa", Json::Str(self.isa.clone())),
+            ("path_direct", Json::Num(self.path_direct as f64)),
+            ("path_fft", Json::Num(self.path_fft as f64)),
+            ("path_stream", Json::Num(self.path_stream as f64)),
         ];
         if let Some(c) = &self.plan_cache {
             pairs.push((
@@ -256,6 +273,20 @@ impl MetricsSnapshot {
             self.prefill_tokens as f64,
         );
         prom_gauge(&mut out, "kafft_tokens_per_second", self.tokens_per_sec);
+        out.push_str(&format!(
+            "# TYPE kafft_isa_info gauge\nkafft_isa_info{{isa=\"{}\"}} 1\n",
+            self.isa
+        ));
+        out.push_str("# TYPE kafft_path_served_total counter\n");
+        for (path, v) in [
+            ("direct", self.path_direct),
+            ("fft", self.path_fft),
+            ("stream", self.path_stream),
+        ] {
+            out.push_str(&format!(
+                "kafft_path_served_total{{path=\"{path}\"}} {v}\n"
+            ));
+        }
         if let Some(c) = &self.plan_cache {
             prom_counter(&mut out, "kafft_plan_cache_hits_total", c.hits as f64);
             prom_counter(
@@ -445,6 +476,13 @@ mod tests {
         assert_eq!(j.req_usize("shed_requests").unwrap(), 6);
         assert_eq!(j.req_usize("deadline_expired").unwrap(), 3);
         assert_eq!(j.req_usize("disk_io_errors").unwrap(), 5);
+        // SIMD dispatch keys are additive and always present. The
+        // path counters are process-global — other tests in this
+        // process may have served, so presence only, no exact values.
+        assert!(!j.req_str("isa").unwrap().is_empty());
+        assert!(j.get("path_direct").is_some());
+        assert!(j.get("path_fft").is_some());
+        assert!(j.get("path_stream").is_some());
     }
 
     #[test]
@@ -491,6 +529,10 @@ mod tests {
         assert!(prom.contains("kafft_shed_requests_total 6"));
         assert!(prom.contains("kafft_deadline_expired_total 3"));
         assert!(prom.contains("kafft_disk_io_errors_total 5"));
+        assert!(prom.contains("kafft_isa_info{isa=\""));
+        assert!(prom.contains("kafft_path_served_total{path=\"direct\"}"));
+        assert!(prom.contains("kafft_path_served_total{path=\"fft\"}"));
+        assert!(prom.contains("kafft_path_served_total{path=\"stream\"}"));
     }
 
     #[test]

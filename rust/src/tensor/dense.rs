@@ -24,7 +24,18 @@
 //! inner loops and deterministic for a given shape (no data-dependent
 //! control flow), which is what makes every `_into` path bitwise
 //! reproducible under buffer reuse.
+//!
+//! Since the SIMD layer landed, `matmul_slices` / `matmul_t_slices`
+//! are thin dispatchers: they try the `tensor::simd` microkernel for
+//! the active ISA first and fall back to the blocked-scalar kernels
+//! (now also exported as `matmul_slices_blocked` /
+//! `matmul_t_slices_blocked` — the stable numerical reference the ISA
+//! conformance proptests compare against). Determinism contract
+//! unchanged: the ISA is resolved once per process, so repeated calls
+//! on the same shape take the same kernel and stay bitwise
+//! reproducible under buffer reuse.
 
+use super::simd;
 use super::Mat;
 
 /// f32 accumulation lanes per register-blocked chain. Eight lanes is
@@ -146,7 +157,31 @@ fn tile_t<const TM: usize, const TN: usize>(
 /// C = A @ B^T into a caller slice: `a` is (m, k), `b` is (n, k), `out`
 /// is (m, n), all row-major. Fully overwrites `out` (no accumulate), so
 /// stale buffer contents never leak into results. Zero allocations.
+/// Dispatches to the active-ISA microkernel (`tensor::simd`), with the
+/// blocked-scalar kernel as the portable fallback.
 pub fn matmul_t_slices(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "matmul_t_slices: bad a length");
+    assert_eq!(b.len(), n * k, "matmul_t_slices: bad b length");
+    assert_eq!(out.len(), m * n, "matmul_t_slices: bad out length");
+    if simd::matmul_t_f32(a, m, k, b, n, out) {
+        return;
+    }
+    matmul_t_slices_blocked(a, m, k, b, n, out);
+}
+
+/// The blocked-scalar C = A @ B^T kernel (the pre-SIMD substrate):
+/// cache-tiled, register-blocked, plain autovectorizable Rust. Kept
+/// `pub` as the portable fallback and as the numerical reference the
+/// ISA conformance tests and `benches/simd_dispatch.rs` measure
+/// against.
+pub fn matmul_t_slices_blocked(
     a: &[f32],
     m: usize,
     k: usize,
@@ -204,12 +239,33 @@ pub fn matmul_t_slices(
 }
 
 /// C = A @ B into a caller slice: `a` is (m, k), `b` is (k, n), `out`
-/// is (m, n), all row-major. Fully overwrites `out` (zeroed, then
-/// accumulated in ascending-k order — the same order as the naive
-/// oracle, minus its zero-skip). The inner loop is elementwise over
-/// the output row with four B-row streams, which autovectorizes;
-/// k-blocking bounds the B panel working set. Zero allocations.
+/// is (m, n), all row-major. Fully overwrites `out`. Dispatches to the
+/// active-ISA microkernel (`tensor::simd`), with the blocked-scalar
+/// kernel as the portable fallback. Zero allocations.
 pub fn matmul_slices(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "matmul_slices: bad a length");
+    assert_eq!(b.len(), k * n, "matmul_slices: bad b length");
+    assert_eq!(out.len(), m * n, "matmul_slices: bad out length");
+    if simd::matmul_f32(a, m, k, b, n, out) {
+        return;
+    }
+    matmul_slices_blocked(a, m, k, b, n, out);
+}
+
+/// The blocked-scalar C = A @ B kernel (the pre-SIMD substrate):
+/// zeroed, then accumulated in ascending-k order — the same order as
+/// the naive oracle, minus its zero-skip. The inner loop is
+/// elementwise over the output row with four B-row streams, which
+/// autovectorizes; k-blocking bounds the B panel working set. Kept
+/// `pub` as the portable fallback and conformance reference.
+pub fn matmul_slices_blocked(
     a: &[f32],
     m: usize,
     k: usize,

@@ -15,15 +15,27 @@
 //!     as `matmul_naive` / `matmul_t_naive` conformance oracles;
 //!   * [`arena::Arena`] — a grow-only workspace mirroring
 //!     `fft::Scratch` semantics, so steady-state attention calls
-//!     allocate nothing in the dense layer.
+//!     allocate nothing in the dense layer;
+//!   * [`simd`] — explicit `core::arch` microkernels (AVX2+FMA, an
+//!     AVX-512F dot tile, NEON stubs) behind one-time runtime ISA
+//!     dispatch. `matmul_slices` / `matmul_t_slices` try the active
+//!     ISA first and fall back to the blocked-scalar kernels (exported
+//!     as `*_slices_blocked`); the naive loops remain the conformance
+//!     oracle. SIMD coverage: the GEMM tiles here, the fused feature
+//!     maps in `attention`, the rfft butterfly/untangle/retangle
+//!     passes in `fft::real`, and the streaming accumulator axpy in
+//!     `streaming::state`. Fallback order everywhere:
+//!     avx512 -> avx2 -> blocked scalar -> naive (oracle only).
 
 pub mod arena;
 pub mod dense;
+pub mod simd;
 
 pub use arena::Arena;
 pub use dense::{
-    matmul_into, matmul_naive, matmul_slices, matmul_t_into, matmul_t_naive,
-    matmul_t_slices, transpose_slices,
+    matmul_into, matmul_naive, matmul_slices, matmul_slices_blocked,
+    matmul_t_into, matmul_t_naive, matmul_t_slices, matmul_t_slices_blocked,
+    transpose_slices,
 };
 
 #[derive(Debug, Clone, Default, PartialEq)]

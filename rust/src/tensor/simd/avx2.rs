@@ -1,0 +1,440 @@
+//! AVX2 (+FMA) microkernels. Every function here is `unsafe` with
+//! `#[target_feature]`: callers (the dispatch shims in `simd::mod`)
+//! guarantee the features are present via `is_x86_feature_detected!`
+//! before taking this path.
+//!
+//! Two numerical disciplines coexist, on purpose:
+//!
+//!   * **tolerance-class** kernels (the GEMM tiles, the feature maps)
+//!     use FMA / lane-parallel reductions freely — they answer to the
+//!     proptest net (<= 1e-5 vs the blocked path, <= 1e-4 vs naive),
+//!     not to bitwise parity;
+//!   * **bitwise-class** kernels (the rfft butterfly/untangle/retangle
+//!     passes, the streaming axpy) use only vertical mul/add/sub in
+//!     the exact scalar evaluation order. IEEE-754 lane ops round
+//!     identically to their scalar counterparts, so these produce the
+//!     same bits as the portable loops — which is what keeps the
+//!     1e-12 FFT conformance nets and the snapshot/restore bitwise
+//!     guarantees intact regardless of the dispatched ISA.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+use super::{EXP_HI, EXP_LN2_HI, EXP_LN2_LO, EXP_LO, EXP_LOG2E, EXP_P};
+
+// Cache-tile sizes, mirroring tensor::dense so the two paths stress
+// the same working sets.
+const MC: usize = 256;
+const NC: usize = 64;
+
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum256_ps(v: __m256) -> f32 {
+    // Fixed reduction order: (lo + hi) pairwise — deterministic for a
+    // given input, which is all the bitwise-determinism contract needs
+    // (the *path* is fixed per process).
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+    _mm_cvtss_f32(s)
+}
+
+/// One TM x TN dot tile of C[m x n] = A[m x k] @ B[n x k]^T at output
+/// block (ai, bj): 8-lane FMA accumulators per cell, horizontal
+/// reduction plus a scalar k-tail at the edge.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tile_t<const TM: usize, const TN: usize>(
+    a: &[f32], b: &[f32], k: usize, ai: usize, bj: usize, n: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[_mm256_setzero_ps(); TN]; TM];
+    let kk = k - k % 8;
+    let mut p = 0;
+    while p < kk {
+        let mut bv = [_mm256_setzero_ps(); TN];
+        for (t, bvt) in bv.iter_mut().enumerate() {
+            *bvt = _mm256_loadu_ps(b.as_ptr().add((bj + t) * k + p));
+        }
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_loadu_ps(a.as_ptr().add((ai + r) * k + p));
+            for (t, cell) in accr.iter_mut().enumerate() {
+                *cell = _mm256_fmadd_ps(av, bv[t], *cell);
+            }
+        }
+        p += 8;
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        for (t, cell) in accr.iter().enumerate() {
+            let mut sum = hsum256_ps(*cell);
+            for q in kk..k {
+                sum += a[(ai + r) * k + q] * b[(bj + t) * k + q];
+            }
+            out[(ai + r) * n + bj + t] = sum;
+        }
+    }
+}
+
+/// C[m x n] = A[m x k] @ B[n x k]^T. 4x2 register tiles over the same
+/// MC x NC cache blocking as the scalar path.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn matmul_t(a: &[f32], m: usize, k: usize, b: &[f32], n: usize,
+                       out: &mut [f32]) {
+    for j0 in (0..n).step_by(NC) {
+        let nb = NC.min(n - j0);
+        for i0 in (0..m).step_by(MC) {
+            let mb = MC.min(m - i0);
+            let mut i = 0;
+            while i < mb {
+                let tm = (mb - i).min(4);
+                let mut j = 0;
+                while j < nb {
+                    let tn = (nb - j).min(2);
+                    let (ai, bj) = (i0 + i, j0 + j);
+                    match (tm, tn) {
+                        (4, 2) => tile_t::<4, 2>(a, b, k, ai, bj, n, out),
+                        (4, 1) => tile_t::<4, 1>(a, b, k, ai, bj, n, out),
+                        (3, 2) => tile_t::<3, 2>(a, b, k, ai, bj, n, out),
+                        (3, 1) => tile_t::<3, 1>(a, b, k, ai, bj, n, out),
+                        (2, 2) => tile_t::<2, 2>(a, b, k, ai, bj, n, out),
+                        (2, 1) => tile_t::<2, 1>(a, b, k, ai, bj, n, out),
+                        (1, 2) => tile_t::<1, 2>(a, b, k, ai, bj, n, out),
+                        _ => tile_t::<1, 1>(a, b, k, ai, bj, n, out),
+                    }
+                    j += tn;
+                }
+                i += tm;
+            }
+        }
+    }
+}
+
+/// C[m x n] = A[m x k] @ B[k x n]: broadcast each a[i, l] and FMA it
+/// against B's contiguous row l, 4-deep along k so each output vector
+/// is loaded/stored once per quad.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize,
+                     out: &mut [f32]) {
+    out.fill(0.0);
+    const KC: usize = 512;
+    for p0 in (0..k).step_by(KC) {
+        let kb = KC.min(k - p0);
+        for i in 0..m {
+            let orow = i * n;
+            let mut l = p0;
+            let quads_end = p0 + kb - kb % 4;
+            while l < quads_end {
+                let a0 = _mm256_set1_ps(a[i * k + l]);
+                let a1 = _mm256_set1_ps(a[i * k + l + 1]);
+                let a2 = _mm256_set1_ps(a[i * k + l + 2]);
+                let a3 = _mm256_set1_ps(a[i * k + l + 3]);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let mut c = _mm256_loadu_ps(out.as_ptr().add(orow + j));
+                    c = _mm256_fmadd_ps(
+                        a0, _mm256_loadu_ps(b.as_ptr().add(l * n + j)), c);
+                    c = _mm256_fmadd_ps(
+                        a1, _mm256_loadu_ps(b.as_ptr().add((l + 1) * n + j)), c);
+                    c = _mm256_fmadd_ps(
+                        a2, _mm256_loadu_ps(b.as_ptr().add((l + 2) * n + j)), c);
+                    c = _mm256_fmadd_ps(
+                        a3, _mm256_loadu_ps(b.as_ptr().add((l + 3) * n + j)), c);
+                    _mm256_storeu_ps(out.as_mut_ptr().add(orow + j), c);
+                    j += 8;
+                }
+                while j < n {
+                    let acc = ((out[orow + j]
+                        + a[i * k + l] * b[l * n + j])
+                        + a[i * k + l + 1] * b[(l + 1) * n + j])
+                        + a[i * k + l + 2] * b[(l + 2) * n + j]
+                        + a[i * k + l + 3] * b[(l + 3) * n + j];
+                    out[orow + j] = acc;
+                    j += 1;
+                }
+                l += 4;
+            }
+            while l < p0 + kb {
+                let av = _mm256_set1_ps(a[i * k + l]);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let c = _mm256_loadu_ps(out.as_ptr().add(orow + j));
+                    let c = _mm256_fmadd_ps(
+                        av, _mm256_loadu_ps(b.as_ptr().add(l * n + j)), c);
+                    _mm256_storeu_ps(out.as_mut_ptr().add(orow + j), c);
+                    j += 8;
+                }
+                while j < n {
+                    out[orow + j] += a[i * k + l] * b[l * n + j];
+                    j += 1;
+                }
+                l += 1;
+            }
+        }
+    }
+}
+
+/// 8-lane polynomial exp (Cephes layout, see `simd::exp_poly_f32`).
+/// mul/add only — no FMA — so the lanes compute exactly what the
+/// scalar reference (and the numpy float32 mirror) computes.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn exp256_ps(x: __m256) -> __m256 {
+    let x = _mm256_min_ps(_mm256_max_ps(x, _mm256_set1_ps(EXP_LO)),
+                          _mm256_set1_ps(EXP_HI));
+    let t = _mm256_add_ps(_mm256_mul_ps(x, _mm256_set1_ps(EXP_LOG2E)),
+                          _mm256_set1_ps(0.5));
+    let n = _mm256_floor_ps(t);
+    let r = _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(EXP_LN2_HI)));
+    let r = _mm256_sub_ps(r, _mm256_mul_ps(n, _mm256_set1_ps(EXP_LN2_LO)));
+    let mut p = _mm256_set1_ps(EXP_P[0]);
+    for &c in &EXP_P[1..] {
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(c));
+    }
+    let r2 = _mm256_mul_ps(r, r);
+    let y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(p, r2), r),
+                          _mm256_set1_ps(1.0));
+    let ni = _mm256_cvtps_epi32(n);
+    let pow = _mm256_slli_epi32::<23>(
+        _mm256_add_epi32(ni, _mm256_set1_epi32(127)));
+    _mm256_mul_ps(y, _mm256_castsi256_ps(pow))
+}
+
+/// Fused phi_PRF postprocess over whole matrices: per row, the squared
+/// norm is reduced 8 lanes at a time, then the projection row is
+/// shifted, exponentiated (exp256_ps), and scaled in place. Row tails
+/// run through `exp_poly_f32`, the identical scalar formula.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn phi_prf_fuse(x: &[f32], rows: usize, d: usize, out: &mut [f32],
+                           m: usize, scale: f32) {
+    for i in 0..rows {
+        let xr = &x[i * d..(i + 1) * d];
+        let dk = d - d % 8;
+        let mut accv = _mm256_setzero_ps();
+        let mut p = 0;
+        while p < dk {
+            let v = _mm256_loadu_ps(xr.as_ptr().add(p));
+            accv = _mm256_add_ps(accv, _mm256_mul_ps(v, v));
+            p += 8;
+        }
+        let mut sq = hsum256_ps(accv);
+        for &v in &xr[dk..] {
+            sq += v * v;
+        }
+        sq *= 0.5;
+        let sqv = _mm256_set1_ps(sq);
+        let scv = _mm256_set1_ps(scale);
+        let orow = &mut out[i * m..(i + 1) * m];
+        let mk = m - m % 8;
+        let mut j = 0;
+        while j < mk {
+            let v = _mm256_loadu_ps(orow.as_ptr().add(j));
+            let e = exp256_ps(_mm256_sub_ps(v, sqv));
+            _mm256_storeu_ps(orow.as_mut_ptr().add(j),
+                             _mm256_mul_ps(e, scv));
+            j += 8;
+        }
+        for v in &mut orow[mk..] {
+            *v = super::exp_poly_f32(*v - sq) * scale;
+        }
+    }
+}
+
+/// elu(x) + 1: positive lanes take x + 1, non-positive lanes the
+/// polynomial exp; blended per lane.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn elu1(x: &[f32], out: &mut [f32]) {
+    let len = x.len();
+    let lk = len - len % 8;
+    let one = _mm256_set1_ps(1.0);
+    let zero = _mm256_setzero_ps();
+    let mut j = 0;
+    while j < lk {
+        let v = _mm256_loadu_ps(x.as_ptr().add(j));
+        let pos = _mm256_add_ps(v, one);
+        let neg = exp256_ps(v);
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(v, zero);
+        _mm256_storeu_ps(out.as_mut_ptr().add(j),
+                         _mm256_blendv_ps(neg, pos, mask));
+        j += 8;
+    }
+    for q in lk..len {
+        let v = x[q];
+        out[q] = if v > 0.0 { v + 1.0 } else { super::exp_poly_f32(v) };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise-class f64 kernels: vertical mul/add/sub only, scalar
+// evaluation order preserved exactly.
+// ---------------------------------------------------------------------------
+
+/// One butterfly block (see `fft::real::butterflies`): for k in 0..hl,
+///   v = b * (wr + i*sign*wi);  (a, b) <- (a + v, a - v).
+#[target_feature(enable = "avx2")]
+pub unsafe fn fft_butterfly_block(re: &mut [f64], im: &mut [f64],
+                                  base: usize, hl: usize, twr: &[f64],
+                                  twi: &[f64], sign: f64) {
+    let rp = re.as_mut_ptr();
+    let ip = im.as_mut_ptr();
+    let sv = _mm256_set1_pd(sign);
+    let kk = hl - hl % 4;
+    let mut k = 0;
+    while k < kk {
+        let wr = _mm256_loadu_pd(twr.as_ptr().add(k));
+        let wi = _mm256_mul_pd(sv, _mm256_loadu_pd(twi.as_ptr().add(k)));
+        let br = _mm256_loadu_pd(rp.add(base + k + hl));
+        let bi = _mm256_loadu_pd(ip.add(base + k + hl));
+        let vr = _mm256_sub_pd(_mm256_mul_pd(br, wr), _mm256_mul_pd(bi, wi));
+        let vi = _mm256_add_pd(_mm256_mul_pd(br, wi), _mm256_mul_pd(bi, wr));
+        let ar = _mm256_loadu_pd(rp.add(base + k));
+        let ai = _mm256_loadu_pd(ip.add(base + k));
+        _mm256_storeu_pd(rp.add(base + k), _mm256_add_pd(ar, vr));
+        _mm256_storeu_pd(ip.add(base + k), _mm256_add_pd(ai, vi));
+        _mm256_storeu_pd(rp.add(base + k + hl), _mm256_sub_pd(ar, vr));
+        _mm256_storeu_pd(ip.add(base + k + hl), _mm256_sub_pd(ai, vi));
+        k += 4;
+    }
+    while k < hl {
+        let wr = twr[k];
+        let wi = sign * twi[k];
+        let br = re[base + k + hl];
+        let bi = im[base + k + hl];
+        let vr = br * wr - bi * wi;
+        let vi = br * wi + bi * wr;
+        let ar = re[base + k];
+        let ai = im[base + k];
+        re[base + k] = ar + vr;
+        im[base + k] = ai + vi;
+        re[base + k + hl] = ar - vr;
+        im[base + k + hl] = ai - vi;
+        k += 1;
+    }
+}
+
+/// Reverse the four f64 lanes: [a b c d] -> [d c b a].
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn rev4_pd(v: __m256d) -> __m256d {
+    _mm256_permute4x64_pd::<0b00_01_10_11>(v)
+}
+
+/// Untangle middle bins k in 1..h (`fft::real::rfft_batch`): the
+/// mirrored operand Z[h-k] is loaded descending via a lane reversal.
+#[target_feature(enable = "avx2")]
+pub unsafe fn rfft_untangle_mid(zr: &[f64], zi: &[f64], un_re: &[f64],
+                                un_im: &[f64], ore: &mut [f64],
+                                oim: &mut [f64]) {
+    let h = zr.len();
+    let half = _mm256_set1_pd(0.5);
+    let nhalf = _mm256_set1_pd(-0.5);
+    let mut k = 1;
+    while k + 4 <= h {
+        let zkr = _mm256_loadu_pd(zr.as_ptr().add(k));
+        let zki = _mm256_loadu_pd(zi.as_ptr().add(k));
+        // Z[h-k], Z[h-k-1], Z[h-k-2], Z[h-k-3] for lanes k..k+3.
+        let zmr = rev4_pd(_mm256_loadu_pd(zr.as_ptr().add(h - k - 3)));
+        let zmi = rev4_pd(_mm256_loadu_pd(zi.as_ptr().add(h - k - 3)));
+        let er = _mm256_mul_pd(half, _mm256_add_pd(zkr, zmr));
+        let ei = _mm256_mul_pd(half, _mm256_sub_pd(zki, zmi));
+        let or_ = _mm256_mul_pd(half, _mm256_add_pd(zki, zmi));
+        let oi_ = _mm256_mul_pd(nhalf, _mm256_sub_pd(zkr, zmr));
+        let wr = _mm256_loadu_pd(un_re.as_ptr().add(k));
+        let wi = _mm256_loadu_pd(un_im.as_ptr().add(k));
+        let re = _mm256_sub_pd(_mm256_add_pd(er, _mm256_mul_pd(or_, wr)),
+                               _mm256_mul_pd(oi_, wi));
+        let imv = _mm256_add_pd(_mm256_add_pd(ei, _mm256_mul_pd(or_, wi)),
+                                _mm256_mul_pd(oi_, wr));
+        _mm256_storeu_pd(ore.as_mut_ptr().add(k), re);
+        _mm256_storeu_pd(oim.as_mut_ptr().add(k), imv);
+        k += 4;
+    }
+    while k < h {
+        let m = h - k;
+        let (zkr, zki) = (zr[k], zi[k]);
+        let (zmr, zmi) = (zr[m], zi[m]);
+        let er = 0.5 * (zkr + zmr);
+        let ei = 0.5 * (zki - zmi);
+        let or_ = 0.5 * (zki + zmi);
+        let oi_ = -0.5 * (zkr - zmr);
+        let (wr, wi) = (un_re[k], un_im[k]);
+        ore[k] = er + or_ * wr - oi_ * wi;
+        oim[k] = ei + or_ * wi + oi_ * wr;
+        k += 1;
+    }
+}
+
+/// Retangle pass (`fft::real::irfft_batch`): k in 0..h computed four
+/// wide in scalar order, scattered through `bitrev` with scalar
+/// stores (AVX2 has no scatter).
+#[target_feature(enable = "avx2")]
+pub unsafe fn irfft_retangle(xr: &[f64], xi: &[f64], un_re: &[f64],
+                             un_im: &[f64], bitrev: &[usize],
+                             r: &mut [f64], i: &mut [f64]) {
+    let h = r.len();
+    let half = _mm256_set1_pd(0.5);
+    let mut k = 0;
+    while k + 4 <= h {
+        let xkr = _mm256_loadu_pd(xr.as_ptr().add(k));
+        let xki = _mm256_loadu_pd(xi.as_ptr().add(k));
+        // X[h-k] down to X[h-k-3]; valid for k = 0 because the
+        // half-spectrum has h + 1 bins.
+        let xmr = rev4_pd(_mm256_loadu_pd(xr.as_ptr().add(h - k - 3)));
+        let xmi = rev4_pd(_mm256_loadu_pd(xi.as_ptr().add(h - k - 3)));
+        let er = _mm256_mul_pd(half, _mm256_add_pd(xkr, xmr));
+        let ei = _mm256_mul_pd(half, _mm256_sub_pd(xki, xmi));
+        let gr = _mm256_mul_pd(half, _mm256_sub_pd(xkr, xmr));
+        let gi = _mm256_mul_pd(half, _mm256_add_pd(xki, xmi));
+        let wr = _mm256_loadu_pd(un_re.as_ptr().add(k));
+        let wi = _mm256_loadu_pd(un_im.as_ptr().add(k));
+        let or_ = _mm256_add_pd(_mm256_mul_pd(gr, wr), _mm256_mul_pd(gi, wi));
+        let oi_ = _mm256_sub_pd(_mm256_mul_pd(gi, wr), _mm256_mul_pd(gr, wi));
+        let rv = _mm256_sub_pd(er, oi_);
+        let iv = _mm256_add_pd(ei, or_);
+        let mut rs = [0.0f64; 4];
+        let mut is = [0.0f64; 4];
+        _mm256_storeu_pd(rs.as_mut_ptr(), rv);
+        _mm256_storeu_pd(is.as_mut_ptr(), iv);
+        for (t, (&rw, &iw)) in rs.iter().zip(is.iter()).enumerate() {
+            let dst = bitrev[k + t];
+            r[dst] = rw;
+            i[dst] = iw;
+        }
+        k += 4;
+    }
+    while k < h {
+        let m = h - k;
+        let er = 0.5 * (xr[k] + xr[m]);
+        let ei = 0.5 * (xi[k] - xi[m]);
+        let gr = 0.5 * (xr[k] - xr[m]);
+        let gi = 0.5 * (xi[k] + xi[m]);
+        let (wr, wi) = (un_re[k], un_im[k]);
+        let or_ = gr * wr + gi * wi;
+        let oi_ = gi * wr - gr * wi;
+        let t = bitrev[k];
+        r[t] = er - oi_;
+        i[t] = ei + or_;
+        k += 1;
+    }
+}
+
+/// dst += w * src (f64): the streaming (S, z) accumulator update.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f64(dst: &mut [f64], w: f64, src: &[f64]) {
+    let n = dst.len();
+    let wv = _mm256_set1_pd(w);
+    let nk = n - n % 4;
+    let mut p = 0;
+    while p < nk {
+        let d = _mm256_loadu_pd(dst.as_ptr().add(p));
+        let s = _mm256_loadu_pd(src.as_ptr().add(p));
+        _mm256_storeu_pd(dst.as_mut_ptr().add(p),
+                         _mm256_add_pd(d, _mm256_mul_pd(wv, s)));
+        p += 4;
+    }
+    for q in nk..n {
+        dst[q] += w * src[q];
+    }
+}

@@ -1,0 +1,88 @@
+//! AVX-512F microkernel: only the transposed-GEMM dot tile lives
+//! here — it is the one loop where 16-lane FMA with a hardware
+//! reduction beats the 256-bit kernel. Everything else (broadcast
+//! GEMM, feature maps, rfft passes, streaming axpy) deliberately
+//! reuses the AVX2 kernels: they are either bandwidth-bound (wider
+//! vectors buy nothing) or bitwise-class (the AVX2 versions already
+//! match scalar exactly, and fewer variants means fewer conformance
+//! cells).
+//!
+//! AVX-512 intrinsics are stable since Rust 1.89; only `avx512f`
+//! instructions are used so the kernel runs on every 512-capable
+//! part.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+const MC: usize = 256;
+const NC: usize = 64;
+
+/// One TM x TN dot tile with 16-lane accumulators. The k-tail folds
+/// into the same scalar loop the AVX2 tile uses.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn tile_t<const TM: usize, const TN: usize>(
+    a: &[f32], b: &[f32], k: usize, ai: usize, bj: usize, n: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[_mm512_setzero_ps(); TN]; TM];
+    let kk = k - k % 16;
+    let mut p = 0;
+    while p < kk {
+        let mut bv = [_mm512_setzero_ps(); TN];
+        for (t, bvt) in bv.iter_mut().enumerate() {
+            *bvt = _mm512_loadu_ps(b.as_ptr().add((bj + t) * k + p));
+        }
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm512_loadu_ps(a.as_ptr().add((ai + r) * k + p));
+            for (t, cell) in accr.iter_mut().enumerate() {
+                *cell = _mm512_fmadd_ps(av, bv[t], *cell);
+            }
+        }
+        p += 16;
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        for (t, cell) in accr.iter().enumerate() {
+            let mut sum = _mm512_reduce_add_ps(*cell);
+            for q in kk..k {
+                sum += a[(ai + r) * k + q] * b[(bj + t) * k + q];
+            }
+            out[(ai + r) * n + bj + t] = sum;
+        }
+    }
+}
+
+/// C[m x n] = A[m x k] @ B[n x k]^T — same blocking and 4x2 tiling as
+/// the AVX2 path, with 512-bit accumulators.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn matmul_t(a: &[f32], m: usize, k: usize, b: &[f32], n: usize,
+                       out: &mut [f32]) {
+    for j0 in (0..n).step_by(NC) {
+        let nb = NC.min(n - j0);
+        for i0 in (0..m).step_by(MC) {
+            let mb = MC.min(m - i0);
+            let mut i = 0;
+            while i < mb {
+                let tm = (mb - i).min(4);
+                let mut j = 0;
+                while j < nb {
+                    let tn = (nb - j).min(2);
+                    let (ai, bj) = (i0 + i, j0 + j);
+                    match (tm, tn) {
+                        (4, 2) => tile_t::<4, 2>(a, b, k, ai, bj, n, out),
+                        (4, 1) => tile_t::<4, 1>(a, b, k, ai, bj, n, out),
+                        (3, 2) => tile_t::<3, 2>(a, b, k, ai, bj, n, out),
+                        (3, 1) => tile_t::<3, 1>(a, b, k, ai, bj, n, out),
+                        (2, 2) => tile_t::<2, 2>(a, b, k, ai, bj, n, out),
+                        (2, 1) => tile_t::<2, 1>(a, b, k, ai, bj, n, out),
+                        (1, 2) => tile_t::<1, 2>(a, b, k, ai, bj, n, out),
+                        _ => tile_t::<1, 1>(a, b, k, ai, bj, n, out),
+                    }
+                    j += tn;
+                }
+                i += tm;
+            }
+        }
+    }
+}

@@ -1,0 +1,456 @@
+//! Explicit SIMD microkernels with one-time runtime ISA dispatch.
+//!
+//! The blocked dense substrate (`tensor::dense`) and the rfft /
+//! streaming hot loops are plain autovectorizable Rust — portable, but
+//! leaving FMA throughput and predictable 8-lane scheduling on the
+//! table. This module adds hand-written `core::arch` kernels for the
+//! four hot inner loops the profile is made of:
+//!
+//!   1. the 4x2 GEMM tile behind `matmul_t_slices` / `matmul_slices`
+//!      (AVX2+FMA, and an AVX-512F 16-lane variant of the dot tile);
+//!   2. the fused phi_PRF / elu+1 feature maps (vectorized polynomial
+//!      `exp`, Cephes layout, no FMA so the python mirror can
+//!      reproduce it bit for bit);
+//!   3. the rfft butterfly / untangle / retangle passes in `fft::real`
+//!      (4-lane f64, **vertical mul/add/sub only in the scalar
+//!      evaluation order** — bitwise identical to the scalar loops, so
+//!      the 1e-12 FFT conformance nets and every bitwise cross-path
+//!      test hold unchanged);
+//!   4. the streaming (S, z) accumulator update (`axpy_f64`, same
+//!      bitwise-identical-to-scalar discipline).
+//!
+//! Dispatch happens once per process: [`active`] resolves the ISA from
+//! `KAFFT_ISA` (`scalar` | `avx2` | `avx512` | `native`, clamped to
+//! what `is_x86_feature_detected!` reports) and caches it in an atomic.
+//! Every kernel entry point returns `bool` — `false` means "not
+//! handled, run the portable fallback", so the blocked-scalar path
+//! remains the portable floor and the naive loops the conformance
+//! oracle. Fallback order: avx512 -> avx2 -> blocked scalar -> naive
+//! (oracle only). On aarch64 the NEON kernels are declared but stubbed
+//! (`neon.rs`): `active()` clamps to `Scalar` until they land.
+//!
+//! Test discipline: forcing the ISA ([`force`]) is process-global, so
+//! only the dedicated integration suite
+//! (`tests/proptest_simd_dispatch.rs`, its own process) may call it —
+//! library unit tests must never flip the ISA mid-run or they would
+//! race the bitwise cross-path tests running in the same process.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Instruction set the kernels were dispatched to. `Neon` is declared
+/// for the aarch64 port but currently clamps to `Scalar` (stubs in
+/// `neon.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `KAFFT_ISA` / `--isa` value. `native` means "best the
+    /// host supports"; unknown strings are `None` (callers fall back
+    /// to native rather than aborting a serving process over a typo).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" => Some(Isa::Avx512),
+            "neon" => Some(Isa::Neon),
+            "native" => Some(best_available()),
+            _ => None,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 2,
+            Isa::Avx512 => 3,
+            Isa::Neon => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Isa> {
+        match c {
+            1 => Some(Isa::Scalar),
+            2 => Some(Isa::Avx2),
+            3 => Some(Isa::Avx512),
+            4 => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Best ISA the host CPU supports (runtime-detected, independent of
+/// what this binary was compiled with).
+pub fn best_available() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx2;
+        }
+    }
+    // aarch64: NEON is baseline but the kernels are stubs, so the
+    // active ISA stays Scalar until they land.
+    Isa::Scalar
+}
+
+/// Clamp a requested ISA to what the host actually supports (and to
+/// kernels that actually exist): you can always force *down*, never up.
+pub fn clamp(requested: Isa) -> Isa {
+    let best = best_available();
+    match requested {
+        Isa::Scalar => Isa::Scalar,
+        Isa::Avx2 => {
+            if matches!(best, Isa::Avx2 | Isa::Avx512) {
+                Isa::Avx2
+            } else {
+                Isa::Scalar
+            }
+        }
+        Isa::Avx512 => {
+            if best == Isa::Avx512 {
+                Isa::Avx512
+            } else {
+                clamp(Isa::Avx2)
+            }
+        }
+        // NEON kernels are stubs: requesting them runs the portable
+        // scalar path (documented in neon.rs).
+        Isa::Neon => Isa::Scalar,
+    }
+}
+
+/// 0 = unresolved; otherwise an `Isa::code`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The ISA every kernel dispatches on, resolved once per process:
+/// `KAFFT_ISA` if set (clamped to host support), else the best the
+/// host reports. A relaxed atomic load afterwards — cheap enough to
+/// sit inside per-row kernels.
+pub fn active() -> Isa {
+    match Isa::from_code(ACTIVE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => {
+            let isa = match std::env::var("KAFFT_ISA") {
+                Ok(s) => clamp(Isa::parse(&s).unwrap_or_else(best_available)),
+                Err(_) => best_available(),
+            };
+            ACTIVE.store(isa.code(), Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// Force the active ISA (clamped to host support); returns what
+/// actually stuck. Process-global — CLI startup and the dedicated
+/// ISA-forcing integration tests only.
+pub fn force(requested: Isa) -> Isa {
+    let isa = clamp(requested);
+    ACTIVE.store(isa.code(), Ordering::Relaxed);
+    isa
+}
+
+// ---------------------------------------------------------------------------
+// Kernel entry points. Each returns false when the active ISA has no
+// kernel for it (or the shape degenerates) — the caller then runs its
+// portable scalar loop.
+// ---------------------------------------------------------------------------
+
+/// C[m x n] = A[m x k] @ B[n x k]^T (both operands row-major, B
+/// transposed logically). FMA dot-product microkernel: results agree
+/// with the blocked path to ~1e-6 relative, not bitwise (different
+/// summation tree) — the proptest net holds every ISA to 1e-5 of the
+/// blocked path and 1e-4 of the naive oracle.
+pub fn matmul_t_f32(a: &[f32], m: usize, k: usize, b: &[f32], n: usize,
+                    out: &mut [f32]) -> bool {
+    if m == 0 || n == 0 || k == 0 {
+        return false;
+    }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    match active() {
+        Isa::Avx512 => {
+            unsafe { avx512::matmul_t(a, m, k, b, n, out) };
+            return true;
+        }
+        Isa::Avx2 => {
+            unsafe { avx2::matmul_t(a, m, k, b, n, out) };
+            return true;
+        }
+        _ => {}
+    }
+    let _ = (a, b, out);
+    false
+}
+
+/// C[m x n] = A[m x k] @ B[k x n] (row-major). Broadcast-FMA kernel
+/// along the contiguous output rows.
+pub fn matmul_f32(a: &[f32], m: usize, k: usize, b: &[f32], n: usize,
+                  out: &mut [f32]) -> bool {
+    if m == 0 || n == 0 || k == 0 {
+        return false;
+    }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        // The broadcast kernel is bandwidth-bound; the AVX2 form is
+        // within noise of a 512-bit variant on every shape we serve,
+        // so Avx512 reuses it (only the dot tile gets 16 lanes).
+        unsafe { avx2::matmul(a, m, k, b, n, out) };
+        return true;
+    }
+    let _ = (a, b, out);
+    false
+}
+
+/// Fused phi_PRF postprocess: for each row i,
+/// `out[i, :] = exp(out[i, :] - 0.5*|x[i, :]|^2) * scale`, with the
+/// exponential evaluated by the vectorized polynomial (exp_poly_f32).
+/// Tolerance-class kernel: ~2 ulp from libm `exp`, held to 1e-5 of the
+/// scalar path by the ISA proptest net.
+pub fn phi_prf_fuse(x: &[f32], rows: usize, d: usize, out: &mut [f32],
+                    m: usize, scale: f32) -> bool {
+    if rows == 0 || d == 0 || m == 0 {
+        return false;
+    }
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(out.len(), rows * m);
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        unsafe { avx2::phi_prf_fuse(x, rows, d, out, m, scale) };
+        return true;
+    }
+    let _ = (x, out, scale);
+    false
+}
+
+/// elu(x) + 1 elementwise: `out[i] = x[i] + 1` when positive, else
+/// `exp(x[i])` via the same polynomial as [`phi_prf_fuse`].
+pub fn elu1_f32(x: &[f32], out: &mut [f32]) -> bool {
+    if x.is_empty() {
+        return false;
+    }
+    debug_assert_eq!(x.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        unsafe { avx2::elu1(x, out) };
+        return true;
+    }
+    let _ = (x, out);
+    false
+}
+
+/// One radix-2 butterfly block: for k in 0..hl over the block at
+/// `base`, exactly the scalar loop in `fft::real::butterflies` with
+/// 4-lane f64 vertical mul/add/sub — **bitwise identical** to the
+/// scalar path (no FMA, no reassociation).
+pub fn fft_butterfly_block(re: &mut [f64], im: &mut [f64], base: usize,
+                           hl: usize, twr: &[f64], twi: &[f64],
+                           sign: f64) -> bool {
+    if hl < 4 {
+        return false;
+    }
+    debug_assert!(base + 2 * hl <= re.len() && base + 2 * hl <= im.len());
+    debug_assert!(twr.len() >= hl && twi.len() >= hl);
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        unsafe { avx2::fft_butterfly_block(re, im, base, hl, twr, twi, sign) };
+        return true;
+    }
+    let _ = (re, im, base, twr, twi, sign);
+    false
+}
+
+/// The rfft untangle pass for the middle bins k in 1..h of one signal
+/// (the caller handles k = 0 and k = h, whose source bins coincide).
+/// Reversed-index operand loaded via lane permute; vertical ops in the
+/// scalar evaluation order — bitwise identical to the scalar loop.
+pub fn rfft_untangle_mid(zr: &[f64], zi: &[f64], un_re: &[f64],
+                         un_im: &[f64], ore: &mut [f64],
+                         oim: &mut [f64]) -> bool {
+    let h = zr.len();
+    if h < 8 {
+        return false;
+    }
+    debug_assert_eq!(zi.len(), h);
+    debug_assert!(un_re.len() >= h + 1 && un_im.len() >= h + 1);
+    debug_assert!(ore.len() >= h + 1 && oim.len() >= h + 1);
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        unsafe { avx2::rfft_untangle_mid(zr, zi, un_re, un_im, ore, oim) };
+        return true;
+    }
+    let _ = (zr, zi, un_re, un_im, ore, oim);
+    false
+}
+
+/// The irfft retangle pass for one signal: k in 0..h computed 4 wide
+/// (scalar-order vertical ops), then scattered through `bitrev` (no
+/// AVX2 scatter, so the store stays scalar). Bitwise identical to the
+/// scalar loop.
+pub fn irfft_retangle(xr: &[f64], xi: &[f64], un_re: &[f64], un_im: &[f64],
+                      bitrev: &[usize], r: &mut [f64],
+                      i: &mut [f64]) -> bool {
+    let h = r.len();
+    if h < 8 {
+        return false;
+    }
+    debug_assert_eq!(i.len(), h);
+    debug_assert!(xr.len() >= h + 1 && xi.len() >= h + 1);
+    debug_assert!(un_re.len() >= h + 1 && un_im.len() >= h + 1);
+    debug_assert!(bitrev.len() >= h);
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        unsafe { avx2::irfft_retangle(xr, xi, un_re, un_im, bitrev, r, i) };
+        return true;
+    }
+    let _ = (xr, xi, un_re, un_im, bitrev, r, i);
+    false
+}
+
+/// dst += w * src over f64 slices — the streaming (S, z) accumulator
+/// update (tail aging in `push`, numerator accumulation in
+/// `query_into`). Vertical mul+add in the scalar element order —
+/// bitwise identical to the scalar loop.
+pub fn axpy_f64(dst: &mut [f64], w: f64, src: &[f64]) -> bool {
+    if dst.len() < 4 {
+        return false;
+    }
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if matches!(active(), Isa::Avx2 | Isa::Avx512) {
+        unsafe { avx2::axpy_f64(dst, w, src) };
+        return true;
+    }
+    let _ = (dst, w, src);
+    false
+}
+
+// Shared constants for the polynomial exp (Cephes expf layout) —
+// one source of truth for the scalar reference, the AVX2 lanes, and
+// the numpy float32 mirror.
+pub(crate) const EXP_HI: f32 = 88.376_262_664_794_9;
+pub(crate) const EXP_LO: f32 = -87.336_547_851_562_5;
+pub(crate) const EXP_LOG2E: f32 = 1.442_695_040_888_963_4;
+pub(crate) const EXP_LN2_HI: f32 = 0.693_359_375;
+pub(crate) const EXP_LN2_LO: f32 = -2.121_944_4e-4;
+pub(crate) const EXP_P: [f32; 6] = [
+    1.987_569_15e-4,
+    1.398_199_950_7e-3,
+    8.333_451_907_3e-3,
+    4.166_579_589_4e-2,
+    1.666_666_545_9e-1,
+    5.000_000_120_1e-1,
+];
+
+/// Scalar reference for the vectorized polynomial `exp` — the exact
+/// formula the AVX2 lanes evaluate (Cephes expf layout: clamp,
+/// n = floor(x*log2(e) + 0.5), two-step Cody-Waite reduction,
+/// degree-5 polynomial, 2^n spliced via exponent bits). No FMA
+/// anywhere, so `python/tests/mirror_simd_dispatch.py` reproduces it
+/// bit for bit in numpy float32; kernel tails use this same function
+/// so a row's value never depends on its lane position.
+pub fn exp_poly_f32(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let n = (x * EXP_LOG2E + 0.5).floor();
+    let r = x - n * EXP_LN2_HI;
+    let r = r - n * EXP_LN2_LO;
+    let mut p = EXP_P[0];
+    for &c in &EXP_P[1..] {
+        p = p * r + c;
+    }
+    let y = p * (r * r) + r + 1.0;
+    let bits = (((n as i32) + 127) << 23) as u32;
+    y * f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_name_and_rejects_junk() {
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse(" avx512 "), Some(Isa::Avx512));
+        assert_eq!(Isa::parse("neon"), Some(Isa::Neon));
+        assert_eq!(Isa::parse("native"), Some(best_available()));
+        assert_eq!(Isa::parse("sse9"), None);
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            assert_eq!(Isa::from_code(isa.code()), Some(isa));
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+    }
+
+    #[test]
+    fn clamp_never_exceeds_host_support() {
+        let best = best_available();
+        for req in [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon] {
+            let got = clamp(req);
+            // Whatever clamp returns must itself clamp to itself
+            // (idempotent) and never rank above the host's best.
+            assert_eq!(clamp(got), got);
+            let rank = |i: Isa| match i {
+                Isa::Scalar | Isa::Neon => 0,
+                Isa::Avx2 => 1,
+                Isa::Avx512 => 2,
+            };
+            assert!(rank(got) <= rank(best));
+        }
+        assert_eq!(clamp(Isa::Scalar), Isa::Scalar);
+    }
+
+    #[test]
+    fn exp_poly_tracks_libm_within_four_ulp() {
+        // 2^-21 ~ 4.8e-7: four f32 ulps of relative error at |x| <= 1
+        // outputs. The python mirror pins the same bound bit-faithfully.
+        let mut x = -87.0f32;
+        while x < 88.0 {
+            let got = exp_poly_f32(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 5e-7, "x={x} got={got} want={want} rel={rel}");
+            x += 0.037;
+        }
+        // Clamp region: finite at both extremes.
+        assert!(exp_poly_f32(1e4).is_finite());
+        assert_eq!(exp_poly_f32(-1e4), exp_poly_f32(EXP_LO));
+    }
+
+    // Note: no test here calls force() — the active ISA is process
+    // state shared with every other unit test in this binary (the
+    // bitwise cross-path tests depend on it staying put). ISA-forcing
+    // coverage lives in tests/proptest_simd_dispatch.rs, its own
+    // process.
+}

@@ -1,0 +1,16 @@
+//! NEON placeholder (aarch64). `Isa::Neon` is parseable everywhere so
+//! scripts and CI matrices stay portable, but `simd::clamp` maps it
+//! to `Scalar` until these kernels are written: on aarch64 builds the
+//! dispatch shims therefore always return `false` and callers run the
+//! blocked-scalar fallback.
+//!
+//! When implementing for real, keep the module contract from
+//! `simd::mod`:
+//!   * f32 GEMM / feature-map kernels are tolerance-class (use
+//!     `vfmaq_f32` freely);
+//!   * f64 rfft + streaming-axpy kernels are bitwise-class — vertical
+//!     `vmulq_f64`/`vaddq_f64`/`vsubq_f64` only, in scalar element
+//!     order, so results stay bit-identical to the portable loops.
+
+// No exported kernels yet: this file exists so the `cfg(aarch64)`
+// module tree compiles and the implementation slot is documented.
